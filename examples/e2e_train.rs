@@ -1,0 +1,135 @@
+//! End-to-end driver — the full system on a real (small) workload.
+//!
+//! Exercises every layer of the stack in one run:
+//!   RadiX-Net generation → multi-phase hypergraph partitioning →
+//!   comm-plan construction (Eqs. 8–9) → live distributed SGD on 8
+//!   simulated ranks over the message-passing fabric → loss-curve logging →
+//!   live-counter vs plan cross-check → replay-model projection to the
+//!   paper's processor counts → PJRT artifact parity spot-check (the AOT
+//!   JAX/Pallas path), proving all three layers compose.
+//!
+//! Run: `cargo run --release --example e2e_train` (after `make artifacts`).
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use spdnn::comm::netmodel::ComputeModel;
+use spdnn::coordinator::replay::{replay, ReplayConfig};
+use spdnn::coordinator::sgd::train_distributed;
+use spdnn::data::synthetic_mnist;
+use spdnn::dnn::Activation;
+use spdnn::partition::metrics::PartitionMetrics;
+use spdnn::partition::phases::{hypergraph_partition, PhaseConfig};
+use spdnn::partition::random::random_partition;
+use spdnn::partition::CommPlan;
+use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::runtime::{artifacts_dir, PjrtLayerEngine};
+use spdnn::util::Stopwatch;
+
+fn main() {
+    let neurons = 1024;
+    let layers = 12;
+    let ranks = 8;
+    let steps = 300;
+    let eta = 0.05f32;
+
+    // ---- 1. the workload ------------------------------------------------
+    let net = generate(&RadixNetConfig::graph_challenge(neurons, layers).expect("cfg"));
+    println!(
+        "[e2e] network N={neurons} L={layers}: {} connections",
+        net.total_nnz()
+    );
+    let data = synthetic_mnist(32, steps, 2026);
+    let inputs: Vec<Vec<f32>> = data.samples.iter().map(|s| s.pixels.clone()).collect();
+    let targets: Vec<Vec<f32>> = (0..steps).map(|i| data.target(i, neurons)).collect();
+
+    // ---- 2. partition (H) + plan ----------------------------------------
+    let sw = Stopwatch::start();
+    let part = hypergraph_partition(&net.layers, &PhaseConfig::new(ranks));
+    println!("[e2e] hypergraph partitioning: {:.2}s", sw.elapsed_secs());
+    let plan = CommPlan::build(&net.layers, &part);
+    let metrics = PartitionMetrics::from_plan(&net.layers, &part, &plan);
+    let rnd = random_partition(&net.layers, ranks, 9);
+    let rnd_metrics = PartitionMetrics::compute(&net.layers, &rnd);
+    println!(
+        "[e2e] comm volume/iter: H {:.1}K vs R {:.1}K words ({:.2}x reduction), imb H {:.3} R {:.3}",
+        metrics.avg_volume() / 1e3,
+        rnd_metrics.avg_volume() / 1e3,
+        rnd_metrics.avg_volume() / metrics.avg_volume(),
+        metrics.comp_imbalance(),
+        rnd_metrics.comp_imbalance()
+    );
+
+    // ---- 3. live distributed training ------------------------------------
+    let sw = Stopwatch::start();
+    let run = train_distributed(&net, &part, &inputs, &targets, eta, 1);
+    let train_secs = sw.elapsed_secs();
+    let window = 25;
+    println!("[e2e] loss curve (window {window}):");
+    for w in (0..steps).step_by(window) {
+        let hi = (w + window).min(steps);
+        let avg: f32 = run.losses[w..hi].iter().sum::<f32>() / (hi - w) as f32;
+        println!("  steps {w:>4}-{:<4} avg loss {avg:.5}", hi - 1);
+    }
+    let first: f32 = run.losses[..window].iter().sum::<f32>() / window as f32;
+    let last: f32 = run.losses[steps - window..].iter().sum::<f32>() / window as f32;
+    println!(
+        "[e2e] loss {first:.5} → {last:.5} ({:.1}% drop) in {train_secs:.2}s live on {ranks} ranks",
+        100.0 * (1.0 - last / first)
+    );
+    assert!(last < first, "training must reduce the loss");
+
+    // ---- 4. live counters == plan ----------------------------------------
+    let fwd_send = plan.fwd_send_volume_per_rank();
+    let fwd_recv = plan.fwd_recv_volume_per_rank();
+    for r in 0..ranks {
+        let expect = steps as u64 * (fwd_send[r] + fwd_recv[r]);
+        assert_eq!(run.sent[r].0, expect, "rank {r} counter mismatch");
+    }
+    println!("[e2e] live comm counters match the precomputed plan on all ranks");
+
+    // ---- 5. replay projection to the paper's scale -----------------------
+    let comp = ComputeModel::calibrate();
+    let cfg = ReplayConfig::training(comp);
+    println!("[e2e] replay projection (calibrated rates, InfiniBand α-β):");
+    for p in [32usize, 128, 512] {
+        let hp = hypergraph_partition(&net.layers, &PhaseConfig::new(p));
+        let rp = random_partition(&net.layers, p, 3);
+        let th = replay(&net.layers, &hp, &CommPlan::build(&net.layers, &hp), &cfg);
+        let tr = replay(&net.layers, &rp, &CommPlan::build(&net.layers, &rp), &cfg);
+        println!(
+            "  P={p:>3}: H-SGD {:.3e}s/input vs SGD {:.3e}s/input ({:.2}x)",
+            th.total(),
+            tr.total(),
+            tr.total() / th.total()
+        );
+    }
+
+    // ---- 6. PJRT parity: the AOT JAX/Pallas path serves a rank block -----
+    let dir = artifacts_dir();
+    if dir.join(spdnn::runtime::fwd_artifact(64, 256)).is_file() {
+        let small = generate(&RadixNetConfig::graph_challenge(256, 2).expect("cfg"));
+        let spart = random_partition(&small.layers, 4, 5);
+        let eng = PjrtLayerEngine::load(&dir, 64, 256, 16).expect("artifacts");
+        let rows = spart.rows_of(0, 0);
+        let blk = small.layers[0].row_block(&rows);
+        let bias: Vec<f32> = rows.iter().map(|&r| small.biases[0][r as usize]).collect();
+        let x: Vec<f32> = (0..256).map(|i| (i % 3) as f32 * 0.5).collect();
+        let pjrt = eng.forward(&blk, &x, &bias).expect("pjrt forward");
+        let mut z = vec![0f32; blk.nrows];
+        blk.spmv(&x, &mut z);
+        for i in 0..blk.nrows {
+            z[i] += bias[i];
+        }
+        Activation::Sigmoid.apply(&mut z);
+        let maxerr = pjrt
+            .iter()
+            .zip(z.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(maxerr < 1e-5, "PJRT vs native max err {maxerr}");
+        println!("[e2e] PJRT artifact parity: max |pjrt - native| = {maxerr:.2e}");
+    } else {
+        println!("[e2e] PJRT artifacts not found — run `make artifacts` for the full check");
+    }
+
+    println!("[e2e] OK");
+}

@@ -1,0 +1,107 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernel) → HLO text.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts \
+        --shapes 64x256,256x256 --batch 64
+
+Artifacts written:
+    layer_fwd_{m}x{k}.hlo.txt          σ(Wx + b)        (W[m,k], x[k], b[m])
+    layer_bwd_{m}x{k}.hlo.txt          Wᵀδ              (W[m,k], δ[m])
+    layer_fwd_batch_{m}x{k}x{b}.hlo.txt σ(WX + b)       (W[m,k], X[k,b], b[m])
+    manifest.json                      shape → file map
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_fwd(m, k):
+    fn = lambda w, x, b: (model.layer_fwd(w, x, b),)
+    return to_hlo_text(jax.jit(fn).lower(spec(m, k), spec(k), spec(m)))
+
+
+def lower_bwd(m, k):
+    fn = lambda w, d: (model.layer_bwd(w, d),)
+    return to_hlo_text(jax.jit(fn).lower(spec(m, k), spec(m)))
+
+
+def lower_fwd_batch(m, k, b):
+    fn = lambda w, x, bias: (model.layer_fwd_batch(w, x, bias),)
+    return to_hlo_text(jax.jit(fn).lower(spec(m, k), spec(k, b), spec(m)))
+
+
+def parse_shapes(s):
+    out = []
+    for part in s.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        m, k = part.split("x")
+        out.append((int(m), int(k)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default="64x256",
+        help="comma-separated m x k row-block shapes, e.g. 64x256,256x256",
+    )
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"fwd": {}, "bwd": {}, "fwd_batch": {}}
+
+    for m, k in parse_shapes(args.shapes):
+        name = f"layer_fwd_{m}x{k}.hlo.txt"
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(lower_fwd(m, k))
+        manifest["fwd"][f"{m}x{k}"] = name
+        print(f"wrote {name}")
+
+        name = f"layer_bwd_{m}x{k}.hlo.txt"
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(lower_bwd(m, k))
+        manifest["bwd"][f"{m}x{k}"] = name
+        print(f"wrote {name}")
+
+        name = f"layer_fwd_batch_{m}x{k}x{args.batch}.hlo.txt"
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(lower_fwd_batch(m, k, args.batch))
+        manifest["fwd_batch"][f"{m}x{k}x{args.batch}"] = name
+        print(f"wrote {name}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({args.out_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth)."""
+
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(w, x, mask=None):
+    """(W ⊙ mask) @ X — reference for the blocked masked matmul kernel.
+
+    w: [m, k]; x: [k, b] or [k]; mask: [m, k] or None.
+    """
+    wm = w if mask is None else w * mask
+    return jnp.matmul(wm, x)
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def layer_fwd_ref(w, x, bias, mask=None):
+    """sigmoid(W x + b): the rank-local forward block (Alg. 2 lines 6, 10)."""
+    z = masked_matmul_ref(w, x, mask)
+    if bias is not None:
+        z = z + bias if z.ndim == 1 else z + bias[:, None]
+    return sigmoid(z)
+
+
+def layer_bwd_ref(w, delta, mask=None):
+    """s = Wᵀ δ: the rank-local backward product (Alg. 3 line 4)."""
+    wm = w if mask is None else w * mask
+    return jnp.matmul(wm.T, delta)

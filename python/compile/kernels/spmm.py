@@ -1,0 +1,219 @@
+"""L1 — the SpMV/SpMM hot-spot as a Pallas blocked masked-matmul kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot loop
+is a CPU CSR SpMV; the TPU-idiomatic form of the same computation is a
+*masked dense tile* matmul so the MXU systolic array does the work:
+
+- BlockSpec tiles the weight row-block ``(TM, TK)`` and the activations
+  ``(TK, TB)`` through VMEM — the HBM→VMEM schedule that replaces the
+  paper's cache blocking;
+- a 0/1 mask (the sparsity pattern) multiplies into the weight tile before
+  the ``jnp.dot`` so pruned connections contribute exact zeros;
+- the K-reduction runs over the innermost grid axis into a VMEM
+  accumulator, revisiting the same output tile (standard Pallas matmul
+  pattern).
+
+``interpret=True`` everywhere: real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT client cannot execute. VMEM/MXU estimates for the real-TPU
+deployment are documented in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: 128 matches the MXU systolic dimension; f32 tiles of
+# 3 x 128x128 x 4B ≈ 192 KiB sit comfortably in a TPU core's ~16 MiB VMEM
+# with room for double buffering.
+TM, TK, TB = 128, 128, 128
+
+
+def _matmul_kernel(w_ref, x_ref, o_ref, *, nk):
+    """One (mi, bi, ki) grid step: o[mi, bi] += w[mi, ki] @ x[ki, bi]."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _masked_matmul_kernel(w_ref, m_ref, x_ref, o_ref, *, nk):
+    """Masked variant: the sparsity pattern zeroes the weight tile first."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wt = w_ref[...] * m_ref[...].astype(w_ref.dtype)
+    o_ref[...] += jnp.dot(wt, x_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _pad_to(a, rows, cols):
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _ceil_to(n, t):
+    return ((n + t - 1) // t) * t
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tb"))
+def masked_matmul(w, x, mask=None, *, tm=TM, tk=TK, tb=TB):
+    """(W ⊙ mask) @ X via the Pallas kernel. Shapes need not divide the
+    tiles — inputs are zero-padded and the result sliced back.
+
+    w: [m, k] f32; x: [k, b] (or [k] → matvec); mask: [m, k] or None.
+    """
+    vec = x.ndim == 1
+    if vec:
+        x = x[:, None]
+    m, k = w.shape
+    b = x.shape[1]
+    mp, kp, bp = _ceil_to(m, tm), _ceil_to(k, tk), _ceil_to(b, tb)
+    wp = _pad_to(w, mp, kp)
+    xp = _pad_to(x, kp, bp)
+    grid = (mp // tm, bp // tb, kp // tk)
+
+    w_spec = pl.BlockSpec((tm, tk), lambda mi, bi, ki: (mi, ki))
+    x_spec = pl.BlockSpec((tk, tb), lambda mi, bi, ki: (ki, bi))
+    o_spec = pl.BlockSpec((tm, tb), lambda mi, bi, ki: (mi, bi))
+
+    if mask is None:
+        out = pl.pallas_call(
+            functools.partial(_matmul_kernel, nk=grid[2]),
+            grid=grid,
+            in_specs=[w_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, bp), w.dtype),
+            interpret=True,
+        )(wp, xp)
+    else:
+        mkp = _pad_to(mask.astype(w.dtype), mp, kp)
+        out = pl.pallas_call(
+            functools.partial(_masked_matmul_kernel, nk=grid[2]),
+            grid=grid,
+            in_specs=[w_spec, w_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, bp), w.dtype),
+            interpret=True,
+        )(wp, mkp, xp)
+
+    out = out[:m, :b]
+    return out[:, 0] if vec else out
+
+
+def matvec(w, x, *, tm=TM, tk=TK):
+    """W @ x for a dense-with-zeros row block (the SpMV of Alg. 2 line 6)."""
+    return masked_matmul(w, x, None, tm=tm, tk=tk, tb=TB)
+
+
+def _fused_layer_kernel(w_ref, x_ref, b_ref, o_ref, *, nk):
+    """Fused σ(Wx + b): accumulate over K tiles, epilogue on the last one.
+
+    The epilogue (bias add + sigmoid) runs inside the kernel while the
+    output tile is still resident in VMEM — on a real TPU this saves an
+    HBM round-trip per layer compared to matmul-then-elementwise.
+    """
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(w_ref[...], x_ref[...], preferred_element_type=o_ref.dtype)
+
+    @pl.when(ki == nk - 1)
+    def _epilogue():
+        z = o_ref[...] + b_ref[...][:, None]
+        o_ref[...] = 1.0 / (1.0 + jnp.exp(-z))
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tb"))
+def fused_layer(w, x, bias, *, tm=TM, tk=TK, tb=TB):
+    """σ(W @ X + b) in one Pallas kernel (fused epilogue).
+
+    w: [m, k]; x: [k, b] or [k]; bias: [m].
+    """
+    vec = x.ndim == 1
+    if vec:
+        x = x[:, None]
+    m, k = w.shape
+    b = x.shape[1]
+    mp, kp, bp = _ceil_to(m, tm), _ceil_to(k, tk), _ceil_to(b, tb)
+    wp = _pad_to(w, mp, kp)
+    xp = _pad_to(x, kp, bp)
+    bzp = jnp.pad(bias, (0, mp - m))
+    grid = (mp // tm, bp // tb, kp // tk)
+    out = pl.pallas_call(
+        functools.partial(_fused_layer_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda mi, bi, ki: (mi, ki)),
+            pl.BlockSpec((tk, tb), lambda mi, bi, ki: (ki, bi)),
+            pl.BlockSpec((tm,), lambda mi, bi, ki: (mi,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tb), lambda mi, bi, ki: (mi, bi)),
+        out_shape=jax.ShapeDtypeStruct((mp, bp), w.dtype),
+        interpret=True,
+    )(wp, xp, bzp)
+    out = out[:m, :b]
+    return out[:, 0] if vec else out
+
+
+def _matmul_t_kernel(w_ref, d_ref, o_ref, *, nm):
+    """Transpose-product step: o[ki, bi] += W[mi, ki]ᵀ @ d[mi, bi].
+
+    Reads the *untransposed* weight tile and transposes in-register — the
+    backward pass (Alg. 3 line 4) then shares the exact HBM layout of the
+    forward weights (no materialized Wᵀ, halving weight memory traffic per
+    training step on a real TPU).
+    """
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        w_ref[...].T, d_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tb"))
+def matvec_t(w, d, *, tm=TM, tk=TK, tb=TB):
+    """s = Wᵀ @ d via the transposed-tile kernel.
+
+    w: [m, k]; d: [m] or [m, b] → s: [k] or [k, b].
+    """
+    vec = d.ndim == 1
+    if vec:
+        d = d[:, None]
+    m, k = w.shape
+    b = d.shape[1]
+    mp, kp, bp = _ceil_to(m, tm), _ceil_to(k, tk), _ceil_to(b, tb)
+    wp = _pad_to(w, mp, kp)
+    dp = _pad_to(d, mp, bp)
+    # grid: (k tiles, b tiles, m reduction)
+    grid = (kp // tk, bp // tb, mp // tm)
+    out = pl.pallas_call(
+        functools.partial(_matmul_t_kernel, nm=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda ki, bi, mi: (mi, ki)),
+            pl.BlockSpec((tm, tb), lambda ki, bi, mi: (mi, bi)),
+        ],
+        out_specs=pl.BlockSpec((tk, tb), lambda ki, bi, mi: (ki, bi)),
+        out_shape=jax.ShapeDtypeStruct((kp, bp), w.dtype),
+        interpret=True,
+    )(wp, dp)
+    out = out[:k, :b]
+    return out[:, 0] if vec else out

@@ -1,0 +1,47 @@
+"""L2 — the rank-local layer computation in JAX, calling the L1 kernel.
+
+These are the compute blocks the Rust coordinator executes per layer per
+rank (Alg. 2 line 6 + 10 forward; Alg. 3 line 4 backward). They are written
+over *dense-with-zeros* row blocks (the TPU-idiomatic masked form, see
+kernels/spmm.py) and AOT-lowered by aot.py to HLO text, one artifact per
+(rows × cols [× batch]) shape variant. Python never runs at serving time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import spmm
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def layer_fwd(w, x, bias):
+    """x^k = σ(W_blk · x^{k-1} + b): the rank-local forward block.
+
+    Uses the fused Pallas kernel (matmul + bias + sigmoid epilogue in one
+    VMEM-resident pass). w: [m, k] dense-with-zeros; x: [k]; bias: [m].
+    """
+    return spmm.fused_layer(w, x, bias)
+
+
+def layer_fwd_batch(w, x, bias):
+    """Batched variant (minibatch SpMM, §5.1). x: [k, b] → [m, b]."""
+    return spmm.fused_layer(w, x, bias)
+
+
+def layer_bwd(w, delta):
+    """s = W_blkᵀ · δ: the rank-local backward product (Alg. 3 line 4).
+
+    w: [m, k]; delta: [m] → s: [k]. Uses the transposed-tile Pallas kernel
+    (in-register tile transpose — shares the forward weight layout, no
+    materialized Wᵀ; row partition of W == column partition of Wᵀ).
+    """
+    return spmm.matvec_t(w, delta)
+
+
+def layer_train_block(w, x, bias, delta):
+    """Fused forward+backward building block used by the training artifact:
+    returns (x_out, s). Keeping both in one HLO module lets XLA share the
+    masked tiles between the two products."""
+    return layer_fwd(w, x, bias), layer_bwd(w, delta)

@@ -1,0 +1,66 @@
+"""AOT path: lowered HLO text is well-formed and parameterized correctly."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_lower_fwd_produces_hlo_text():
+    txt = aot.lower_fwd(8, 16)
+    assert "HloModule" in txt
+    # parameters: W [8,16], x [16], b [8]
+    assert "f32[8,16]" in txt
+    assert "f32[16]" in txt.replace(" ", "")
+
+
+def test_lower_bwd_produces_hlo_text():
+    txt = aot.lower_bwd(8, 16)
+    assert "HloModule" in txt
+    assert "f32[8,16]" in txt
+
+
+def test_lower_fwd_batch_shapes():
+    txt = aot.lower_fwd_batch(8, 16, 4)
+    assert "HloModule" in txt
+    assert "f32[16,4]" in txt.replace(" ", "")
+
+
+def test_parse_shapes():
+    assert aot.parse_shapes("64x256,256x256") == [(64, 256), (256, 256)]
+    assert aot.parse_shapes(" 8x8 ") == [(8, 8)]
+    assert aot.parse_shapes("") == []
+
+
+def test_cli_writes_artifacts_and_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--shapes",
+            "8x16",
+            "--batch",
+            "4",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["fwd"]["8x16"] == "layer_fwd_8x16.hlo.txt"
+    for section in ("fwd", "bwd", "fwd_batch"):
+        for fname in manifest[section].values():
+            txt = (out / fname).read_text()
+            assert "HloModule" in txt, fname
+
+
+@pytest.mark.parametrize("m,k", [(1, 1), (3, 7), (64, 256)])
+def test_various_shapes_lower(m, k):
+    assert "HloModule" in aot.lower_fwd(m, k)

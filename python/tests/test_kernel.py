@@ -1,0 +1,198 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-divisible), tile sizes, dtypes
+and masks; every case asserts allclose against ref.py. This is the CORE
+correctness signal for the kernel layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import layer_bwd_ref, layer_fwd_ref, masked_matmul_ref
+from compile.kernels.spmm import masked_matmul, matvec
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    b=st.integers(1, 20),
+    tm=st.sampled_from([8, 16, 32]),
+    tk=st.sampled_from([8, 16, 32]),
+    tb=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, b, tm, tk, tb, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, m, k)
+    x = _rand(rng, k, b)
+    out = masked_matmul(w, x, None, tm=tm, tk=tk, tb=tb)
+    ref = masked_matmul_ref(w, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+@given(
+    m=st.integers(1, 60),
+    k=st.integers(1, 60),
+    b=st.integers(1, 12),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_matmul_matches_ref(m, k, b, density, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, m, k)
+    x = _rand(rng, k, b)
+    mask = jnp.asarray((rng.random((m, k)) < density).astype(np.float32))
+    out = masked_matmul(w, x, mask, tm=16, tk=16, tb=8)
+    ref = masked_matmul_ref(w, x, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(m, k, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, m, k)
+    x = _rand(rng, k)
+    out = matvec(w, x, tm=32, tk=32)
+    ref = masked_matmul_ref(w, x)
+    assert out.shape == (m,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_zero_mask_gives_zero_output():
+    rng = np.random.default_rng(1)
+    w = _rand(rng, 20, 20)
+    x = _rand(rng, 20, 4)
+    mask = jnp.zeros((20, 20), dtype=jnp.float32)
+    out = masked_matmul(w, x, mask, tm=8, tk=8, tb=4)
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+def test_identity_mask_equals_unmasked():
+    rng = np.random.default_rng(2)
+    w = _rand(rng, 33, 17)
+    x = _rand(rng, 17, 5)
+    ones = jnp.ones((33, 17), dtype=jnp.float32)
+    a = masked_matmul(w, x, ones, tm=16, tk=16, tb=4)
+    b = masked_matmul(w, x, None, tm=16, tk=16, tb=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_exact_tile_divisible_shapes():
+    rng = np.random.default_rng(3)
+    w = _rand(rng, 64, 32)
+    x = _rand(rng, 32, 16)
+    out = masked_matmul(w, x, None, tm=32, tk=16, tb=16)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(masked_matmul_ref(w, x)), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_dtypes(dtype):
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(24, 24)).astype(dtype))
+    x = jnp.asarray(rng.normal(size=(24, 3)).astype(dtype))
+    out = masked_matmul(w, x, None, tm=8, tk=8, tb=4)
+    assert out.dtype == w.dtype
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(masked_matmul_ref(w, x)), atol=1e-4
+    )
+
+
+def test_layer_refs_are_consistent():
+    # ref sanity: fwd uses sigmoid; bwd is the transpose product
+    rng = np.random.default_rng(5)
+    w = _rand(rng, 10, 8)
+    x = _rand(rng, 8)
+    bias = _rand(rng, 10)
+    f = layer_fwd_ref(w, x, bias)
+    assert f.shape == (10,)
+    assert bool(jnp.all((f > 0) & (f < 1)))
+    d = _rand(rng, 10)
+    s = layer_bwd_ref(w, d)
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(jnp.matmul(w.T, d)), atol=1e-5
+    )
+
+
+from compile.kernels.spmm import fused_layer
+from compile.kernels.ref import layer_fwd_ref as _fwd_ref
+
+
+@given(
+    m=st.integers(1, 60),
+    k=st.integers(1, 60),
+    b=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_layer_matches_ref(m, k, b, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, m, k)
+    x = _rand(rng, k, b)
+    bias = _rand(rng, m)
+    out = fused_layer(w, x, bias, tm=16, tk=16, tb=8)
+    ref = _fwd_ref(w, x, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+@given(m=st.integers(1, 50), k=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_fused_layer_matvec(m, k, seed):
+    rng = np.random.default_rng(seed)
+    w, x, bias = _rand(rng, m, k), _rand(rng, k), _rand(rng, m)
+    out = fused_layer(w, x, bias, tm=32, tk=16, tb=8)
+    assert out.shape == (m,)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(_fwd_ref(w, x, bias)), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_fused_layer_outputs_in_unit_interval():
+    rng = np.random.default_rng(6)
+    w = _rand(rng, 40, 40) * 5
+    x = _rand(rng, 40, 4)
+    bias = _rand(rng, 40)
+    out = np.asarray(fused_layer(w, x, bias, tm=16, tk=16, tb=4))
+    # f32 sigmoid saturates to exactly 0/1 for large |z|
+    assert ((out >= 0) & (out <= 1)).all()
+
+
+from compile.kernels.spmm import matvec_t
+
+
+@given(
+    m=st.integers(1, 60),
+    k=st.integers(1, 60),
+    b=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_t_matches_transpose(m, k, b, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, m, k)
+    d = _rand(rng, m, b)
+    out = matvec_t(w, d, tm=16, tk=16, tb=4)
+    ref = jnp.matmul(w.T, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+@given(m=st.integers(1, 50), k=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_matvec_t_vector_shape(m, k, seed):
+    rng = np.random.default_rng(seed)
+    w, d = _rand(rng, m, k), _rand(rng, m)
+    out = matvec_t(w, d, tm=32, tk=16, tb=8)
+    assert out.shape == (k,)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jnp.matmul(w.T, d)), atol=1e-4, rtol=1e-4
+    )

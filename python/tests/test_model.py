@@ -1,0 +1,83 @@
+"""L2 correctness: model blocks vs refs, shapes, and autodiff consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import layer_bwd_ref, layer_fwd_ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@given(m=st.integers(1, 50), k=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_layer_fwd_matches_ref(m, k, seed):
+    rng = np.random.default_rng(seed)
+    w, x, b = _rand(rng, m, k), _rand(rng, k), _rand(rng, m)
+    out = model.layer_fwd(w, x, b)
+    ref = layer_fwd_ref(w, x, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+@given(m=st.integers(1, 50), k=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_layer_bwd_matches_ref(m, k, seed):
+    rng = np.random.default_rng(seed)
+    w, d = _rand(rng, m, k), _rand(rng, m)
+    out = model.layer_bwd(w, d)
+    ref = layer_bwd_ref(w, d)
+    assert out.shape == (k,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    b=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layer_fwd_batch_matches_per_column(m, k, b, seed):
+    rng = np.random.default_rng(seed)
+    w, x, bias = _rand(rng, m, k), _rand(rng, k, b), _rand(rng, m)
+    out = model.layer_fwd_batch(w, x, bias)
+    assert out.shape == (m, b)
+    for j in range(b):
+        single = model.layer_fwd(w, x[:, j], bias)
+        np.testing.assert_allclose(
+            np.asarray(out[:, j]), np.asarray(single), atol=1e-5, rtol=1e-5
+        )
+
+
+def test_bwd_is_jax_vjp_of_pre_activation():
+    # s = Wᵀδ is exactly the VJP of z = Wx w.r.t. x with cotangent δ.
+    rng = np.random.default_rng(7)
+    w, x, d = _rand(rng, 12, 9), _rand(rng, 9), _rand(rng, 12)
+    _, vjp = jax.vjp(lambda xv: jnp.matmul(w, xv), x)
+    (expected,) = vjp(d)
+    got = model.layer_bwd(w, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected), atol=1e-4)
+
+
+def test_train_block_returns_both():
+    rng = np.random.default_rng(8)
+    w, x, bias, d = _rand(rng, 6, 5), _rand(rng, 5), _rand(rng, 6), _rand(rng, 6)
+    xo, s = model.layer_train_block(w, x, bias, d)
+    np.testing.assert_allclose(
+        np.asarray(xo), np.asarray(model.layer_fwd(w, x, bias)), atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(model.layer_bwd(w, d)), atol=1e-6
+    )
+
+
+def test_sigmoid_range():
+    z = jnp.asarray([-100.0, 0.0, 100.0], dtype=jnp.float32)
+    s = model.sigmoid(z)
+    assert float(s[0]) < 1e-6
+    assert abs(float(s[1]) - 0.5) < 1e-6
+    assert float(s[2]) > 1 - 1e-6

@@ -1,0 +1,23 @@
+//! Bench/regenerator for the **fixed-vertex chaining ablation** (the design
+//! choice DESIGN.md §5 isolates): chained multi-phase (paper) vs
+//! independent per-layer partitioning vs random.
+//!
+//! `cargo bench --bench ablation_chaining` — `SPDNN_FULL=1` for larger N/P.
+
+use spdnn::experiments::ablation;
+
+fn main() {
+    let full = std::env::var("SPDNN_FULL").is_ok();
+    let (ns, ps, layers): (Vec<usize>, Vec<usize>, usize) = if full {
+        (vec![1024, 4096], vec![32, 128], 120)
+    } else {
+        (vec![1024], vec![8, 32], 24)
+    };
+    println!("# Chaining ablation (L={layers}, full={full})");
+    for n in ns {
+        for &p in &ps {
+            let rows = ablation::run(n, layers, p, 1);
+            println!("{}", ablation::render(n, p, &rows));
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench/regenerator for **Figure 4**: strong scaling of SGD vs H-SGD
+//! (simulated seconds/input over processor counts).
+//!
+//! `cargo bench --bench fig4_scaling` — `SPDNN_FULL=1` for the paper grid.
+
+use spdnn::comm::netmodel::ComputeModel;
+use spdnn::experiments::fig4_scaling;
+use spdnn::util::Stopwatch;
+
+fn main() {
+    let full = std::env::var("SPDNN_FULL").is_ok();
+    let (ns, ps, layers): (Vec<usize>, Vec<usize>, usize) = if full {
+        (
+            vec![1024, 4096, 16384, 65536],
+            vec![32, 64, 128, 256, 512],
+            120,
+        )
+    } else {
+        (vec![1024, 4096], vec![8, 16, 32, 64, 128], 24)
+    };
+    let comp = ComputeModel::calibrate();
+    println!("# Figure 4 reproduction (L={layers}, full={full})");
+    println!(
+        "calibrated: spmv {:.2e}s/nnz, spmv_t {:.2e}s/nnz, update {:.2e}s/nnz",
+        comp.spmv_per_nnz, comp.spmvt_per_nnz, comp.update_per_nnz
+    );
+    for n in ns {
+        let sw = Stopwatch::start();
+        let pts = fig4_scaling::run(n, layers, &ps, comp, 1);
+        let secs = sw.elapsed_secs();
+        println!("{}", fig4_scaling::render(n, &pts));
+        println!("[bench] N={n}: computed in {secs:.2}s\n");
+    }
+}

@@ -1,0 +1,26 @@
+//! Bench/regenerator for **Figure 5**: breakdown of running time into
+//! SpMV / Updt / Comm components, H-SGD (solid) vs SGD (tiled).
+//!
+//! `cargo bench --bench fig5_breakdown` — `SPDNN_FULL=1` for the paper grid.
+
+use spdnn::comm::netmodel::ComputeModel;
+use spdnn::experiments::fig5_breakdown;
+use spdnn::util::Stopwatch;
+
+fn main() {
+    let full = std::env::var("SPDNN_FULL").is_ok();
+    let (ns, ps, layers): (Vec<usize>, Vec<usize>, usize) = if full {
+        (vec![16384, 65536], vec![32, 128, 512], 120)
+    } else {
+        (vec![1024, 4096], vec![8, 32, 128], 24)
+    };
+    let comp = ComputeModel::calibrate();
+    println!("# Figure 5 reproduction (L={layers}, full={full})");
+    for n in ns {
+        let sw = Stopwatch::start();
+        let bars = fig5_breakdown::run(n, layers, &ps, comp, 1);
+        let secs = sw.elapsed_secs();
+        println!("{}", fig5_breakdown::render(n, &bars));
+        println!("[bench] N={n}: computed in {secs:.2}s\n");
+    }
+}

@@ -1,0 +1,99 @@
+//! Microbenchmark of the L3 hot-path kernels: CSR SpMV, transpose SpMV,
+//! gradient update, batched SpMM — with a STREAM-style roofline estimate
+//! for the §Perf target (EXPERIMENTS.md).
+//!
+//! `cargo bench --bench micro_spmv`
+
+use spdnn::sparse::Coo;
+use spdnn::util::{Rng, Stopwatch};
+
+fn radix_like(n: usize, deg: usize, seed: u64) -> spdnn::sparse::Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * deg);
+    for r in 0..n {
+        for c in rng.sample_distinct(n, deg) {
+            coo.push(r, c as usize, rng.gen_f32_range(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+fn bench<F: FnMut()>(label: &str, nnz: usize, reps: usize, mut f: F) -> f64 {
+    // warm-up
+    f();
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        f();
+    }
+    let secs = sw.elapsed_secs() / reps as f64;
+    let per_nnz = secs / nnz as f64;
+    let gflops = 2.0 * nnz as f64 / secs / 1e9;
+    println!("{label:<28} {secs:>10.3e}s  {per_nnz:>8.2e}s/nnz  {gflops:>6.2} GFLOP/s");
+    per_nnz
+}
+
+fn main() {
+    println!("# micro_spmv — L3 hot-path kernel rates");
+    let mut rng = Rng::new(7);
+    for &(n, deg) in &[(1024usize, 32usize), (4096, 32), (16384, 27)] {
+        let m = radix_like(n, deg, 1);
+        let nnz = m.nnz();
+        let x: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+        let mut y = vec![0f32; n];
+        let reps = (20_000_000 / nnz).max(3);
+        println!("\n== N={n} deg={deg} nnz={nnz} reps={reps}");
+        bench(&format!("spmv {n}"), nnz, reps, || {
+            m.spmv(&x, &mut y);
+        });
+        let mut s = vec![0f32; n];
+        bench(&format!("spmv_t {n}"), nnz, reps, || {
+            s.fill(0.0);
+            m.spmv_t_add(&y, &mut s);
+        });
+        let mut mu = m.clone();
+        bench(&format!("sgd_update {n}"), nnz, reps, || {
+            mu.sgd_update(&y, &x, 1e-7);
+        });
+        let b = 16usize;
+        let xb: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+        let mut yb = vec![0f32; n * b];
+        let spmm_reps = (reps / b).max(2);
+        bench(&format!("spmm b={b} {n}"), nnz * b, spmm_reps, || {
+            m.spmm_rowmajor(&xb, &mut yb, b);
+        });
+    }
+
+    // STREAM-style memory roofline: an SpMV of nnz entries moves ≥
+    // nnz·(4B val + 4B idx) + vectors; time a pure streaming pass to bound
+    // achievable bandwidth and report the SpMV efficiency against it.
+    println!("\n== roofline estimate");
+    let len = 32_000_000usize;
+    let a: Vec<f32> = vec![1.0; len];
+    // 8-way unrolled sum so the float dependency chain does not serialize
+    // the loads — this measures bandwidth, not add latency.
+    let sw = Stopwatch::start();
+    let mut accs = [0f32; 8];
+    for chunk in a.chunks_exact(8) {
+        for i in 0..8 {
+            accs[i] += chunk[i];
+        }
+    }
+    let stream_secs = sw.elapsed_secs();
+    std::hint::black_box(accs);
+    let bw = (len * 4) as f64 / stream_secs / 1e9;
+    println!("stream read bandwidth ≈ {bw:.1} GB/s");
+    let m = radix_like(4096, 32, 2);
+    let x: Vec<f32> = vec![1.0; 4096];
+    let mut y = vec![0f32; 4096];
+    let per_nnz = bench("spmv 4096 (roofline cmp)", m.nnz(), 100, || {
+        m.spmv(&x, &mut y);
+    });
+    // bytes per nnz ≈ 8 (val+idx) + amortized vector traffic ≈ 9–12;
+    // efficiency is capped at 100% (the matrix fits in cache at N=4096, so
+    // the effective bandwidth can exceed DRAM stream bandwidth).
+    let bound = 9.0 / (bw * 1e9);
+    println!(
+        "memory-bound minimum ≈ {bound:.2e}s/nnz → SpMV roofline efficiency ≈ {:.0}%",
+        (100.0 * bound / per_nnz).min(100.0)
+    );
+}

@@ -1,0 +1,29 @@
+//! Bench/regenerator for **Table 1**: communication volume, message
+//! counts, and computational imbalance — H-SGD vs SGD(random).
+//!
+//! `cargo bench --bench table1_comm` — set `SPDNN_FULL=1` for the paper's
+//! grid (N up to 65536, P up to 512, L=120; slow on one core).
+
+use spdnn::experiments::table1;
+use spdnn::util::Stopwatch;
+
+fn main() {
+    let full = std::env::var("SPDNN_FULL").is_ok();
+    let (ns, ps, layers): (Vec<usize>, Vec<usize>, usize) = if full {
+        (
+            vec![1024, 4096, 16384, 65536],
+            vec![32, 64, 128, 256, 512],
+            120,
+        )
+    } else {
+        (vec![1024, 4096], vec![4, 8, 16, 32], 24)
+    };
+    println!("# Table 1 reproduction (L={layers}, full={full})");
+    for n in ns {
+        let sw = Stopwatch::start();
+        let rows = table1::run(n, layers, &ps, 1);
+        let secs = sw.elapsed_secs();
+        println!("{}", table1::render(&rows));
+        println!("[bench] N={n}: computed in {secs:.2}s\n");
+    }
+}

@@ -1,0 +1,47 @@
+//! Bench/regenerator for **Table 2**: inference throughput (edges/s),
+//! H-SpFF (model-parallel) vs GB (data-parallel GraphBLAS-style baseline).
+//!
+//! `cargo bench --bench table2_throughput` — `SPDNN_FULL=1` adds the
+//! deeper (480/1920-layer) configurations of the paper.
+
+use spdnn::comm::netmodel::ComputeModel;
+use spdnn::experiments::table2;
+use spdnn::util::Stopwatch;
+
+fn main() {
+    let full = std::env::var("SPDNN_FULL").is_ok();
+    // (neurons, layers) grid; the paper runs L ∈ {120, 480, 1920} at each N
+    let grid: Vec<(usize, usize)> = if full {
+        let mut g = Vec::new();
+        for &n in &[1024usize, 4096, 16384, 65536] {
+            for &l in &[120usize, 480, 1920] {
+                g.push((n, l));
+            }
+        }
+        g
+    } else {
+        vec![(1024, 24), (1024, 96), (4096, 24), (4096, 96)]
+    };
+    let comp = ComputeModel::calibrate();
+    let cfg = table2::Config {
+        nparts: 128,
+        batch: 64,
+        inputs: if full { 60_000 } else { 4096 },
+        gb_sample: if full { 256 } else { 64 },
+    };
+    println!("# Table 2 reproduction (H-SpFF P={}, full={full})", cfg.nparts);
+    let mut rows = Vec::new();
+    for (n, l) in grid {
+        let sw = Stopwatch::start();
+        let row = table2::run(n, l, &cfg, comp, 1);
+        let secs = sw.elapsed_secs();
+        println!(
+            "[bench] N={n} L={l}: H-SpFF {:.2E} vs GB {:.2E} edges/s (speedup {:.2}) in {secs:.1}s",
+            row.hspff_eps,
+            row.gb_eps,
+            row.speedup()
+        );
+        rows.push(row);
+    }
+    println!("\n{}", table2::render(&rows));
+}

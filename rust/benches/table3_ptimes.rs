@@ -1,0 +1,24 @@
+//! Bench/regenerator for **Table 3**: hypergraph partitioning
+//! (preprocessing) times per network size and processor count.
+//!
+//! `cargo bench --bench table3_ptimes` — `SPDNN_FULL=1` for the paper grid.
+
+use spdnn::experiments::table3;
+
+fn main() {
+    let full = std::env::var("SPDNN_FULL").is_ok();
+    let (ns, ps, layers): (Vec<usize>, Vec<usize>, usize) = if full {
+        (
+            vec![1024, 4096, 16384, 65536],
+            vec![32, 64, 128, 256, 512],
+            120,
+        )
+    } else {
+        (vec![1024, 4096], vec![8, 16, 32], 24)
+    };
+    println!("# Table 3 reproduction (L={layers}, full={full})");
+    for n in ns {
+        let rows = table3::run(n, layers, &ps, 1);
+        println!("{}", table3::render(&rows));
+    }
+}

@@ -1,0 +1,176 @@
+//! Simulated message-passing fabric: the crate's MPI substitute.
+//!
+//! Ranks are threads; each rank holds an [`Endpoint`] with channels to every
+//! other rank. Sends are non-blocking (like `MPI_Isend` in Alg. 2 line 5);
+//! receives match on (layer, phase, transfer-id) with out-of-order stashing,
+//! which gives the same semantics as tag-matched MPI point-to-point.
+//! Every endpoint counts words/messages sent so live runs can be checked
+//! against the precomputed [`crate::partition::CommPlan`].
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Communication phase tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Forward,
+    Backward,
+}
+
+/// A tagged message.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub layer: u32,
+    pub phase: Phase,
+    pub from: u32,
+    /// Transfer id within the layer plan (unique per (from,to) pair).
+    pub transfer: u32,
+    pub payload: Vec<f32>,
+}
+
+type Key = (u32, Phase, u32, u32); // layer, phase, from, transfer
+
+/// Per-rank endpoint.
+pub struct Endpoint {
+    pub rank: u32,
+    senders: Vec<Sender<Msg>>,
+    inbox: Receiver<Msg>,
+    stash: HashMap<Key, Vec<f32>>,
+    /// Counters: words sent, messages sent.
+    pub sent_words: u64,
+    pub sent_msgs: u64,
+}
+
+impl Endpoint {
+    /// Non-blocking send of `payload` to `to`.
+    pub fn send(&mut self, to: u32, layer: u32, phase: Phase, transfer: u32, payload: Vec<f32>) {
+        self.sent_words += payload.len() as u64;
+        self.sent_msgs += 1;
+        let msg = Msg {
+            layer,
+            phase,
+            from: self.rank,
+            transfer,
+            payload,
+        };
+        // A disconnected peer means that rank panicked; propagate.
+        self.senders[to as usize]
+            .send(msg)
+            .expect("peer rank hung up");
+    }
+
+    /// Blocking receive of the uniquely-tagged message; out-of-order
+    /// arrivals for other tags are stashed.
+    pub fn recv(&mut self, from: u32, layer: u32, phase: Phase, transfer: u32) -> Vec<f32> {
+        let key: Key = (layer, phase, from, transfer);
+        if let Some(p) = self.stash.remove(&key) {
+            return p;
+        }
+        loop {
+            let m = self.inbox.recv().expect("fabric closed while receiving");
+            let k: Key = (m.layer, m.phase, m.from, m.transfer);
+            if k == key {
+                return m.payload;
+            }
+            self.stash.insert(k, m.payload);
+        }
+    }
+
+    /// True if no unconsumed stashed messages remain (end-of-run check).
+    pub fn drained(&self) -> bool {
+        self.stash.is_empty()
+    }
+}
+
+/// Build a fully-connected fabric of `n` endpoints.
+pub fn fabric(n: usize) -> Vec<Endpoint> {
+    let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(n);
+    let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, inbox)| Endpoint {
+            rank: rank as u32,
+            senders: senders.clone(),
+            inbox,
+            stash: HashMap::new(),
+            sent_words: 0,
+            sent_msgs: 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_roundtrip() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            e1.send(0, 3, Phase::Forward, 7, vec![1.0, 2.0]);
+            e1
+        });
+        let p = e0.recv(1, 3, Phase::Forward, 7);
+        assert_eq!(p, vec![1.0, 2.0]);
+        let e1 = t.join().unwrap();
+        assert_eq!(e1.sent_words, 2);
+        assert_eq!(e1.sent_msgs, 1);
+    }
+
+    #[test]
+    fn out_of_order_stash() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            // send layer 1 before layer 0
+            e1.send(0, 1, Phase::Forward, 0, vec![10.0]);
+            e1.send(0, 0, Phase::Forward, 0, vec![20.0]);
+            e1.send(0, 0, Phase::Backward, 0, vec![30.0]);
+        });
+        assert_eq!(e0.recv(1, 0, Phase::Forward, 0), vec![20.0]);
+        assert_eq!(e0.recv(1, 0, Phase::Backward, 0), vec![30.0]);
+        assert_eq!(e0.recv(1, 1, Phase::Forward, 0), vec![10.0]);
+        assert!(e0.drained());
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn many_ranks_all_to_all() {
+        let n = 8;
+        let eps = fabric(n);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut e| {
+                std::thread::spawn(move || {
+                    let me = e.rank;
+                    for to in 0..n as u32 {
+                        if to != me {
+                            e.send(to, 0, Phase::Forward, me, vec![me as f32]);
+                        }
+                    }
+                    let mut sum = 0.0;
+                    for from in 0..n as u32 {
+                        if from != me {
+                            sum += e.recv(from, 0, Phase::Forward, from)[0];
+                        }
+                    }
+                    sum
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let sum = h.join().unwrap();
+            let expect: f32 = (0..n as u32).filter(|&x| x != i as u32).map(|x| x as f32).sum();
+            assert_eq!(sum, expect);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Communication substrate: the simulated MPI fabric (live threaded runs)
+//! and the α-β network / compute-rate models (replay runs).
+
+pub mod fabric;
+pub mod netmodel;
+
+pub use fabric::{fabric, Endpoint, Msg, Phase};
+pub use netmodel::{ComputeModel, NetModel};

@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! - [`worker`]: rank-local state + the SpFF/SpBP step logic (Alg. 2–3);
+//! - [`sgd`]: live threaded distributed training/inference over the
+//!   simulated fabric, with counter cross-checks against the plan;
+//! - [`replay`]: deterministic timing simulator (Fig. 4/5, Table 2) using
+//!   calibrated compute rates + the α-β network model;
+//! - [`gb_baseline`]: the data-parallel GraphBLAS-style comparator of
+//!   Table 2.
+
+pub mod gb_baseline;
+pub mod minibatch;
+pub mod replay;
+pub mod sgd;
+pub mod worker;
+
+pub use replay::{replay, ReplayConfig, ReplayResult};
+pub use sgd::{infer_distributed, train_distributed, TrainRun};
+pub use worker::RankState;

@@ -1,0 +1,244 @@
+//! Deterministic replay simulator — regenerates the paper's *time* results
+//! (Fig. 4 strong scaling, Fig. 5 breakdown, Table 2 throughput) at any
+//! processor count without needing that many cores.
+//!
+//! The replay walks the exact per-layer schedule of Algorithms 2–3 over the
+//! exact per-rank message sets of a [`CommPlan`] and charges:
+//! - compute from calibrated per-nnz rates ([`ComputeModel`], measured on
+//!   this host), scaled by batch size;
+//! - communication from the α-β [`NetModel`] on the true message/word
+//!   counts;
+//! - the inter-layer synchronization barrier by taking, per layer, the
+//!   maximum compute over ranks plus the maximum comm over ranks (the
+//!   barrier the paper identifies as the main latency overhead, §6.2).
+
+use crate::comm::netmodel::{layer_loads, ComputeModel, NetModel, RankLayerLoad};
+use crate::partition::{CommPlan, DnnPartition};
+use crate::sparse::Csr;
+
+/// What to simulate.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayConfig {
+    pub net: NetModel,
+    pub comp: ComputeModel,
+    /// Inputs processed per iteration (1 = pure SGD; >1 = minibatch SpMM).
+    pub batch: usize,
+    /// Simulate training (fwd+bwd+update) or inference only.
+    pub train: bool,
+}
+
+impl ReplayConfig {
+    pub fn training(comp: ComputeModel) -> Self {
+        Self {
+            net: NetModel::infiniband(),
+            comp,
+            batch: 1,
+            train: true,
+        }
+    }
+
+    pub fn inference(comp: ComputeModel, batch: usize) -> Self {
+        Self {
+            net: NetModel::infiniband(),
+            comp,
+            batch,
+            train: false,
+        }
+    }
+}
+
+/// Simulated timing result for one iteration (one input / one batch).
+#[derive(Debug, Clone, Default)]
+pub struct ReplayResult {
+    /// Seconds spent in local SpMV-like compute (fwd + bwd products).
+    pub spmv: f64,
+    /// Seconds spent in gradient updates.
+    pub updt: f64,
+    /// Seconds spent communicating (incl. the per-layer barrier effect).
+    pub comm: f64,
+}
+
+impl ReplayResult {
+    pub fn total(&self) -> f64 {
+        self.spmv + self.updt + self.comm
+    }
+}
+
+/// Per-rank comm load in one layer (messages/words, send and recv).
+#[derive(Debug, Clone, Copy, Default)]
+struct CommLoad {
+    smsgs: u64,
+    swords: u64,
+    rmsgs: u64,
+    rwords: u64,
+}
+
+/// Simulate one SGD iteration (or one inference batch if `train=false`).
+pub fn replay(
+    structure: &[Csr],
+    part: &DnnPartition,
+    plan: &CommPlan,
+    cfg: &ReplayConfig,
+) -> ReplayResult {
+    let nparts = part.nparts;
+    let loads = layer_loads(structure, &part.layer_parts, nparts);
+    let b = cfg.batch as f64;
+    let mut res = ReplayResult::default();
+
+    let mut comm_scratch = vec![CommLoad::default(); nparts];
+    for (k, lp) in plan.layers.iter().enumerate() {
+        // per-rank comm loads of this layer
+        for c in comm_scratch.iter_mut() {
+            *c = CommLoad::default();
+        }
+        for t in &lp.transfers {
+            let words = t.indices.len() as u64 * cfg.batch as u64;
+            let f = &mut comm_scratch[t.from as usize];
+            f.smsgs += 1;
+            f.swords += words;
+            let r = &mut comm_scratch[t.to as usize];
+            r.rmsgs += 1;
+            r.rwords += words;
+        }
+        let max_comm = comm_scratch
+            .iter()
+            .map(|c| cfg.net.layer_cost(c.smsgs, c.swords, c.rmsgs, c.rwords))
+            .fold(0.0, f64::max);
+
+        // forward compute: SpMV/SpMM + activation
+        let max_fwd = loads[k]
+            .iter()
+            .map(|l: &RankLayerLoad| cfg.comp.fwd_time(l.nnz, l.rows) * b)
+            .fold(0.0, f64::max);
+        res.spmv += max_fwd;
+        res.comm += max_comm;
+
+        if cfg.train {
+            // backward: transpose product + same comm (mirror) + update
+            let max_bwd = loads[k]
+                .iter()
+                .map(|l| cfg.comp.bwd_time(l.nnz, l.rows) * b)
+                .fold(0.0, f64::max);
+            let max_updt = loads[k]
+                .iter()
+                .map(|l| cfg.comp.update_time(l.nnz) * b)
+                .fold(0.0, f64::max);
+            res.spmv += max_bwd;
+            res.updt += max_updt;
+            res.comm += max_comm; // SpBP mirrors SpFF exactly
+        }
+    }
+    res
+}
+
+/// Strong-scaling sweep (Fig. 4): simulated seconds/input at each P for a
+/// given partitioning function.
+pub fn scaling_sweep(
+    structure: &[Csr],
+    parts: &[(usize, DnnPartition)],
+    cfg: &ReplayConfig,
+) -> Vec<(usize, ReplayResult)> {
+    parts
+        .iter()
+        .map(|(p, part)| {
+            let plan = CommPlan::build(structure, part);
+            (*p, replay(structure, part, &plan, cfg))
+        })
+        .collect()
+}
+
+/// Inference throughput in edges/second (Table 2 metric): `inputs` vectors
+/// through a network of `total_nnz` connections in simulated time.
+pub fn throughput_edges_per_sec(
+    structure: &[Csr],
+    part: &DnnPartition,
+    plan: &CommPlan,
+    comp: ComputeModel,
+    batch: usize,
+    inputs: usize,
+) -> f64 {
+    let cfg = ReplayConfig::inference(comp, batch);
+    let per_batch = replay(structure, part, plan, &cfg).total();
+    let nbatches = (inputs + batch - 1) / batch;
+    let total_nnz: u64 = structure.iter().map(|w| w.nnz() as u64).sum();
+    (total_nnz as f64 * inputs as f64) / (per_batch * nbatches as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::phases::{hypergraph_partition, PhaseConfig};
+    use crate::partition::random::random_partition;
+    use crate::radixnet::{generate_structure, RadixNetConfig};
+
+    fn structure() -> Vec<Csr> {
+        generate_structure(&RadixNetConfig::graph_challenge(256, 8).unwrap())
+    }
+
+    fn cfg() -> ReplayConfig {
+        ReplayConfig::training(ComputeModel::haswell_defaults())
+    }
+
+    #[test]
+    fn compute_shrinks_with_more_ranks() {
+        let s = structure();
+        let p4 = random_partition(&s, 4, 1);
+        let p16 = random_partition(&s, 16, 1);
+        let r4 = replay(&s, &p4, &CommPlan::build(&s, &p4), &cfg());
+        let r16 = replay(&s, &p16, &CommPlan::build(&s, &p16), &cfg());
+        assert!(r16.spmv < r4.spmv, "{} vs {}", r16.spmv, r4.spmv);
+        assert!(r16.comm > 0.0 && r4.comm > 0.0);
+    }
+
+    #[test]
+    fn hypergraph_partition_is_faster_in_model() {
+        let s = structure();
+        let h = hypergraph_partition(&s, &PhaseConfig::new(8));
+        let r = random_partition(&s, 8, 2);
+        let th = replay(&s, &h, &CommPlan::build(&s, &h), &cfg()).total();
+        let tr = replay(&s, &r, &CommPlan::build(&s, &r), &cfg()).total();
+        assert!(th < tr, "H {th} not faster than R {tr}");
+    }
+
+    #[test]
+    fn single_rank_has_zero_comm() {
+        let s = structure();
+        let p = random_partition(&s, 1, 1);
+        let r = replay(&s, &p, &CommPlan::build(&s, &p), &cfg());
+        assert_eq!(r.comm, 0.0);
+        assert!(r.spmv > 0.0);
+        assert!(r.updt > 0.0);
+    }
+
+    #[test]
+    fn inference_has_no_update_time() {
+        let s = structure();
+        let p = random_partition(&s, 4, 1);
+        let plan = CommPlan::build(&s, &p);
+        let mut c = cfg();
+        c.train = false;
+        let r = replay(&s, &p, &plan, &c);
+        assert_eq!(r.updt, 0.0);
+    }
+
+    #[test]
+    fn batch_amortizes_latency() {
+        // throughput (edges/s) grows with batch size: α is paid once per
+        // message regardless of batch width.
+        let s = structure();
+        let p = random_partition(&s, 8, 1);
+        let plan = CommPlan::build(&s, &p);
+        let comp = ComputeModel::haswell_defaults();
+        let t1 = throughput_edges_per_sec(&s, &p, &plan, comp, 1, 64);
+        let t64 = throughput_edges_per_sec(&s, &p, &plan, comp, 64, 64);
+        assert!(t64 > t1, "batch 64 {t64} <= batch 1 {t1}");
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let s = structure();
+        let p = random_partition(&s, 4, 1);
+        let r = replay(&s, &p, &CommPlan::build(&s, &p), &cfg());
+        assert!((r.total() - (r.spmv + r.updt + r.comm)).abs() < 1e-12);
+    }
+}

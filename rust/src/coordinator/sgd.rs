@@ -1,0 +1,290 @@
+//! Live distributed SGD driver: spawns one thread per rank over the
+//! simulated fabric and runs the full Alg. 2 + Alg. 3 schedule.
+//!
+//! The driver is the "leader": it carves the model into rank states,
+//! launches workers, feeds them the dataset, reduces losses, merges the
+//! trained row blocks back into a global model, and cross-checks the live
+//! communication counters against the precomputed [`CommPlan`].
+
+use super::worker::RankState;
+use crate::comm::fabric;
+use crate::dnn::SparseNet;
+use crate::partition::{CommPlan, DnnPartition};
+use crate::util::PhaseTimer;
+
+/// Result of a distributed training run.
+pub struct TrainRun {
+    /// The trained model (row blocks merged back).
+    pub net: SparseNet,
+    /// Per-step global losses.
+    pub losses: Vec<f32>,
+    /// Per-rank (words, messages) actually sent — must equal the plan.
+    pub sent: Vec<(u64, u64)>,
+    /// Merged per-phase timers (sum over ranks).
+    pub timer: PhaseTimer,
+}
+
+/// Train `net` on `(inputs, targets)` for `epochs` passes with `nparts`
+/// live ranks. Panics if the partition is invalid for the model.
+pub fn train_distributed(
+    net: &SparseNet,
+    part: &DnnPartition,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    eta: f32,
+    epochs: usize,
+) -> TrainRun {
+    let structure: Vec<_> = net.layers.clone();
+    part.validate(&structure).expect("invalid partition");
+    let plan = CommPlan::build(&structure, part);
+    run_with_plan(net, part, &plan, inputs, targets, eta, epochs)
+}
+
+/// Same as [`train_distributed`] with a caller-provided plan.
+pub fn run_with_plan(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    eta: f32,
+    epochs: usize,
+) -> TrainRun {
+    assert_eq!(inputs.len(), targets.len());
+    let nparts = part.nparts;
+    let endpoints = fabric(nparts);
+    let steps = inputs.len() * epochs;
+
+    let mut results: Vec<Option<(RankState, Vec<f32>, u64, u64)>> =
+        (0..nparts).map(|_| None).collect();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nparts);
+        for (rank, mut ep) in endpoints.into_iter().enumerate() {
+            let plan = &plan;
+            let net = &net;
+            let part = &part;
+            handles.push(scope.spawn(move || {
+                let mut state = RankState::build(net, part, rank as u32);
+                let mut local_losses = Vec::with_capacity(steps);
+                for _ in 0..epochs {
+                    for (x, y) in inputs.iter().zip(targets.iter()) {
+                        local_losses.push(state.train_step(&mut ep, plan, x, y, eta));
+                    }
+                }
+                assert!(ep.drained(), "rank {rank}: unconsumed messages");
+                (state, local_losses, ep.sent_words, ep.sent_msgs)
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            results[rank] = Some(h.join().expect("worker panicked"));
+        }
+    });
+
+    // merge blocks, reduce losses & timers
+    let mut out = net.clone();
+    let mut losses = vec![0f32; steps];
+    let mut sent = Vec::with_capacity(nparts);
+    let mut timer = PhaseTimer::new();
+    for r in results.into_iter() {
+        let (state, local_losses, words, msgs) = r.unwrap();
+        state.merge_into(&mut out);
+        for (i, l) in local_losses.into_iter().enumerate() {
+            losses[i] += l;
+        }
+        timer.merge(&state.timer);
+        sent.push((words, msgs));
+    }
+    TrainRun {
+        net: out,
+        losses,
+        sent,
+        timer,
+    }
+}
+
+/// Distributed batched inference (H-SpFF with SpMM): returns the output
+/// `[nL × b]` row-major matrix plus per-rank counters.
+pub fn infer_distributed(
+    net: &SparseNet,
+    part: &DnnPartition,
+    x0: &[f32],
+    b: usize,
+) -> (Vec<f32>, Vec<(u64, u64)>) {
+    let structure: Vec<_> = net.layers.clone();
+    part.validate(&structure).expect("invalid partition");
+    let plan = CommPlan::build(&structure, part);
+    let nparts = part.nparts;
+    let endpoints = fabric(nparts);
+    let nl = net.output_dim();
+    let mut output = vec![0f32; nl * b];
+    let mut sent = vec![(0u64, 0u64); nparts];
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nparts);
+        for (rank, mut ep) in endpoints.into_iter().enumerate() {
+            let plan = &plan;
+            let net = &net;
+            let part = &part;
+            handles.push(scope.spawn(move || {
+                let mut state = RankState::build(net, part, rank as u32);
+                let full = state.infer_batch(&mut ep, plan, x0, b);
+                // extract owned output rows
+                let owned = state.rows.last().unwrap().clone();
+                let rows: Vec<(u32, Vec<f32>)> = owned
+                    .iter()
+                    .map(|&r| {
+                        let r = r as usize;
+                        (r as u32, full[r * b..(r + 1) * b].to_vec())
+                    })
+                    .collect();
+                (rows, ep.sent_words, ep.sent_msgs)
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            let (rows, words, msgs) = h.join().expect("worker panicked");
+            for (r, vals) in rows {
+                output[r as usize * b..(r as usize + 1) * b].copy_from_slice(&vals);
+            }
+            sent[rank] = (words, msgs);
+        }
+    });
+    (output, sent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{sgd_serial, Activation};
+    use crate::partition::phases::{hypergraph_partition, PhaseConfig};
+    use crate::partition::random::random_partition;
+    use crate::radixnet::{generate, RadixNetConfig};
+
+    fn small_net() -> SparseNet {
+        let cfg = RadixNetConfig {
+            radices: vec![4, 4],
+            layers: 4,
+            seed: 17,
+            permute: false,
+            activation: Activation::Sigmoid,
+        };
+        generate(&cfg)
+    }
+
+    fn dataset(n: usize, dim: usize, out: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut rng = crate::util::Rng::new(5);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let targets: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let mut y = vec![0f32; out];
+                y[i % out] = 1.0;
+                y
+            })
+            .collect();
+        (inputs, targets)
+    }
+
+    /// THE equivalence test: distributed == serial for any partition / P.
+    #[test]
+    fn distributed_matches_serial_random_partition() {
+        let net = small_net();
+        let (inputs, targets) = dataset(6, 16, 16);
+        for &p in &[2usize, 3, 4, 8] {
+            let part = random_partition(&net.layers, p, 7 + p as u64);
+            let run = train_distributed(&net, &part, &inputs, &targets, 0.3, 2);
+            let mut serial = net.clone();
+            let serial_losses =
+                sgd_serial::train(&mut serial, &inputs, &targets, 0.3, 2);
+            for (a, b) in run.losses.iter().zip(serial_losses.iter()) {
+                assert!((a - b).abs() < 1e-4, "P={p}: loss {a} vs serial {b}");
+            }
+            for k in 0..net.depth() {
+                for (a, b) in run.net.layers[k]
+                    .vals
+                    .iter()
+                    .zip(serial.layers[k].vals.iter())
+                {
+                    assert!((a - b).abs() < 1e-4, "P={p} layer {k}: {a} vs {b}");
+                }
+                for (a, b) in run.net.biases[k].iter().zip(serial.biases[k].iter()) {
+                    assert!((a - b).abs() < 1e-4, "P={p} layer {k} bias");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_matches_serial_hypergraph_partition() {
+        let net = small_net();
+        let (inputs, targets) = dataset(4, 16, 16);
+        let part = hypergraph_partition(&net.layers, &PhaseConfig::new(4));
+        let run = train_distributed(&net, &part, &inputs, &targets, 0.5, 1);
+        let mut serial = net.clone();
+        let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.5, 1);
+        for (a, b) in run.losses.iter().zip(sl.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for k in 0..net.depth() {
+            for (a, b) in run.net.layers[k]
+                .vals
+                .iter()
+                .zip(serial.layers[k].vals.iter())
+            {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    /// Live counters exactly match the precomputed plan (both directions of
+    /// the mirror argument of Section 4.2).
+    #[test]
+    fn live_counters_match_plan() {
+        let net = small_net();
+        let (inputs, targets) = dataset(3, 16, 16);
+        let part = random_partition(&net.layers, 4, 3);
+        let plan = CommPlan::build(&net.layers, &part);
+        let run = run_with_plan(&net, &part, &plan, &inputs, &targets, 0.1, 1);
+        let fwd_send = plan.fwd_send_volume_per_rank();
+        let fwd_recv = plan.fwd_recv_volume_per_rank();
+        let fwd_smsg = plan.fwd_send_msgs_per_rank();
+        let fwd_rmsg = plan.fwd_recv_msgs_per_rank();
+        let steps = inputs.len() as u64;
+        for r in 0..4usize {
+            let expect_words = steps * (fwd_send[r] + fwd_recv[r]);
+            let expect_msgs = steps * (fwd_smsg[r] + fwd_rmsg[r]);
+            assert_eq!(run.sent[r].0, expect_words, "rank {r} words");
+            assert_eq!(run.sent[r].1, expect_msgs, "rank {r} msgs");
+        }
+    }
+
+    #[test]
+    fn distributed_inference_matches_serial_batch() {
+        let net = small_net();
+        let b = 5;
+        let mut rng = crate::util::Rng::new(9);
+        let x0: Vec<f32> = (0..16 * b)
+            .map(|_| if rng.gen_bool(0.4) { 1.0 } else { 0.0 })
+            .collect();
+        let serial = crate::dnn::inference::infer_batch(&net, &x0, b);
+        for &p in &[2usize, 4] {
+            let part = random_partition(&net.layers, p, 1);
+            let (out, _) = infer_distributed(&net, &part, &x0, b);
+            for (a, s) in out.iter().zip(serial.iter()) {
+                assert!((a - s).abs() < 1e-5, "P={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn loss_decreases_under_distributed_training() {
+        let net = small_net();
+        let (inputs, targets) = dataset(8, 16, 16);
+        let part = random_partition(&net.layers, 4, 2);
+        let run = train_distributed(&net, &part, &inputs, &targets, 0.5, 30);
+        let first: f32 = run.losses[..8].iter().sum();
+        let last: f32 = run.losses[run.losses.len() - 8..].iter().sum();
+        assert!(last < first * 0.7, "loss {first} -> {last}");
+    }
+}

@@ -1,0 +1,291 @@
+//! Rank-local state and the per-rank SpFF/SpBP step logic (Algorithms 2–3).
+//!
+//! Each rank owns the row blocks of its neurons in every layer plus the
+//! matching bias entries. Activation storage is a full-width buffer per
+//! layer: entries the rank owns are written by its local compute, entries
+//! it needs remotely are written by receives, and entries it neither owns
+//! nor needs are never read (the row block has no nonzero there) — this is
+//! semantically identical to the paper's placeholder subvectors x̄/x̂ while
+//! keeping the hot loop a single CSR SpMV.
+
+use crate::comm::{Endpoint, Phase};
+use crate::dnn::{Activation, Loss, SparseNet};
+use crate::partition::{CommPlan, DnnPartition};
+use crate::sparse::Csr;
+use crate::util::PhaseTimer;
+
+/// Everything one rank stores.
+pub struct RankState {
+    pub rank: u32,
+    pub nparts: usize,
+    /// Owned global row ids per weight layer, ascending.
+    pub rows: Vec<Vec<u32>>,
+    /// Local row blocks (local rows × global columns).
+    pub blocks: Vec<Csr>,
+    /// Local bias entries per layer (aligned with `rows`).
+    pub biases: Vec<Vec<f32>>,
+    pub activation: Activation,
+    pub loss: Loss,
+    /// Owned entries of the input vector x^0.
+    pub input_rows: Vec<u32>,
+    /// Global layer dims: `dims[0]` = input width, `dims[k+1]` = rows of
+    /// weight layer k.
+    pub dims: Vec<usize>,
+    /// Per-phase timers (SpMV / Updt / Comm), for live breakdowns.
+    pub timer: PhaseTimer,
+}
+
+impl RankState {
+    /// Carve this rank's slice out of the full model.
+    pub fn build(net: &SparseNet, part: &DnnPartition, rank: u32) -> Self {
+        let mut rows = Vec::with_capacity(net.depth());
+        let mut blocks = Vec::with_capacity(net.depth());
+        let mut biases = Vec::with_capacity(net.depth());
+        for (k, w) in net.layers.iter().enumerate() {
+            let owned = part.rows_of(k, rank);
+            blocks.push(w.row_block(&owned));
+            biases.push(
+                owned
+                    .iter()
+                    .map(|&r| net.biases[k][r as usize])
+                    .collect(),
+            );
+            rows.push(owned);
+        }
+        let input_rows = part
+            .input_parts
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p == rank)
+            .map(|(j, _)| j as u32)
+            .collect();
+        let mut dims = Vec::with_capacity(net.depth() + 1);
+        dims.push(net.input_dim());
+        for w in &net.layers {
+            dims.push(w.nrows);
+        }
+        Self {
+            rank,
+            nparts: part.nparts,
+            rows,
+            blocks,
+            biases,
+            activation: net.activation,
+            loss: net.loss,
+            input_rows,
+            dims,
+            timer: PhaseTimer::new(),
+        }
+    }
+
+    /// Width of the activation vector feeding weight layer k (x^{k}).
+    fn in_width(&self, k: usize) -> usize {
+        self.blocks[k].ncols
+    }
+
+    /// Forward pass (Alg. 2) for one input. `x0` is the **full** input
+    /// vector but only entries this rank owns are read. Returns the
+    /// full-width activation buffers x^0..x^L (locally known entries only).
+    pub fn forward(&mut self, ep: &mut Endpoint, plan: &CommPlan, x0: &[f32]) -> Vec<Vec<f32>> {
+        let depth = self.blocks.len();
+        let mut xbuf: Vec<Vec<f32>> = Vec::with_capacity(depth + 1);
+        let mut x = vec![0f32; self.in_width(0)];
+        for &j in &self.input_rows {
+            x[j as usize] = x0[j as usize];
+        }
+        xbuf.push(x);
+
+        for k in 0..depth {
+            let lp = &plan.layers[k];
+            let me = self.rank as usize;
+            // non-blocking sends of owned x^{k} entries (Alg. 2 lines 3–5)
+            self.timer.time("comm", || {
+                for &tid in &lp.send_of[me] {
+                    let t = &lp.transfers[tid as usize];
+                    let payload: Vec<f32> = t
+                        .indices
+                        .iter()
+                        .map(|&j| xbuf[k][j as usize])
+                        .collect();
+                    ep.send(t.to, k as u32, Phase::Forward, tid, payload);
+                }
+            });
+            // receives (Alg. 2 lines 7–8); live mode receives before the
+            // single fused SpMV — overlap is a perf artifact modeled by the
+            // replay simulator, not needed for correctness.
+            let mut xk = std::mem::take(&mut xbuf[k]);
+            self.timer.time("comm", || {
+                for &tid in &lp.recv_of[me] {
+                    let t = &lp.transfers[tid as usize];
+                    let payload = ep.recv(t.from, k as u32, Phase::Forward, tid);
+                    for (i, &j) in t.indices.iter().enumerate() {
+                        xk[j as usize] = payload[i];
+                    }
+                }
+            });
+            xbuf[k] = xk;
+            // local SpMV + bias + activation (Alg. 2 lines 6, 10)
+            let mut out = vec![0f32; self.dims[k + 1]];
+            let mut z = vec![0f32; self.blocks[k].nrows];
+            self.timer.time("spmv", || {
+                self.blocks[k].spmv(&xbuf[k], &mut z);
+            });
+            for (i, zi) in z.iter_mut().enumerate() {
+                *zi += self.biases[k][i];
+            }
+            self.activation.apply(&mut z);
+            for (i, &r) in self.rows[k].iter().enumerate() {
+                out[r as usize] = z[i];
+            }
+            xbuf.push(out);
+        }
+        xbuf
+    }
+
+    /// Full train step: forward + backward + update (Alg. 2 + Alg. 3).
+    /// `y` is the full target vector (only owned output entries are read).
+    /// Returns this rank's partial loss.
+    pub fn train_step(
+        &mut self,
+        ep: &mut Endpoint,
+        plan: &CommPlan,
+        x0: &[f32],
+        y: &[f32],
+        eta: f32,
+    ) -> f32 {
+        let depth = self.blocks.len();
+        let xbuf = self.forward(ep, plan, x0);
+
+        // δ^L over owned output rows (Alg. 3 line 2)
+        let last_rows = self.rows[depth - 1].clone();
+        let mut delta: Vec<f32> = Vec::with_capacity(last_rows.len());
+        let mut local_loss = 0f32;
+        for &r in &last_rows {
+            let xr = xbuf[depth][r as usize];
+            let yr = y[r as usize];
+            local_loss += 0.5 * (xr - yr) * (xr - yr);
+            let g = xr - yr; // MSE gradient
+            delta.push(g * self.activation.derivative_from_output(xr));
+        }
+
+        for k in (0..depth).rev() {
+            let lp = &plan.layers[k];
+            let me = self.rank as usize;
+            // s = (W^k_m)ᵀ δ^k_m (Alg. 3 line 4)
+            let mut s = vec![0f32; self.in_width(k)];
+            self.timer.time("spmv", || {
+                self.blocks[k].spmv_t_add(&delta, &mut s);
+            });
+            // non-blocking sends of partial gradients (lines 5–7):
+            // mirror of forward receives.
+            self.timer.time("comm", || {
+                for &tid in &lp.recv_of[me] {
+                    let t = &lp.transfers[tid as usize];
+                    let payload: Vec<f32> =
+                        t.indices.iter().map(|&j| s[j as usize]).collect();
+                    ep.send(t.from, k as u32, Phase::Backward, tid, payload);
+                }
+            });
+            // overlap window: weight + bias update (lines 8–9) uses x^{k-1}
+            // including entries received during the forward phase.
+            self.timer.time("updt", || {
+                self.blocks[k].sgd_update(&delta, &xbuf[k], eta);
+            });
+            for (i, d) in delta.iter().enumerate() {
+                self.biases[k][i] -= eta * d;
+            }
+            // receive partial gradients (lines 10–12): mirror of fwd sends.
+            self.timer.time("comm", || {
+                for &tid in &lp.send_of[me] {
+                    let t = &lp.transfers[tid as usize];
+                    let payload = ep.recv(t.to, k as u32, Phase::Backward, tid);
+                    for (i, &j) in t.indices.iter().enumerate() {
+                        s[j as usize] += payload[i];
+                    }
+                }
+            });
+            // δ^{k-1} = s ⊙ f'(z^{k-1}) on owned rows of layer k-1 (line 13)
+            if k > 0 {
+                let owned = &self.rows[k - 1];
+                let mut next = Vec::with_capacity(owned.len());
+                for &j in owned.iter() {
+                    let yj = xbuf[k][j as usize];
+                    next.push(s[j as usize] * self.activation.derivative_from_output(yj));
+                }
+                delta = next;
+            }
+        }
+        local_loss
+    }
+
+    /// Inference-only forward for a batch of `b` inputs (SpMM, §5.1).
+    /// `x0` is the full input matrix row-major `[n0 × b]`; only owned rows
+    /// are read. Returns the full-width `[nL × b]` buffer with owned rows
+    /// filled.
+    pub fn infer_batch(
+        &mut self,
+        ep: &mut Endpoint,
+        plan: &CommPlan,
+        x0: &[f32],
+        b: usize,
+    ) -> Vec<f32> {
+        let depth = self.blocks.len();
+        let mut cur = vec![0f32; self.in_width(0) * b];
+        for &j in &self.input_rows {
+            let j = j as usize;
+            cur[j * b..(j + 1) * b].copy_from_slice(&x0[j * b..(j + 1) * b]);
+        }
+        for k in 0..depth {
+            let lp = &plan.layers[k];
+            let me = self.rank as usize;
+            self.timer.time("comm", || {
+                for &tid in &lp.send_of[me] {
+                    let t = &lp.transfers[tid as usize];
+                    let mut payload = Vec::with_capacity(t.indices.len() * b);
+                    for &j in &t.indices {
+                        let j = j as usize;
+                        payload.extend_from_slice(&cur[j * b..(j + 1) * b]);
+                    }
+                    ep.send(t.to, k as u32, Phase::Forward, tid, payload);
+                }
+                for &tid in &lp.recv_of[me] {
+                    let t = &lp.transfers[tid as usize];
+                    let payload = ep.recv(t.from, k as u32, Phase::Forward, tid);
+                    for (i, &j) in t.indices.iter().enumerate() {
+                        let j = j as usize;
+                        cur[j * b..(j + 1) * b].copy_from_slice(&payload[i * b..(i + 1) * b]);
+                    }
+                }
+            });
+            let blk = &self.blocks[k];
+            let mut z = vec![0f32; blk.nrows * b];
+            self.timer.time("spmv", || {
+                blk.spmm_rowmajor(&cur, &mut z, b);
+            });
+            let mut out = vec![0f32; self.dims[k + 1] * b];
+            for (i, &r) in self.rows[k].iter().enumerate() {
+                let zrow = &mut z[i * b..(i + 1) * b];
+                for v in zrow.iter_mut() {
+                    *v += self.biases[k][i];
+                }
+                self.activation.apply(zrow);
+                out[r as usize * b..(r as usize + 1) * b].copy_from_slice(zrow);
+            }
+            cur = out;
+        }
+        cur
+    }
+
+    /// Reassemble this rank's rows into a global model (driver-side merge).
+    pub fn merge_into(&self, net: &mut SparseNet) {
+        for (k, owned) in self.rows.iter().enumerate() {
+            for (i, &r) in owned.iter().enumerate() {
+                let (_, src) = self.blocks[k].row(i);
+                let lo = net.layers[k].indptr[r as usize] as usize;
+                let hi = net.layers[k].indptr[r as usize + 1] as usize;
+                net.layers[k].vals[lo..hi].copy_from_slice(src);
+                net.biases[k][r as usize] = self.biases[k][i];
+            }
+        }
+    }
+}

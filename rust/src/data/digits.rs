@@ -1,0 +1,162 @@
+//! Stroke-template digit rasterizer for the synthetic MNIST substitute.
+//!
+//! Each digit class 0-9 has a fixed set of stroke segments in unit
+//! coordinates; rendering jitters the endpoints slightly (seeded) and draws
+//! anti-aliased thick lines onto a 28×28 canvas — enough visual/structural
+//! variety for a real (if easy) classification task.
+
+use crate::util::Rng;
+
+/// Stroke templates per digit: list of (x0, y0, x1, y1) in [0,1]².
+fn template(digit: usize) -> &'static [(f32, f32, f32, f32)] {
+    const T0: &[(f32, f32, f32, f32)] = &[
+        (0.3, 0.2, 0.7, 0.2),
+        (0.7, 0.2, 0.7, 0.8),
+        (0.7, 0.8, 0.3, 0.8),
+        (0.3, 0.8, 0.3, 0.2),
+    ];
+    const T1: &[(f32, f32, f32, f32)] = &[(0.5, 0.15, 0.5, 0.85), (0.35, 0.3, 0.5, 0.15)];
+    const T2: &[(f32, f32, f32, f32)] = &[
+        (0.3, 0.25, 0.7, 0.25),
+        (0.7, 0.25, 0.7, 0.5),
+        (0.7, 0.5, 0.3, 0.8),
+        (0.3, 0.8, 0.7, 0.8),
+    ];
+    const T3: &[(f32, f32, f32, f32)] = &[
+        (0.3, 0.2, 0.7, 0.2),
+        (0.7, 0.2, 0.5, 0.5),
+        (0.5, 0.5, 0.7, 0.8),
+        (0.7, 0.8, 0.3, 0.8),
+    ];
+    const T4: &[(f32, f32, f32, f32)] = &[
+        (0.35, 0.2, 0.3, 0.55),
+        (0.3, 0.55, 0.75, 0.55),
+        (0.65, 0.2, 0.65, 0.85),
+    ];
+    const T5: &[(f32, f32, f32, f32)] = &[
+        (0.7, 0.2, 0.3, 0.2),
+        (0.3, 0.2, 0.3, 0.5),
+        (0.3, 0.5, 0.7, 0.55),
+        (0.7, 0.55, 0.7, 0.8),
+        (0.7, 0.8, 0.3, 0.8),
+    ];
+    const T6: &[(f32, f32, f32, f32)] = &[
+        (0.65, 0.2, 0.35, 0.4),
+        (0.35, 0.4, 0.3, 0.75),
+        (0.3, 0.75, 0.65, 0.8),
+        (0.65, 0.8, 0.7, 0.55),
+        (0.7, 0.55, 0.3, 0.55),
+    ];
+    const T7: &[(f32, f32, f32, f32)] = &[(0.3, 0.2, 0.75, 0.2), (0.75, 0.2, 0.45, 0.85)];
+    const T8: &[(f32, f32, f32, f32)] = &[
+        (0.35, 0.2, 0.65, 0.2),
+        (0.65, 0.2, 0.65, 0.5),
+        (0.65, 0.5, 0.35, 0.5),
+        (0.35, 0.5, 0.35, 0.2),
+        (0.35, 0.5, 0.35, 0.8),
+        (0.35, 0.8, 0.65, 0.8),
+        (0.65, 0.8, 0.65, 0.5),
+    ];
+    const T9: &[(f32, f32, f32, f32)] = &[
+        (0.65, 0.45, 0.35, 0.45),
+        (0.35, 0.45, 0.35, 0.2),
+        (0.35, 0.2, 0.65, 0.2),
+        (0.65, 0.2, 0.65, 0.8),
+    ];
+    match digit {
+        0 => T0,
+        1 => T1,
+        2 => T2,
+        3 => T3,
+        4 => T4,
+        5 => T5,
+        6 => T6,
+        7 => T7,
+        8 => T8,
+        _ => T9,
+    }
+}
+
+/// Render digit class `digit` as a 28×28 grayscale image in [0,1], with
+/// seeded endpoint jitter.
+pub fn render_digit(digit: usize, rng: &mut Rng) -> Vec<f32> {
+    const S: usize = 28;
+    let mut img = vec![0f32; S * S];
+    let jitter = 0.04f32;
+    let dx = rng.gen_f32_range(-jitter, jitter);
+    let dy = rng.gen_f32_range(-jitter, jitter);
+    let scale = rng.gen_f32_range(0.9, 1.1);
+    for &(x0, y0, x1, y1) in template(digit % 10) {
+        let j = |rng: &mut Rng| rng.gen_f32_range(-jitter, jitter);
+        let p0 = (
+            ((x0 - 0.5) * scale + 0.5 + dx + j(rng)) * S as f32,
+            ((y0 - 0.5) * scale + 0.5 + dy + j(rng)) * S as f32,
+        );
+        let p1 = (
+            ((x1 - 0.5) * scale + 0.5 + dx + j(rng)) * S as f32,
+            ((y1 - 0.5) * scale + 0.5 + dy + j(rng)) * S as f32,
+        );
+        draw_line(&mut img, S, p0, p1, 1.3);
+    }
+    img
+}
+
+/// Draw a thick anti-aliased segment by distance-to-segment shading.
+fn draw_line(img: &mut [f32], side: usize, p0: (f32, f32), p1: (f32, f32), width: f32) {
+    let (x0, y0) = p0;
+    let (x1, y1) = p1;
+    let minx = (x0.min(x1) - width).floor().max(0.0) as usize;
+    let maxx = (x0.max(x1) + width).ceil().min(side as f32 - 1.0) as usize;
+    let miny = (y0.min(y1) - width).floor().max(0.0) as usize;
+    let maxy = (y0.max(y1) + width).ceil().min(side as f32 - 1.0) as usize;
+    let vx = x1 - x0;
+    let vy = y1 - y0;
+    let len2 = (vx * vx + vy * vy).max(1e-9);
+    for y in miny..=maxy {
+        for x in minx..=maxx {
+            let px = x as f32 - x0;
+            let py = y as f32 - y0;
+            let t = ((px * vx + py * vy) / len2).clamp(0.0, 1.0);
+            let ddx = px - t * vx;
+            let ddy = py - t * vy;
+            let dist = (ddx * ddx + ddy * ddy).sqrt();
+            let v = (1.0 - (dist / width)).clamp(0.0, 1.0);
+            let cell = &mut img[y * side + x];
+            *cell = cell.max(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_digits_render_nonempty() {
+        let mut rng = Rng::new(1);
+        for d in 0..10 {
+            let img = render_digit(d, &mut rng);
+            let on = img.iter().filter(|&&v| v > 0.3).count();
+            assert!(on > 10, "digit {d} nearly blank ({on} px)");
+            assert!(on < 28 * 28 / 2, "digit {d} too dense ({on} px)");
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn jitter_varies_samples() {
+        let mut rng = Rng::new(2);
+        let a = render_digit(3, &mut rng);
+        let b = render_digit(3, &mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn line_drawing_hits_endpoints() {
+        let mut img = vec![0f32; 28 * 28];
+        draw_line(&mut img, 28, (5.0, 5.0), (20.0, 20.0), 1.5);
+        assert!(img[5 * 28 + 5] > 0.5);
+        assert!(img[20 * 28 + 20] > 0.5);
+        assert_eq!(img[27 * 28], 0.0); // far corner untouched
+    }
+}

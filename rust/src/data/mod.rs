@@ -1,0 +1,197 @@
+//! Synthetic MNIST-like dataset.
+//!
+//! The paper feeds MNIST digits, scaled to 32²…256² pixels, thresholded to
+//! 0-1 vectors, into the RadiX-Net input layers (Section 6.1). This host
+//! has no network access, so we generate a *synthetic* MNIST: seeded
+//! stroke-template digits rasterized at 28×28, bilinearly scaled,
+//! thresholded, flattened — the identical shape/sparsity pipeline
+//! (substitution documented in DESIGN.md §2). The SGD cost and the
+//! communication pattern depend only on input shape/sparsity, not pixel
+//! semantics, and the e2e example still shows a genuinely falling loss.
+
+pub mod digits;
+
+use crate::util::Rng;
+
+/// One dataset sample: a 0/1 flattened image and its class label.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub pixels: Vec<f32>,
+    pub label: usize,
+}
+
+/// Dataset of binary images of dimension `dim = side*side`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub side: usize,
+    pub samples: Vec<Sample>,
+}
+
+impl Dataset {
+    pub fn dim(&self) -> usize {
+        self.side * self.side
+    }
+
+    /// One-hot target vector of length `out_dim` (class in the first 10).
+    pub fn target(&self, i: usize, out_dim: usize) -> Vec<f32> {
+        let mut y = vec![0f32; out_dim];
+        let l = self.samples[i].label;
+        if l < out_dim {
+            y[l] = 1.0;
+        }
+        y
+    }
+
+    /// Pack samples `[lo, hi)` row-major `[dim x b]` for batched inference.
+    pub fn pack_batch(&self, lo: usize, hi: usize) -> (Vec<f32>, usize) {
+        let b = hi - lo;
+        let d = self.dim();
+        let mut x = vec![0f32; d * b];
+        for (j, s) in self.samples[lo..hi].iter().enumerate() {
+            for i in 0..d {
+                x[i * b + j] = s.pixels[i];
+            }
+        }
+        (x, b)
+    }
+}
+
+/// Generate a synthetic MNIST-like dataset at `side`×`side` resolution.
+///
+/// Supported sides mirror the paper's scaling: 32, 64, 128, 256 (and any
+/// other positive value for tests). `count` samples cycle over the 10
+/// digit classes with per-sample jitter.
+pub fn synthetic_mnist(side: usize, count: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut samples = Vec::with_capacity(count);
+    for i in 0..count {
+        let label = i % 10;
+        let img28 = digits::render_digit(label, &mut rng);
+        let scaled = bilinear_scale(&img28, 28, side);
+        let pixels = threshold(&scaled, 0.35);
+        samples.push(Sample { pixels, label });
+    }
+    Dataset { side, samples }
+}
+
+/// Bilinear image scaling from `src_side`² to `dst_side`².
+pub fn bilinear_scale(src: &[f32], src_side: usize, dst_side: usize) -> Vec<f32> {
+    assert_eq!(src.len(), src_side * src_side);
+    if src_side == dst_side {
+        return src.to_vec();
+    }
+    let mut out = vec![0f32; dst_side * dst_side];
+    let scale = src_side as f32 / dst_side as f32;
+    for y in 0..dst_side {
+        for x in 0..dst_side {
+            let sx = (x as f32 + 0.5) * scale - 0.5;
+            let sy = (y as f32 + 0.5) * scale - 0.5;
+            let x0 = sx.floor().max(0.0) as usize;
+            let y0 = sy.floor().max(0.0) as usize;
+            let x1 = (x0 + 1).min(src_side - 1);
+            let y1 = (y0 + 1).min(src_side - 1);
+            let fx = (sx - x0 as f32).clamp(0.0, 1.0);
+            let fy = (sy - y0 as f32).clamp(0.0, 1.0);
+            let v00 = src[y0 * src_side + x0];
+            let v01 = src[y0 * src_side + x1];
+            let v10 = src[y1 * src_side + x0];
+            let v11 = src[y1 * src_side + x1];
+            out[y * dst_side + x] = v00 * (1.0 - fx) * (1.0 - fy)
+                + v01 * fx * (1.0 - fy)
+                + v10 * (1.0 - fx) * fy
+                + v11 * fx * fy;
+        }
+    }
+    out
+}
+
+/// Threshold to 0/1 (the paper's binarization step).
+pub fn threshold(img: &[f32], t: f32) -> Vec<f32> {
+    img.iter().map(|&v| if v > t { 1.0 } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_shapes() {
+        let d = synthetic_mnist(32, 20, 1);
+        assert_eq!(d.samples.len(), 20);
+        assert_eq!(d.dim(), 1024);
+        for s in &d.samples {
+            assert_eq!(s.pixels.len(), 1024);
+            assert!(s.pixels.iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn labels_cycle() {
+        let d = synthetic_mnist(32, 25, 2);
+        assert_eq!(d.samples[0].label, 0);
+        assert_eq!(d.samples[13].label, 3);
+    }
+
+    #[test]
+    fn images_nonempty_but_sparse() {
+        let d = synthetic_mnist(64, 30, 3);
+        for (i, s) in d.samples.iter().enumerate() {
+            let on: f32 = s.pixels.iter().sum();
+            let frac = on / s.pixels.len() as f32;
+            assert!(on > 0.0, "sample {i} is blank");
+            assert!(frac < 0.5, "sample {i} too dense: {frac}");
+        }
+    }
+
+    #[test]
+    fn bilinear_identity_when_same_side() {
+        let img = vec![0.1, 0.2, 0.3, 0.4];
+        assert_eq!(bilinear_scale(&img, 2, 2), img);
+    }
+
+    #[test]
+    fn bilinear_preserves_constant_images() {
+        let img = vec![0.7; 28 * 28];
+        let up = bilinear_scale(&img, 28, 64);
+        assert!(up.iter().all(|&v| (v - 0.7).abs() < 1e-5));
+        let down = bilinear_scale(&img, 28, 16);
+        assert!(down.iter().all(|&v| (v - 0.7).abs() < 1e-5));
+    }
+
+    #[test]
+    fn target_one_hot() {
+        let d = synthetic_mnist(32, 5, 4);
+        let y = d.target(3, 1024);
+        assert_eq!(y.iter().filter(|&&v| v == 1.0).count(), 1);
+        assert_eq!(y[3], 1.0);
+    }
+
+    #[test]
+    fn pack_batch_layout() {
+        let d = synthetic_mnist(32, 4, 5);
+        let (x, b) = d.pack_batch(1, 3);
+        assert_eq!(b, 2);
+        assert_eq!(x.len(), 1024 * 2);
+        // column j of the packed batch equals sample j's pixels
+        for i in 0..1024 {
+            assert_eq!(x[i * 2], d.samples[1].pixels[i]);
+            assert_eq!(x[i * 2 + 1], d.samples[2].pixels[i]);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = synthetic_mnist(32, 10, 7);
+        let b = synthetic_mnist(32, 10, 7);
+        for (sa, sb) in a.samples.iter().zip(b.samples.iter()) {
+            assert_eq!(sa.pixels, sb.pixels);
+        }
+    }
+
+    #[test]
+    fn different_classes_differ() {
+        let d = synthetic_mnist(32, 10, 8);
+        // class 0 vs class 1 rasters should not be identical
+        assert_ne!(d.samples[0].pixels, d.samples[1].pixels);
+    }
+}

@@ -1,0 +1,151 @@
+//! Activation functions and their derivatives.
+//!
+//! The paper's experiments use the sigmoid (Section 6.1); ReLU is provided
+//! for the Graph Challenge inference configuration, which clips activations.
+
+/// Supported element-wise nonlinearities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Sigmoid,
+    Relu,
+    /// Graph Challenge variant: ReLU clipped to [0, 32] after a bias shift.
+    ReluClip,
+    /// Identity (for tests / linear probes).
+    Identity,
+}
+
+impl Activation {
+    /// f(z) applied in place.
+    pub fn apply(&self, z: &mut [f32]) {
+        match self {
+            Activation::Sigmoid => {
+                for v in z.iter_mut() {
+                    *v = 1.0 / (1.0 + (-*v).exp());
+                }
+            }
+            Activation::Relu => {
+                for v in z.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Activation::ReluClip => {
+                for v in z.iter_mut() {
+                    *v = v.max(0.0).min(32.0);
+                }
+            }
+            Activation::Identity => {}
+        }
+    }
+
+    /// f'(z) given *the output* y = f(z). For sigmoid this is the classic
+    /// y(1-y); for (clipped) ReLU the subgradient from the output.
+    pub fn derivative_from_output(&self, y: f32) -> f32 {
+        match self {
+            Activation::Sigmoid => y * (1.0 - y),
+            Activation::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::ReluClip => {
+                if y > 0.0 && y < 32.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Identity => 1.0,
+        }
+    }
+
+    /// out[i] = s[i] * f'(z[i]) computed from outputs y (the `⊙ f'(z)` of
+    /// Eqs. (6)–(7)).
+    pub fn mul_derivative(&self, s: &[f32], y: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(s.len(), y.len());
+        debug_assert_eq!(s.len(), out.len());
+        for i in 0..s.len() {
+            out[i] = s[i] * self.derivative_from_output(y[i]);
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "sigmoid" => Some(Activation::Sigmoid),
+            "relu" => Some(Activation::Relu),
+            "reluclip" | "relu_clip" => Some(Activation::ReluClip),
+            "identity" | "linear" => Some(Activation::Identity),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Sigmoid => "sigmoid",
+            Activation::Relu => "relu",
+            Activation::ReluClip => "reluclip",
+            Activation::Identity => "identity",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_range_and_midpoint() {
+        let mut z = vec![0.0, -10.0, 10.0];
+        Activation::Sigmoid.apply(&mut z);
+        assert!((z[0] - 0.5).abs() < 1e-6);
+        assert!(z[1] < 0.01 && z[2] > 0.99);
+    }
+
+    #[test]
+    fn sigmoid_derivative_matches_finite_difference() {
+        let act = Activation::Sigmoid;
+        for &z0 in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let h = 1e-3f32;
+            let f = |z: f32| 1.0 / (1.0 + (-z).exp());
+            let fd = (f(z0 + h) - f(z0 - h)) / (2.0 * h);
+            let y = f(z0);
+            let an = act.derivative_from_output(y);
+            assert!((fd - an).abs() < 1e-3, "z={z0}: {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn relu_clip_behaviour() {
+        let mut z = vec![-1.0, 5.0, 40.0];
+        Activation::ReluClip.apply(&mut z);
+        assert_eq!(z, vec![0.0, 5.0, 32.0]);
+        assert_eq!(Activation::ReluClip.derivative_from_output(0.0), 0.0);
+        assert_eq!(Activation::ReluClip.derivative_from_output(5.0), 1.0);
+        assert_eq!(Activation::ReluClip.derivative_from_output(32.0), 0.0);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for a in [
+            Activation::Sigmoid,
+            Activation::Relu,
+            Activation::ReluClip,
+            Activation::Identity,
+        ] {
+            assert_eq!(Activation::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Activation::from_name("nope"), None);
+    }
+
+    #[test]
+    fn mul_derivative_identity_passthrough() {
+        let s = [1.0, 2.0, 3.0];
+        let y = [9.0, 9.0, 9.0];
+        let mut out = [0.0; 3];
+        Activation::Identity.mul_derivative(&s, &y, &mut out);
+        assert_eq!(out, s);
+    }
+}

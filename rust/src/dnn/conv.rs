@@ -1,0 +1,195 @@
+//! Convolution layers as sparse (Toeplitz) matrices — the §5.1 CNN
+//! extension.
+//!
+//! "These layers can be implemented as matrix-vector multiplications
+//! through constructing Toeplitz matrices that capture [the] convolution
+//! operation … Application of sparsification/pruning to CNNs induces
+//! sparsification on the corresponding Toeplitz matrices, making the
+//! proposed hypergraph model applicable to such cases."
+//!
+//! A 2-D valid convolution over an `h×w` image with a `kh×kw` kernel and
+//! stride `s` becomes a `(oh·ow) × (h·w)` doubly-blocked Toeplitz matrix;
+//! pruning kernel taps drops the corresponding diagonals. Average pooling
+//! is the same construction with a constant kernel.
+
+use crate::sparse::{Coo, Csr};
+
+/// Output side length of a valid convolution.
+pub fn conv_out(dim: usize, k: usize, stride: usize) -> usize {
+    assert!(dim >= k && stride >= 1);
+    (dim - k) / stride + 1
+}
+
+/// Build the Toeplitz matrix of a valid 2-D convolution.
+///
+/// `kernel` is `kh×kw` row-major; taps that are exactly 0.0 are treated as
+/// pruned (no nonzero stored — this is how CNN pruning shows up in the
+/// matrix, per §5.1). The result maps a flattened `h×w` image to the
+/// flattened `oh×ow` output.
+pub fn conv2d_toeplitz(
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> Csr {
+    assert_eq!(kernel.len(), kh * kw);
+    let oh = conv_out(h, kh, stride);
+    let ow = conv_out(w, kw, stride);
+    let mut coo = Coo::with_capacity(oh * ow, h * w, oh * ow * kh * kw);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let orow = oy * ow + ox;
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let v = kernel[ky * kw + kx];
+                    if v == 0.0 {
+                        continue; // pruned tap
+                    }
+                    let iy = oy * stride + ky;
+                    let ix = ox * stride + kx;
+                    coo.push(orow, iy * w + ix, v);
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Average-pooling as a Toeplitz matrix (constant kernel 1/(k·k)).
+pub fn avg_pool_toeplitz(h: usize, w: usize, k: usize) -> Csr {
+    let kernel = vec![1.0 / (k * k) as f32; k * k];
+    conv2d_toeplitz(h, w, &kernel, k, k, k)
+}
+
+/// Direct (reference) valid 2-D convolution, for tests.
+pub fn conv2d_direct(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    kernel: &[f32],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let oh = conv_out(h, kh, stride);
+    let ow = conv_out(w, kw, stride);
+    let mut out = vec![0f32; oh * ow];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0f32;
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    acc += kernel[ky * kw + kx] * img[(oy * stride + ky) * w + ox * stride + kx];
+                }
+            }
+            out[oy * ow + ox] = acc;
+        }
+    }
+    out
+}
+
+/// Prune the smallest-magnitude fraction `frac` of a kernel (sets taps to
+/// zero) — the sparsification step that makes CNN Toeplitz layers sparse.
+pub fn prune_kernel(kernel: &mut [f32], frac: f64) {
+    let mut order: Vec<usize> = (0..kernel.len()).collect();
+    order.sort_by(|&a, &b| kernel[a].abs().partial_cmp(&kernel[b].abs()).unwrap());
+    let cut = ((kernel.len() as f64) * frac).round() as usize;
+    for &i in order.iter().take(cut) {
+        kernel[i] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn toeplitz_matches_direct_conv() {
+        prop::check(|rng| {
+            let h = 4 + rng.gen_range(8);
+            let w = 4 + rng.gen_range(8);
+            let kh = 1 + rng.gen_range(3.min(h));
+            let kw = 1 + rng.gen_range(3.min(w));
+            let stride = 1 + rng.gen_range(2);
+            if h < kh || w < kw {
+                return;
+            }
+            let kernel: Vec<f32> = (0..kh * kw).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let img: Vec<f32> = (0..h * w).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let t = conv2d_toeplitz(h, w, &kernel, kh, kw, stride);
+            let mut via_matrix = vec![0f32; t.nrows];
+            t.spmv(&img, &mut via_matrix);
+            let direct = conv2d_direct(&img, h, w, &kernel, kh, kw, stride);
+            for (a, b) in via_matrix.iter().zip(direct.iter()) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn pruned_taps_drop_nonzeros() {
+        let mut kernel = vec![0.9, 0.1, -0.5, 0.05];
+        prune_kernel(&mut kernel, 0.5);
+        assert_eq!(kernel.iter().filter(|&&v| v == 0.0).count(), 2);
+        assert_eq!(kernel[0], 0.9);
+        assert_eq!(kernel[2], -0.5);
+        let t = conv2d_toeplitz(6, 6, &kernel, 2, 2, 1);
+        // each output row has exactly 2 nonzeros (the surviving taps)
+        for r in 0..t.nrows {
+            assert_eq!(t.row_nnz(r), 2);
+        }
+    }
+
+    #[test]
+    fn avg_pool_averages() {
+        let t = avg_pool_toeplitz(4, 4, 2);
+        assert_eq!(t.nrows, 4);
+        let img: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut out = vec![0f32; 4];
+        t.spmv(&img, &mut out);
+        // top-left 2x2 block: (0+1+4+5)/4 = 2.5
+        assert!((out[0] - 2.5).abs() < 1e-6);
+        assert!((out[3] - 12.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv_net_trains_distributed() {
+        // Full integration: a conv→conv sparse net (Toeplitz layers) under
+        // the hypergraph partitioner + distributed SGD == serial SGD.
+        use crate::coordinator::sgd::train_distributed;
+        use crate::dnn::{sgd_serial, Activation, SparseNet};
+        use crate::partition::phases::{hypergraph_partition, PhaseConfig};
+
+        let mut rng = Rng::new(9);
+        let mut k1: Vec<f32> = (0..9).map(|_| rng.gen_f32_range(-0.5, 0.5)).collect();
+        prune_kernel(&mut k1, 0.3);
+        let w1 = conv2d_toeplitz(8, 8, &k1, 3, 3, 1); // 64 -> 36
+        let mut k2: Vec<f32> = (0..4).map(|_| rng.gen_f32_range(-0.5, 0.5)).collect();
+        let w2 = conv2d_toeplitz(6, 6, &k2, 2, 2, 1); // 36 -> 25
+        prune_kernel(&mut k2, 0.0);
+        let net = SparseNet::new(vec![w1, w2], Activation::Sigmoid);
+        net.validate().unwrap();
+
+        let part = hypergraph_partition(&net.layers, &PhaseConfig::new(3));
+        let inputs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..64).map(|_| rng.gen_f32()).collect())
+            .collect();
+        let targets: Vec<Vec<f32>> = (0..3).map(|_| vec![0.5f32; 25]).collect();
+        let run = train_distributed(&net, &part, &inputs, &targets, 0.2, 2);
+        let mut serial = net.clone();
+        let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.2, 2);
+        for (a, b) in run.losses.iter().zip(sl.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn out_dims() {
+        assert_eq!(conv_out(28, 3, 1), 26);
+        assert_eq!(conv_out(28, 2, 2), 14);
+        assert_eq!(conv_out(5, 5, 1), 1);
+    }
+}

@@ -1,0 +1,109 @@
+//! Serial inference (feedforward only), single-vector and batched.
+
+use crate::dnn::network::SparseNet;
+
+/// Single-vector inference: returns x^L.
+pub fn infer(net: &SparseNet, x0: &[f32]) -> Vec<f32> {
+    let acts = crate::dnn::sgd_serial::feedforward(net, x0);
+    acts.into_iter().last().unwrap()
+}
+
+/// Batched inference via SpMM (§5.1): inputs row-major `[n0 x b]` where
+/// column j is input j; returns `[nL x b]` row-major.
+pub fn infer_batch(net: &SparseNet, x0: &[f32], b: usize) -> Vec<f32> {
+    assert_eq!(x0.len(), net.input_dim() * b);
+    let mut cur = x0.to_vec();
+    for (k, w) in net.layers.iter().enumerate() {
+        let mut z = vec![0f32; w.nrows * b];
+        w.spmm_rowmajor(&cur, &mut z, b);
+        for r in 0..w.nrows {
+            let bias = net.biases[k][r];
+            let row = &mut z[r * b..(r + 1) * b];
+            for v in row.iter_mut() {
+                *v += bias;
+            }
+            net.activation.apply(row);
+        }
+        cur = z;
+    }
+    cur
+}
+
+/// Argmax class per batch column (Graph Challenge categorization metric).
+pub fn classify_batch(logits: &[f32], nclasses: usize, b: usize) -> Vec<usize> {
+    assert!(logits.len() >= nclasses * b);
+    (0..b)
+        .map(|j| {
+            (0..nclasses)
+                .max_by(|&a, &c| {
+                    logits[a * b + j]
+                        .partial_cmp(&logits[c * b + j])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::activation::Activation;
+    use crate::sparse::Coo;
+    use crate::util::{prop, Rng};
+
+    fn random_net(rng: &mut Rng, dims: &[usize]) -> SparseNet {
+        let mut layers = Vec::new();
+        for k in 1..dims.len() {
+            let mut c = Coo::new(dims[k], dims[k - 1]);
+            for r in 0..dims[k] {
+                for col in 0..dims[k - 1] {
+                    if rng.gen_bool(0.4) {
+                        c.push(r, col, rng.gen_f32_range(-1.0, 1.0));
+                    }
+                }
+            }
+            layers.push(c.to_csr());
+        }
+        SparseNet::new(layers, Activation::Sigmoid)
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        prop::check(|rng| {
+            let net = random_net(rng, &[5, 7, 4]);
+            let b = 1 + rng.gen_range(4);
+            let inputs: Vec<Vec<f32>> = (0..b)
+                .map(|_| (0..5).map(|_| rng.gen_f32()).collect())
+                .collect();
+            // pack row-major [n0 x b]
+            let mut x0 = vec![0f32; 5 * b];
+            for (j, inp) in inputs.iter().enumerate() {
+                for i in 0..5 {
+                    x0[i * b + j] = inp[i];
+                }
+            }
+            let out = infer_batch(&net, &x0, b);
+            for (j, inp) in inputs.iter().enumerate() {
+                let single = infer(&net, inp);
+                for i in 0..4 {
+                    assert!(
+                        (out[i * b + j] - single[i]).abs() < 1e-5,
+                        "batch {j} row {i}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn classify_picks_max() {
+        // logits row-major [3 x 2]
+        let logits = vec![
+            0.1, 0.9, // class 0 for the two columns
+            0.8, 0.2, // class 1
+            0.3, 0.3, // class 2
+        ];
+        assert_eq!(classify_batch(&logits, 3, 2), vec![1, 0]);
+    }
+}

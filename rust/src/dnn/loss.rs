@@ -1,0 +1,75 @@
+//! Loss functions. The paper uses mean squared error (Section 6.1).
+
+/// Supported losses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loss {
+    /// J = 1/2 Σ (x_i - y_i)^2  (the 1/2 makes ∇J = x - y).
+    Mse,
+}
+
+impl Loss {
+    /// Loss value J(x, y).
+    pub fn value(&self, x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            Loss::Mse => {
+                0.5 * x
+                    .iter()
+                    .zip(y.iter())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+            }
+        }
+    }
+
+    /// ∇_x J into `out`.
+    pub fn gradient(&self, x: &[f32], y: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len(), out.len());
+        match self {
+            Loss::Mse => {
+                for i in 0..x.len() {
+                    out[i] = x[i] - y[i];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_value_and_gradient() {
+        let x = [1.0, 2.0];
+        let y = [0.0, 0.0];
+        assert!((Loss::Mse.value(&x, &y) - 2.5).abs() < 1e-6);
+        let mut g = [0.0; 2];
+        Loss::Mse.gradient(&x, &y, &mut g);
+        assert_eq!(g, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn mse_gradient_matches_finite_difference() {
+        let x = [0.3f32, -0.7, 1.1];
+        let y = [0.1f32, 0.2, -0.5];
+        let mut g = [0.0; 3];
+        Loss::Mse.gradient(&x, &y, &mut g);
+        let h = 1e-3f32;
+        for i in 0..3 {
+            let mut xp = x;
+            xp[i] += h;
+            let mut xm = x;
+            xm[i] -= h;
+            let fd = (Loss::Mse.value(&xp, &y) - Loss::Mse.value(&xm, &y)) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-2, "{fd} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn zero_loss_at_target() {
+        let x = [0.5, 0.5];
+        assert_eq!(Loss::Mse.value(&x, &x), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! DNN substrate: model container, activations, losses, the serial SGD
+//! oracle (Alg. 1) and serial/batched inference.
+
+pub mod activation;
+pub mod conv;
+pub mod inference;
+pub mod loss;
+pub mod model_io;
+pub mod network;
+pub mod sgd_serial;
+
+pub use activation::Activation;
+pub use loss::Loss;
+pub use network::SparseNet;

@@ -1,0 +1,125 @@
+//! Whole-network persistence in the Graph Challenge layout: one TSV triple
+//! file per layer (`n<neurons>-l<layer>.tsv`, 1-based indices) plus a small
+//! metadata file — the on-disk format the benchmark's reference data uses,
+//! so externally downloaded Graph Challenge networks drop in directly.
+
+use crate::dnn::{Activation, SparseNet};
+use crate::sparse::io::{read_tsv, write_tsv};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Save a network into `dir` (created if needed).
+pub fn save_network(net: &SparseNet, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+    let n = net.input_dim();
+    for (k, w) in net.layers.iter().enumerate() {
+        write_tsv(w, &dir.join(format!("n{}-l{}.tsv", n, k + 1)))?;
+    }
+    let meta = format!(
+        "neurons\t{}\nlayers\t{}\nactivation\t{}\n",
+        n,
+        net.depth(),
+        net.activation.name()
+    );
+    std::fs::write(dir.join("meta.tsv"), meta)?;
+    // biases: one file, `layer \t neuron \t value`, only nonzeros
+    let mut bias_lines = String::new();
+    for (k, b) in net.biases.iter().enumerate() {
+        for (i, v) in b.iter().enumerate() {
+            if *v != 0.0 {
+                bias_lines.push_str(&format!("{}\t{}\t{}\n", k + 1, i + 1, v));
+            }
+        }
+    }
+    std::fs::write(dir.join("biases.tsv"), bias_lines)?;
+    Ok(())
+}
+
+/// Load a network saved by [`save_network`] (or hand-assembled in the same
+/// layout from Graph Challenge reference data).
+pub fn load_network(dir: &Path) -> Result<SparseNet> {
+    let meta = std::fs::read_to_string(dir.join("meta.tsv"))
+        .with_context(|| format!("read {dir:?}/meta.tsv"))?;
+    let mut neurons = 0usize;
+    let mut layers = 0usize;
+    let mut activation = Activation::Sigmoid;
+    for line in meta.lines() {
+        let mut it = line.split_ascii_whitespace();
+        match (it.next(), it.next()) {
+            (Some("neurons"), Some(v)) => neurons = v.parse()?,
+            (Some("layers"), Some(v)) => layers = v.parse()?,
+            (Some("activation"), Some(v)) => {
+                activation = Activation::from_name(v)
+                    .with_context(|| format!("unknown activation {v}"))?
+            }
+            _ => {}
+        }
+    }
+    if neurons == 0 || layers == 0 {
+        bail!("meta.tsv missing neurons/layers");
+    }
+    let mut ws = Vec::with_capacity(layers);
+    for k in 0..layers {
+        let p = dir.join(format!("n{}-l{}.tsv", neurons, k + 1));
+        ws.push(read_tsv(&p, neurons, neurons)?);
+    }
+    let mut net = SparseNet::new(ws, activation);
+    if let Ok(bias_txt) = std::fs::read_to_string(dir.join("biases.tsv")) {
+        for (lineno, line) in bias_txt.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut it = line.split_ascii_whitespace();
+            let (k, i, v) = match (it.next(), it.next(), it.next()) {
+                (Some(k), Some(i), Some(v)) => (k, i, v),
+                _ => bail!("biases.tsv:{}: malformed", lineno + 1),
+            };
+            let k: usize = k.parse()?;
+            let i: usize = i.parse()?;
+            let v: f32 = v.parse()?;
+            net.biases[k - 1][i - 1] = v;
+        }
+    }
+    net.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::radixnet::{generate, RadixNetConfig};
+
+    #[test]
+    fn roundtrip_preserves_network() {
+        let mut net = generate(&RadixNetConfig::graph_challenge(64, 3).unwrap());
+        net.biases[1][5] = 0.75;
+        let dir = std::env::temp_dir().join("spdnn_model_io_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_network(&net, &dir).unwrap();
+        let loaded = load_network(&dir).unwrap();
+        assert_eq!(net.depth(), loaded.depth());
+        assert_eq!(net.activation, loaded.activation);
+        for k in 0..net.depth() {
+            assert_eq!(net.layers[k], loaded.layers[k]);
+            assert_eq!(net.biases[k], loaded.biases[k]);
+        }
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(load_network(Path::new("/nonexistent/spdnn")).is_err());
+    }
+
+    #[test]
+    fn loaded_network_infers_identically() {
+        let net = generate(&RadixNetConfig::graph_challenge(64, 4).unwrap());
+        let dir = std::env::temp_dir().join("spdnn_model_io_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_network(&net, &dir).unwrap();
+        let loaded = load_network(&dir).unwrap();
+        let x: Vec<f32> = (0..64).map(|i| (i % 2) as f32).collect();
+        let a = crate::dnn::inference::infer(&net, &x);
+        let b = crate::dnn::inference::infer(&loaded, &x);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,139 @@
+//! Sparse DNN model container.
+
+use crate::dnn::activation::Activation;
+use crate::dnn::loss::Loss;
+use crate::sparse::Csr;
+
+/// A feedforward sparse DNN: L layers of sparse weight matrices.
+///
+/// `layers[k]` is `W^{k+1}` in paper notation: `nrows` = neurons in layer
+/// k+1, `ncols` = neurons in layer k. Biases are kept as explicit vectors
+/// (the paper folds them into the matrix as column 0; an explicit vector is
+/// numerically identical and keeps the hypergraph model cleaner).
+#[derive(Debug, Clone)]
+pub struct SparseNet {
+    pub layers: Vec<Csr>,
+    pub biases: Vec<Vec<f32>>,
+    pub activation: Activation,
+    pub loss: Loss,
+}
+
+impl SparseNet {
+    pub fn new(layers: Vec<Csr>, activation: Activation) -> Self {
+        // default zero biases
+        let biases = layers.iter().map(|w| vec![0f32; w.nrows]).collect();
+        Self {
+            layers,
+            biases,
+            activation,
+            loss: Loss::Mse,
+        }
+    }
+
+    pub fn with_biases(mut self, biases: Vec<Vec<f32>>) -> Self {
+        assert_eq!(biases.len(), self.layers.len());
+        for (b, w) in biases.iter().zip(self.layers.iter()) {
+            assert_eq!(b.len(), w.nrows);
+        }
+        self.biases = biases;
+        self
+    }
+
+    /// Number of layers L.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Input dimension (neurons in layer 0).
+    pub fn input_dim(&self) -> usize {
+        self.layers.first().map(|w| w.ncols).unwrap_or(0)
+    }
+
+    /// Output dimension (neurons in layer L).
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().map(|w| w.nrows).unwrap_or(0)
+    }
+
+    /// Total number of connections (nonzeros) — "edges" in Graph Challenge
+    /// throughput terms.
+    pub fn total_nnz(&self) -> usize {
+        self.layers.iter().map(|w| w.nnz()).sum()
+    }
+
+    /// Structural validation: chained dimensions + per-matrix invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err("empty network".into());
+        }
+        for (k, w) in self.layers.iter().enumerate() {
+            w.validate().map_err(|e| format!("layer {k}: {e}"))?;
+            if k > 0 && w.ncols != self.layers[k - 1].nrows {
+                return Err(format!(
+                    "layer {k} ncols {} != layer {} nrows {}",
+                    w.ncols,
+                    k - 1,
+                    self.layers[k - 1].nrows
+                ));
+            }
+            if self.biases[k].len() != w.nrows {
+                return Err(format!("layer {k} bias length mismatch"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Memory footprint of the model in bytes (CSR arrays + biases). Used by
+    /// the Table-2 GB-baseline memory-capacity model.
+    pub fn model_bytes(&self) -> usize {
+        let mut b = 0usize;
+        for w in &self.layers {
+            b += w.indptr.len() * 4 + w.indices.len() * 4 + w.vals.len() * 4;
+        }
+        for bias in &self.biases {
+            b += bias.len() * 4;
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn tiny_net() -> SparseNet {
+        // 2 layers over 3 neurons each
+        let mut w1 = Coo::new(3, 3);
+        w1.push(0, 0, 0.5);
+        w1.push(1, 1, 0.5);
+        w1.push(2, 2, 0.5);
+        let mut w2 = Coo::new(3, 3);
+        w2.push(0, 1, 1.0);
+        w2.push(1, 2, 1.0);
+        w2.push(2, 0, 1.0);
+        SparseNet::new(vec![w1.to_csr(), w2.to_csr()], Activation::Sigmoid)
+    }
+
+    #[test]
+    fn dims_and_nnz() {
+        let n = tiny_net();
+        assert_eq!(n.depth(), 2);
+        assert_eq!(n.input_dim(), 3);
+        assert_eq!(n.output_dim(), 3);
+        assert_eq!(n.total_nnz(), 6);
+        assert!(n.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_dim_mismatch() {
+        let mut n = tiny_net();
+        n.layers[1] = Csr::zeros(3, 4); // ncols 4 != 3
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn model_bytes_positive() {
+        let n = tiny_net();
+        assert!(n.model_bytes() > 0);
+    }
+}

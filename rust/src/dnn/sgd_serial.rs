@@ -1,0 +1,232 @@
+//! Serial SGD — a direct transcription of the paper's Algorithm 1.
+//!
+//! This is the ground-truth oracle: the distributed coordinator
+//! (`coordinator::sgd`) must produce the same weights for any partitioning
+//! and any processor count (integration-tested in `rust/tests/`).
+
+use crate::dnn::network::SparseNet;
+
+/// Per-step trace returned by [`sgd_step`].
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    /// Loss J(x^L, y) evaluated on the forward pass (pre-update weights).
+    pub loss: f32,
+    /// Activations x^0..x^L (x^0 is the input).
+    pub activations: Vec<Vec<f32>>,
+}
+
+/// Feedforward only: returns activations x^0..x^L (Alg. 1 lines 2–4).
+pub fn feedforward(net: &SparseNet, x0: &[f32]) -> Vec<Vec<f32>> {
+    assert_eq!(x0.len(), net.input_dim());
+    let mut acts = Vec::with_capacity(net.depth() + 1);
+    acts.push(x0.to_vec());
+    for (k, w) in net.layers.iter().enumerate() {
+        let mut z = vec![0f32; w.nrows];
+        w.spmv(acts.last().unwrap(), &mut z);
+        for (zi, bi) in z.iter_mut().zip(net.biases[k].iter()) {
+            *zi += bi;
+        }
+        net.activation.apply(&mut z);
+        acts.push(z);
+    }
+    acts
+}
+
+/// One SGD step on a single (x0, y) pair (Alg. 1 lines 2–9), updating
+/// `net` in place. Returns the step trace.
+///
+/// Ordering note: for each layer k (from L down to 1) the backward product
+/// `s = (W^k)^T δ^k` is computed *before* the weight update of `W^k`, which
+/// is what both Alg. 1 (line 7 before line 9) and the distributed Alg. 3
+/// (line 4 before lines 8–9) do; equivalence tests rely on this.
+pub fn sgd_step(net: &mut SparseNet, x0: &[f32], y: &[f32], eta: f32) -> StepTrace {
+    assert_eq!(y.len(), net.output_dim());
+    let acts = feedforward(net, x0);
+    let loss = net.loss.value(acts.last().unwrap(), y);
+
+    // δ^L = ∇_x J ⊙ f'(z^L)  (Eq. 6; f' computed from the stored output)
+    let xl = acts.last().unwrap();
+    let mut grad = vec![0f32; xl.len()];
+    net.loss.gradient(xl, y, &mut grad);
+    let mut delta = vec![0f32; xl.len()];
+    net.activation.mul_derivative(&grad, xl, &mut delta);
+
+    // Backward over layers L..1
+    for k in (0..net.depth()).rev() {
+        // s = (W^k)^T δ^k  — before the update
+        let w = &net.layers[k];
+        let mut s = vec![0f32; w.ncols];
+        w.spmv_t_add(&delta, &mut s);
+
+        // ∇W^k = δ^k ⊗ x^{k-1} restricted to the sparsity pattern; update
+        net.layers[k].sgd_update(&delta, &acts[k], eta);
+        // bias update: ∂J/∂b = δ
+        for (b, d) in net.biases[k].iter_mut().zip(delta.iter()) {
+            *b -= eta * d;
+        }
+
+        if k > 0 {
+            // δ^{k-1} = s ⊙ f'(z^{k-1})
+            let mut next = vec![0f32; s.len()];
+            net.activation.mul_derivative(&s, &acts[k], &mut next);
+            delta = next;
+        }
+    }
+
+    StepTrace {
+        loss,
+        activations: acts,
+    }
+}
+
+/// Run `epochs` passes of SGD over a dataset; returns per-step losses.
+pub fn train(
+    net: &mut SparseNet,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    eta: f32,
+    epochs: usize,
+) -> Vec<f32> {
+    assert_eq!(inputs.len(), targets.len());
+    let mut losses = Vec::with_capacity(inputs.len() * epochs);
+    for _ in 0..epochs {
+        for (x, y) in inputs.iter().zip(targets.iter()) {
+            losses.push(sgd_step(net, x, y, eta).loss);
+        }
+    }
+    losses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::activation::Activation;
+    use crate::sparse::Coo;
+    use crate::util::Rng;
+
+    fn random_net(rng: &mut Rng, dims: &[usize], p: f64) -> SparseNet {
+        let mut layers = Vec::new();
+        for k in 1..dims.len() {
+            let mut c = Coo::new(dims[k], dims[k - 1]);
+            for r in 0..dims[k] {
+                let mut any = false;
+                for col in 0..dims[k - 1] {
+                    if rng.gen_bool(p) {
+                        c.push(r, col, rng.gen_f32_range(-1.0, 1.0));
+                        any = true;
+                    }
+                }
+                if !any {
+                    // keep every neuron connected so gradients flow
+                    c.push(r, rng.gen_range(dims[k - 1]), rng.gen_f32_range(-1.0, 1.0));
+                }
+            }
+            layers.push(c.to_csr());
+        }
+        SparseNet::new(layers, Activation::Sigmoid)
+    }
+
+    #[test]
+    fn feedforward_shapes() {
+        let mut rng = Rng::new(1);
+        let net = random_net(&mut rng, &[4, 5, 3], 0.5);
+        let acts = feedforward(&net, &[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(acts.len(), 3);
+        assert_eq!(acts[0].len(), 4);
+        assert_eq!(acts[1].len(), 5);
+        assert_eq!(acts[2].len(), 3);
+        // sigmoid outputs in (0,1)
+        assert!(acts[2].iter().all(|&v| v > 0.0 && v < 1.0));
+    }
+
+    #[test]
+    fn loss_decreases_with_training() {
+        let mut rng = Rng::new(2);
+        let mut net = random_net(&mut rng, &[6, 8, 4], 0.6);
+        let x: Vec<f32> = (0..6).map(|_| rng.gen_f32()).collect();
+        let y = vec![1.0, 0.0, 0.0, 1.0];
+        let first = sgd_step(&mut net, &x, &y, 0.5).loss;
+        for _ in 0..200 {
+            sgd_step(&mut net, &x, &y, 0.5);
+        }
+        let last = sgd_step(&mut net, &x, &y, 0.5).loss;
+        assert!(
+            last < first * 0.5,
+            "loss did not decrease: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // Check ∂J/∂W(i,j) for every stored nonzero against central FD.
+        let mut rng = Rng::new(3);
+        let net0 = random_net(&mut rng, &[3, 4, 2], 0.7);
+        let x: Vec<f32> = (0..3).map(|_| rng.gen_f32()).collect();
+        let y = vec![0.25, 0.75];
+        let eta = 1.0; // so ΔW = -grad
+
+        let mut net = net0.clone();
+        sgd_step(&mut net, &x, &y, eta);
+
+        for k in 0..net0.depth() {
+            for idx in 0..net0.layers[k].nnz() {
+                let analytic = net0.layers[k].vals[idx] - net.layers[k].vals[idx]; // eta*grad
+                let h = 1e-2f32;
+                let mut p = net0.clone();
+                p.layers[k].vals[idx] += h;
+                let lp = {
+                    let acts = feedforward(&p, &x);
+                    p.loss.value(acts.last().unwrap(), &y)
+                };
+                let mut m = net0.clone();
+                m.layers[k].vals[idx] -= h;
+                let lm = {
+                    let acts = feedforward(&m, &x);
+                    m.loss.value(acts.last().unwrap(), &y)
+                };
+                let fd = (lp - lm) / (2.0 * h);
+                assert!(
+                    (fd - analytic).abs() < 5e-3,
+                    "layer {k} nnz {idx}: fd {fd} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bias_gradient_matches_finite_difference() {
+        let mut rng = Rng::new(4);
+        let net0 = random_net(&mut rng, &[3, 3, 2], 0.8);
+        let x = vec![0.2, 0.4, 0.9];
+        let y = vec![0.1, 0.9];
+        let mut net = net0.clone();
+        sgd_step(&mut net, &x, &y, 1.0);
+        for k in 0..net0.depth() {
+            for i in 0..net0.biases[k].len() {
+                let analytic = net0.biases[k][i] - net.biases[k][i];
+                let h = 1e-2f32;
+                let mut p = net0.clone();
+                p.biases[k][i] += h;
+                let lp = p.loss.value(feedforward(&p, &x).last().unwrap(), &y);
+                let mut m = net0.clone();
+                m.biases[k][i] -= h;
+                let lm = m.loss.value(feedforward(&m, &x).last().unwrap(), &y);
+                let fd = (lp - lm) / (2.0 * h);
+                assert!(
+                    (fd - analytic).abs() < 5e-3,
+                    "layer {k} bias {i}: fd {fd} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_returns_all_losses() {
+        let mut rng = Rng::new(5);
+        let mut net = random_net(&mut rng, &[4, 4, 4], 0.5);
+        let inputs = vec![vec![0.1; 4], vec![0.9; 4]];
+        let targets = vec![vec![0.0; 4], vec![1.0; 4]];
+        let losses = train(&mut net, &inputs, &targets, 0.1, 3);
+        assert_eq!(losses.len(), 6);
+    }
+}

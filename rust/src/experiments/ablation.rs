@@ -1,0 +1,102 @@
+//! Ablation of the paper's key design choice: the **fixed-vertex chaining**
+//! between phases (Section 5). Three strategies are compared at equal P:
+//!
+//! - `chained`    — the paper's multi-phase model: phase φ^k fixes one
+//!   vertex per column to the part that produced x^{k-1}(j) in φ^{k-1};
+//! - `independent`— same per-layer hypergraph, but no fixed vertices: each
+//!   layer is partitioned in isolation (what a naive per-layer
+//!   min-cut would do);
+//! - `random`     — the evenly-split random baseline.
+//!
+//! The gap between `chained` and `independent` isolates exactly what the
+//! fixed vertices buy: inter-layer producer/consumer alignment.
+
+use super::{structure_for, Table};
+use crate::hypergraph::PartitionConfig;
+use crate::partition::metrics::PartitionMetrics;
+use crate::partition::phases::{build_phase_hypergraph, hypergraph_partition, PhaseConfig};
+use crate::partition::random::random_partition;
+use crate::partition::DnnPartition;
+
+/// One strategy's metrics.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub strategy: &'static str,
+    pub avg_vol_k: f64,
+    pub max_vol_k: f64,
+    pub avg_msg_k: f64,
+    pub imb: f64,
+}
+
+pub fn run(neurons: usize, layers: usize, nparts: usize, seed: u64) -> Vec<Row> {
+    let structure = structure_for(neurons, layers);
+
+    let mut cfg = PhaseConfig::new(nparts);
+    cfg.seed = seed;
+    let chained = hypergraph_partition(&structure, &cfg);
+
+    let mut layer_parts = Vec::new();
+    for (k, w) in structure.iter().enumerate() {
+        let hg = build_phase_hypergraph(w, None);
+        let mut pcfg = PartitionConfig::new(nparts);
+        pcfg.seed = seed.wrapping_add(1000 + k as u64);
+        let parts = crate::hypergraph::partition(&hg, &pcfg);
+        layer_parts.push(parts[..w.nrows].to_vec());
+    }
+    let independent = DnnPartition {
+        nparts,
+        input_parts: chained.input_parts.clone(),
+        layer_parts,
+    };
+    let random = random_partition(&structure, nparts, seed);
+
+    [
+        ("chained (paper)", &chained),
+        ("independent", &independent),
+        ("random", &random),
+    ]
+    .into_iter()
+    .map(|(name, part)| {
+        let m = PartitionMetrics::compute(&structure, part);
+        Row {
+            strategy: name,
+            avg_vol_k: m.avg_volume() / 1e3,
+            max_vol_k: m.max_volume() / 1e3,
+            avg_msg_k: m.avg_msgs() / 1e3,
+            imb: m.comp_imbalance(),
+        }
+    })
+    .collect()
+}
+
+pub fn render(neurons: usize, nparts: usize, rows: &[Row]) -> String {
+    let mut t = Table::new(&["N", "P", "strategy", "VolAvg(K)", "VolMax(K)", "MsgAvg(K)", "imb"]);
+    for r in rows {
+        t.row(vec![
+            neurons.to_string(),
+            nparts.to_string(),
+            r.strategy.to_string(),
+            format!("{:.2}", r.avg_vol_k),
+            format!("{:.2}", r.max_vol_k),
+            format!("{:.2}", r.avg_msg_k),
+            format!("{:.3}", r.imb),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaining_strictly_helps() {
+        let rows = run(256, 8, 8, 1);
+        let chained = &rows[0];
+        let independent = &rows[1];
+        let random = &rows[2];
+        assert!(chained.avg_vol_k <= independent.avg_vol_k);
+        assert!(independent.avg_vol_k < random.avg_vol_k);
+        assert!(render(256, 8, &rows).contains("chained"));
+    }
+}

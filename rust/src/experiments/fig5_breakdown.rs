@@ -1,0 +1,93 @@
+//! Figure 5 — breakdown of the per-input running time into local SpMV,
+//! gradient-update, and communication components, H-SGD vs SGD.
+
+use super::{partition_with, structure_for, Method, Table};
+use crate::comm::netmodel::ComputeModel;
+use crate::coordinator::replay::{replay, ReplayConfig, ReplayResult};
+use crate::partition::CommPlan;
+
+/// One breakdown bar.
+#[derive(Debug, Clone)]
+pub struct Bar {
+    pub nparts: usize,
+    pub method: Method,
+    pub parts: ReplayResult,
+}
+
+impl Bar {
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.parts.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.parts.comm / t
+        }
+    }
+}
+
+pub fn run(
+    neurons: usize,
+    layers: usize,
+    parts_list: &[usize],
+    comp: ComputeModel,
+    seed: u64,
+) -> Vec<Bar> {
+    let structure = structure_for(neurons, layers);
+    let cfg = ReplayConfig::training(comp);
+    let mut out = Vec::new();
+    for &p in parts_list {
+        for method in [Method::Hypergraph, Method::Random] {
+            let part = partition_with(&structure, method, p, seed);
+            let plan = CommPlan::build(&structure, &part);
+            out.push(Bar {
+                nparts: p,
+                method,
+                parts: replay(&structure, &part, &plan, &cfg),
+            });
+        }
+    }
+    out
+}
+
+pub fn render(neurons: usize, bars: &[Bar]) -> String {
+    let mut t = Table::new(&[
+        "N", "P", "", "SpMV(s)", "Updt(s)", "Comm(s)", "Total(s)", "Comm%",
+    ]);
+    for b in bars {
+        t.row(vec![
+            neurons.to_string(),
+            b.nparts.to_string(),
+            b.method.label().into(),
+            format!("{:.3e}", b.parts.spmv),
+            format!("{:.3e}", b.parts.updt),
+            format!("{:.3e}", b.parts.comm),
+            format!("{:.3e}", b.parts.total()),
+            format!("{:.0}%", b.comm_fraction() * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_fraction_grows_with_p() {
+        let comp = ComputeModel::haswell_defaults();
+        let bars = run(256, 8, &[2, 32], comp, 1);
+        // bars: [H@2, R@2, H@32, R@32]
+        let h2 = &bars[0];
+        let h32 = &bars[2];
+        assert!(
+            h32.comm_fraction() > h2.comm_fraction(),
+            "{} vs {}",
+            h32.comm_fraction(),
+            h2.comm_fraction()
+        );
+        // H commits less comm time than R at the same P
+        let r32 = &bars[3];
+        assert!(h32.parts.comm < r32.parts.comm);
+        assert!(render(256, &bars).contains("Comm%"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (Section 6). Shared by the CLI (`spdnn <experiment>`) and the bench
+//! harnesses (`cargo bench`).
+
+pub mod ablation;
+pub mod fig4_scaling;
+pub mod fig5_breakdown;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::partition::phases::{hypergraph_partition, PhaseConfig};
+use crate::partition::random::random_partition;
+use crate::partition::DnnPartition;
+use crate::radixnet::{generate_structure, RadixNetConfig};
+use crate::sparse::Csr;
+
+/// Which partitioner ("H" rows vs "R" rows of the tables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Hypergraph,
+    Random,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Hypergraph => "H",
+            Method::Random => "R",
+        }
+    }
+}
+
+/// Build the benchmark structure for (neurons, layers).
+pub fn structure_for(neurons: usize, layers: usize) -> Vec<Csr> {
+    let cfg = RadixNetConfig::graph_challenge(neurons, layers)
+        .unwrap_or_else(|| panic!("unsupported neuron count {neurons}"));
+    generate_structure(&cfg)
+}
+
+/// Partition with the given method.
+pub fn partition_with(structure: &[Csr], method: Method, nparts: usize, seed: u64) -> DnnPartition {
+    match method {
+        Method::Hypergraph => {
+            let mut cfg = PhaseConfig::new(nparts);
+            cfg.seed = seed;
+            hypergraph_partition(structure, &cfg)
+        }
+        Method::Random => random_partition(structure, nparts, seed),
+    }
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helpers.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn sci(x: f64) -> String {
+    format!("{x:.2E}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["P", "vol"]);
+        t.row(vec!["32".into(), "1.5".into()]);
+        t.row(vec!["512".into(), "12.25".into()]);
+        let s = t.render();
+        assert!(s.contains("P"));
+        assert!(s.contains("512"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn partition_with_both_methods() {
+        let s = structure_for(64, 3);
+        let h = partition_with(&s, Method::Hypergraph, 4, 1);
+        let r = partition_with(&s, Method::Random, 4, 1);
+        h.validate(&s).unwrap();
+        r.validate(&s).unwrap();
+        assert_eq!(Method::Hypergraph.label(), "H");
+        assert_eq!(Method::Random.label(), "R");
+    }
+}

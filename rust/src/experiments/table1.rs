@@ -1,0 +1,145 @@
+//! Table 1 — communication volume / message counts / computational
+//! imbalance, H-SGD vs SGD (random), over processor counts and network
+//! sizes.
+//!
+//! Units (matching the magnitudes of the paper's table): Volume = thousands
+//! of words sent per processor per SGD iteration (SpFF + SpBP over all L
+//! layers); Messages = thousands of point-to-point messages per processor
+//! per iteration; imb = max/avg computational load.
+
+use super::{f2, partition_with, structure_for, Method, Table};
+use crate::partition::metrics::PartitionMetrics;
+
+/// One (N, P) cell of Table 1 for one method.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub method: Method,
+    pub avg_vol_k: f64,
+    pub max_vol_k: f64,
+    pub avg_msg_k: f64,
+    pub max_msg_k: f64,
+    pub imb: f64,
+}
+
+/// One (N, P) row pair: H and R plus the H/R ratios.
+#[derive(Debug, Clone)]
+pub struct RowPair {
+    pub neurons: usize,
+    pub nparts: usize,
+    pub h: Cell,
+    pub r: Cell,
+}
+
+impl RowPair {
+    pub fn ratio_avg_vol(&self) -> f64 {
+        safe_ratio(self.h.avg_vol_k, self.r.avg_vol_k)
+    }
+    pub fn ratio_max_vol(&self) -> f64 {
+        safe_ratio(self.h.max_vol_k, self.r.max_vol_k)
+    }
+    pub fn ratio_avg_msg(&self) -> f64 {
+        safe_ratio(self.h.avg_msg_k, self.r.avg_msg_k)
+    }
+    pub fn ratio_max_msg(&self) -> f64 {
+        safe_ratio(self.h.max_msg_k, self.r.max_msg_k)
+    }
+}
+
+fn safe_ratio(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        if a == 0.0 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        a / b
+    }
+}
+
+fn cell(structure: &[crate::sparse::Csr], method: Method, p: usize, seed: u64) -> Cell {
+    let part = partition_with(structure, method, p, seed);
+    let m = PartitionMetrics::compute(structure, &part);
+    Cell {
+        method,
+        avg_vol_k: m.avg_volume() / 1e3,
+        max_vol_k: m.max_volume() / 1e3,
+        avg_msg_k: m.avg_msgs() / 1e3,
+        max_msg_k: m.max_msgs() / 1e3,
+        imb: m.comp_imbalance(),
+    }
+}
+
+/// Run the experiment for one network size across processor counts.
+pub fn run(neurons: usize, layers: usize, parts: &[usize], seed: u64) -> Vec<RowPair> {
+    let structure = structure_for(neurons, layers);
+    parts
+        .iter()
+        .map(|&p| RowPair {
+            neurons,
+            nparts: p,
+            h: cell(&structure, Method::Hypergraph, p, seed),
+            r: cell(&structure, Method::Random, p, seed),
+        })
+        .collect()
+}
+
+/// Render rows in the paper's three-line-per-P format.
+pub fn render(rows: &[RowPair]) -> String {
+    let mut t = Table::new(&[
+        "N", "P", "", "VolAvg(K)", "VolMax(K)", "MsgAvg(K)", "MsgMax(K)", "imb",
+    ]);
+    for rp in rows {
+        t.row(vec![
+            rp.neurons.to_string(),
+            rp.nparts.to_string(),
+            "H/R".into(),
+            f2(rp.ratio_avg_vol()),
+            f2(rp.ratio_max_vol()),
+            f2(rp.ratio_avg_msg()),
+            f2(rp.ratio_max_msg()),
+            "".into(),
+        ]);
+        for c in [&rp.h, &rp.r] {
+            t.row(vec![
+                "".into(),
+                "".into(),
+                c.method.label().into(),
+                f2(c.avg_vol_k),
+                f2(c.max_vol_k),
+                f2(c.avg_msg_k),
+                f2(c.max_msg_k),
+                f2(c.imb),
+            ]);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h_ratio_below_one_on_benchmark() {
+        let rows = run(256, 6, &[4, 8], 1);
+        for rp in &rows {
+            assert!(
+                rp.ratio_avg_vol() < 0.9,
+                "P={}: ratio {}",
+                rp.nparts,
+                rp.ratio_avg_vol()
+            );
+            assert!(rp.h.imb >= 1.0 && rp.r.imb >= 1.0);
+        }
+        let s = render(&rows);
+        assert!(s.contains("H/R"));
+    }
+
+    #[test]
+    fn volume_grows_sublinearly_with_p_for_h() {
+        let rows = run(256, 6, &[2, 8], 2);
+        // total volume grows with P; per-rank volume shrinks or stays flat
+        assert!(rows[1].h.avg_vol_k * 8.0 > rows[0].h.avg_vol_k * 2.0);
+    }
+}

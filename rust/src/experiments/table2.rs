@@ -1,0 +1,112 @@
+//! Table 2 — inference-only throughput (edges/second): H-SpFF (model-
+//! parallel, hypergraph-partitioned, batched SpMM on P ranks — simulated
+//! via replay with measured compute rates) vs GB (data-parallel
+//! shared-memory baseline, single-core rate measured live and scaled to
+//! the paper's 16-core node).
+
+use super::{partition_with, sci, Method, Table};
+use crate::comm::netmodel::ComputeModel;
+use crate::coordinator::gb_baseline::{gb_throughput, GbConfig};
+use crate::coordinator::replay::throughput_edges_per_sec;
+use crate::partition::CommPlan;
+use crate::radixnet::{generate, RadixNetConfig};
+
+/// One Table-2 row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub neurons: usize,
+    pub layers: usize,
+    pub hspff_eps: f64,
+    pub gb_eps: f64,
+}
+
+impl Row {
+    pub fn speedup(&self) -> f64 {
+        self.hspff_eps / self.gb_eps
+    }
+}
+
+/// Configuration of the throughput experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Ranks for H-SpFF (paper: 128 MPI ranks × 4 threads = 512 cores).
+    pub nparts: usize,
+    /// SpMM batch width.
+    pub batch: usize,
+    /// Inputs per measurement (paper: 60k MNIST; scaled down by default).
+    pub inputs: usize,
+    /// Live-measurement sample for the GB single-core rate.
+    pub gb_sample: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            nparts: 128,
+            batch: 64,
+            inputs: 60_000,
+            gb_sample: 128,
+        }
+    }
+}
+
+pub fn run(neurons: usize, layers: usize, cfg: &Config, comp: ComputeModel, seed: u64) -> Row {
+    let net_cfg = RadixNetConfig::graph_challenge(neurons, layers)
+        .unwrap_or_else(|| panic!("unsupported size {neurons}"));
+    let net = generate(&net_cfg);
+    let structure = net.layers.clone();
+
+    // H-SpFF: hypergraph partition + replay-simulated distributed SpMM.
+    // The paper's H-SpFF threads local SpMM over 4 cores per rank; our
+    // per-rank rate is single-core, so we charge rank-local compute at
+    // measured single-core speed — conservative for H-SpFF.
+    let part = partition_with(&structure, Method::Hypergraph, cfg.nparts, seed);
+    let plan = CommPlan::build(&structure, &part);
+    let hspff = throughput_edges_per_sec(&structure, &part, &plan, comp, cfg.batch, cfg.inputs);
+
+    // GB: measured single-core full-model rate × 16 cores × efficiency.
+    let gb = gb_throughput(&net, &GbConfig::paper_node(), cfg.gb_sample);
+
+    Row {
+        neurons,
+        layers,
+        hspff_eps: hspff,
+        gb_eps: gb,
+    }
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let mut t = Table::new(&[
+        "Neurons", "Layers", "H-SpFF eps", "GB eps", "Speedup",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.neurons.to_string(),
+            r.layers.to_string(),
+            sci(r.hspff_eps),
+            sci(r.gb_eps),
+            format!("{:.2}", r.speedup()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughputs_positive_and_finite() {
+        let comp = ComputeModel::haswell_defaults();
+        let cfg = Config {
+            nparts: 16,
+            batch: 16,
+            inputs: 64,
+            gb_sample: 32,
+        };
+        let row = run(256, 4, &cfg, comp, 1);
+        assert!(row.hspff_eps > 0.0 && row.hspff_eps.is_finite());
+        assert!(row.gb_eps > 0.0 && row.gb_eps.is_finite());
+        assert!(render(&[row]).contains("Speedup"));
+    }
+}

@@ -1,0 +1,57 @@
+//! Table 3 — partitioning (preprocessing) times in seconds, per network
+//! size and processor count. Measured live on this host.
+
+use super::{structure_for, Table};
+use crate::partition::phases::{hypergraph_partition, PhaseConfig};
+use crate::util::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub neurons: usize,
+    pub nparts: usize,
+    pub secs: f64,
+}
+
+pub fn run(neurons: usize, layers: usize, parts: &[usize], seed: u64) -> Vec<Row> {
+    let structure = structure_for(neurons, layers);
+    parts
+        .iter()
+        .map(|&p| {
+            let mut cfg = PhaseConfig::new(p);
+            cfg.seed = seed;
+            let sw = Stopwatch::start();
+            let part = hypergraph_partition(&structure, &cfg);
+            let secs = sw.elapsed_secs();
+            part.validate(&structure).unwrap();
+            Row {
+                neurons,
+                nparts: p,
+                secs,
+            }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let mut t = Table::new(&["N", "P", "Partitioning time (s)"]);
+    for r in rows {
+        t.row(vec![
+            r.neurons.to_string(),
+            r.nparts.to_string(),
+            format!("{:.2}", r.secs),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_recorded_and_grow_with_p() {
+        let rows = run(256, 4, &[2, 16], 1);
+        assert!(rows.iter().all(|r| r.secs > 0.0));
+        assert!(render(&rows).contains("Partitioning"));
+    }
+}

@@ -1,0 +1,247 @@
+//! Multilevel coarsening: heavy-connectivity matching.
+//!
+//! Free vertices are pairwise matched with the neighbor they share the most
+//! net connectivity with (score Σ cost(n)/(|pins(n)|−1), the standard
+//! heavy-connectivity heuristic). Fixed vertices are never matched — in the
+//! paper's phase hypergraphs they are degree-1, weight-0 markers and
+//! coarsening them would only blur the fixed-side information. Identical
+//! coarse nets are merged (their costs add), which matters a lot on
+//! butterfly-structured layers where many columns share pin sets.
+
+use super::model::{Hypergraph, FREE};
+use crate::util::Rng;
+
+/// One coarsening level: the coarse hypergraph plus the fine→coarse map.
+pub struct CoarseLevel {
+    pub coarse: Hypergraph,
+    /// fine vertex -> coarse vertex
+    pub map: Vec<u32>,
+}
+
+/// Nets larger than this are skipped during matching (they carry almost no
+/// locality signal and make matching quadratic).
+const MATCH_NET_LIMIT: usize = 64;
+
+/// Compute a heavy-connectivity matching and build the coarse hypergraph.
+/// Returns `None` if coarsening made no progress (coarse nv == fine nv).
+pub fn coarsen(hg: &Hypergraph, rng: &mut Rng) -> Option<CoarseLevel> {
+    let nv = hg.nv;
+    let mut mate: Vec<u32> = vec![u32::MAX; nv];
+    let order = rng.permutation(nv);
+    // scratch: score accumulation per candidate
+    let mut score: Vec<f32> = vec![0.0; nv];
+    let mut touched: Vec<u32> = Vec::with_capacity(64);
+
+    for &vu in &order {
+        let v = vu as usize;
+        if mate[v] != u32::MAX || hg.fixed[v] != FREE {
+            continue;
+        }
+        touched.clear();
+        for &n in hg.vertex_nets(v) {
+            let pins = hg.net_pins(n as usize);
+            if pins.len() > MATCH_NET_LIMIT || pins.len() < 2 {
+                continue;
+            }
+            let w = hg.ncost[n as usize] as f32 / (pins.len() as f32 - 1.0);
+            for &u in pins {
+                let u = u as usize;
+                if u == v || mate[u] != u32::MAX || hg.fixed[u] != FREE {
+                    continue;
+                }
+                if score[u] == 0.0 {
+                    touched.push(u as u32);
+                }
+                score[u] += w;
+            }
+        }
+        // pick best candidate
+        let mut best = u32::MAX;
+        let mut best_score = 0.0f32;
+        for &u in &touched {
+            let s = score[u as usize];
+            if s > best_score {
+                best_score = s;
+                best = u;
+            }
+            score[u as usize] = 0.0;
+        }
+        if best != u32::MAX {
+            mate[v] = best;
+            mate[best as usize] = v as u32;
+        }
+    }
+
+    // assign coarse ids
+    let mut map = vec![u32::MAX; nv];
+    let mut next = 0u32;
+    for v in 0..nv {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        map[v] = next;
+        let m = mate[v];
+        if m != u32::MAX && map[m as usize] == u32::MAX {
+            map[m as usize] = next;
+        }
+        next += 1;
+    }
+    let cnv = next as usize;
+    if cnv == nv {
+        return None;
+    }
+
+    // coarse vertex weights and fixed flags
+    let mut vwgt = vec![0u32; cnv];
+    let mut fixed = vec![FREE; cnv];
+    for v in 0..nv {
+        let c = map[v] as usize;
+        vwgt[c] = vwgt[c].saturating_add(hg.vwgt[v]);
+        if hg.fixed[v] != FREE {
+            fixed[c] = hg.fixed[v];
+        }
+    }
+
+    // coarse nets: project pins, dedup within net, drop <2-pin nets,
+    // merge identical nets summing costs. The merge map is keyed by a
+    // 64-bit hash of the pin list with bucket chaining into `nets` itself,
+    // so unique nets are stored once (no duplicate Vec keys) and duplicate
+    // detection allocates nothing.
+    use std::collections::HashMap;
+    let mut net_map: HashMap<u64, Vec<u32>> = HashMap::new(); // hash -> net ids
+    let mut nets: Vec<Vec<u32>> = Vec::new();
+    let mut ncost: Vec<u32> = Vec::new();
+    let mut buf: Vec<u32> = Vec::with_capacity(64);
+    for n in 0..hg.num_nets() {
+        buf.clear();
+        buf.extend(hg.net_pins(n).iter().map(|&p| map[p as usize]));
+        buf.sort_unstable();
+        buf.dedup();
+        if buf.len() < 2 {
+            continue;
+        }
+        // FNV-1a over the pin words
+        let mut h = 0xcbf29ce484222325u64;
+        for &p in &buf {
+            h = (h ^ p as u64).wrapping_mul(0x100000001b3);
+        }
+        let bucket = net_map.entry(h).or_default();
+        if let Some(&id) = bucket
+            .iter()
+            .find(|&&id| nets[id as usize] == buf)
+        {
+            ncost[id as usize] += hg.ncost[n];
+        } else {
+            bucket.push(nets.len() as u32);
+            nets.push(std::mem::take(&mut buf));
+            ncost.push(hg.ncost[n]);
+            buf = Vec::with_capacity(64);
+        }
+    }
+
+    let mut coarse = Hypergraph::new(cnv, nets, vwgt, ncost);
+    coarse.fixed = fixed;
+    Some(CoarseLevel { coarse, map })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(n: usize) -> Hypergraph {
+        // path hypergraph: nets {i, i+1}
+        let nets = (0..n - 1).map(|i| vec![i as u32, i as u32 + 1]).collect();
+        Hypergraph::new(n, nets, vec![1; n], vec![1; n - 1])
+    }
+
+    #[test]
+    fn coarsening_shrinks() {
+        let hg = chain(32);
+        let mut rng = Rng::new(1);
+        let lvl = coarsen(&hg, &mut rng).expect("should coarsen");
+        assert!(lvl.coarse.nv < 32);
+        assert!(lvl.coarse.nv >= 16);
+        // total weight preserved
+        assert_eq!(lvl.coarse.total_vwgt(), hg.total_vwgt());
+    }
+
+    #[test]
+    fn fixed_vertices_stay_singleton_and_fixed() {
+        let mut hg = chain(16);
+        hg.fix(0, 0);
+        hg.fix(15, 1);
+        let mut rng = Rng::new(2);
+        let lvl = coarsen(&hg, &mut rng).unwrap();
+        let c0 = lvl.map[0] as usize;
+        let c15 = lvl.map[15] as usize;
+        assert_eq!(lvl.coarse.fixed[c0], 0);
+        assert_eq!(lvl.coarse.fixed[c15], 1);
+        // singleton: no other fine vertex maps there
+        for v in 1..15 {
+            assert_ne!(lvl.map[v] as usize, c0);
+            assert_ne!(lvl.map[v] as usize, c15);
+        }
+    }
+
+    #[test]
+    fn identical_nets_merge_costs() {
+        // two identical nets {0,1} with costs 2 and 3; after coarsening of a
+        // larger structure they must merge if both pins stay distinct.
+        let hg = Hypergraph::new(
+            4,
+            vec![vec![0, 1], vec![0, 1], vec![2, 3]],
+            vec![1; 4],
+            vec![2, 3, 1],
+        );
+        let mut rng = Rng::new(3);
+        if let Some(lvl) = coarsen(&hg, &mut rng) {
+            // if 0,1 merged the nets vanish; if not, they merged into one net
+            let c0 = lvl.map[0];
+            let c1 = lvl.map[1];
+            if c0 != c1 {
+                let mut found = false;
+                for n in 0..lvl.coarse.num_nets() {
+                    let mut p = lvl.coarse.net_pins(n).to_vec();
+                    p.sort_unstable();
+                    let mut q = vec![c0, c1];
+                    q.sort_unstable();
+                    if p == q {
+                        assert_eq!(lvl.coarse.ncost[n], 5);
+                        found = true;
+                    }
+                }
+                assert!(found);
+            }
+        }
+    }
+
+    #[test]
+    fn cutsize_preserved_under_projection() {
+        // any coarse partition, projected to fine, has the same cutsize
+        // (coarse cut counts merged nets with summed costs)
+        crate::util::prop::check(|rng| {
+            let n = 8 + rng.gen_range(24);
+            let mut nets = Vec::new();
+            for _ in 0..n {
+                let k = 2 + rng.gen_range(3);
+                nets.push(rng.sample_distinct(n, k.min(n)));
+            }
+            let nnets = nets.len();
+            let hg = Hypergraph::new(n, nets, vec![1; n], vec![2; nnets]);
+            if let Some(lvl) = coarsen(&hg, rng) {
+                let cparts: Vec<u32> = (0..lvl.coarse.nv)
+                    .map(|_| rng.gen_range(2) as u32)
+                    .collect();
+                let fparts: Vec<u32> = (0..n).map(|v| cparts[lvl.map[v] as usize]).collect();
+                // fine cut == coarse cut: vertices merged together can never
+                // separate, dropped nets are internal (never cut), merged
+                // identical nets carry summed costs.
+                assert_eq!(
+                    hg.cutsize(&fparts, 2),
+                    lvl.coarse.cutsize(&cparts, 2),
+                    "projection changed cutsize"
+                );
+            }
+        });
+    }
+}

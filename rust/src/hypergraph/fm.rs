@@ -1,0 +1,277 @@
+//! Fiduccia–Mattheyses 2-way refinement with fixed-vertex support.
+//!
+//! Works on a bisection (sides 0/1) with per-side maximum weights. Fixed
+//! vertices are permanently locked to their side. Pass-based: tentatively
+//! move the best feasible vertex until none remain, keep the best prefix.
+
+use super::model::{Hypergraph, FREE};
+use std::collections::BinaryHeap;
+
+/// Bisection state: side per vertex + per-net side counts.
+pub struct Bisection<'a> {
+    pub hg: &'a Hypergraph,
+    pub side: Vec<u8>,
+    /// pins of each net on side 0 / side 1
+    cnt: Vec<[u32; 2]>,
+    pub weight: [u64; 2],
+}
+
+impl<'a> Bisection<'a> {
+    pub fn new(hg: &'a Hypergraph, side: Vec<u8>) -> Self {
+        assert_eq!(side.len(), hg.nv);
+        let mut cnt = vec![[0u32; 2]; hg.num_nets()];
+        for n in 0..hg.num_nets() {
+            for &p in hg.net_pins(n) {
+                cnt[n][side[p as usize] as usize] += 1;
+            }
+        }
+        let mut weight = [0u64; 2];
+        for v in 0..hg.nv {
+            weight[side[v] as usize] += hg.vwgt[v] as u64;
+        }
+        Self {
+            hg,
+            side,
+            cnt,
+            weight,
+        }
+    }
+
+    /// Current (2-way) cutsize: Σ cost over nets with pins on both sides.
+    pub fn cutsize(&self) -> u64 {
+        (0..self.hg.num_nets())
+            .filter(|&n| self.cnt[n][0] > 0 && self.cnt[n][1] > 0)
+            .map(|n| self.hg.ncost[n] as u64)
+            .sum()
+    }
+
+    /// FM gain of moving v to the other side.
+    #[inline]
+    fn gain(&self, v: usize) -> i64 {
+        let s = self.side[v] as usize;
+        let mut g = 0i64;
+        for &n in self.hg.vertex_nets(v) {
+            let n = n as usize;
+            let c = self.hg.ncost[n] as i64;
+            if self.cnt[n][s] == 1 {
+                g += c; // moving v uncuts the net
+            }
+            if self.cnt[n][1 - s] == 0 {
+                g -= c; // moving v cuts the net
+            }
+        }
+        g
+    }
+
+    /// Apply a move (updates side, counts, weights).
+    fn apply(&mut self, v: usize) {
+        let s = self.side[v] as usize;
+        let w = self.hg.vwgt[v] as u64;
+        self.weight[s] -= w;
+        self.weight[1 - s] += w;
+        for &n in self.hg.vertex_nets(v) {
+            let n = n as usize;
+            self.cnt[n][s] -= 1;
+            self.cnt[n][1 - s] += 1;
+        }
+        self.side[v] = 1 - self.side[v];
+    }
+
+    /// One FM pass. `maxw[s]` is the weight cap for side s. Returns the
+    /// cut improvement (>= 0; 0 means no progress).
+    pub fn fm_pass(&mut self, maxw: [u64; 2]) -> u64 {
+        let nv = self.hg.nv;
+        let mut locked = vec![false; nv];
+        let mut stamp: Vec<u32> = vec![0; nv];
+        let mut heap: BinaryHeap<(i64, u32, u32)> = BinaryHeap::new(); // (gain, stamp, v)
+        for v in 0..nv {
+            if self.hg.fixed[v] != FREE {
+                locked[v] = true;
+                continue;
+            }
+            heap.push((self.gain(v), 0, v as u32));
+        }
+
+        let start_cut = self.cutsize() as i64;
+        let mut cur_gain = 0i64;
+        let mut best_gain = 0i64;
+        let mut moves: Vec<u32> = Vec::new();
+        let mut best_len = 0usize;
+
+        while let Some((g, st, vu)) = heap.pop() {
+            let v = vu as usize;
+            if locked[v] || st != stamp[v] {
+                continue;
+            }
+            // re-check gain freshness (lazy heap)
+            let fresh = self.gain(v);
+            if fresh != g {
+                stamp[v] += 1;
+                heap.push((fresh, stamp[v], vu));
+                continue;
+            }
+            // feasibility: destination side must stay under cap
+            let dst = 1 - self.side[v] as usize;
+            if self.weight[dst] + self.hg.vwgt[v] as u64 > maxw[dst] {
+                // cannot move now; drop (may be re-pushed via neighbor updates)
+                stamp[v] += 1;
+                continue;
+            }
+            // tentatively move
+            let touched: Vec<u32> = self
+                .hg
+                .vertex_nets(v)
+                .iter()
+                .flat_map(|&n| self.hg.net_pins(n as usize).iter().copied())
+                .collect();
+            self.apply(v);
+            locked[v] = true;
+            cur_gain += g;
+            moves.push(vu);
+            if cur_gain > best_gain {
+                best_gain = cur_gain;
+                best_len = moves.len();
+            }
+            // refresh neighbor gains
+            for &u in &touched {
+                let u = u as usize;
+                if !locked[u] {
+                    stamp[u] += 1;
+                    heap.push((self.gain(u), stamp[u], u as u32));
+                }
+            }
+            // early stop: long negative tail
+            if moves.len() > best_len + 200 {
+                break;
+            }
+        }
+
+        // rollback moves after the best prefix
+        for &vu in moves[best_len..].iter().rev() {
+            self.apply(vu as usize);
+        }
+        debug_assert_eq!(self.cutsize() as i64, start_cut - best_gain);
+        best_gain.max(0) as u64
+    }
+
+    /// Run FM passes until no improvement (or `max_passes`).
+    pub fn refine(&mut self, maxw: [u64; 2], max_passes: usize) -> u64 {
+        let mut total = 0u64;
+        for _ in 0..max_passes {
+            // zero cut cannot improve; skip the O(nv log nv) pass entirely
+            // (frequent on butterfly layers whose stages split perfectly)
+            if self.cutsize() == 0 {
+                break;
+            }
+            let imp = self.fm_pass(maxw);
+            total += imp;
+            if imp == 0 {
+                break;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn two_clusters() -> Hypergraph {
+        // vertices 0-3 densely tied, 4-7 densely tied, one bridge net.
+        let nets = vec![
+            vec![0, 1],
+            vec![1, 2],
+            vec![2, 3],
+            vec![0, 3],
+            vec![0, 2],
+            vec![4, 5],
+            vec![5, 6],
+            vec![6, 7],
+            vec![4, 7],
+            vec![5, 7],
+            vec![3, 4], // bridge
+        ];
+        let nnets = nets.len();
+        Hypergraph::new(8, nets, vec![1; 8], vec![1; nnets])
+    }
+
+    #[test]
+    fn fm_finds_natural_cut() {
+        let hg = two_clusters();
+        // bad start: interleaved sides
+        let side: Vec<u8> = (0..8).map(|v| (v % 2) as u8).collect();
+        let mut b = Bisection::new(&hg, side);
+        let before = b.cutsize();
+        b.refine([5, 5], 8);
+        let after = b.cutsize();
+        assert!(after <= before);
+        assert_eq!(after, 1, "optimal cut is the single bridge net");
+        // clusters ended up together
+        assert_eq!(b.side[0], b.side[1]);
+        assert_eq!(b.side[0], b.side[2]);
+        assert_eq!(b.side[4], b.side[5]);
+        assert_ne!(b.side[0], b.side[4]);
+    }
+
+    #[test]
+    fn fixed_vertices_never_move() {
+        let mut hg = two_clusters();
+        hg.fix(0, 1); // pin vertex 0 to side 1 even though cluster prefers 0
+        let mut side: Vec<u8> = vec![0; 8];
+        side[0] = 1;
+        for v in 4..8 {
+            side[v] = 1;
+        }
+        let mut b = Bisection::new(&hg, side);
+        b.refine([8, 8], 8);
+        assert_eq!(b.side[0], 1, "fixed vertex moved");
+    }
+
+    #[test]
+    fn balance_cap_respected() {
+        prop::check(|rng| {
+            let nv = 6 + rng.gen_range(20);
+            let mut nets = Vec::new();
+            for _ in 0..nv * 2 {
+                let k = 2 + rng.gen_range(3);
+                nets.push(rng.sample_distinct(nv, k.min(nv)));
+            }
+            let nnets = nets.len();
+            let vwgt: Vec<u32> = (0..nv).map(|_| 1 + rng.gen_range(4) as u32).collect();
+            let hg = Hypergraph::new(nv, nets, vwgt, vec![1; nnets]);
+            let side: Vec<u8> = (0..nv).map(|_| rng.gen_range(2) as u8).collect();
+            let total = hg.total_vwgt();
+            let cap = [(total * 3) / 5 + 1, (total * 3) / 5 + 1];
+            let mut b = Bisection::new(&hg, side);
+            b.refine(cap, 6);
+            assert!(b.weight[0] <= cap[0] || b.weight[1] <= cap[1]);
+            // weights always consistent with sides
+            let w0: u64 = (0..nv)
+                .filter(|&v| b.side[v] == 0)
+                .map(|v| hg.vwgt[v] as u64)
+                .sum();
+            assert_eq!(w0, b.weight[0]);
+        });
+    }
+
+    #[test]
+    fn refine_never_worsens_cut() {
+        prop::check(|rng| {
+            let nv = 4 + rng.gen_range(30);
+            let mut nets = Vec::new();
+            for _ in 0..nv {
+                let k = 2 + rng.gen_range(4);
+                nets.push(rng.sample_distinct(nv, k.min(nv)));
+            }
+            let nnets = nets.len();
+            let hg = Hypergraph::new(nv, nets, vec![1; nv], vec![2; nnets]);
+            let side: Vec<u8> = (0..nv).map(|_| rng.gen_range(2) as u8).collect();
+            let mut b = Bisection::new(&hg, side);
+            let before = b.cutsize();
+            b.refine([nv as u64, nv as u64], 4);
+            assert!(b.cutsize() <= before);
+        });
+    }
+}

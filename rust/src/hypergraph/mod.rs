@@ -1,0 +1,11 @@
+//! Hypergraph partitioning substrate (the paper's PaToH dependency,
+//! reimplemented): model + multilevel recursive-bisection partitioner with
+//! fixed-vertex support.
+
+pub mod coarsen;
+pub mod fm;
+pub mod model;
+pub mod partitioner;
+
+pub use model::{Hypergraph, FREE};
+pub use partitioner::{partition, PartitionConfig};

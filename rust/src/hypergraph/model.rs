@@ -1,0 +1,237 @@
+//! Hypergraph data structure (Section 3.1 of the paper).
+//!
+//! `H = (V, N)`: vertices carry weights, nets carry costs and connect pin
+//! sets. Vertices may be *fixed* to a part before partitioning — the
+//! mechanism the paper's multi-phase model uses to encode the dependency on
+//! the previous layer's partition (Section 5).
+
+/// Sentinel for "not fixed".
+pub const FREE: i32 = -1;
+
+/// Immutable hypergraph in CSR-like storage (nets→pins and vertex→nets).
+#[derive(Debug, Clone)]
+pub struct Hypergraph {
+    /// Number of vertices.
+    pub nv: usize,
+    /// net -> pins
+    pub net_ptr: Vec<u32>,
+    pub pins: Vec<u32>,
+    /// vertex -> incident nets (derived)
+    pub v_ptr: Vec<u32>,
+    pub v_nets: Vec<u32>,
+    /// Vertex weights (computational load; Section 5 uses nnz of the row).
+    pub vwgt: Vec<u32>,
+    /// Net costs (the paper uses a uniform cost of 2).
+    pub ncost: Vec<u32>,
+    /// Fixed part per vertex or `FREE`.
+    pub fixed: Vec<i32>,
+}
+
+impl Hypergraph {
+    /// Build from explicit pin lists. Single-pin and empty nets are allowed
+    /// (they can never be cut; kept so net ids remain meaningful).
+    pub fn new(nv: usize, nets: Vec<Vec<u32>>, vwgt: Vec<u32>, ncost: Vec<u32>) -> Self {
+        assert_eq!(vwgt.len(), nv);
+        assert_eq!(ncost.len(), nets.len());
+        let mut net_ptr = Vec::with_capacity(nets.len() + 1);
+        net_ptr.push(0u32);
+        let total_pins: usize = nets.iter().map(|n| n.len()).sum();
+        let mut pins = Vec::with_capacity(total_pins);
+        for n in &nets {
+            for &p in n {
+                debug_assert!((p as usize) < nv, "pin out of range");
+                pins.push(p);
+            }
+            net_ptr.push(pins.len() as u32);
+        }
+        let mut hg = Self {
+            nv,
+            net_ptr,
+            pins,
+            v_ptr: Vec::new(),
+            v_nets: Vec::new(),
+            vwgt,
+            ncost,
+            fixed: vec![FREE; nv],
+        };
+        hg.build_vertex_index();
+        hg
+    }
+
+    /// (Re)build the vertex→nets index from nets→pins.
+    pub fn build_vertex_index(&mut self) {
+        let mut counts = vec![0u32; self.nv + 1];
+        for &p in &self.pins {
+            counts[p as usize + 1] += 1;
+        }
+        for i in 0..self.nv {
+            counts[i + 1] += counts[i];
+        }
+        self.v_ptr = counts.clone();
+        let mut cursor = counts;
+        let mut v_nets = vec![0u32; self.pins.len()];
+        for n in 0..self.num_nets() {
+            for i in self.net_ptr[n] as usize..self.net_ptr[n + 1] as usize {
+                let v = self.pins[i] as usize;
+                v_nets[cursor[v] as usize] = n as u32;
+                cursor[v] += 1;
+            }
+        }
+        self.v_nets = v_nets;
+    }
+
+    pub fn num_nets(&self) -> usize {
+        self.net_ptr.len() - 1
+    }
+
+    pub fn num_pins(&self) -> usize {
+        self.pins.len()
+    }
+
+    #[inline]
+    pub fn net_pins(&self, n: usize) -> &[u32] {
+        &self.pins[self.net_ptr[n] as usize..self.net_ptr[n + 1] as usize]
+    }
+
+    #[inline]
+    pub fn vertex_nets(&self, v: usize) -> &[u32] {
+        &self.v_nets[self.v_ptr[v] as usize..self.v_ptr[v + 1] as usize]
+    }
+
+    pub fn total_vwgt(&self) -> u64 {
+        self.vwgt.iter().map(|&w| w as u64).sum()
+    }
+
+    /// Mark vertex fixed to `part`.
+    pub fn fix(&mut self, v: usize, part: u32) {
+        self.fixed[v] = part as i32;
+    }
+
+    /// Connectivity-1 cutsize (Eq. 1): Σ_n cost(n) · (λ(n) − 1), plus the
+    /// per-net connectivity vector if requested.
+    pub fn cutsize(&self, parts: &[u32], nparts: usize) -> u64 {
+        assert_eq!(parts.len(), self.nv);
+        let mut mark = vec![u32::MAX; nparts];
+        let mut cut = 0u64;
+        for n in 0..self.num_nets() {
+            let mut lambda = 0u32;
+            for &p in self.net_pins(n) {
+                let pt = parts[p as usize] as usize;
+                if mark[pt] != n as u32 {
+                    mark[pt] = n as u32;
+                    lambda += 1;
+                }
+            }
+            if lambda > 1 {
+                cut += self.ncost[n] as u64 * (lambda as u64 - 1);
+            }
+        }
+        cut
+    }
+
+    /// λ(n) for each net under `parts`.
+    pub fn connectivities(&self, parts: &[u32], nparts: usize) -> Vec<u32> {
+        let mut mark = vec![u32::MAX; nparts];
+        (0..self.num_nets())
+            .map(|n| {
+                let mut lambda = 0u32;
+                for &p in self.net_pins(n) {
+                    let pt = parts[p as usize] as usize;
+                    if mark[pt] != n as u32 {
+                        mark[pt] = n as u32;
+                        lambda += 1;
+                    }
+                }
+                lambda
+            })
+            .collect()
+    }
+
+    /// Part weights under `parts`.
+    pub fn part_weights(&self, parts: &[u32], nparts: usize) -> Vec<u64> {
+        let mut w = vec![0u64; nparts];
+        for v in 0..self.nv {
+            w[parts[v] as usize] += self.vwgt[v] as u64;
+        }
+        w
+    }
+
+    /// Check a partition: every fixed vertex on its part, all part ids valid.
+    pub fn check_partition(&self, parts: &[u32], nparts: usize) -> Result<(), String> {
+        if parts.len() != self.nv {
+            return Err("length mismatch".into());
+        }
+        for v in 0..self.nv {
+            if parts[v] as usize >= nparts {
+                return Err(format!("vertex {v} part {} out of range", parts[v]));
+            }
+            if self.fixed[v] != FREE && parts[v] != self.fixed[v] as u32 {
+                return Err(format!(
+                    "fixed vertex {v} on part {} (wanted {})",
+                    parts[v], self.fixed[v]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The toy hypergraph from Fig. 3 of the paper would do; this is smaller.
+    fn tiny() -> Hypergraph {
+        // 4 vertices; nets: {0,1}, {1,2,3}, {3}
+        Hypergraph::new(
+            4,
+            vec![vec![0, 1], vec![1, 2, 3], vec![3]],
+            vec![1, 2, 3, 4],
+            vec![2, 2, 2],
+        )
+    }
+
+    #[test]
+    fn indices_consistent() {
+        let hg = tiny();
+        assert_eq!(hg.num_nets(), 3);
+        assert_eq!(hg.num_pins(), 6);
+        assert_eq!(hg.net_pins(1), &[1, 2, 3]);
+        assert_eq!(hg.vertex_nets(1), &[0, 1]);
+        assert_eq!(hg.vertex_nets(3), &[1, 2]);
+        assert_eq!(hg.total_vwgt(), 10);
+    }
+
+    #[test]
+    fn cutsize_connectivity_minus_one() {
+        let hg = tiny();
+        // all same part: cut 0
+        assert_eq!(hg.cutsize(&[0, 0, 0, 0], 2), 0);
+        // {0,1} vs {2,3}: net0 uncut, net1 λ=2 → cost 2, net2 uncut → 2
+        assert_eq!(hg.cutsize(&[0, 0, 1, 1], 2), 2);
+        // each vertex its own part: net0 λ=2 → 2; net1 λ=3 → 4; net2 λ=1 → 0
+        assert_eq!(hg.cutsize(&[0, 1, 2, 3], 4), 6);
+    }
+
+    #[test]
+    fn connectivities_vector() {
+        let hg = tiny();
+        assert_eq!(hg.connectivities(&[0, 1, 1, 0], 2), vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn part_weights_sum() {
+        let hg = tiny();
+        let w = hg.part_weights(&[0, 1, 0, 1], 2);
+        assert_eq!(w, vec![4, 6]);
+    }
+
+    #[test]
+    fn check_partition_honors_fixed() {
+        let mut hg = tiny();
+        hg.fix(2, 1);
+        assert!(hg.check_partition(&[0, 0, 1, 0], 2).is_ok());
+        assert!(hg.check_partition(&[0, 0, 0, 0], 2).is_err());
+        assert!(hg.check_partition(&[0, 0, 1, 7], 2).is_err());
+    }
+}

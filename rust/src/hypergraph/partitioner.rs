@@ -1,0 +1,571 @@
+//! Multilevel recursive-bisection P-way partitioner with fixed vertices —
+//! the crate's PaToH stand-in.
+//!
+//! Pipeline per bisection: coarsen (heavy-connectivity matching) →
+//! greedy-growth initial bisection → FM refinement, projected back up the
+//! levels with boundary refinement. P-way via recursive bisection with net
+//! splitting, so the sum of bisection cuts equals the connectivity-1
+//! cutsize (Eq. 1) of the final P-way partition.
+
+use super::coarsen::{coarsen, CoarseLevel};
+use super::fm::Bisection;
+use super::model::{Hypergraph, FREE};
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Nanosecond profile counters (read via [`profile_snapshot`]).
+pub static T_COARSEN: AtomicU64 = AtomicU64::new(0);
+pub static T_REFINE: AtomicU64 = AtomicU64::new(0);
+pub static T_EXTRACT: AtomicU64 = AtomicU64::new(0);
+
+/// (coarsen, refine, extract) seconds accumulated so far.
+pub fn profile_snapshot() -> (f64, f64, f64) {
+    (
+        T_COARSEN.load(Ordering::Relaxed) as f64 / 1e9,
+        T_REFINE.load(Ordering::Relaxed) as f64 / 1e9,
+        T_EXTRACT.load(Ordering::Relaxed) as f64 / 1e9,
+    )
+}
+
+#[inline]
+fn timed<T>(acc: &AtomicU64, f: impl FnOnce() -> T) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    acc.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    out
+}
+
+/// Partitioner knobs.
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    pub nparts: usize,
+    /// Allowed imbalance ε (Eq. 2): max part weight ≤ avg·(1+ε).
+    pub epsilon: f64,
+    pub seed: u64,
+    /// Stop coarsening below this many vertices.
+    pub coarsen_to: usize,
+    /// FM passes per level.
+    pub fm_passes: usize,
+    /// Random restarts of the initial bisection.
+    pub initial_tries: usize,
+    /// Optional per-part target weight fractions (heterogeneous systems,
+    /// paper §5.1: "enforcing different target part weights to distribute
+    /// different sized computational loads"). Must have `nparts` entries
+    /// summing to ~1.0; `None` = uniform.
+    pub target_weights: Option<Vec<f64>>,
+}
+
+impl PartitionConfig {
+    pub fn new(nparts: usize) -> Self {
+        let envu = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        Self {
+            nparts,
+            epsilon: 0.01,
+            seed: 0x9A27,
+            // env overrides support perf tuning (EXPERIMENTS.md §Perf)
+            coarsen_to: envu("SPDNN_COARSEN_TO", 160),
+            fm_passes: envu("SPDNN_FM_PASSES", 4),
+            initial_tries: envu("SPDNN_INIT_TRIES", 6),
+            target_weights: None,
+        }
+    }
+
+    /// Heterogeneous variant with explicit per-part weight fractions.
+    pub fn with_targets(nparts: usize, targets: Vec<f64>) -> Self {
+        assert_eq!(targets.len(), nparts);
+        let sum: f64 = targets.iter().sum();
+        assert!(sum > 0.0);
+        let mut cfg = Self::new(nparts);
+        cfg.target_weights = Some(targets.iter().map(|t| t / sum).collect());
+        cfg
+    }
+
+    /// Target fraction of part p (uniform if unset).
+    fn target_of(&self, p: usize) -> f64 {
+        match &self.target_weights {
+            Some(t) => t[p],
+            None => 1.0 / self.nparts as f64,
+        }
+    }
+}
+
+/// Partition `hg` into `cfg.nparts` parts honoring fixed vertices.
+/// Returns the part id per vertex.
+pub fn partition(hg: &Hypergraph, cfg: &PartitionConfig) -> Vec<u32> {
+    assert!(cfg.nparts >= 1);
+    let mut parts = vec![0u32; hg.nv];
+    if cfg.nparts == 1 {
+        return parts;
+    }
+    let mut rng = Rng::new(cfg.seed);
+    // Per-bisection ε: distribute the total allowance over ~log2(P) levels.
+    let levels = (cfg.nparts as f64).log2().ceil().max(1.0);
+    let eps_level = ((1.0 + cfg.epsilon).powf(1.0 / levels) - 1.0).max(0.002);
+    // rb consumes its hypergraph (children are owned sub-hypergraphs), so
+    // only this single top-level clone is ever made.
+    rb(hg.clone(), 0, cfg.nparts as u32, cfg, eps_level, &mut rng, &mut parts);
+    parts
+}
+
+/// Recursive bisection of `hg` (consumed) into parts [base, base+k).
+fn rb(
+    mut hg: Hypergraph,
+    base: u32,
+    k: u32,
+    cfg: &PartitionConfig,
+    eps: f64,
+    rng: &mut Rng,
+    out: &mut [u32],
+) {
+    if k == 1 {
+        for v in 0..hg.nv {
+            out[v] = base;
+        }
+        return;
+    }
+    let kl = k / 2 + k % 2; // left gets the extra part
+    let kr = k / 2;
+    // split ratio = share of the target weight assigned to the left parts
+    let left_target: f64 = (base..base + kl).map(|p| cfg.target_of(p as usize)).sum();
+    let all_target: f64 = (base..base + k).map(|p| cfg.target_of(p as usize)).sum();
+    let ratio = (left_target / all_target).clamp(0.05, 0.95);
+
+    // Map fixed parts to sides for this split — rewritten in place (we own
+    // hg), remembering the original ids for the children.
+    let side_of_part = |p: i32| -> i32 {
+        if p < base as i32 || p >= (base + k) as i32 {
+            FREE // shouldn't happen; treat as free
+        } else if (p as u32) < base + kl {
+            0
+        } else {
+            1
+        }
+    };
+    let orig_fixed: Vec<(u32, i32)> = hg
+        .fixed
+        .iter()
+        .enumerate()
+        .filter(|(_, &f)| f != FREE)
+        .map(|(v, &f)| (v as u32, f))
+        .collect();
+    for v in 0..hg.nv {
+        if hg.fixed[v] != FREE {
+            hg.fixed[v] = side_of_part(hg.fixed[v]);
+        }
+    }
+
+    let side = multilevel_bisect(&hg, ratio, eps, cfg, rng);
+
+    // Split into two sub-hypergraphs with net splitting.
+    let (mut lhg, lmap) = timed(&T_EXTRACT, || extract_side(&hg, &side, 0));
+    let (mut rhg, rmap) = timed(&T_EXTRACT, || extract_side(&hg, &side, 1));
+    drop(hg); // free the parent before recursing
+
+    // restore fixed part ids in children (they were converted to sides)
+    for &(vu, f) in &orig_fixed {
+        let v = vu as usize;
+        if side[v] == 0 {
+            lhg.fixed[lmap[v] as usize] = f;
+        } else {
+            rhg.fixed[rmap[v] as usize] = f;
+        }
+    }
+
+    let nl = lhg.nv;
+    let nr = rhg.nv;
+    let mut lout = vec![0u32; nl];
+    let mut rout = vec![0u32; nr];
+    rb(lhg, base, kl, cfg, eps, rng, &mut lout);
+    rb(rhg, base + kl, kr, cfg, eps, rng, &mut rout);
+    for (v, &sd) in side.iter().enumerate() {
+        out[v] = if sd == 0 {
+            lout[lmap[v] as usize]
+        } else {
+            rout[rmap[v] as usize]
+        };
+    }
+}
+
+/// Extract the sub-hypergraph induced by `side == s` (net splitting:
+/// keep per-net pins on this side, drop nets with < 2 remaining pins).
+/// Returns (sub, fine→sub vertex map; u32::MAX for the other side).
+fn extract_side(hg: &Hypergraph, side: &[u8], s: u8) -> (Hypergraph, Vec<u32>) {
+    let mut map = vec![u32::MAX; hg.nv];
+    let mut next = 0u32;
+    let mut vwgt = Vec::new();
+    for v in 0..hg.nv {
+        if side[v] == s {
+            map[v] = next;
+            vwgt.push(hg.vwgt[v]);
+            next += 1;
+        }
+    }
+    let mut nets = Vec::new();
+    let mut ncost = Vec::new();
+    let mut buf = Vec::new();
+    for n in 0..hg.num_nets() {
+        buf.clear();
+        for &p in hg.net_pins(n) {
+            if side[p as usize] == s {
+                buf.push(map[p as usize]);
+            }
+        }
+        if buf.len() >= 2 {
+            nets.push(buf.clone());
+            ncost.push(hg.ncost[n]);
+        }
+    }
+    let sub = Hypergraph::new(next as usize, nets, vwgt, ncost);
+    (sub, map)
+}
+
+/// Multilevel 2-way: coarsen, initial, uncoarsen+refine.
+/// `ratio` = target fraction of weight on side 0.
+fn multilevel_bisect(
+    hg: &Hypergraph,
+    ratio: f64,
+    eps: f64,
+    cfg: &PartitionConfig,
+    rng: &mut Rng,
+) -> Vec<u8> {
+    // Coarsening chain (each level owns its coarse hypergraph; no copies)
+    let mut levels: Vec<CoarseLevel> = Vec::new();
+    loop {
+        let next = {
+            let cur: &Hypergraph = levels.last().map(|l| &l.coarse).unwrap_or(hg);
+            if cur.nv <= cfg.coarsen_to {
+                None
+            } else {
+                match timed(&T_COARSEN, || coarsen(cur, rng)) {
+                    Some(lvl) if lvl.coarse.nv < (cur.nv * 95) / 100 => Some(lvl),
+                    _ => None,
+                }
+            }
+        };
+        match next {
+            Some(l) => levels.push(l),
+            None => break,
+        }
+    }
+
+    let coarsest: &Hypergraph = levels.last().map(|l| &l.coarse).unwrap_or(hg);
+
+    // Initial bisection on the coarsest level
+    let total = coarsest.total_vwgt();
+    let target0 = (total as f64 * ratio) as u64;
+    let maxw = caps(total, ratio, eps);
+    let mut best_side: Option<Vec<u8>> = None;
+    let mut best_cut = u64::MAX;
+    for _ in 0..cfg.initial_tries {
+        let side = grow_initial(coarsest, target0, rng);
+        let mut b = Bisection::new(coarsest, side);
+        b.refine(maxw, cfg.fm_passes);
+        let cut = b.cutsize();
+        if cut < best_cut && b.weight[0] <= maxw[0] && b.weight[1] <= maxw[1] {
+            best_cut = cut;
+            best_side = Some(b.side.clone());
+        } else if best_side.is_none() {
+            best_side = Some(b.side.clone());
+            best_cut = cut;
+        }
+    }
+    let mut side = best_side.unwrap();
+
+    // Uncoarsen: project through levels in reverse, refining each
+    for i in (0..levels.len()).rev() {
+        let fine: &Hypergraph = if i == 0 { hg } else { &levels[i - 1].coarse };
+        let mut fside = vec![0u8; fine.nv];
+        for v in 0..fine.nv {
+            fside[v] = side[levels[i].map[v] as usize];
+        }
+        let ftotal = fine.total_vwgt();
+        let fmaxw = caps(ftotal, ratio, eps);
+        timed(&T_REFINE, || {
+            let mut b = Bisection::new(fine, fside);
+            b.refine(fmaxw, cfg.fm_passes);
+            side = b.side;
+        });
+    }
+    side
+}
+
+fn caps(total: u64, ratio: f64, eps: f64) -> [u64; 2] {
+    let t0 = total as f64 * ratio;
+    let t1 = total as f64 * (1.0 - ratio);
+    [
+        (t0 * (1.0 + eps)).ceil() as u64 + 1,
+        (t1 * (1.0 + eps)).ceil() as u64 + 1,
+    ]
+}
+
+/// Greedy BFS growth: fixed side-0/1 vertices pre-placed; grow side 0 from a
+/// random free seed (preferring net neighbors) until `target0` weight.
+fn grow_initial(hg: &Hypergraph, target0: u64, rng: &mut Rng) -> Vec<u8> {
+    let nv = hg.nv;
+    let mut side = vec![1u8; nv];
+    let mut w0 = 0u64;
+    let mut in0 = vec![false; nv];
+    let mut queue: std::collections::VecDeque<u32> = Default::default();
+
+    // fixed placement first
+    for v in 0..nv {
+        if hg.fixed[v] == 0 {
+            side[v] = 0;
+            in0[v] = true;
+            w0 += hg.vwgt[v] as u64;
+            queue.push_back(v as u32);
+        }
+    }
+
+    let order = rng.permutation(nv);
+    let mut oi = 0usize;
+    while w0 < target0 {
+        let v = match queue.pop_front() {
+            Some(v) => v as usize,
+            None => {
+                // new random seed among free side-1 vertices
+                let mut found = None;
+                while oi < order.len() {
+                    let c = order[oi] as usize;
+                    oi += 1;
+                    if !in0[c] && hg.fixed[c] == FREE {
+                        found = Some(c);
+                        break;
+                    }
+                }
+                match found {
+                    Some(c) => {
+                        in0[c] = true;
+                        side[c] = 0;
+                        w0 += hg.vwgt[c] as u64;
+                        c
+                    }
+                    None => break, // everything placed
+                }
+            }
+        };
+        // expand neighbors of v
+        for &n in hg.vertex_nets(v) {
+            let pins = hg.net_pins(n as usize);
+            if pins.len() > 64 {
+                continue;
+            }
+            for &u in pins {
+                let u = u as usize;
+                if !in0[u] && hg.fixed[u] == FREE && w0 < target0 {
+                    in0[u] = true;
+                    side[u] = 0;
+                    w0 += hg.vwgt[u] as u64;
+                    queue.push_back(u as u32);
+                }
+            }
+        }
+    }
+    side
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn random_hg(rng: &mut Rng, nv: usize, nnets: usize, maxpins: usize) -> Hypergraph {
+        let mut nets = Vec::with_capacity(nnets);
+        for _ in 0..nnets {
+            let k = 2 + rng.gen_range(maxpins.saturating_sub(1).max(1));
+            nets.push(rng.sample_distinct(nv, k.min(nv)));
+        }
+        let vwgt: Vec<u32> = (0..nv).map(|_| 1 + rng.gen_range(3) as u32).collect();
+        Hypergraph::new(nv, nets, vwgt, vec![2; nnets])
+    }
+
+    #[test]
+    fn partition_is_valid_and_balanced() {
+        prop::check(|rng| {
+            let nv = 40 + rng.gen_range(100);
+            let hg = random_hg(rng, nv, nv * 2, 5);
+            for &p in &[2usize, 3, 4, 7] {
+                let mut cfg = PartitionConfig::new(p);
+                cfg.epsilon = 0.10;
+                cfg.seed = rng.next_u64();
+                let parts = partition(&hg, &cfg);
+                hg.check_partition(&parts, p).unwrap();
+                let w = hg.part_weights(&parts, p);
+                let avg = hg.total_vwgt() as f64 / p as f64;
+                let maxw = w.iter().copied().max().unwrap() as f64;
+                // generous slack: small instances can't always hit ε exactly
+                assert!(
+                    maxw <= avg * 1.6 + 4.0,
+                    "P={p}: max part weight {maxw} vs avg {avg}"
+                );
+                // no empty parts for these sizes
+                assert!(w.iter().all(|&x| x > 0), "P={p}: empty part: {w:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn respects_fixed_vertices() {
+        prop::check(|rng| {
+            let nv = 60;
+            let mut hg = random_hg(rng, nv, 120, 4);
+            let p = 4usize;
+            // fix ~nv/4 vertices to random parts
+            for _ in 0..nv / 4 {
+                let v = rng.gen_range(nv);
+                hg.fix(v, rng.gen_range(p) as u32);
+            }
+            let mut cfg = PartitionConfig::new(p);
+            cfg.seed = rng.next_u64();
+            cfg.epsilon = 0.2;
+            let parts = partition(&hg, &cfg);
+            hg.check_partition(&parts, p).unwrap();
+        });
+    }
+
+    #[test]
+    fn beats_random_on_clustered_instance() {
+        // Build a hypergraph with 4 planted clusters; H-partition should
+        // recover a far smaller cut than a random balanced assignment.
+        let mut rng = Rng::new(99);
+        let nv = 128;
+        let mut nets = Vec::new();
+        for c in 0..4 {
+            let base = c * 32;
+            for _ in 0..150 {
+                let k = 2 + rng.gen_range(3);
+                let mut pins: Vec<u32> = rng
+                    .sample_distinct(32, k)
+                    .into_iter()
+                    .map(|v| v + base as u32)
+                    .collect();
+                pins.sort_unstable();
+                nets.push(pins);
+            }
+        }
+        // a few cross-cluster nets
+        for _ in 0..20 {
+            nets.push(rng.sample_distinct(nv, 3));
+        }
+        let nnets = nets.len();
+        let hg = Hypergraph::new(nv, nets, vec![1; nv], vec![2; nnets]);
+        let cfg = PartitionConfig::new(4);
+        let parts = partition(&hg, &cfg);
+        let hcut = hg.cutsize(&parts, 4);
+        // random balanced baseline
+        let mut rand_parts: Vec<u32> = (0..nv).map(|v| (v % 4) as u32).collect();
+        rng.shuffle(&mut rand_parts);
+        let rcut = hg.cutsize(&rand_parts, 4);
+        assert!(
+            (hcut as f64) < rcut as f64 * 0.35,
+            "hcut {hcut} not ≪ random {rcut}"
+        );
+    }
+
+    #[test]
+    fn single_part_trivial() {
+        let mut rng = Rng::new(1);
+        let hg = random_hg(&mut rng, 20, 30, 4);
+        let parts = partition(&hg, &PartitionConfig::new(1));
+        assert!(parts.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn rb_cut_equals_connectivity_cut() {
+        // Internal consistency: the P-way cutsize computed by Eq. 1 matches
+        // what recursive bisection optimized (sanity on net splitting).
+        let mut rng = Rng::new(5);
+        let hg = random_hg(&mut rng, 90, 200, 5);
+        let cfg = PartitionConfig::new(8);
+        let parts = partition(&hg, &cfg);
+        let cut = hg.cutsize(&parts, 8);
+        // cut is bounded by total net cost * (P-1)
+        let bound: u64 = hg.ncost.iter().map(|&c| c as u64).sum::<u64>() * 7;
+        assert!(cut <= bound);
+        hg.check_partition(&parts, 8).unwrap();
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut rng = Rng::new(8);
+        let hg = random_hg(&mut rng, 70, 140, 4);
+        let cfg = PartitionConfig::new(4);
+        let a = partition(&hg, &cfg);
+        let b = partition(&hg, &cfg);
+        assert_eq!(a, b);
+    }
+}
+
+#[cfg(test)]
+mod hetero_tests {
+    use super::*;
+
+    #[test]
+    fn heterogeneous_targets_shape_part_weights() {
+        let mut rng = Rng::new(13);
+        // dense-ish random hypergraph, unit weights
+        let nv = 200;
+        let mut nets = Vec::new();
+        for _ in 0..400 {
+            let k = 2 + rng.gen_range(3);
+            nets.push(rng.sample_distinct(nv, k));
+        }
+        let nnets = nets.len();
+        let hg = Hypergraph::new(nv, nets, vec![1; nv], vec![1; nnets]);
+        let cfg = PartitionConfig::with_targets(2, vec![3.0, 1.0]); // 75/25
+        let parts = partition(&hg, &cfg);
+        let w = hg.part_weights(&parts, 2);
+        let frac0 = w[0] as f64 / (w[0] + w[1]) as f64;
+        assert!(
+            (0.65..0.85).contains(&frac0),
+            "part-0 fraction {frac0}, weights {w:?}"
+        );
+    }
+
+    #[test]
+    fn heterogeneous_four_way() {
+        let mut rng = Rng::new(14);
+        let nv = 240;
+        let mut nets = Vec::new();
+        for _ in 0..480 {
+            nets.push(rng.sample_distinct(nv, 3));
+        }
+        let nnets = nets.len();
+        let hg = Hypergraph::new(nv, nets, vec![1; nv], vec![1; nnets]);
+        let targets = vec![4.0, 2.0, 1.0, 1.0];
+        let cfg = PartitionConfig::with_targets(4, targets.clone());
+        let parts = partition(&hg, &cfg);
+        hg.check_partition(&parts, 4).unwrap();
+        let w = hg.part_weights(&parts, 4);
+        let total: u64 = w.iter().sum();
+        let sum_t: f64 = targets.iter().sum();
+        for p in 0..4 {
+            let frac = w[p] as f64 / total as f64;
+            let want = targets[p] / sum_t;
+            assert!(
+                (frac - want).abs() < 0.12,
+                "part {p}: fraction {frac} vs target {want} ({w:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_targets_equal_default() {
+        let mut rng = Rng::new(15);
+        let nv = 100;
+        let mut nets = Vec::new();
+        for _ in 0..150 {
+            nets.push(rng.sample_distinct(nv, 3));
+        }
+        let nnets = nets.len();
+        let hg = Hypergraph::new(nv, nets, vec![1; nv], vec![1; nnets]);
+        let a = partition(&hg, &PartitionConfig::new(4));
+        let b = partition(
+            &hg,
+            &PartitionConfig::with_targets(4, vec![1.0, 1.0, 1.0, 1.0]),
+        );
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,25 @@
+//! spdnn — reproduction of "Partitioning Sparse Deep Neural Networks for
+//! Scalable Training and Inference" (Demirci & Ferhatosmanoglu, ICS'21).
+//!
+//! Three-layer architecture:
+//! - **L3 (this crate)**: the distributed coordinator — sparse substrate,
+//!   hypergraph partitioner, multi-phase DNN partitioning model, simulated
+//!   message-passing fabric, SpFF/SpBP engines (Algorithms 2–3), metrics.
+//! - **L2 (python/compile/model.py)**: rank-local layer compute in JAX,
+//!   AOT-lowered to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)**: the SpMV hot-spot as a Pallas
+//!   block-sparse masked-matmul kernel (interpret mode on CPU).
+//!
+//! The L3 hot path optionally executes the AOT artifacts through the PJRT
+//! CPU client (`runtime`), with Python never on the request path.
+pub mod comm;
+pub mod coordinator;
+pub mod data;
+pub mod hypergraph;
+pub mod partition;
+pub mod dnn;
+pub mod experiments;
+pub mod radixnet;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,276 @@
+//! spdnn CLI — leader entrypoint for every experiment and workload.
+//!
+//! ```text
+//! spdnn table1     [--neurons 1024,4096] [--parts 4,8,16,32] [--layers 24] [--full]
+//! spdnn scaling    [--neurons 1024] [--parts 32,64,128,256,512] [--layers 24] [--full]
+//! spdnn breakdown  [--neurons 1024] [--parts 32,128,512] [--layers 24] [--full]
+//! spdnn throughput [--neurons 1024,4096] [--layers 24] [--ranks 128] [--batch 64] [--full]
+//! spdnn ptimes     [--neurons 1024] [--parts 32,64,128] [--layers 24] [--full]
+//! spdnn ablate     [--neurons 1024] [--parts 8,32] [--layers 24]
+//! spdnn train      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 100] [--eta 0.01] [--batch 1]
+//! spdnn infer      [--neurons 1024] [--layers 12] [--ranks 4] [--batch 64] [--method h|r]
+//! spdnn partition  [--neurons 1024] [--layers 12] [--ranks 8]
+//! spdnn calibrate
+//! ```
+//!
+//! `--full` switches to the paper's full grid (slow on one core).
+
+use spdnn::comm::netmodel::ComputeModel;
+use spdnn::coordinator::minibatch::train_distributed_minibatch;
+use spdnn::coordinator::sgd::{infer_distributed, train_distributed};
+use spdnn::data::synthetic_mnist;
+use spdnn::experiments::{self, ablation, fig4_scaling, fig5_breakdown, table1, table2, table3, Method};
+use spdnn::partition::metrics::PartitionMetrics;
+use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help")
+        .to_string();
+    match cmd.as_str() {
+        "table1" => cmd_table1(&args),
+        "scaling" => cmd_scaling(&args),
+        "breakdown" => cmd_breakdown(&args),
+        "throughput" => cmd_throughput(&args),
+        "ptimes" => cmd_ptimes(&args),
+        "ablate" => cmd_ablate(&args),
+        "train" => cmd_train(&args),
+        "infer" => cmd_infer(&args),
+        "partition" => cmd_partition(&args),
+        "calibrate" => cmd_calibrate(),
+        _ => help(),
+    }
+}
+
+fn help() {
+    println!("spdnn — Partitioning Sparse DNNs (ICS'21) reproduction");
+    println!("experiments: table1 | scaling | breakdown | throughput | ptimes | ablate");
+    println!("workloads:   train | infer | partition | calibrate");
+    println!("see `rust/src/main.rs` header or README.md for flags");
+}
+
+fn neurons_list(args: &Args, full: &[usize], small: &[usize]) -> Vec<usize> {
+    if args.has("neurons") {
+        args.get_usize_list("neurons", small)
+    } else if args.get_bool("full", false) {
+        full.to_vec()
+    } else {
+        small.to_vec()
+    }
+}
+
+fn parts_list(args: &Args, full: &[usize], small: &[usize]) -> Vec<usize> {
+    if args.has("parts") {
+        args.get_usize_list("parts", small)
+    } else if args.get_bool("full", false) {
+        full.to_vec()
+    } else {
+        small.to_vec()
+    }
+}
+
+fn layers_of(args: &Args) -> usize {
+    args.get_usize(
+        "layers",
+        if args.get_bool("full", false) { 120 } else { 24 },
+    )
+}
+
+fn cmd_table1(args: &Args) {
+    let ns = neurons_list(args, &[1024, 4096, 16384, 65536], &[1024, 4096]);
+    let ps = parts_list(args, &[32, 64, 128, 256, 512], &[4, 8, 16, 32]);
+    let layers = layers_of(args);
+    let seed = args.get_u64("seed", 1);
+    println!("# Table 1 — volume/messages/imbalance (L={layers})");
+    for n in ns {
+        let rows = table1::run(n, layers, &ps, seed);
+        println!("{}", table1::render(&rows));
+    }
+}
+
+fn comp_model(args: &Args) -> ComputeModel {
+    if args.get_bool("no-calibrate", false) {
+        ComputeModel::haswell_defaults()
+    } else {
+        ComputeModel::calibrate()
+    }
+}
+
+fn cmd_scaling(args: &Args) {
+    let ns = neurons_list(args, &[1024, 4096, 16384, 65536], &[1024]);
+    let ps = parts_list(args, &[32, 64, 128, 256, 512], &[8, 16, 32, 64, 128]);
+    let layers = layers_of(args);
+    let comp = comp_model(args);
+    println!("# Figure 4 — strong scaling (simulated, L={layers})");
+    for n in ns {
+        let pts = fig4_scaling::run(n, layers, &ps, comp, args.get_u64("seed", 1));
+        println!("{}", fig4_scaling::render(n, &pts));
+    }
+}
+
+fn cmd_breakdown(args: &Args) {
+    let ns = neurons_list(args, &[16384, 65536], &[1024]);
+    let ps = parts_list(args, &[32, 128, 512], &[8, 32, 128]);
+    let layers = layers_of(args);
+    let comp = comp_model(args);
+    println!("# Figure 5 — time breakdown (simulated, L={layers})");
+    for n in ns {
+        let bars = fig5_breakdown::run(n, layers, &ps, comp, args.get_u64("seed", 1));
+        println!("{}", fig5_breakdown::render(n, &bars));
+    }
+}
+
+fn cmd_throughput(args: &Args) {
+    let ns = neurons_list(args, &[1024, 4096, 16384, 65536], &[1024, 4096]);
+    let layers = layers_of(args);
+    let cfg = table2::Config {
+        nparts: args.get_usize("ranks", 128),
+        batch: args.get_usize("batch", 64),
+        inputs: args.get_usize(
+            "inputs",
+            if args.get_bool("full", false) {
+                60_000
+            } else {
+                4096
+            },
+        ),
+        gb_sample: args.get_usize("gb-sample", 128),
+    };
+    let comp = comp_model(args);
+    println!(
+        "# Table 2 — inference throughput (edges/s), H-SpFF P={} vs GB 16-core node",
+        cfg.nparts
+    );
+    let rows: Vec<_> = ns
+        .into_iter()
+        .map(|n| table2::run(n, layers, &cfg, comp, args.get_u64("seed", 1)))
+        .collect();
+    println!("{}", table2::render(&rows));
+}
+
+fn cmd_ptimes(args: &Args) {
+    let ns = neurons_list(args, &[1024, 4096, 16384, 65536], &[1024]);
+    let ps = parts_list(args, &[32, 64, 128, 256, 512], &[8, 16, 32]);
+    let layers = layers_of(args);
+    println!("# Table 3 — partitioning times (s, L={layers})");
+    for n in ns {
+        let rows = table3::run(n, layers, &ps, args.get_u64("seed", 1));
+        println!("{}", table3::render(&rows));
+    }
+}
+
+fn cmd_ablate(args: &Args) {
+    let ns = neurons_list(args, &[1024, 4096], &[1024]);
+    let ps = parts_list(args, &[8, 32, 128], &[8, 32]);
+    let layers = layers_of(args);
+    println!("# Ablation — fixed-vertex chaining vs independent vs random (L={layers})");
+    for n in ns {
+        for &p in &ps {
+            let rows = ablation::run(n, layers, p, args.get_u64("seed", 1));
+            println!("{}", ablation::render(n, p, &rows));
+        }
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let n = args.get_usize("neurons", 1024);
+    let layers = args.get_usize("layers", 12);
+    let ranks = args.get_usize("ranks", 4);
+    let steps = args.get_usize("steps", 100);
+    let eta = args.get_f32("eta", 0.01);
+    let side = (n as f64).sqrt() as usize;
+    assert_eq!(side * side, n, "neurons must be a square for MNIST input");
+
+    let net = generate(&RadixNetConfig::graph_challenge(n, layers).expect("size"));
+    let structure = net.layers.clone();
+    let method = match args.get_str("method", "h").as_str() {
+        "r" | "random" => Method::Random,
+        _ => Method::Hypergraph,
+    };
+    eprintln!(
+        "partitioning N={n} L={layers} into {ranks} ranks ({})...",
+        method.label()
+    );
+    let part = experiments::partition_with(&structure, method, ranks, 1);
+    let m = PartitionMetrics::compute(&structure, &part);
+    eprintln!(
+        "partition: avg vol {:.1} Kwords/iter, imb {:.3}",
+        m.avg_volume() / 1e3,
+        m.comp_imbalance()
+    );
+
+    let data = synthetic_mnist(side, steps, 7);
+    let inputs: Vec<Vec<f32>> = data.samples.iter().map(|s| s.pixels.clone()).collect();
+    let targets: Vec<Vec<f32>> = (0..steps).map(|i| data.target(i, n)).collect();
+    let batch = args.get_usize("batch", 1);
+    let run = if batch > 1 {
+        // §5.1 minibatch SpMM variant
+        train_distributed_minibatch(&net, &part, &inputs, &targets, batch, eta, 1)
+    } else {
+        train_distributed(&net, &part, &inputs, &targets, eta, 1)
+    };
+    for (i, l) in run.losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == run.losses.len() {
+            println!("step {i:>5}  loss {l:.6}");
+        }
+    }
+    println!("per-rank sent (words, msgs): {:?}", run.sent);
+}
+
+fn cmd_infer(args: &Args) {
+    let n = args.get_usize("neurons", 1024);
+    let layers = args.get_usize("layers", 12);
+    let ranks = args.get_usize("ranks", 4);
+    let b = args.get_usize("batch", 64);
+    let side = (n as f64).sqrt() as usize;
+    let net = generate(&RadixNetConfig::graph_challenge(n, layers).expect("size"));
+    let part = experiments::partition_with(&net.layers, Method::Hypergraph, ranks, 1);
+    let data = synthetic_mnist(side, b, 11);
+    let (x0, b) = data.pack_batch(0, b);
+    let sw = spdnn::util::Stopwatch::start();
+    let (out, sent) = infer_distributed(&net, &part, &x0, b);
+    let secs = sw.elapsed_secs();
+    let edges = net.total_nnz() as f64 * b as f64;
+    println!(
+        "batch {b}: {:.3}s live ({:.3e} edges/s 1-core), output dim {}",
+        secs,
+        edges / secs,
+        out.len()
+    );
+    println!("per-rank (words, msgs): {sent:?}");
+}
+
+fn cmd_partition(args: &Args) {
+    let n = args.get_usize("neurons", 1024);
+    let layers = args.get_usize("layers", 12);
+    let ranks = args.get_usize("ranks", 8);
+    let structure = experiments::structure_for(n, layers);
+    for method in [Method::Hypergraph, Method::Random] {
+        let sw = spdnn::util::Stopwatch::start();
+        let part = experiments::partition_with(&structure, method, ranks, 1);
+        let secs = sw.elapsed_secs();
+        let m = PartitionMetrics::compute(&structure, &part);
+        println!(
+            "{}: {:.2}s | vol avg {:.1}K max {:.1}K | msgs avg {:.2}K | imb {:.3}",
+            method.label(),
+            secs,
+            m.avg_volume() / 1e3,
+            m.max_volume() / 1e3,
+            m.avg_msgs() / 1e3,
+            m.comp_imbalance()
+        );
+    }
+}
+
+fn cmd_calibrate() {
+    let c = ComputeModel::calibrate();
+    println!("spmv   {:.3e} s/nnz", c.spmv_per_nnz);
+    println!("spmv_t {:.3e} s/nnz", c.spmvt_per_nnz);
+    println!("update {:.3e} s/nnz", c.update_per_nnz);
+    println!("elem   {:.3e} s/elem", c.elem);
+}

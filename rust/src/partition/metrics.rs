@@ -1,0 +1,133 @@
+//! Partition quality metrics — the quantities of the paper's Table 1.
+//!
+//! Volume = words a rank sends during one full SGD iteration (SpFF + SpBP
+//! over all L layers; SpBP mirrors SpFF, so a rank's backward sends equal
+//! its forward receives). Messages = point-to-point messages a rank sends
+//! per iteration. Imbalance = max/avg computational load (nnz of owned
+//! rows).
+
+use super::plan::CommPlan;
+use super::DnnPartition;
+use crate::sparse::Csr;
+use crate::util::stats;
+
+/// Aggregated Table-1 metrics of one partition.
+#[derive(Debug, Clone)]
+pub struct PartitionMetrics {
+    pub nparts: usize,
+    pub layers: usize,
+    /// Words sent per rank per iteration (SpFF sends + SpBP sends).
+    pub send_volume_per_rank: Vec<u64>,
+    /// Messages sent per rank per iteration (SpFF + SpBP).
+    pub send_msgs_per_rank: Vec<u64>,
+    /// Computational load per rank (total nnz owned).
+    pub comp_load_per_rank: Vec<u64>,
+}
+
+impl PartitionMetrics {
+    pub fn compute(structure: &[Csr], part: &DnnPartition) -> Self {
+        let plan = CommPlan::build(structure, part);
+        Self::from_plan(structure, part, &plan)
+    }
+
+    /// Compute from a pre-built plan (avoids rebuilding when both are
+    /// needed).
+    pub fn from_plan(structure: &[Csr], part: &DnnPartition, plan: &CommPlan) -> Self {
+        let fwd_send = plan.fwd_send_volume_per_rank();
+        let fwd_recv = plan.fwd_recv_volume_per_rank();
+        let fwd_smsg = plan.fwd_send_msgs_per_rank();
+        let fwd_rmsg = plan.fwd_recv_msgs_per_rank();
+        // SpBP mirror: backward sends of rank m == forward receives of m.
+        let send_volume_per_rank: Vec<u64> = fwd_send
+            .iter()
+            .zip(fwd_recv.iter())
+            .map(|(s, r)| s + r)
+            .collect();
+        let send_msgs_per_rank: Vec<u64> = fwd_smsg
+            .iter()
+            .zip(fwd_rmsg.iter())
+            .map(|(s, r)| s + r)
+            .collect();
+        Self {
+            nparts: part.nparts,
+            layers: structure.len(),
+            send_volume_per_rank,
+            send_msgs_per_rank,
+            comp_load_per_rank: part.comp_loads(structure),
+        }
+    }
+
+    /// Total volume over all ranks (== paper's Σ_k Vol(k)).
+    pub fn total_volume(&self) -> u64 {
+        self.send_volume_per_rank.iter().sum()
+    }
+
+    pub fn avg_volume(&self) -> f64 {
+        stats::summarize_u64(&self.send_volume_per_rank).0
+    }
+
+    pub fn max_volume(&self) -> f64 {
+        stats::summarize_u64(&self.send_volume_per_rank).1
+    }
+
+    pub fn avg_msgs(&self) -> f64 {
+        stats::summarize_u64(&self.send_msgs_per_rank).0
+    }
+
+    pub fn max_msgs(&self) -> f64 {
+        stats::summarize_u64(&self.send_msgs_per_rank).1
+    }
+
+    /// Computational imbalance: max load / avg load (Table 1 "imb").
+    pub fn comp_imbalance(&self) -> f64 {
+        stats::summarize_u64(&self.comp_load_per_rank).2
+    }
+
+    /// Messages per rank per layer (both phases), a latency-per-barrier
+    /// view used in EXPERIMENTS.md discussion.
+    pub fn avg_msgs_per_layer(&self) -> f64 {
+        self.avg_msgs() / (2.0 * self.layers as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::phases::{hypergraph_partition, PhaseConfig};
+    use crate::partition::random::random_partition;
+    use crate::radixnet::{generate_structure, RadixNetConfig};
+
+    #[test]
+    fn totals_consistent_with_plan() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 6).unwrap());
+        let part = random_partition(&structure, 8, 1);
+        let plan = CommPlan::build(&structure, &part);
+        let m = PartitionMetrics::from_plan(&structure, &part, &plan);
+        assert_eq!(m.total_volume(), plan.total_volume());
+        assert_eq!(
+            m.send_msgs_per_rank.iter().sum::<u64>(),
+            2 * plan.fwd_messages()
+        );
+    }
+
+    #[test]
+    fn hypergraph_beats_random_on_all_metrics() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 8).unwrap());
+        let h = PartitionMetrics::compute(
+            &structure,
+            &hypergraph_partition(&structure, &PhaseConfig::new(4)),
+        );
+        let r = PartitionMetrics::compute(&structure, &random_partition(&structure, 4, 2));
+        assert!(h.avg_volume() < r.avg_volume());
+        assert!(h.max_volume() <= r.max_volume());
+        // computational balance comparable or better
+        assert!(h.comp_imbalance() < r.comp_imbalance() * 1.3 + 0.05);
+    }
+
+    #[test]
+    fn imbalance_at_least_one() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 3).unwrap());
+        let m = PartitionMetrics::compute(&structure, &random_partition(&structure, 4, 9));
+        assert!(m.comp_imbalance() >= 1.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! DNN partitioning (Section 5): who owns which neuron in which layer.
+//!
+//! A [`DnnPartition`] assigns every row of every weight matrix (= every
+//! neuron of layers 1..L) and every input-vector entry (layer 0) to a rank.
+//! Two constructions are provided:
+//! - [`random::random_partition`] — the paper's baseline "SGD": rows dealt
+//!   to ranks uniformly at random, evenly split per layer;
+//! - [`phases::hypergraph_partition`] — the paper's contribution "H-SGD":
+//!   the multi-phase hypergraph model with fixed vertices.
+
+pub mod metrics;
+pub mod phases;
+pub mod plan;
+pub mod random;
+
+pub use metrics::PartitionMetrics;
+pub use plan::CommPlan;
+
+use crate::sparse::Csr;
+
+/// Row→rank assignment for every layer of a sparse DNN.
+#[derive(Debug, Clone)]
+pub struct DnnPartition {
+    pub nparts: usize,
+    /// Rank owning each entry of the input vector x^0.
+    pub input_parts: Vec<u32>,
+    /// `layer_parts[k][r]` = rank owning row r of weight matrix k (i.e.
+    /// neuron r of layer k+1).
+    pub layer_parts: Vec<Vec<u32>>,
+}
+
+impl DnnPartition {
+    /// Owner of x^k(j): layer 0 = input assignment, else the row owner of
+    /// layer k-1 (the rank that computed the activation).
+    pub fn owner_of_activation(&self, k: usize, j: usize) -> u32 {
+        if k == 0 {
+            self.input_parts[j]
+        } else {
+            self.layer_parts[k - 1][j]
+        }
+    }
+
+    /// Rows owned by `rank` in weight layer `k`, in ascending order.
+    pub fn rows_of(&self, k: usize, rank: u32) -> Vec<u32> {
+        self.layer_parts[k]
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p == rank)
+            .map(|(r, _)| r as u32)
+            .collect()
+    }
+
+    /// Validate against a network structure: lengths match, ranks in range.
+    pub fn validate(&self, structure: &[Csr]) -> Result<(), String> {
+        if self.layer_parts.len() != structure.len() {
+            return Err("layer count mismatch".into());
+        }
+        if self.input_parts.len() != structure[0].ncols {
+            return Err("input length mismatch".into());
+        }
+        for (k, (parts, w)) in self.layer_parts.iter().zip(structure.iter()).enumerate() {
+            if parts.len() != w.nrows {
+                return Err(format!("layer {k} row count mismatch"));
+            }
+            if parts.iter().any(|&p| p as usize >= self.nparts) {
+                return Err(format!("layer {k} rank out of range"));
+            }
+        }
+        if self
+            .input_parts
+            .iter()
+            .any(|&p| p as usize >= self.nparts)
+        {
+            return Err("input rank out of range".into());
+        }
+        Ok(())
+    }
+
+    /// Computational load per rank: total nnz of owned rows over all layers
+    /// (the paper's vertex weight, Section 5).
+    pub fn comp_loads(&self, structure: &[Csr]) -> Vec<u64> {
+        let mut loads = vec![0u64; self.nparts];
+        for (k, w) in structure.iter().enumerate() {
+            for r in 0..w.nrows {
+                loads[self.layer_parts[k][r] as usize] += w.row_nnz(r) as u64;
+            }
+        }
+        loads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::radixnet::{generate_structure, RadixNetConfig};
+
+    #[test]
+    fn owner_of_activation_chains_layers() {
+        let p = DnnPartition {
+            nparts: 2,
+            input_parts: vec![0, 1],
+            layer_parts: vec![vec![1, 0], vec![0, 1]],
+        };
+        assert_eq!(p.owner_of_activation(0, 0), 0);
+        assert_eq!(p.owner_of_activation(0, 1), 1);
+        assert_eq!(p.owner_of_activation(1, 0), 1); // row 0 of layer 0
+        assert_eq!(p.owner_of_activation(2, 1), 1); // row 1 of layer 1
+    }
+
+    #[test]
+    fn rows_of_filters_by_rank() {
+        let p = DnnPartition {
+            nparts: 2,
+            input_parts: vec![0, 0],
+            layer_parts: vec![vec![1, 0, 1, 0]],
+        };
+        assert_eq!(p.rows_of(0, 1), vec![0, 2]);
+        assert_eq!(p.rows_of(0, 0), vec![1, 3]);
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 2).unwrap());
+        let p = DnnPartition {
+            nparts: 2,
+            input_parts: vec![0; 64],
+            layer_parts: vec![vec![0; 64]], // only 1 layer, structure has 2
+        };
+        assert!(p.validate(&structure).is_err());
+    }
+
+    #[test]
+    fn comp_loads_sum_to_total_nnz() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 3).unwrap());
+        let p = super::random::random_partition(&structure, 4, 7);
+        let loads = p.comp_loads(&structure);
+        let total: u64 = structure.iter().map(|w| w.nnz() as u64).sum();
+        assert_eq!(loads.iter().sum::<u64>(), total);
+    }
+}

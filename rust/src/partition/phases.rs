@@ -1,0 +1,236 @@
+//! The paper's multi-phase hypergraph partitioning model (Section 5).
+//!
+//! Phase φ^k partitions the rows of W^k. The hypergraph H(φ^k) has:
+//! - a vertex per row (weight = row nnz — the neuron's computational load);
+//! - a net per column j (cost 2: one word in SpFF + one in SpBP, Eq. Vol(k));
+//! - for k > 1, a zero-weight *fixed vertex* per column j, pinned to the
+//!   part that received row j in phase φ^{k-1} — the producer of x^{k-1}(j).
+//!
+//! Phase φ^1 has no fixed vertices (x^0 is the input vector); after
+//! partitioning, each input entry is assigned to the part owning the most
+//! consumers of that entry (any part in Λ(n_j) is volume-optimal, the
+//! majority pick also balances input storage).
+
+use super::DnnPartition;
+use crate::hypergraph::{partition, Hypergraph, PartitionConfig};
+use crate::sparse::Csr;
+
+/// Configuration for the multi-phase model.
+#[derive(Debug, Clone)]
+pub struct PhaseConfig {
+    pub nparts: usize,
+    /// Imbalance ε per phase (paper: 0.01).
+    pub epsilon: f64,
+    pub seed: u64,
+}
+
+impl PhaseConfig {
+    pub fn new(nparts: usize) -> Self {
+        Self {
+            nparts,
+            epsilon: 0.01,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// Build the phase hypergraph for one layer.
+///
+/// Vertex ids: `0..nrows` are row vertices; when `prev` is given, vertex
+/// `nrows + j` is the fixed vertex of column j (only materialized for
+/// columns with at least one nonzero).
+pub fn build_phase_hypergraph(w: &Csr, prev: Option<&[u32]>) -> Hypergraph {
+    let nrows = w.nrows;
+    let ncols = w.ncols;
+    // column -> pin rows (build via transpose walk)
+    let mut col_pins: Vec<Vec<u32>> = vec![Vec::new(); ncols];
+    for r in 0..nrows {
+        let (cols, _) = w.row(r);
+        for &c in cols {
+            col_pins[c as usize].push(r as u32);
+        }
+    }
+    let has_fixed = prev.is_some();
+    let nv = nrows + if has_fixed { ncols } else { 0 };
+    let mut vwgt = vec![0u32; nv];
+    for r in 0..nrows {
+        vwgt[r] = w.row_nnz(r).max(1) as u32;
+    }
+    // fixed vertices keep weight 0: they carry no computation (Section 5)
+    let mut nets: Vec<Vec<u32>> = Vec::with_capacity(ncols);
+    let mut ncost: Vec<u32> = Vec::with_capacity(ncols);
+    for j in 0..ncols {
+        if col_pins[j].is_empty() {
+            continue; // column never read: no communication, no net
+        }
+        let mut pins = col_pins[j].clone();
+        if has_fixed {
+            pins.push((nrows + j) as u32);
+        }
+        nets.push(pins);
+        ncost.push(2); // one word forward + one word backward (Vol(k))
+    }
+    let mut hg = Hypergraph::new(nv, nets, vwgt, ncost);
+    if let Some(prev_parts) = prev {
+        for j in 0..ncols {
+            if !col_pins[j].is_empty() {
+                hg.fix(nrows + j, prev_parts[j]);
+            }
+        }
+    }
+    hg
+}
+
+/// Run all L phases and assemble the partition ("H-SGD").
+pub fn hypergraph_partition(structure: &[Csr], cfg: &PhaseConfig) -> DnnPartition {
+    assert!(!structure.is_empty());
+    let mut layer_parts: Vec<Vec<u32>> = Vec::with_capacity(structure.len());
+    let mut prev: Option<Vec<u32>> = None;
+
+    let profile = std::env::var("SPDNN_PROFILE").is_ok();
+    let mut t_build = 0f64;
+    let mut t_part = 0f64;
+    for (k, w) in structure.iter().enumerate() {
+        let sw = crate::util::Stopwatch::start();
+        let hg = build_phase_hypergraph(w, prev.as_deref());
+        t_build += sw.elapsed_secs();
+        let mut pcfg = PartitionConfig::new(cfg.nparts);
+        pcfg.epsilon = cfg.epsilon;
+        pcfg.seed = cfg.seed.wrapping_add(k as u64).wrapping_mul(0x9E3779B9);
+        let sw = crate::util::Stopwatch::start();
+        let parts = partition(&hg, &pcfg);
+        t_part += sw.elapsed_secs();
+        let rows: Vec<u32> = parts[..w.nrows].to_vec();
+        prev = Some(rows.clone());
+        layer_parts.push(rows);
+    }
+    if profile {
+        let (tc, tr, te) = crate::hypergraph::partitioner::profile_snapshot();
+        eprintln!(
+            "[profile] phase-hg build {t_build:.3}s, partition {t_part:.3}s              (coarsen {tc:.3}s, uncoarsen-refine {tr:.3}s, extract {te:.3}s)"
+        );
+    }
+
+    // Assign input entries to the majority consumer part of their column.
+    let w0 = &structure[0];
+    let rows0 = &layer_parts[0];
+    let mut input_parts = vec![0u32; w0.ncols];
+    let mut counts = vec![0u32; cfg.nparts];
+    let mut col_rows: Vec<Vec<u32>> = vec![Vec::new(); w0.ncols];
+    for r in 0..w0.nrows {
+        for &c in w0.row(r).0 {
+            col_rows[c as usize].push(r as u32);
+        }
+    }
+    for j in 0..w0.ncols {
+        if col_rows[j].is_empty() {
+            input_parts[j] = (j % cfg.nparts) as u32; // unread entry: spread
+            continue;
+        }
+        counts.iter_mut().for_each(|c| *c = 0);
+        for &r in &col_rows[j] {
+            counts[rows0[r as usize] as usize] += 1;
+        }
+        input_parts[j] = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(p, _)| p as u32)
+            .unwrap();
+    }
+
+    DnnPartition {
+        nparts: cfg.nparts,
+        input_parts,
+        layer_parts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::radixnet::{generate_structure, RadixNetConfig};
+    use crate::sparse::Coo;
+
+    #[test]
+    fn phase_hypergraph_shapes() {
+        // 3x3 matrix, col 1 empty
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 0, 1.0);
+        coo.push(2, 2, 1.0);
+        let w = coo.to_csr();
+        let hg = build_phase_hypergraph(&w, None);
+        assert_eq!(hg.nv, 3); // no fixed vertices in phase 1
+        assert_eq!(hg.num_nets(), 2); // col 1 has no pins → no net
+        assert_eq!(hg.vwgt, vec![1, 1, 1]);
+        assert!(hg.ncost.iter().all(|&c| c == 2));
+
+        let prev = vec![1u32, 0, 1];
+        let hg2 = build_phase_hypergraph(&w, Some(&prev));
+        assert_eq!(hg2.nv, 6); // 3 rows + 3 (potential) fixed slots
+        assert_eq!(hg2.fixed[3], 1); // col 0 producer = part 1
+        assert_eq!(hg2.fixed[4], crate::hypergraph::FREE); // empty col: free
+        assert_eq!(hg2.fixed[5], 1);
+        // fixed vertices carry no weight
+        assert_eq!(hg2.vwgt[3], 0);
+    }
+
+    #[test]
+    fn net_pins_are_column_consumers_plus_fixed() {
+        let mut coo = Coo::new(4, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(2, 0, 1.0);
+        coo.push(3, 1, 1.0);
+        let w = coo.to_csr();
+        let prev = vec![0u32, 1];
+        let hg = build_phase_hypergraph(&w, Some(&prev));
+        // net 0 = column 0: pins {0, 2, fixed 4}
+        let mut p0 = hg.net_pins(0).to_vec();
+        p0.sort_unstable();
+        assert_eq!(p0, vec![0, 2, 4]);
+        let mut p1 = hg.net_pins(1).to_vec();
+        p1.sort_unstable();
+        assert_eq!(p1, vec![3, 5]);
+    }
+
+    #[test]
+    fn partition_valid_on_radixnet() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 6).unwrap());
+        let cfg = PhaseConfig::new(4);
+        let p = hypergraph_partition(&structure, &cfg);
+        p.validate(&structure).unwrap();
+        // balance: comp loads within a reasonable factor
+        let loads = p.comp_loads(&structure);
+        let avg = loads.iter().sum::<u64>() as f64 / 4.0;
+        let maxl = *loads.iter().max().unwrap() as f64;
+        assert!(maxl <= avg * 1.25, "loads {loads:?}");
+    }
+
+    #[test]
+    fn beats_random_volume_on_radixnet() {
+        use crate::partition::metrics::PartitionMetrics;
+        use crate::partition::random::random_partition;
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 8).unwrap());
+        let h = hypergraph_partition(&structure, &PhaseConfig::new(8));
+        let r = random_partition(&structure, 8, 3);
+        let mh = PartitionMetrics::compute(&structure, &h);
+        let mr = PartitionMetrics::compute(&structure, &r);
+        assert!(
+            (mh.total_volume() as f64) < mr.total_volume() as f64 * 0.8,
+            "H volume {} not well below R volume {}",
+            mh.total_volume(),
+            mr.total_volume()
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 4).unwrap());
+        let cfg = PhaseConfig::new(4);
+        let a = hypergraph_partition(&structure, &cfg);
+        let b = hypergraph_partition(&structure, &cfg);
+        assert_eq!(a.layer_parts, b.layer_parts);
+        assert_eq!(a.input_parts, b.input_parts);
+    }
+}

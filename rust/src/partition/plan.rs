@@ -1,0 +1,295 @@
+//! Communication plans — the Xsend/Xrecv (Eq. 8–9) and Ssend/Srecv maps.
+//!
+//! For layer k, rank m must receive x^{k-1}(j) for every column j of its
+//! row block that it does not own; the owner is the rank that computed
+//! x^{k-1}(j) in the previous layer. SpBP is the exact mirror: if m
+//! receives x^{k-1}(j) from n forward, m sends the partial gradient s^k(j)
+//! to n backward (Section 4.2). Plans are precomputed once from structure +
+//! partition and are never touched on the hot path (Section 6.4).
+
+use super::DnnPartition;
+use crate::sparse::Csr;
+
+/// One directed transfer: `indices` of the activation vector x^{k-1}
+/// flowing `from → to` during SpFF of layer k (and s^k flowing `to → from`
+/// during SpBP of layer k).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Transfer {
+    pub from: u32,
+    pub to: u32,
+    /// Global x^{k-1} indices, ascending.
+    pub indices: Vec<u32>,
+}
+
+/// All transfers of one layer, plus per-rank views.
+#[derive(Debug, Clone, Default)]
+pub struct LayerPlan {
+    pub transfers: Vec<Transfer>,
+    /// Indices into `transfers` of messages sent by each rank (SpFF).
+    pub send_of: Vec<Vec<u32>>,
+    /// Indices into `transfers` of messages received by each rank (SpFF).
+    pub recv_of: Vec<Vec<u32>>,
+}
+
+impl LayerPlan {
+    pub fn volume(&self) -> u64 {
+        self.transfers.iter().map(|t| t.indices.len() as u64).sum()
+    }
+
+    pub fn message_count(&self) -> u64 {
+        self.transfers.len() as u64
+    }
+}
+
+/// The full per-layer communication plan of one (structure, partition) pair.
+#[derive(Debug, Clone)]
+pub struct CommPlan {
+    pub nparts: usize,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl CommPlan {
+    /// Build the plan from the sparsity structure and a partition.
+    pub fn build(structure: &[Csr], part: &DnnPartition) -> CommPlan {
+        let nparts = part.nparts;
+        let mut layers = Vec::with_capacity(structure.len());
+        // reusable scratch: consumer parts per column
+        for (k, w) in structure.iter().enumerate() {
+            // consumers[j] = sorted distinct ranks needing x^{k-1}(j)
+            let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); w.ncols];
+            for r in 0..w.nrows {
+                let p = part.layer_parts[k][r];
+                for &c in w.row(r).0 {
+                    let list = &mut consumers[c as usize];
+                    if !list.contains(&p) {
+                        list.push(p);
+                    }
+                }
+            }
+            // aggregate (owner → consumer) index lists
+            use std::collections::BTreeMap;
+            let mut pairs: BTreeMap<(u32, u32), Vec<u32>> = BTreeMap::new();
+            for j in 0..w.ncols {
+                if consumers[j].is_empty() {
+                    continue;
+                }
+                let owner = part.owner_of_activation(k, j);
+                for &q in &consumers[j] {
+                    if q != owner {
+                        pairs.entry((owner, q)).or_default().push(j as u32);
+                    }
+                }
+            }
+            let mut plan = LayerPlan {
+                transfers: Vec::with_capacity(pairs.len()),
+                send_of: vec![Vec::new(); nparts],
+                recv_of: vec![Vec::new(); nparts],
+            };
+            for ((from, to), indices) in pairs {
+                let id = plan.transfers.len() as u32;
+                plan.send_of[from as usize].push(id);
+                plan.recv_of[to as usize].push(id);
+                plan.transfers.push(Transfer { from, to, indices });
+            }
+            layers.push(plan);
+        }
+        CommPlan { nparts, layers }
+    }
+
+    /// Total one-way (SpFF) volume in words for one input vector.
+    pub fn fwd_volume(&self) -> u64 {
+        self.layers.iter().map(|l| l.volume()).sum()
+    }
+
+    /// Total one-way (SpFF) message count for one input vector.
+    pub fn fwd_messages(&self) -> u64 {
+        self.layers.iter().map(|l| l.message_count()).sum()
+    }
+
+    /// Per-rank words sent during SpFF (per input). SpBP send volume is the
+    /// mirror: rank m's backward sends equal its forward receives.
+    pub fn fwd_send_volume_per_rank(&self) -> Vec<u64> {
+        let mut v = vec![0u64; self.nparts];
+        for l in &self.layers {
+            for t in &l.transfers {
+                v[t.from as usize] += t.indices.len() as u64;
+            }
+        }
+        v
+    }
+
+    /// Per-rank words received during SpFF (== SpBP sends per rank).
+    pub fn fwd_recv_volume_per_rank(&self) -> Vec<u64> {
+        let mut v = vec![0u64; self.nparts];
+        for l in &self.layers {
+            for t in &l.transfers {
+                v[t.to as usize] += t.indices.len() as u64;
+            }
+        }
+        v
+    }
+
+    /// Per-rank message counts sent during SpFF.
+    pub fn fwd_send_msgs_per_rank(&self) -> Vec<u64> {
+        let mut v = vec![0u64; self.nparts];
+        for l in &self.layers {
+            for t in &l.transfers {
+                v[t.from as usize] += 1;
+            }
+        }
+        v
+    }
+
+    /// Per-rank message counts received during SpFF (== SpBP sends).
+    pub fn fwd_recv_msgs_per_rank(&self) -> Vec<u64> {
+        let mut v = vec![0u64; self.nparts];
+        for l in &self.layers {
+            for t in &l.transfers {
+                v[t.to as usize] += 1;
+            }
+        }
+        v
+    }
+
+    /// Total SpFF+SpBP volume (the paper's Vol = Σ 2·(λ−1)).
+    pub fn total_volume(&self) -> u64 {
+        2 * self.fwd_volume()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::random::random_partition;
+    use crate::radixnet::{generate_structure, RadixNetConfig};
+    use crate::sparse::Coo;
+    use crate::util::prop;
+
+    fn two_rank_example() -> (Vec<Csr>, DnnPartition) {
+        // W^1: 4x4; rows 0,1 → rank 0, rows 2,3 → rank 1.
+        // row r reads columns {r, (r+1)%4}
+        let mut coo = Coo::new(4, 4);
+        for r in 0..4 {
+            coo.push(r, r, 1.0);
+            coo.push(r, (r + 1) % 4, 1.0);
+        }
+        let w = coo.to_csr();
+        let part = DnnPartition {
+            nparts: 2,
+            input_parts: vec![0, 0, 1, 1],
+            layer_parts: vec![vec![0, 0, 1, 1]],
+        };
+        (vec![w], part)
+    }
+
+    #[test]
+    fn plan_matches_hand_computation() {
+        let (structure, part) = two_rank_example();
+        let plan = CommPlan::build(&structure, &part);
+        // consumers: col0→{0,3? no}: rows reading col0 = row0 (r=0) and row3 ((3+1)%4=0)
+        //   col0: rows {0,3} → ranks {0,1}; owner(col0)=0 ⇒ 0→1 send idx 0
+        //   col1: rows {0,1} → rank {0}; owner 0 ⇒ none
+        //   col2: rows {1,2} → ranks {0,1}; owner 1 ⇒ 1→0 send idx 2
+        //   col3: rows {2,3} → rank {1}; owner 1 ⇒ none
+        let l = &plan.layers[0];
+        assert_eq!(l.transfers.len(), 2);
+        let t01 = l.transfers.iter().find(|t| t.from == 0).unwrap();
+        assert_eq!(t01.to, 1);
+        assert_eq!(t01.indices, vec![0]);
+        let t10 = l.transfers.iter().find(|t| t.from == 1).unwrap();
+        assert_eq!(t10.to, 0);
+        assert_eq!(t10.indices, vec![2]);
+        assert_eq!(plan.fwd_volume(), 2);
+        assert_eq!(plan.total_volume(), 4);
+    }
+
+    #[test]
+    fn volume_equals_cutsize_of_phase_hypergraphs() {
+        // The paper's central modeling claim: Σ_k cutsize(H(φ^k)) with
+        // cost 2 == total SpFF+SpBP communication volume.
+        prop::check(|rng| {
+            let n = 16 + rng.gen_range(48);
+            let layers = 2 + rng.gen_range(4);
+            let mut structure = Vec::new();
+            for _ in 0..layers {
+                let mut coo = Coo::new(n, n);
+                for r in 0..n {
+                    let deg = 1 + rng.gen_range(4);
+                    for c in rng.sample_distinct(n, deg) {
+                        coo.push(r, c as usize, 1.0);
+                    }
+                }
+                structure.push(coo.to_csr());
+            }
+            let nparts = 2 + rng.gen_range(5);
+            let part = random_partition(&structure, nparts, rng.next_u64());
+            let plan = CommPlan::build(&structure, &part);
+
+            // cutsize: build phase hypergraphs with fixed vertices from the
+            // actual previous assignment (input_parts for k=0) and fix ALL
+            // vertices to their partition - cutsize must equal volume.
+            let mut total_cut = 0u64;
+            for (k, w) in structure.iter().enumerate() {
+                let prev: Vec<u32> = (0..w.ncols)
+                    .map(|j| part.owner_of_activation(k, j))
+                    .collect();
+                let hg = crate::partition::phases::build_phase_hypergraph(w, Some(&prev));
+                let mut parts_vec = vec![0u32; hg.nv];
+                for r in 0..w.nrows {
+                    parts_vec[r] = part.layer_parts[k][r];
+                }
+                for j in 0..w.ncols {
+                    parts_vec[w.nrows + j] = prev[j];
+                }
+                total_cut += hg.cutsize(&parts_vec, nparts);
+            }
+            assert_eq!(
+                total_cut,
+                plan.total_volume(),
+                "cutsize != comm volume (n={n}, P={nparts})"
+            );
+        });
+    }
+
+    #[test]
+    fn per_rank_sums_match_totals() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 5).unwrap());
+        let part = random_partition(&structure, 8, 11);
+        let plan = CommPlan::build(&structure, &part);
+        assert_eq!(
+            plan.fwd_send_volume_per_rank().iter().sum::<u64>(),
+            plan.fwd_volume()
+        );
+        assert_eq!(
+            plan.fwd_recv_volume_per_rank().iter().sum::<u64>(),
+            plan.fwd_volume()
+        );
+        assert_eq!(
+            plan.fwd_send_msgs_per_rank().iter().sum::<u64>(),
+            plan.fwd_messages()
+        );
+    }
+
+    #[test]
+    fn transfers_have_sorted_indices_and_no_self_sends() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 6).unwrap());
+        let part = random_partition(&structure, 4, 5);
+        let plan = CommPlan::build(&structure, &part);
+        for l in &plan.layers {
+            for t in &l.transfers {
+                assert_ne!(t.from, t.to);
+                assert!(t.indices.windows(2).all(|w| w[0] < w[1]));
+                assert!(!t.indices.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_has_no_communication() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 4).unwrap());
+        let part = random_partition(&structure, 1, 1);
+        let plan = CommPlan::build(&structure, &part);
+        assert_eq!(plan.fwd_volume(), 0);
+        assert_eq!(plan.fwd_messages(), 0);
+    }
+}

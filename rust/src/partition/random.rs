@@ -1,0 +1,76 @@
+//! Random row partitioning — the paper's baseline ("SGD" rows of Table 1).
+//!
+//! "Random partitioning evenly splits weight matrices by assigning rows to
+//! processors uniformly at random and provides competitive
+//! computation/communication balance" (§6.1): we shuffle the rows of each
+//! layer and deal them round-robin, which is exactly an even random split.
+
+use super::DnnPartition;
+use crate::sparse::Csr;
+use crate::util::Rng;
+
+/// Evenly-split random assignment per layer (and for the input vector).
+pub fn random_partition(structure: &[Csr], nparts: usize, seed: u64) -> DnnPartition {
+    let mut rng = Rng::new(seed);
+    let deal = |n: usize, rng: &mut Rng| -> Vec<u32> {
+        let perm = rng.permutation(n);
+        let mut parts = vec![0u32; n];
+        for (i, &v) in perm.iter().enumerate() {
+            parts[v as usize] = (i % nparts) as u32;
+        }
+        parts
+    };
+    let input_parts = deal(structure[0].ncols, &mut rng);
+    let layer_parts = structure
+        .iter()
+        .map(|w| deal(w.nrows, &mut rng))
+        .collect();
+    DnnPartition {
+        nparts,
+        input_parts,
+        layer_parts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::radixnet::{generate_structure, RadixNetConfig};
+
+    #[test]
+    fn even_split_per_layer() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 4).unwrap());
+        let p = random_partition(&structure, 8, 1);
+        p.validate(&structure).unwrap();
+        for parts in &p.layer_parts {
+            let mut counts = vec![0usize; 8];
+            for &x in parts {
+                counts[x as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == 32), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn uneven_division_remainder_spread() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 2).unwrap());
+        let p = random_partition(&structure, 5, 2); // 64 / 5 = 12..13
+        for parts in &p.layer_parts {
+            let mut counts = vec![0usize; 5];
+            for &x in parts {
+                counts[x as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == 12 || c == 13), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 3).unwrap());
+        let a = random_partition(&structure, 4, 1);
+        let b = random_partition(&structure, 4, 1);
+        let c = random_partition(&structure, 4, 2);
+        assert_eq!(a.layer_parts, b.layer_parts);
+        assert_ne!(a.layer_parts, c.layer_parts);
+    }
+}

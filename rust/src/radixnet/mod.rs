@@ -1,0 +1,257 @@
+//! RadiX-Net synthetic sparse DNN generator.
+//!
+//! Reimplementation of the generator behind the Sparse Deep Neural Network
+//! Graph Challenge benchmark (Kepner & Robinett, "RadiX-Net: Structured
+//! Sparse Matrices for Deep Neural Networks", IPDPSW'19), which the paper
+//! uses for all experiments (Section 6.1).
+//!
+//! Topology: given mixed radices `[r_0 … r_{d-1}]` with `N = Π r_s`, a
+//! neuron index is a mixed-radix number. The layer at depth `k` applies
+//! butterfly stage `s = k mod d`: neuron `j` of layer k+1 connects to every
+//! neuron `i` of layer k that agrees with `j` on all digits except digit
+//! `s`. Row degree of layer k is therefore `r_{k mod d}`, every
+//! input-output pair is connected after `d` consecutive layers, and the
+//! structure is exactly the Kronecker/butterfly family RadiX-Net draws
+//! from. Optional seeded inter-layer permutations break alignment (off for
+//! the benchmark configs, available for robustness tests).
+
+use crate::dnn::{Activation, SparseNet};
+use crate::sparse::{Coo, Csr};
+use crate::util::Rng;
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct RadixNetConfig {
+    /// Mixed radices; the neuron count per layer is their product.
+    pub radices: Vec<usize>,
+    /// Number of weight layers L.
+    pub layers: usize,
+    /// RNG seed for weights (and permutations if enabled).
+    pub seed: u64,
+    /// Apply a random inter-layer permutation per layer.
+    pub permute: bool,
+    pub activation: Activation,
+}
+
+impl RadixNetConfig {
+    /// Benchmark presets matching the paper's four network sizes
+    /// (N = 1024, 4096, 16384, 65536 neurons/layer).
+    pub fn graph_challenge(neurons: usize, layers: usize) -> Option<Self> {
+        let radices: Vec<usize> = match neurons {
+            1024 => vec![32, 32],
+            4096 => vec![16, 16, 16],
+            16384 => vec![32, 32, 16],
+            65536 => vec![16, 16, 16, 16],
+            // smaller sizes for CI-scale runs
+            64 => vec![8, 8],
+            256 => vec![16, 16],
+            _ => return None,
+        };
+        Some(Self {
+            radices,
+            layers,
+            seed: 0x5EED,
+            permute: false,
+            activation: Activation::Sigmoid,
+        })
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.radices.iter().product()
+    }
+}
+
+/// Digit strides for the mixed-radix representation (little-endian: digit 0
+/// is the least significant).
+fn strides(radices: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; radices.len()];
+    for i in 1..radices.len() {
+        s[i] = s[i - 1] * radices[i - 1];
+    }
+    s
+}
+
+/// Build the sparse connectivity matrix for butterfly stage `stage`
+/// (structure only; values filled by the caller).
+fn stage_pattern(radices: &[usize], stage: usize) -> Vec<(u32, u32)> {
+    let n: usize = radices.iter().product();
+    let st = strides(radices);
+    let r = radices[stage];
+    let stride = st[stage];
+    let mut pairs = Vec::with_capacity(n * r);
+    for j in 0..n {
+        let digit = (j / stride) % r;
+        let base = j - digit * stride;
+        for t in 0..r {
+            let i = base + t * stride;
+            pairs.push((j as u32, i as u32));
+        }
+    }
+    pairs
+}
+
+/// Generate the full sparse network: weights U[-1,1] (paper §6.1), zero
+/// biases, sigmoid activation by default.
+pub fn generate(cfg: &RadixNetConfig) -> SparseNet {
+    let n = cfg.neurons();
+    let d = cfg.radices.len();
+    let mut rng = Rng::new(cfg.seed);
+    let mut layers: Vec<Csr> = Vec::with_capacity(cfg.layers);
+    for k in 0..cfg.layers {
+        let stage = k % d;
+        let mut pairs = stage_pattern(&cfg.radices, stage);
+        if cfg.permute {
+            let perm = rng.permutation(n);
+            for (_, i) in pairs.iter_mut() {
+                *i = perm[*i as usize];
+            }
+        }
+        let mut coo = Coo::with_capacity(n, n, pairs.len());
+        for (j, i) in pairs {
+            coo.push(j as usize, i as usize, rng.gen_f32_range(-1.0, 1.0));
+        }
+        layers.push(coo.to_csr());
+    }
+    SparseNet::new(layers, cfg.activation)
+}
+
+/// Generate only the layer sparsity patterns (no weights) — cheaper when the
+/// caller needs structure only (partitioning experiments at large N).
+pub fn generate_structure(cfg: &RadixNetConfig) -> Vec<Csr> {
+    let n = cfg.neurons();
+    let d = cfg.radices.len();
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.layers)
+        .map(|k| {
+            let mut pairs = stage_pattern(&cfg.radices, k % d);
+            if cfg.permute {
+                let perm = rng.permutation(n);
+                for (_, i) in pairs.iter_mut() {
+                    *i = perm[*i as usize];
+                }
+            }
+            let mut coo = Coo::with_capacity(n, n, pairs.len());
+            for (j, i) in pairs {
+                coo.push(j as usize, i as usize, 1.0);
+            }
+            coo.to_csr()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neuron_count_is_radix_product() {
+        let cfg = RadixNetConfig::graph_challenge(1024, 4).unwrap();
+        assert_eq!(cfg.neurons(), 1024);
+        assert_eq!(
+            RadixNetConfig::graph_challenge(65536, 1).unwrap().neurons(),
+            65536
+        );
+    }
+
+    #[test]
+    fn regular_degree_per_layer() {
+        let cfg = RadixNetConfig {
+            radices: vec![4, 8],
+            layers: 4,
+            seed: 1,
+            permute: false,
+            activation: Activation::Sigmoid,
+        };
+        let net = generate(&cfg);
+        assert_eq!(net.depth(), 4);
+        // stage 0 layers have degree 4, stage 1 layers degree 8
+        for (k, w) in net.layers.iter().enumerate() {
+            let expect = if k % 2 == 0 { 4 } else { 8 };
+            for r in 0..w.nrows {
+                assert_eq!(w.row_nnz(r), expect, "layer {k} row {r}");
+            }
+        }
+        assert!(net.validate().is_ok());
+    }
+
+    #[test]
+    fn full_connectivity_after_all_stages() {
+        // After d consecutive stages every input reaches every output:
+        // the product of the stage patterns is dense.
+        let cfg = RadixNetConfig {
+            radices: vec![3, 4],
+            layers: 2,
+            seed: 2,
+            permute: false,
+            activation: Activation::Identity,
+        };
+        let pats = generate_structure(&cfg);
+        let n = cfg.neurons();
+        // reach[j] = set of inputs reaching neuron j after both layers
+        let mut reach: Vec<std::collections::HashSet<u32>> =
+            (0..n).map(|i| [i as u32].into_iter().collect()).collect();
+        for w in &pats {
+            let mut next = vec![std::collections::HashSet::new(); n];
+            for j in 0..n {
+                let (cols, _) = w.row(j);
+                for &c in cols {
+                    let src = reach[c as usize].clone();
+                    next[j].extend(src);
+                }
+            }
+            reach = next;
+        }
+        for j in 0..n {
+            assert_eq!(reach[j].len(), n, "output {j} not fully connected");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = RadixNetConfig::graph_challenge(64, 6).unwrap();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        for (wa, wb) in a.layers.iter().zip(b.layers.iter()) {
+            assert_eq!(wa, wb);
+        }
+    }
+
+    #[test]
+    fn weights_in_unit_interval() {
+        let cfg = RadixNetConfig::graph_challenge(256, 3).unwrap();
+        let net = generate(&cfg);
+        for w in &net.layers {
+            assert!(w.vals.iter().all(|&v| (-1.0..1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn permutation_preserves_degree_and_changes_pattern() {
+        let base = RadixNetConfig {
+            radices: vec![8, 8],
+            layers: 2,
+            seed: 3,
+            permute: false,
+            activation: Activation::Sigmoid,
+        };
+        let mut permuted = base.clone();
+        permuted.permute = true;
+        let a = generate_structure(&base);
+        let b = generate_structure(&permuted);
+        assert_ne!(a[0].indices, b[0].indices);
+        for r in 0..64 {
+            assert_eq!(b[0].row_nnz(r), 8);
+        }
+    }
+
+    #[test]
+    fn structure_matches_generate() {
+        let cfg = RadixNetConfig::graph_challenge(64, 5).unwrap();
+        let net = generate(&cfg);
+        let pats = generate_structure(&cfg);
+        for (w, p) in net.layers.iter().zip(pats.iter()) {
+            assert_eq!(w.indptr, p.indptr);
+            assert_eq!(w.indices, p.indices);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! PJRT-backed layer engine: runs the rank-local layer blocks through the
+//! AOT artifacts — the "three layers compose" proof on the serving path.
+//!
+//! The artifacts are compiled for a fixed row-block shape `m×k` (one per
+//! variant, emitted by aot.py). Row blocks whose local row count is below
+//! `m` are zero-padded; the padded outputs are sliced away. The sparse
+//! block is densified (dense-with-zeros is the masked TPU form the L1
+//! kernel expects).
+
+use super::pjrt::PjrtRuntime;
+use super::{bwd_artifact, fwd_artifact, fwd_batch_artifact};
+use crate::sparse::Csr;
+use anyhow::{ensure, Result};
+use std::path::Path;
+
+/// Executes σ(Wx+b) / Wᵀδ blocks of a fixed padded shape via PJRT.
+pub struct PjrtLayerEngine {
+    rt: PjrtRuntime,
+    /// Padded rows per block.
+    pub m: usize,
+    /// Columns (global layer width).
+    pub k: usize,
+    /// Batch width of the batched artifact (0 = not loaded).
+    pub batch: usize,
+}
+
+impl PjrtLayerEngine {
+    /// Load the fwd/bwd artifacts for shape m×k from `dir` (and the
+    /// batched forward if `batch > 0`).
+    pub fn load(dir: &Path, m: usize, k: usize, batch: usize) -> Result<Self> {
+        let mut rt = PjrtRuntime::new()?;
+        rt.load("fwd", &dir.join(fwd_artifact(m, k)))?;
+        rt.load("bwd", &dir.join(bwd_artifact(m, k)))?;
+        if batch > 0 {
+            rt.load("fwd_batch", &dir.join(fwd_batch_artifact(m, k, batch)))?;
+        }
+        Ok(Self { rt, m, k, batch })
+    }
+
+    /// Densify a row block to the padded `m×k` row-major buffer.
+    pub fn densify(&self, blk: &Csr) -> Result<Vec<f32>> {
+        ensure!(blk.nrows <= self.m, "block rows {} > padded {}", blk.nrows, self.m);
+        ensure!(blk.ncols == self.k, "block cols {} != {}", blk.ncols, self.k);
+        let mut dense = vec![0f32; self.m * self.k];
+        for r in 0..blk.nrows {
+            let (cols, vals) = blk.row(r);
+            for (c, v) in cols.iter().zip(vals.iter()) {
+                dense[r * self.k + *c as usize] = *v;
+            }
+        }
+        Ok(dense)
+    }
+
+    /// σ(W_blk · x + b) for the local rows; returns `blk.nrows` outputs.
+    pub fn forward(&self, blk: &Csr, x: &[f32], bias: &[f32]) -> Result<Vec<f32>> {
+        ensure!(x.len() == self.k, "x len {} != {}", x.len(), self.k);
+        let dense = self.densify(blk)?;
+        let mut b = vec![0f32; self.m];
+        b[..bias.len()].copy_from_slice(bias);
+        let out = self.rt.exec_f32(
+            "fwd",
+            &[
+                (&dense, &[self.m as i64, self.k as i64]),
+                (x, &[self.k as i64]),
+                (&b, &[self.m as i64]),
+            ],
+        )?;
+        Ok(out[..blk.nrows].to_vec())
+    }
+
+    /// W_blkᵀ · δ (full-width s vector of length k).
+    pub fn backward(&self, blk: &Csr, delta: &[f32]) -> Result<Vec<f32>> {
+        ensure!(delta.len() == blk.nrows);
+        let dense = self.densify(blk)?;
+        let mut d = vec![0f32; self.m];
+        d[..delta.len()].copy_from_slice(delta);
+        self.rt.exec_f32(
+            "bwd",
+            &[
+                (&dense, &[self.m as i64, self.k as i64]),
+                (&d, &[self.m as i64]),
+            ],
+        )
+    }
+
+    /// Batched forward σ(W_blk · X + b): X is `[k × batch]` row-major;
+    /// returns `[blk.nrows × batch]` row-major.
+    pub fn forward_batch(&self, blk: &Csr, x: &[f32], bias: &[f32]) -> Result<Vec<f32>> {
+        ensure!(self.batch > 0, "batched artifact not loaded");
+        ensure!(x.len() == self.k * self.batch);
+        let dense = self.densify(blk)?;
+        let mut b = vec![0f32; self.m];
+        b[..bias.len()].copy_from_slice(bias);
+        let out = self.rt.exec_f32(
+            "fwd_batch",
+            &[
+                (&dense, &[self.m as i64, self.k as i64]),
+                (x, &[self.k as i64, self.batch as i64]),
+                (&b, &[self.m as i64]),
+            ],
+        )?;
+        Ok(out[..blk.nrows * self.batch].to_vec())
+    }
+}

@@ -1,0 +1,70 @@
+//! PJRT runtime — loads the AOT artifacts (HLO text, produced once by
+//! `python/compile/aot.py`) and executes them on the XLA CPU client from
+//! the Rust hot path. Python is never on the request path.
+
+pub mod engine;
+pub mod pjrt;
+
+pub use engine::PjrtLayerEngine;
+pub use pjrt::PjrtRuntime;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$SPDNN_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SPDNN_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // walk up from cwd looking for an `artifacts/` directory
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Artifact file name for a forward layer block of shape m×k.
+pub fn fwd_artifact(m: usize, k: usize) -> String {
+    format!("layer_fwd_{m}x{k}.hlo.txt")
+}
+
+/// Artifact file name for a backward layer block of shape m×k.
+pub fn bwd_artifact(m: usize, k: usize) -> String {
+    format!("layer_bwd_{m}x{k}.hlo.txt")
+}
+
+/// Artifact file name for a batched forward block m×k×b.
+pub fn fwd_batch_artifact(m: usize, k: usize, b: usize) -> String {
+    format!("layer_fwd_batch_{m}x{k}x{b}.hlo.txt")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(fwd_artifact(64, 256), "layer_fwd_64x256.hlo.txt");
+        assert_eq!(bwd_artifact(8, 16), "layer_bwd_8x16.hlo.txt");
+        assert_eq!(
+            fwd_batch_artifact(64, 256, 16),
+            "layer_fwd_batch_64x256x16.hlo.txt"
+        );
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("SPDNN_ARTIFACTS", "/tmp/spdnn_artifacts_test");
+        assert_eq!(
+            artifacts_dir(),
+            PathBuf::from("/tmp/spdnn_artifacts_test")
+        );
+        std::env::remove_var("SPDNN_ARTIFACTS");
+    }
+}

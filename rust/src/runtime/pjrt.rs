@@ -1,0 +1,97 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile once, execute many times (pattern from /opt/xla-example).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by name.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact under `key`. No-op if already
+    /// loaded.
+    pub fn load(&mut self, key: &str, path: &Path) -> Result<()> {
+        if self.exes.contains_key(key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+        self.exes.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, key: &str) -> bool {
+        self.exes.contains_key(key)
+    }
+
+    /// Execute `key` with f32 tensor arguments (`(data, dims)` pairs).
+    /// Artifacts are lowered with `return_tuple=True` and a single output,
+    /// so the result is the flattened f32 payload of tuple element 0.
+    pub fn exec_f32(&self, key: &str, args: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let exe = self
+            .exes
+            .get(key)
+            .ok_or_else(|| anyhow!("executable {key} not loaded"))?;
+        let mut literals = Vec::with_capacity(args.len());
+        for (data, dims) in args {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {key}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests require `make artifacts` to have produced the demo
+    // artifact; they are exercised end-to-end in rust/tests/pjrt_runtime.rs
+    // which builds its own artifacts. Here we only check client creation.
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = PjrtRuntime::new().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+        assert!(!rt.is_loaded("nope"));
+    }
+
+    #[test]
+    fn exec_unloaded_key_errors() {
+        let rt = PjrtRuntime::new().unwrap();
+        assert!(rt.exec_f32("missing", &[]).is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Coordinate-format sparse matrix (builder format).
+
+use super::csr::Csr;
+
+/// Coordinate (triplet) sparse matrix. The natural builder format: push
+/// entries in any order, then convert to CSR.
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, nnz: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(nnz),
+            cols: Vec::with_capacity(nnz),
+            vals: Vec::with_capacity(nnz),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.nrows && c < self.ncols, "entry out of bounds");
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Convert to CSR. Duplicate (r,c) entries are summed. Column indices
+    /// within each row come out sorted.
+    pub fn to_csr(&self) -> Csr {
+        // counting sort by row
+        let mut counts = vec![0u32; self.nrows + 1];
+        for &r in &self.rows {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut cursor = counts.clone();
+        for i in 0..self.nnz() {
+            let r = self.rows[i] as usize;
+            let at = cursor[r] as usize;
+            indices[at] = self.cols[i];
+            vals[at] = self.vals[i];
+            cursor[r] += 1;
+        }
+        // sort within each row, merge duplicates
+        let mut out_indptr = vec![0u32; self.nrows + 1];
+        let mut out_indices = Vec::with_capacity(self.nnz());
+        let mut out_vals = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            let lo = counts[r] as usize;
+            let hi = counts[r + 1] as usize;
+            let mut row: Vec<(u32, f32)> = indices[lo..hi]
+                .iter()
+                .cloned()
+                .zip(vals[lo..hi].iter().cloned())
+                .collect();
+            row.sort_unstable_by_key(|&(c, _)| c);
+            for (c, v) in row {
+                if let Some(last) = out_indices.last() {
+                    if *last == c && out_indices.len() > out_indptr[r] as usize {
+                        *out_vals.last_mut().unwrap() += v;
+                        continue;
+                    }
+                }
+                out_indices.push(c);
+                out_vals.push(v);
+            }
+            out_indptr[r + 1] = out_indices.len() as u32;
+        }
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr: out_indptr,
+            indices: out_indices,
+            vals: out_vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_convert() {
+        let mut c = Coo::new(3, 4);
+        c.push(0, 1, 1.0);
+        c.push(2, 3, 2.0);
+        c.push(0, 0, 3.0);
+        let m = c.to_csr();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0), (&[0u32, 1u32][..], &[3.0f32, 1.0f32][..]));
+        assert_eq!(m.row(1), (&[][..], &[][..]));
+        assert_eq!(m.row(2), (&[3u32][..], &[2.0f32][..]));
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let mut c = Coo::new(2, 2);
+        c.push(1, 1, 1.5);
+        c.push(1, 1, 2.5);
+        let m = c.to_csr();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row(1), (&[1u32][..], &[4.0f32][..]));
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let c = Coo::new(5, 5);
+        let m = c.to_csr();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.indptr.len(), 6);
+    }
+}

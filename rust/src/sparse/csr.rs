@@ -1,0 +1,455 @@
+//! Compressed sparse row matrix — the workhorse of the whole system.
+//!
+//! Weight matrices `W^k` are stored CSR row-wise-partitioned among ranks
+//! (Section 4 of the paper). The transpose multiply used by backpropagation
+//! (`(W^k)^T δ^k`, Alg. 3 line 4) is implemented directly on the CSR
+//! structure as a scatter, which is exactly the column-block view the paper
+//! describes (row partition of `W` == column partition of `W^T`).
+
+/// CSR sparse matrix over f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointers, len == nrows + 1.
+    pub indptr: Vec<u32>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Empty matrix with no nonzeros.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            indptr: vec![0; nrows + 1],
+            indices: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[r] as usize;
+        let hi = self.indptr[r + 1] as usize;
+        (&self.indices[lo..hi], &self.vals[lo..hi])
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> (&[u32], &mut [f32]) {
+        let lo = self.indptr[r] as usize;
+        let hi = self.indptr[r + 1] as usize;
+        (&self.indices[lo..hi], &mut self.vals[lo..hi])
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.indptr[r + 1] - self.indptr[r]) as usize
+    }
+
+    /// Validate structural invariants (debug/test helper).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.nrows + 1 {
+            return Err("indptr length".into());
+        }
+        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+            return Err("indptr end != nnz".into());
+        }
+        if self.indices.len() != self.vals.len() {
+            return Err("indices/vals mismatch".into());
+        }
+        for r in 0..self.nrows {
+            if self.indptr[r] > self.indptr[r + 1] {
+                return Err(format!("indptr not monotone at row {r}"));
+            }
+            let (cols, _) = self.row(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} columns not strictly sorted"));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.ncols {
+                    return Err(format!("row {r} column out of bounds"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// y = A x  (dense x, dense y).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            let mut acc = 0f32;
+            for i in lo..hi {
+                acc += self.vals[i] * unsafe { *x.get_unchecked(self.indices[i] as usize) };
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// y += A x  — used for accumulating remote contributions (Alg. 2 line 9).
+    pub fn spmv_add(&self, x: &[f32], y: &mut [f32]) {
+        for r in 0..self.nrows {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            let mut acc = 0f32;
+            for i in lo..hi {
+                acc += self.vals[i] * unsafe { *x.get_unchecked(self.indices[i] as usize) };
+            }
+            y[r] += acc;
+        }
+    }
+
+    /// y = A^T x, computed by scattering over the CSR rows.
+    /// `y` must be zeroed (or hold a partial sum to accumulate into).
+    pub fn spmv_t_add(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.nrows);
+        debug_assert_eq!(y.len(), self.ncols);
+        for r in 0..self.nrows {
+            let xv = x[r];
+            if xv == 0.0 {
+                continue;
+            }
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            for i in lo..hi {
+                let c = self.indices[i] as usize;
+                unsafe {
+                    *y.get_unchecked_mut(c) += self.vals[i] * xv;
+                }
+            }
+        }
+    }
+
+    /// Y = A X for dense X stored column-major: X is `ncols x b`,
+    /// Y is `nrows x b`, both column-major (each column is one input vector).
+    pub fn spmm_colmajor(&self, x: &[f32], y: &mut [f32], b: usize) {
+        debug_assert_eq!(x.len(), self.ncols * b);
+        debug_assert_eq!(y.len(), self.nrows * b);
+        for col in 0..b {
+            let xs = &x[col * self.ncols..(col + 1) * self.ncols];
+            let ys = &mut y[col * self.nrows..(col + 1) * self.nrows];
+            self.spmv(xs, ys);
+        }
+    }
+
+    /// Y = A X for dense X stored **row-major** (X: ncols x b, Y: nrows x b).
+    /// Row-major RHS vectorizes across the batch dimension — the layout used
+    /// by the batched inference path (§5.1 SpMM discussion).
+    pub fn spmm_rowmajor(&self, x: &[f32], y: &mut [f32], b: usize) {
+        debug_assert_eq!(x.len(), self.ncols * b);
+        debug_assert_eq!(y.len(), self.nrows * b);
+        y.fill(0.0);
+        for r in 0..self.nrows {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            let yrow = &mut y[r * b..(r + 1) * b];
+            for i in lo..hi {
+                let v = self.vals[i];
+                let c = self.indices[i] as usize;
+                let xrow = &x[c * b..(c + 1) * b];
+                for (yj, xj) in yrow.iter_mut().zip(xrow.iter()) {
+                    *yj += v * xj;
+                }
+            }
+        }
+    }
+
+    /// Gradient update on existing nonzeros only (Eq. 4–5):
+    /// `W(r, c) -= eta * delta(r) * x(c)` for each stored (r, c).
+    /// Sparse DNN training never densifies: pruned connections stay pruned.
+    pub fn sgd_update(&mut self, delta: &[f32], x: &[f32], eta: f32) {
+        debug_assert_eq!(delta.len(), self.nrows);
+        debug_assert_eq!(x.len(), self.ncols);
+        for r in 0..self.nrows {
+            let d = eta * delta[r];
+            if d == 0.0 {
+                continue;
+            }
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            for i in lo..hi {
+                let c = self.indices[i] as usize;
+                self.vals[i] -= d * unsafe { *x.get_unchecked(c) };
+            }
+        }
+    }
+
+    /// Transpose into a new CSR (i.e., the CSC view of self).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0u32; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        for r in 0..self.nrows {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            for i in lo..hi {
+                let c = self.indices[i] as usize;
+                let at = cursor[c] as usize;
+                indices[at] = r as u32;
+                vals[at] = self.vals[i];
+                cursor[c] += 1;
+            }
+        }
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr,
+            indices,
+            vals,
+        }
+    }
+
+    /// Extract the row block given by `rows` (in order). Column space is kept
+    /// (no re-indexing): this is exactly the per-rank block `W^k_m`.
+    pub fn row_block(&self, rows: &[u32]) -> Csr {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0u32);
+        let mut nnz = 0usize;
+        for &r in rows {
+            nnz += self.row_nnz(r as usize);
+            indptr.push(nnz as u32);
+        }
+        let mut indices = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        for &r in rows {
+            let (cols, vs) = self.row(r as usize);
+            indices.extend_from_slice(cols);
+            vals.extend_from_slice(vs);
+        }
+        Csr {
+            nrows: rows.len(),
+            ncols: self.ncols,
+            indptr,
+            indices,
+            vals,
+        }
+    }
+
+    /// Set of distinct columns with at least one nonzero — `cols(·)` in
+    /// Eqs. (8)–(9). Returned sorted.
+    pub fn cols_used(&self) -> Vec<u32> {
+        let mut seen = vec![false; self.ncols];
+        for &c in &self.indices {
+            seen[c as usize] = true;
+        }
+        (0..self.ncols as u32)
+            .filter(|&c| seen[c as usize])
+            .collect()
+    }
+
+    /// Dense representation (tests / PJRT path for small blocks).
+    pub fn to_dense_rowmajor(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.nrows * self.ncols];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals.iter()) {
+                out[r * self.ncols + *c as usize] = *v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::util::prop;
+
+    fn small() -> Csr {
+        // [1 0 2]
+        // [0 3 0]
+        let mut c = Coo::new(2, 3);
+        c.push(0, 0, 1.0);
+        c.push(0, 2, 2.0);
+        c.push(1, 1, 3.0);
+        c.to_csr()
+    }
+
+    fn random_csr(rng: &mut crate::util::Rng, nrows: usize, ncols: usize, p: f64) -> Csr {
+        let mut c = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for col in 0..ncols {
+                if rng.gen_bool(p) {
+                    c.push(r, col, rng.gen_f32_range(-1.0, 1.0));
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    fn dense_spmv(a: &Csr, x: &[f32]) -> Vec<f32> {
+        let d = a.to_dense_rowmajor();
+        (0..a.nrows)
+            .map(|r| {
+                (0..a.ncols)
+                    .map(|c| d[r * a.ncols + c] * x[c])
+                    .sum::<f32>()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = vec![0.0; 2];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, vec![7.0, 6.0]);
+    }
+
+    #[test]
+    fn spmv_add_accumulates() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 10.0];
+        a.spmv_add(&x, &mut y);
+        assert_eq!(y, vec![17.0, 16.0]);
+    }
+
+    #[test]
+    fn spmv_t_matches_transpose() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(20), 1 + rng.gen_range(20));
+            let a = random_csr(rng, nr, nc, 0.3);
+            let x: Vec<f32> = (0..a.nrows).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let mut y1 = vec![0.0; a.ncols];
+            a.spmv_t_add(&x, &mut y1);
+            let t = a.transpose();
+            let mut y2 = vec![0.0; a.ncols];
+            t.spmv(&x, &mut y2);
+            for (u, v) in y1.iter().zip(y2.iter()) {
+                assert!((u - v).abs() < 1e-5, "{u} vs {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(15), 1 + rng.gen_range(15));
+            let a = random_csr(rng, nr, nc, 0.25);
+            let tt = a.transpose().transpose();
+            assert_eq!(a, tt);
+        });
+    }
+
+    #[test]
+    fn spmv_random_matches_dense() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(30), 1 + rng.gen_range(30));
+            let a = random_csr(rng, nr, nc, 0.2);
+            let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32_range(-2.0, 2.0)).collect();
+            let mut y = vec![0.0; a.nrows];
+            a.spmv(&x, &mut y);
+            let yd = dense_spmv(&a, &x);
+            for (u, v) in y.iter().zip(yd.iter()) {
+                assert!((u - v).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_rowmajor_matches_repeated_spmv() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(12), 1 + rng.gen_range(12));
+            let a = random_csr(rng, nr, nc, 0.3);
+            let b = 1 + rng.gen_range(5);
+            // build row-major X (ncols x b)
+            let x: Vec<f32> = (0..a.ncols * b).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let mut y = vec![0.0; a.nrows * b];
+            a.spmm_rowmajor(&x, &mut y, b);
+            for col in 0..b {
+                let xcol: Vec<f32> = (0..a.ncols).map(|r| x[r * b + col]).collect();
+                let mut ycol = vec![0.0; a.nrows];
+                a.spmv(&xcol, &mut ycol);
+                for r in 0..a.nrows {
+                    assert!((y[r * b + col] - ycol[r]).abs() < 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn row_block_extraction() {
+        let a = small();
+        let blk = a.row_block(&[1]);
+        assert_eq!(blk.nrows, 1);
+        assert_eq!(blk.ncols, 3);
+        assert_eq!(blk.row(0), (&[1u32][..], &[3.0f32][..]));
+    }
+
+    #[test]
+    fn cols_used_sorted_distinct() {
+        let a = small();
+        assert_eq!(a.cols_used(), vec![0, 1, 2]);
+        let blk = a.row_block(&[1]);
+        assert_eq!(blk.cols_used(), vec![1]);
+    }
+
+    #[test]
+    fn sgd_update_touches_only_nonzeros() {
+        let mut a = small();
+        let before_nnz = a.nnz();
+        a.sgd_update(&[1.0, 1.0], &[1.0, 1.0, 1.0], 0.5);
+        assert_eq!(a.nnz(), before_nnz);
+        // W(0,0) = 1 - 0.5*1*1 = 0.5 ; W(0,2) = 2 - 0.5 = 1.5 ; W(1,1) = 2.5
+        assert_eq!(a.row(0).1, &[0.5, 1.5]);
+        assert_eq!(a.row(1).1, &[2.5]);
+    }
+
+    #[test]
+    fn validate_accepts_good_rejects_bad() {
+        let a = small();
+        assert!(a.validate().is_ok());
+        let mut bad = a.clone();
+        bad.indices[0] = 99; // out of bounds (also breaks sort)
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn row_partition_reassembles() {
+        // splitting rows across blocks loses nothing: spmv(full) == concat of block spmvs
+        prop::check(|rng| {
+            let (nr, nc) = (2 + rng.gen_range(20), 1 + rng.gen_range(20));
+            let a = random_csr(rng, nr, nc, 0.3);
+            let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let perm = rng.permutation(a.nrows);
+            let cut = rng.gen_range(a.nrows);
+            let (r1, r2) = perm.split_at(cut.max(1).min(a.nrows - 1));
+            let b1 = a.row_block(r1);
+            let b2 = a.row_block(r2);
+            let mut y = vec![0.0; a.nrows];
+            a.spmv(&x, &mut y);
+            let mut y1 = vec![0.0; b1.nrows];
+            b1.spmv(&x, &mut y1);
+            let mut y2 = vec![0.0; b2.nrows];
+            b2.spmv(&x, &mut y2);
+            for (i, &r) in r1.iter().enumerate() {
+                assert!((y[r as usize] - y1[i]).abs() < 1e-5);
+            }
+            for (i, &r) in r2.iter().enumerate() {
+                assert!((y[r as usize] - y2[i]).abs() < 1e-5);
+            }
+        });
+    }
+}

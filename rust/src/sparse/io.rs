@@ -1,0 +1,87 @@
+//! Sparse matrix / network text I/O in the Graph Challenge TSV style:
+//! one `row \t col \t value` triple per line, 1-based indices.
+
+use super::coo::Coo;
+use super::csr::Csr;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write a CSR matrix as 1-based TSV triples.
+pub fn write_tsv(m: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    for r in 0..m.nrows {
+        let (cols, vals) = m.row(r);
+        for (c, v) in cols.iter().zip(vals.iter()) {
+            writeln!(w, "{}\t{}\t{}", r + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read 1-based TSV triples into a CSR with given dimensions.
+pub fn read_tsv(path: &Path, nrows: usize, ncols: usize) -> Result<Csr> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = std::io::BufReader::new(f);
+    let mut coo = Coo::new(nrows, ncols);
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_ascii_whitespace();
+        let (r, c, v) = match (it.next(), it.next(), it.next()) {
+            (Some(r), Some(c), Some(v)) => (r, c, v),
+            _ => bail!("{path:?}:{}: malformed triple", lineno + 1),
+        };
+        let r: usize = r.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let c: usize = c.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let v: f32 = v.parse().with_context(|| format!("line {}", lineno + 1))?;
+        if r == 0 || c == 0 || r > nrows || c > ncols {
+            bail!("{path:?}:{}: index out of bounds ({r},{c})", lineno + 1);
+        }
+        coo.push(r - 1, c - 1, v);
+    }
+    Ok(coo.to_csr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 2, 1.5);
+        coo.push(2, 0, -2.0);
+        let m = coo.to_csr();
+        let dir = std::env::temp_dir().join("spdnn_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.tsv");
+        write_tsv(&m, &p).unwrap();
+        let m2 = read_tsv(&p, 3, 3).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let dir = std::env::temp_dir().join("spdnn_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.tsv");
+        std::fs::write(&p, "5\t1\t1.0\n").unwrap();
+        assert!(read_tsv(&p, 3, 3).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("spdnn_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.tsv");
+        std::fs::write(&p, "# header\n\n1\t1\t3.0\n").unwrap();
+        let m = read_tsv(&p, 2, 2).unwrap();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row(0), (&[0u32][..], &[3.0f32][..]));
+    }
+}

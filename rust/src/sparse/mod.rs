@@ -1,0 +1,13 @@
+//! Sparse matrix substrate: COO builder, CSR kernels, text I/O.
+//!
+//! Everything the paper's SpMV-based SGD needs: `spmv` (Alg. 2 line 6),
+//! `spmv_add` (line 9), `spmv_t_add` (Alg. 3 line 4), `sgd_update`
+//! (Alg. 3 lines 8–9), `spmm_rowmajor` (§5.1 batched inference),
+//! row-block extraction (the rank-local view), transposition.
+
+pub mod coo;
+pub mod csr;
+pub mod io;
+
+pub use coo::Coo;
+pub use csr::Csr;

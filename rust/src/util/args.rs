@@ -1,0 +1,162 @@
+//! Minimal CLI argument parser (no external deps).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.insert(k.to_string());
+                } else {
+                    // lookahead: `--key value` unless next is another flag
+                    let key = rest.to_string();
+                    out.present.insert(key.clone());
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(key, v);
+                        }
+                        _ => {
+                            out.flags.insert(key, "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.contains(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--parts 2,4,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--n", "1024", "--layers=120"]);
+        assert_eq!(a.get_usize("n", 0), 1024);
+        assert_eq!(a.get_usize("layers", 0), 120);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        // subcommand-first convention: `spdnn train --full --verbose`
+        let a = parse(&["train", "--full", "--verbose"]);
+        assert!(a.has("full"));
+        assert!(a.get_bool("full", false));
+        assert!(!a.get_bool("absent", false));
+        assert_eq!(a.positionals, vec!["train"]);
+        // a flag directly followed by a non-flag consumes it as its value
+        let b = parse(&["--verbose", "train"]);
+        assert_eq!(b.get_str("verbose", ""), "train");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "7"]);
+        assert!(a.get_bool("a", false));
+        assert_eq!(a.get_usize("b", 0), 7);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--parts", "2,4,8"]);
+        assert_eq!(a.get_usize_list("parts", &[]), vec![2, 4, 8]);
+        assert_eq!(a.get_usize_list("missing", &[1]), vec![1]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_str("engine", "native"), "native");
+        assert_eq!(a.get_f64("eps", 0.01), 0.01);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // values never start with "--", a single dash is fine
+        let a = parse(&["--lr", "-0.5"]);
+        assert_eq!(a.get_f64("lr", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, stats, timers, CLI args, mini-prop.
+
+pub mod args;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use args::Args;
+pub use rng::Rng;
+pub use timer::{PhaseTimer, Stopwatch};

@@ -1,0 +1,71 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `check(cases, |rng| { ... })` runs the closure for `cases` independent
+//! seeds; a panic inside the closure is re-raised with the failing seed so
+//! the case can be replayed deterministically with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` deterministic seeds derived from `base_seed`.
+/// On failure, panics with the failing seed embedded in the message.
+pub fn check_seeded(base_seed: u64, cases: usize, f: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    for i in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {i} (replay seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Default 64-case run with a fixed base seed.
+pub fn check(f: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    check_seeded(0xD15EA5E, 64, f);
+}
+
+/// Replay a single failing case.
+pub fn replay(seed: u64, f: impl Fn(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(|rng| {
+            let a = rng.gen_range(100);
+            assert!(a < 100);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check_seeded(1, 16, |rng| {
+                assert!(rng.gen_range(10) < 100); // always true
+                assert!(rng.gen_range(2) == 0 || rng.gen_range(2) == 0 || false || flaky());
+            });
+        });
+        // flaky() always false => some case fails; message carries "replay seed"
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "got: {msg}");
+    }
+
+    fn flaky() -> bool {
+        false
+    }
+}

@@ -1,0 +1,105 @@
+//! Summary statistics used by the experiment tables (avg/max/imbalance).
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Maximum of a slice (0.0 for empty).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Minimum of a slice (0.0 for empty).
+pub fn min(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Load imbalance = max / mean (1.0 means perfectly balanced).
+/// This is the "imb" column of the paper's Table 1.
+pub fn imbalance(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 1.0;
+    }
+    max(xs) / m
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100), nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Convenience: (mean, max, imbalance) of integer counters.
+pub fn summarize_u64(xs: &[u64]) -> (f64, f64, f64) {
+    let f: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    (mean(&f), max(&f), imbalance(&f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_max_basic() {
+        let xs = [1.0, 2.0, 3.0, 6.0];
+        assert!((mean(&xs) - 3.0).abs() < 1e-12);
+        assert_eq!(max(&xs), 6.0);
+        assert_eq!(min(&xs), 1.0);
+    }
+
+    #[test]
+    fn imbalance_balanced_is_one() {
+        let xs = [4.0, 4.0, 4.0];
+        assert!((imbalance(&xs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_skewed() {
+        let xs = [1.0, 1.0, 4.0];
+        assert!((imbalance(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_median() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn stddev_constant_zero() {
+        assert_eq!(std_dev(&[2.0, 2.0, 2.0]), 0.0);
+        assert!((std_dev(&[1.0, 3.0]) - 1.0).abs() < 1e-12);
+    }
+}

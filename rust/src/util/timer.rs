@@ -1,0 +1,130 @@
+//! Phase timers for the breakdown experiments (Fig. 5: SpMV / Updt / Comm).
+
+use std::time::{Duration, Instant};
+
+/// Accumulates wall-clock time into named phases.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    acc: std::collections::BTreeMap<&'static str, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    /// Add an externally measured duration to `phase`.
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.acc.entry(phase).or_default() += d;
+    }
+
+    /// Add seconds (used by the replay simulator's modeled times).
+    pub fn add_secs(&mut self, phase: &'static str, secs: f64) {
+        self.add(phase, Duration::from_secs_f64(secs.max(0.0)));
+    }
+
+    pub fn get(&self, phase: &str) -> Duration {
+        self.acc.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn get_secs(&self, phase: &str) -> f64 {
+        self.get(phase).as_secs_f64()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.values().sum()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// Merge another timer into this one (used when reducing per-rank timers).
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in other.acc.iter() {
+            *self.acc.entry(k).or_default() += *v;
+        }
+    }
+
+    /// Keep, per phase, the max of self and other (per-layer critical path).
+    pub fn merge_max(&mut self, other: &PhaseTimer) {
+        for (k, v) in other.acc.iter() {
+            let e = self.acc.entry(k).or_default();
+            if *v > *e {
+                *e = *v;
+            }
+        }
+    }
+}
+
+/// Simple stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut t = PhaseTimer::new();
+        t.add_secs("spmv", 1.0);
+        t.add_secs("spmv", 0.5);
+        t.add_secs("comm", 2.0);
+        assert!((t.get_secs("spmv") - 1.5).abs() < 1e-9);
+        assert!((t.get_secs("comm") - 2.0).abs() < 1e-9);
+        assert!((t.total().as_secs_f64() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_sums_and_merge_max_maxes() {
+        let mut a = PhaseTimer::new();
+        a.add_secs("x", 1.0);
+        let mut b = PhaseTimer::new();
+        b.add_secs("x", 2.0);
+        b.add_secs("y", 3.0);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert!((m.get_secs("x") - 3.0).abs() < 1e-9);
+        assert!((m.get_secs("y") - 3.0).abs() < 1e-9);
+        a.merge_max(&b);
+        assert!((a.get_secs("x") - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_closure_runs() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t.get("work") > Duration::ZERO);
+    }
+
+    #[test]
+    fn negative_secs_clamped() {
+        let mut t = PhaseTimer::new();
+        t.add_secs("x", -1.0);
+        assert_eq!(t.get_secs("x"), 0.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: the distributed coordinator (any P, any partition) is
+//! numerically equivalent to the serial Algorithm-1 oracle — the paper's
+//! correctness premise for all of Section 4.
+
+use spdnn::dnn::{sgd_serial, Activation, SparseNet};
+use spdnn::coordinator::sgd::{infer_distributed, train_distributed};
+use spdnn::partition::phases::{hypergraph_partition, PhaseConfig};
+use spdnn::partition::random::random_partition;
+use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::util::Rng;
+
+fn net(n: usize, layers: usize, seed: u64) -> SparseNet {
+    let mut cfg = RadixNetConfig::graph_challenge(n, layers).unwrap();
+    cfg.seed = seed;
+    generate(&cfg)
+}
+
+fn dataset(count: usize, dim: usize, out: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(seed);
+    let inputs = (0..count)
+        .map(|_| {
+            (0..dim)
+                .map(|_| if rng.gen_bool(0.25) { 1.0 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let targets = (0..count)
+        .map(|i| {
+            let mut y = vec![0f32; out];
+            y[i % 10.min(out)] = 1.0;
+            y
+        })
+        .collect();
+    (inputs, targets)
+}
+
+fn assert_nets_close(a: &SparseNet, b: &SparseNet, tol: f32, label: &str) {
+    for k in 0..a.depth() {
+        for (x, y) in a.layers[k].vals.iter().zip(b.layers[k].vals.iter()) {
+            assert!((x - y).abs() < tol, "{label}: layer {k} weight {x} vs {y}");
+        }
+        for (x, y) in a.biases[k].iter().zip(b.biases[k].iter()) {
+            assert!((x - y).abs() < tol, "{label}: layer {k} bias {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn equivalence_on_deeper_radixnet_many_ranks() {
+    let net = net(64, 6, 11);
+    let (inputs, targets) = dataset(5, 64, 64, 3);
+    let mut serial = net.clone();
+    let serial_losses = sgd_serial::train(&mut serial, &inputs, &targets, 0.2, 3);
+
+    for &p in &[2usize, 5, 8, 16] {
+        let part = random_partition(&net.layers, p, 100 + p as u64);
+        let run = train_distributed(&net, &part, &inputs, &targets, 0.2, 3);
+        for (i, (a, b)) in run.losses.iter().zip(serial_losses.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-3,
+                "P={p} step {i}: loss {a} vs serial {b}"
+            );
+        }
+        assert_nets_close(&run.net, &serial, 2e-3, &format!("P={p}"));
+    }
+}
+
+#[test]
+fn equivalence_under_hypergraph_partition_256() {
+    let net = net(256, 5, 12);
+    let (inputs, targets) = dataset(3, 256, 256, 4);
+    let part = hypergraph_partition(&net.layers, &PhaseConfig::new(8));
+    let run = train_distributed(&net, &part, &inputs, &targets, 0.4, 1);
+    let mut serial = net.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.4, 1);
+    for (a, b) in run.losses.iter().zip(sl.iter()) {
+        assert!((a - b).abs() < 2e-3);
+    }
+    assert_nets_close(&run.net, &serial, 2e-3, "hypergraph P=8");
+}
+
+#[test]
+fn inference_parity_large_batch() {
+    let net = net(64, 6, 13);
+    let b = 32;
+    let mut rng = Rng::new(7);
+    let x0: Vec<f32> = (0..64 * b)
+        .map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 })
+        .collect();
+    let serial = spdnn::dnn::inference::infer_batch(&net, &x0, b);
+    for &p in &[3usize, 8] {
+        let part = hypergraph_partition(&net.layers, &PhaseConfig::new(p));
+        let (out, sent) = infer_distributed(&net, &part, &x0, b);
+        for (a, s) in out.iter().zip(serial.iter()) {
+            assert!((a - s).abs() < 1e-4, "P={p}");
+        }
+        // batched comm: every word count is a multiple of the batch width
+        for (words, _) in &sent {
+            assert_eq!(words % b as u64, 0, "P={p}");
+        }
+    }
+}
+
+#[test]
+fn permuted_radixnet_still_equivalent() {
+    // inter-layer permutations change the comm pattern drastically; the
+    // schedule must still be exact.
+    let mut cfg = RadixNetConfig::graph_challenge(64, 4).unwrap();
+    cfg.permute = true;
+    cfg.seed = 21;
+    let net = spdnn::radixnet::generate(&cfg);
+    let (inputs, targets) = dataset(4, 64, 64, 9);
+    let part = random_partition(&net.layers, 6, 2);
+    let run = train_distributed(&net, &part, &inputs, &targets, 0.3, 2);
+    let mut serial = net.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.3, 2);
+    for (a, b) in run.losses.iter().zip(sl.iter()) {
+        assert!((a - b).abs() < 2e-3);
+    }
+    assert_nets_close(&run.net, &serial, 2e-3, "permuted");
+}
+
+#[test]
+fn activation_relu_equivalence() {
+    // ReLU subgradients are sharp; exercise the non-sigmoid path too.
+    let mut base = net(64, 3, 31);
+    base.activation = Activation::Relu;
+    // shrink weights so activations stay bounded under ReLU
+    for w in &mut base.layers {
+        for v in &mut w.vals {
+            *v *= 0.2;
+        }
+    }
+    let (inputs, targets) = dataset(3, 64, 64, 5);
+    let part = random_partition(&base.layers, 4, 8);
+    let run = train_distributed(&base, &part, &inputs, &targets, 0.05, 1);
+    let mut serial = base.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.05, 1);
+    for (a, b) in run.losses.iter().zip(sl.iter()) {
+        assert!((a - b).abs() < 2e-3);
+    }
+    assert_nets_close(&run.net, &serial, 2e-3, "relu");
+}

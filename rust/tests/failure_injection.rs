@@ -1,0 +1,166 @@
+//! Integration: failure handling and degenerate inputs — invalid
+//! partitions are rejected, extreme partitions still run correctly, and
+//! malformed structures are caught by validation rather than corrupting a
+//! run.
+
+use spdnn::coordinator::sgd::train_distributed;
+use spdnn::dnn::{sgd_serial, SparseNet};
+use spdnn::partition::plan::CommPlan;
+use spdnn::partition::random::random_partition;
+use spdnn::partition::DnnPartition;
+use spdnn::radixnet::{generate, generate_structure, RadixNetConfig};
+use spdnn::sparse::Csr;
+use spdnn::util::Rng;
+
+fn net64() -> SparseNet {
+    generate(&RadixNetConfig::graph_challenge(64, 3).unwrap())
+}
+
+fn data(n: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(1);
+    (
+        (0..n)
+            .map(|_| (0..64).map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 }).collect())
+            .collect(),
+        (0..n)
+            .map(|i| {
+                let mut y = vec![0f32; 64];
+                y[i % 10] = 1.0;
+                y
+            })
+            .collect(),
+    )
+}
+
+#[test]
+#[should_panic(expected = "invalid partition")]
+fn wrong_layer_count_rejected() {
+    let net = net64();
+    let bad = DnnPartition {
+        nparts: 2,
+        input_parts: vec![0; 64],
+        layer_parts: vec![vec![0; 64]; 2], // net has 3 layers
+    };
+    let (inputs, targets) = data(1);
+    let _ = train_distributed(&net, &bad, &inputs, &targets, 0.1, 1);
+}
+
+#[test]
+#[should_panic(expected = "invalid partition")]
+fn out_of_range_rank_rejected() {
+    let net = net64();
+    let mut part = random_partition(&net.layers, 2, 1);
+    part.layer_parts[1][5] = 7; // rank 7 with nparts=2
+    let (inputs, targets) = data(1);
+    let _ = train_distributed(&net, &part, &inputs, &targets, 0.1, 1);
+}
+
+#[test]
+fn all_rows_on_one_rank_still_correct() {
+    // Degenerate partition: rank 0 owns everything, rank 1 owns only input
+    // entries → communication happens only at layer 0, and results must
+    // still match serial.
+    let net = net64();
+    let part = DnnPartition {
+        nparts: 2,
+        input_parts: (0..64).map(|j| (j % 2) as u32).collect(),
+        layer_parts: vec![vec![0u32; 64]; 3],
+    };
+    let (inputs, targets) = data(3);
+    let run = train_distributed(&net, &part, &inputs, &targets, 0.2, 1);
+    let mut serial = net.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.2, 1);
+    for (a, b) in run.losses.iter().zip(sl.iter()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+    // plan says only layer-0 forward transfers exist (bwd mirrors fwd)
+    let plan = CommPlan::build(&net.layers, &part);
+    assert!(plan.layers[0].message_count() > 0);
+    assert_eq!(plan.layers[1].message_count(), 0);
+    assert_eq!(plan.layers[2].message_count(), 0);
+}
+
+#[test]
+fn empty_rank_is_tolerated() {
+    // nparts=4 but rows dealt only to ranks 0..3 minus rank 3 for layers;
+    // rank 3 owns nothing anywhere and must simply idle without deadlock.
+    let net = net64();
+    let part = DnnPartition {
+        nparts: 4,
+        input_parts: (0..64).map(|j| (j % 3) as u32).collect(),
+        layer_parts: (0..3)
+            .map(|_| (0..64).map(|r| (r % 3) as u32).collect())
+            .collect(),
+    };
+    let (inputs, targets) = data(2);
+    let run = train_distributed(&net, &part, &inputs, &targets, 0.2, 1);
+    let mut serial = net.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.2, 1);
+    for (a, b) in run.losses.iter().zip(sl.iter()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn structure_with_empty_rows_and_columns() {
+    // A layer with an unused neuron (empty row) and an unread activation
+    // (empty column) must flow through plan building and training.
+    let mut rng = Rng::new(5);
+    let mut layers: Vec<Csr> = Vec::new();
+    for _ in 0..2 {
+        let mut coo = spdnn::sparse::Coo::new(16, 16);
+        for r in 0..15 {
+            // row 15 left empty
+            for c in 0..15 {
+                // column 15 never referenced
+                if rng.gen_bool(0.3) {
+                    coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+                }
+            }
+            coo.push(r, r, 0.5); // keep connected
+        }
+        layers.push(coo.to_csr());
+    }
+    let net = SparseNet::new(layers, spdnn::dnn::Activation::Sigmoid);
+    let part = random_partition(&net.layers, 3, 2);
+    let inputs = vec![vec![1.0f32; 16]];
+    let targets = vec![vec![0.5f32; 16]];
+    let run = train_distributed(&net, &part, &inputs, &targets, 0.1, 1);
+    let mut serial = net.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.1, 1);
+    assert!((run.losses[0] - sl[0]).abs() < 1e-4);
+}
+
+#[test]
+fn csr_validation_rejects_corruption() {
+    let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 2).unwrap());
+    let mut bad = structure[0].clone();
+    bad.indices[0] = 9999;
+    assert!(bad.validate().is_err());
+    let mut bad2 = structure[0].clone();
+    bad2.indptr[1] = bad2.indptr[2] + 1;
+    assert!(bad2.validate().is_err());
+}
+
+#[test]
+fn plan_on_partition_with_unbalanced_inputs() {
+    // all input entries on one rank: layer-0 volume is maximal but exact
+    let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 2).unwrap());
+    let part = DnnPartition {
+        nparts: 4,
+        input_parts: vec![0u32; 64],
+        layer_parts: (0..2)
+            .map(|_| (0..64).map(|r| (r % 4) as u32).collect())
+            .collect(),
+    };
+    let plan = CommPlan::build(&structure, &part);
+    // rank 0 sends to ranks 1..3 in layer 0; others send nothing
+    let sends = plan.fwd_send_volume_per_rank();
+    assert!(sends[0] > 0);
+    let l0: u64 = plan.layers[0]
+        .transfers
+        .iter()
+        .filter(|t| t.from != 0)
+        .count() as u64;
+    assert_eq!(l0, 0, "only rank 0 owns inputs");
+}

@@ -1,0 +1,148 @@
+//! Integration: the partitioning pipeline on real RadiX-Net structures —
+//! validity, balance, the volume==cutsize identity, plan duality, and the
+//! headline H-beats-random property of Table 1.
+
+use spdnn::partition::metrics::PartitionMetrics;
+use spdnn::partition::phases::{build_phase_hypergraph, hypergraph_partition, PhaseConfig};
+use spdnn::partition::plan::CommPlan;
+use spdnn::partition::random::random_partition;
+use spdnn::radixnet::{generate_structure, RadixNetConfig};
+
+/// Debug builds (plain `cargo test`) shrink the instances ~4x so the
+/// unoptimized partitioner stays fast; release runs the full sizes.
+fn scale(n_rel: usize, n_dbg: usize) -> usize {
+    if cfg!(debug_assertions) {
+        n_dbg
+    } else {
+        n_rel
+    }
+}
+
+#[test]
+fn h_beats_random_across_processor_counts() {
+    let structure =
+        generate_structure(&RadixNetConfig::graph_challenge(1024, scale(12, 4)).unwrap());
+    for &p in &[4usize, 8, 16, 32] {
+        let h = hypergraph_partition(&structure, &PhaseConfig::new(p));
+        let r = random_partition(&structure, p, p as u64);
+        h.validate(&structure).unwrap();
+        let mh = PartitionMetrics::compute(&structure, &h);
+        let mr = PartitionMetrics::compute(&structure, &r);
+        assert!(
+            mh.avg_volume() < mr.avg_volume() * 0.75,
+            "P={p}: H avg volume {} not well below R {}",
+            mh.avg_volume(),
+            mr.avg_volume()
+        );
+        assert!(
+            mh.comp_imbalance() <= mr.comp_imbalance() + 0.1,
+            "P={p}: H imbalance {} vs R {}",
+            mh.comp_imbalance(),
+            mr.comp_imbalance()
+        );
+    }
+}
+
+#[test]
+fn volume_equals_total_cutsize_on_radixnet() {
+    // Eq. Vol(k) == connectivity-1 cutsize with cost 2, on the real
+    // benchmark structure with the real H partition.
+    let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 6).unwrap());
+    let part = hypergraph_partition(&structure, &PhaseConfig::new(8));
+    let plan = CommPlan::build(&structure, &part);
+    let mut total_cut = 0u64;
+    for (k, w) in structure.iter().enumerate() {
+        let prev: Vec<u32> = (0..w.ncols)
+            .map(|j| part.owner_of_activation(k, j))
+            .collect();
+        let hg = build_phase_hypergraph(w, Some(&prev));
+        let mut pv = vec![0u32; hg.nv];
+        for r in 0..w.nrows {
+            pv[r] = part.layer_parts[k][r];
+        }
+        for j in 0..w.ncols {
+            pv[w.nrows + j] = prev[j];
+        }
+        total_cut += hg.cutsize(&pv, part.nparts);
+    }
+    assert_eq!(total_cut, plan.total_volume());
+}
+
+#[test]
+fn plan_duality_fwd_recv_equals_bwd_send() {
+    // The mirror argument of §4.2: per rank, forward receives == backward
+    // sends, both in words and message counts (we verify on plan level).
+    let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 8).unwrap());
+    let part = random_partition(&structure, 16, 3);
+    let plan = CommPlan::build(&structure, &part);
+    // by construction the backward plan is the transpose; verify the
+    // transpose is consistent: total send == total recv, per layer
+    for (k, l) in plan.layers.iter().enumerate() {
+        let sends: u64 = (0..16).map(|r| l.send_of[r].len() as u64).sum();
+        let recvs: u64 = (0..16).map(|r| l.recv_of[r].len() as u64).sum();
+        assert_eq!(sends, recvs, "layer {k}");
+        assert_eq!(sends, l.transfers.len() as u64);
+        for t in &l.transfers {
+            assert_ne!(t.from, t.to);
+        }
+    }
+}
+
+#[test]
+fn balance_honored_at_paper_epsilon() {
+    let structure = generate_structure(&RadixNetConfig::graph_challenge(1024, 6).unwrap());
+    let mut cfg = PhaseConfig::new(8);
+    cfg.epsilon = 0.01;
+    let part = hypergraph_partition(&structure, &cfg);
+    let m = PartitionMetrics::compute(&structure, &part);
+    // recursive bisection can slightly exceed ε per level; the paper's
+    // observed aggregate for H-SGD is 1.01–1.05 — require ≤ 1.10
+    assert!(
+        m.comp_imbalance() <= 1.10,
+        "imbalance {}",
+        m.comp_imbalance()
+    );
+}
+
+#[test]
+fn fixed_vertex_chaining_reduces_inter_layer_traffic() {
+    // Ablation of the paper's key idea: partitioning each layer
+    // independently (no fixed vertices) must communicate more than the
+    // multi-phase chained model.
+    let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 8).unwrap());
+    let chained = hypergraph_partition(&structure, &PhaseConfig::new(8));
+    // independent: partition each layer with no knowledge of the previous
+    let mut layer_parts = Vec::new();
+    for (k, w) in structure.iter().enumerate() {
+        let hg = build_phase_hypergraph(w, None);
+        let mut pcfg = spdnn::hypergraph::PartitionConfig::new(8);
+        pcfg.seed = 77 + k as u64;
+        let parts = spdnn::hypergraph::partition(&hg, &pcfg);
+        layer_parts.push(parts[..w.nrows].to_vec());
+    }
+    let independent = spdnn::partition::DnnPartition {
+        nparts: 8,
+        input_parts: chained.input_parts.clone(),
+        layer_parts,
+    };
+    let mc = PartitionMetrics::compute(&structure, &chained);
+    let mi = PartitionMetrics::compute(&structure, &independent);
+    assert!(
+        mc.total_volume() < mi.total_volume(),
+        "chained {} not below independent {}",
+        mc.total_volume(),
+        mi.total_volume()
+    );
+}
+
+#[test]
+fn partitioning_scales_to_bigger_configs() {
+    // smoke: N=1024 partitions in reasonable time and stays valid
+    let structure =
+        generate_structure(&RadixNetConfig::graph_challenge(1024, scale(24, 6)).unwrap());
+    let part = hypergraph_partition(&structure, &PhaseConfig::new(16));
+    part.validate(&structure).unwrap();
+    let m = PartitionMetrics::compute(&structure, &part);
+    assert!(m.comp_imbalance() < 1.2);
+    assert!(m.total_volume() > 0);
+}

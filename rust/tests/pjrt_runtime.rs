@@ -1,0 +1,133 @@
+//! Integration: the AOT round-trip — JAX/Pallas (L1+L2, build time) → HLO
+//! text → PJRT CPU client (L3 runtime) — produces the same numbers as the
+//! native Rust engine. Requires `make artifacts` (shapes 64x256 and 8x16).
+
+use spdnn::dnn::{Activation, SparseNet};
+use spdnn::partition::random::random_partition;
+use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::runtime::{artifacts_dir, PjrtLayerEngine};
+use spdnn::sparse::Coo;
+use spdnn::util::Rng;
+
+fn artifacts_present(m: usize, k: usize) -> bool {
+    artifacts_dir().join(spdnn::runtime::fwd_artifact(m, k)).is_file()
+}
+
+#[test]
+fn pjrt_forward_matches_native_small() {
+    if !artifacts_present(8, 16) {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let eng = PjrtLayerEngine::load(&artifacts_dir(), 8, 16, 16).expect("load artifacts");
+    let mut rng = Rng::new(1);
+    // random sparse block 5x16 (padded to 8 inside the engine)
+    let mut coo = Coo::new(5, 16);
+    for r in 0..5 {
+        for c in 0..16 {
+            if rng.gen_bool(0.3) {
+                coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+    }
+    let blk = coo.to_csr();
+    let x: Vec<f32> = (0..16).map(|_| rng.gen_f32()).collect();
+    let bias: Vec<f32> = (0..5).map(|_| rng.gen_f32_range(-0.5, 0.5)).collect();
+
+    let got = eng.forward(&blk, &x, &bias).expect("pjrt forward");
+
+    // native reference
+    let mut z = vec![0f32; 5];
+    blk.spmv(&x, &mut z);
+    for i in 0..5 {
+        z[i] += bias[i];
+    }
+    Activation::Sigmoid.apply(&mut z);
+    assert_eq!(got.len(), 5);
+    for (a, b) in got.iter().zip(z.iter()) {
+        assert!((a - b).abs() < 1e-5, "pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn pjrt_backward_matches_native() {
+    let eng = PjrtLayerEngine::load(&artifacts_dir(), 8, 16, 0).expect("load artifacts");
+    let mut rng = Rng::new(2);
+    let mut coo = Coo::new(8, 16);
+    for r in 0..8 {
+        for c in 0..16 {
+            if rng.gen_bool(0.4) {
+                coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+    }
+    let blk = coo.to_csr();
+    let delta: Vec<f32> = (0..8).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    let got = eng.backward(&blk, &delta).expect("pjrt backward");
+    let mut s = vec![0f32; 16];
+    blk.spmv_t_add(&delta, &mut s);
+    for (a, b) in got.iter().zip(s.iter()) {
+        assert!((a - b).abs() < 1e-5, "pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn pjrt_batched_forward_matches_native() {
+    let eng = PjrtLayerEngine::load(&artifacts_dir(), 8, 16, 16).expect("load artifacts");
+    let mut rng = Rng::new(3);
+    let mut coo = Coo::new(8, 16);
+    for r in 0..8 {
+        for c in 0..16 {
+            if rng.gen_bool(0.4) {
+                coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+    }
+    let blk = coo.to_csr();
+    let b = 16usize;
+    let x: Vec<f32> = (0..16 * b).map(|_| rng.gen_f32()).collect();
+    let bias: Vec<f32> = (0..8).map(|_| rng.gen_f32_range(-0.2, 0.2)).collect();
+    let got = eng.forward_batch(&blk, &x, &bias).expect("pjrt batch fwd");
+
+    let mut z = vec![0f32; 8 * b];
+    blk.spmm_rowmajor(&x, &mut z, b);
+    for r in 0..8 {
+        let row = &mut z[r * b..(r + 1) * b];
+        for v in row.iter_mut() {
+            *v += bias[r];
+        }
+        Activation::Sigmoid.apply(row);
+    }
+    for (a, bb) in got.iter().zip(z.iter()) {
+        assert!((a - bb).abs() < 1e-5);
+    }
+}
+
+/// Whole-layer parity on a realistic RadiX-Net block: one rank's serving
+/// path (P=4 over N=256) through the 64x256 artifact.
+#[test]
+fn pjrt_serves_radixnet_rank_block() {
+    if !artifacts_present(64, 256) {
+        panic!("artifacts missing — run `make artifacts` (shapes must include 64x256)");
+    }
+    let net: SparseNet = generate(&RadixNetConfig::graph_challenge(256, 4).unwrap());
+    let part = random_partition(&net.layers, 4, 9);
+    let eng = PjrtLayerEngine::load(&artifacts_dir(), 64, 256, 16).expect("load");
+    let mut rng = Rng::new(4);
+    let x: Vec<f32> = (0..256).map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 }).collect();
+
+    for rank in 0..4u32 {
+        let rows = part.rows_of(0, rank);
+        let blk = net.layers[0].row_block(&rows);
+        let bias: Vec<f32> = rows.iter().map(|&r| net.biases[0][r as usize]).collect();
+        let got = eng.forward(&blk, &x, &bias).unwrap();
+        let mut z = vec![0f32; blk.nrows];
+        blk.spmv(&x, &mut z);
+        for i in 0..blk.nrows {
+            z[i] += bias[i];
+        }
+        Activation::Sigmoid.apply(&mut z);
+        for (a, b) in got.iter().zip(z.iter()) {
+            assert!((a - b).abs() < 1e-5, "rank {rank}");
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Property tests on coordinator invariants: routing (plan ↔ live
+//! counters), batching (SpMM ≡ per-column SpMV; minibatch b=1 ≡ per-sample
+//! step), and state (merge reconstructs exactly what ranks hold; serial
+//! equivalence under randomized nets, partitions, and rank counts).
+
+use spdnn::coordinator::minibatch::train_distributed_minibatch;
+use spdnn::coordinator::sgd::{infer_distributed, run_with_plan, train_distributed};
+use spdnn::dnn::{sgd_serial, Activation, SparseNet};
+use spdnn::partition::plan::CommPlan;
+use spdnn::partition::random::random_partition;
+use spdnn::sparse::Coo;
+use spdnn::util::{prop, Rng};
+
+/// Random sparse net with every neuron connected (gradients flow).
+fn random_net(rng: &mut Rng, n: usize, layers: usize, p: f64) -> SparseNet {
+    let mut ws = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let mut any = false;
+            for c in 0..n {
+                if rng.gen_bool(p) {
+                    coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+                    any = true;
+                }
+            }
+            if !any {
+                coo.push(r, rng.gen_range(n), rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+        ws.push(coo.to_csr());
+    }
+    SparseNet::new(ws, Activation::Sigmoid)
+}
+
+fn random_data(rng: &mut Rng, count: usize, n: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let inputs = (0..count)
+        .map(|_| (0..n).map(|_| rng.gen_f32()).collect())
+        .collect();
+    let targets = (0..count)
+        .map(|_| (0..n).map(|_| if rng.gen_bool(0.2) { 1.0 } else { 0.0 }).collect())
+        .collect();
+    (inputs, targets)
+}
+
+#[test]
+fn routing_live_counters_always_equal_plan() {
+    prop::check_seeded(0xC0DE, 12, |rng| {
+        let n = 8 + rng.gen_range(24);
+        let layers = 2 + rng.gen_range(3);
+        let nparts = 2 + rng.gen_range(5);
+        let net = random_net(rng, n, layers, 0.15);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let plan = CommPlan::build(&net.layers, &part);
+        let (inputs, targets) = random_data(rng, 2, n);
+        let run = run_with_plan(&net, &part, &plan, &inputs, &targets, 0.1, 1);
+        let fs = plan.fwd_send_volume_per_rank();
+        let fr = plan.fwd_recv_volume_per_rank();
+        let ms = plan.fwd_send_msgs_per_rank();
+        let mr = plan.fwd_recv_msgs_per_rank();
+        for r in 0..nparts {
+            assert_eq!(run.sent[r].0, 2 * (fs[r] + fr[r]), "rank {r} words");
+            assert_eq!(run.sent[r].1, 2 * (ms[r] + mr[r]), "rank {r} msgs");
+        }
+    });
+}
+
+#[test]
+fn state_distributed_equals_serial_randomized() {
+    prop::check_seeded(0x5EED5, 10, |rng| {
+        let n = 8 + rng.gen_range(16);
+        let layers = 2 + rng.gen_range(3);
+        let nparts = 2 + rng.gen_range(6);
+        let net = random_net(rng, n, layers, 0.2);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let (inputs, targets) = random_data(rng, 3, n);
+        let run = train_distributed(&net, &part, &inputs, &targets, 0.25, 1);
+        let mut serial = net.clone();
+        let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.25, 1);
+        for (a, b) in run.losses.iter().zip(sl.iter()) {
+            assert!((a - b).abs() < 1e-3, "loss {a} vs {b}");
+        }
+        for k in 0..net.depth() {
+            for (a, b) in run.net.layers[k]
+                .vals
+                .iter()
+                .zip(serial.layers[k].vals.iter())
+            {
+                assert!((a - b).abs() < 1e-3, "layer {k}");
+            }
+        }
+    });
+}
+
+#[test]
+fn batching_inference_equals_serial_randomized() {
+    prop::check_seeded(0xBA7C4, 10, |rng| {
+        let n = 8 + rng.gen_range(16);
+        let layers = 2 + rng.gen_range(3);
+        let nparts = 2 + rng.gen_range(4);
+        let b = 1 + rng.gen_range(6);
+        let net = random_net(rng, n, layers, 0.2);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let x0: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+        let serial = spdnn::dnn::inference::infer_batch(&net, &x0, b);
+        let (out, _) = infer_distributed(&net, &part, &x0, b);
+        for (a, s) in out.iter().zip(serial.iter()) {
+            assert!((a - s).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn batching_minibatch_b1_equals_per_sample_randomized() {
+    prop::check_seeded(0xB1, 8, |rng| {
+        let n = 8 + rng.gen_range(12);
+        let layers = 2 + rng.gen_range(2);
+        let nparts = 2 + rng.gen_range(3);
+        let net = random_net(rng, n, layers, 0.25);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let (inputs, targets) = random_data(rng, 3, n);
+        let a = train_distributed_minibatch(&net, &part, &inputs, &targets, 1, 0.2, 1);
+        let b = train_distributed(&net, &part, &inputs, &targets, 0.2, 1);
+        for (x, y) in a.losses.iter().zip(b.losses.iter()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        for k in 0..net.depth() {
+            for (u, v) in a.net.layers[k].vals.iter().zip(b.net.layers[k].vals.iter()) {
+                assert!((u - v).abs() < 1e-5);
+            }
+        }
+    });
+}
+
+#[test]
+fn state_merge_preserves_untouched_weights() {
+    // training with eta = 0 must leave the merged model exactly equal to
+    // the input model (merge writes back precisely what ranks hold).
+    prop::check_seeded(0xE7A0, 8, |rng| {
+        let n = 8 + rng.gen_range(12);
+        let net = random_net(rng, n, 2, 0.3);
+        let nparts = 2 + rng.gen_range(4);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let (inputs, targets) = random_data(rng, 2, n);
+        let run = train_distributed(&net, &part, &inputs, &targets, 0.0, 1);
+        for k in 0..net.depth() {
+            assert_eq!(run.net.layers[k].vals, net.layers[k].vals, "layer {k}");
+            assert_eq!(run.net.biases[k], net.biases[k]);
+        }
+    });
+}
