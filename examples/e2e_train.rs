@@ -15,13 +15,11 @@ use spdnn::comm::netmodel::ComputeModel;
 use spdnn::coordinator::replay::{replay, ReplayConfig};
 use spdnn::coordinator::sgd::train_distributed;
 use spdnn::data::synthetic_mnist;
-use spdnn::dnn::Activation;
 use spdnn::partition::metrics::PartitionMetrics;
 use spdnn::partition::phases::{hypergraph_partition, PhaseConfig};
 use spdnn::partition::random::random_partition;
 use spdnn::partition::CommPlan;
 use spdnn::radixnet::{generate, RadixNetConfig};
-use spdnn::runtime::{artifacts_dir, PjrtLayerEngine};
 use spdnn::util::Stopwatch;
 
 fn main() {
@@ -104,6 +102,16 @@ fn main() {
     }
 
     // ---- 6. PJRT parity: the AOT JAX/Pallas path serves a rank block -----
+    pjrt_parity();
+
+    println!("[e2e] OK");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_parity() {
+    use spdnn::dnn::Activation;
+    use spdnn::runtime::{artifacts_dir, PjrtLayerEngine};
+
     let dir = artifacts_dir();
     if dir.join(spdnn::runtime::fwd_artifact(64, 256)).is_file() {
         let small = generate(&RadixNetConfig::graph_challenge(256, 2).expect("cfg"));
@@ -130,6 +138,12 @@ fn main() {
     } else {
         println!("[e2e] PJRT artifacts not found — run `make artifacts` for the full check");
     }
+}
 
-    println!("[e2e] OK");
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_parity() {
+    println!(
+        "[e2e] PJRT feature disabled — vendor the `xla` crate into Cargo.toml and build \
+         with `--features pjrt` for the artifact parity check"
+    );
 }

@@ -1,101 +1,79 @@
-//! Inference serving through the PJRT runtime — the three-layer
-//! composition on the request path.
+//! Inference serving on the threaded rank-parallel engine — the
+//! throughput-oriented request path.
 //!
-//! A minimal request loop: batches of synthetic MNIST images arrive, each
-//! rank-0-style worker pushes its layer blocks through the **AOT-compiled
-//! JAX/Pallas artifacts** (HLO text → PJRT CPU executable; Python is not
-//! running), and latency/throughput are reported per batch. A native-CSR
-//! pass validates every batch bit-for-bit (≤1e-5).
+//! A minimal request loop: the network is carved once into contiguous
+//! nnz-balanced row blocks with a precomputed communication plan, then
+//! each arriving batch of synthetic MNIST images runs the batched fused
+//! SpMM (`infer_with_plan`) on one OS thread per rank. Every batch is
+//! validated against the serial engine (≤1e-5) and latency/throughput are
+//! reported per batch and aggregate.
 //!
-//! Requires `make artifacts` (shapes must include 64x256, batch 16).
+//! Run: `cargo run --release --example inference_serving -- \
+//!        [--requests 8] [--ranks 4] [--batch 64]`
 //!
-//! Run: `cargo run --release --example inference_serving -- [--requests 8]`
+//! (The PJRT/AOT serving variant lives behind the `pjrt` feature; see
+//! `rust/tests/pjrt_runtime.rs`.)
 
+use spdnn::coordinator::sgd::infer_with_plan;
 use spdnn::data::synthetic_mnist;
-use spdnn::dnn::Activation;
-use spdnn::partition::random::random_partition;
+use spdnn::dnn::inference::{classify_batch, infer_batch};
+use spdnn::partition::{contiguous_partition, CommPlan};
 use spdnn::radixnet::{generate, RadixNetConfig};
-use spdnn::runtime::{artifacts_dir, PjrtLayerEngine};
 use spdnn::util::{Args, Stopwatch};
 
 fn main() {
     let args = Args::from_env();
     let requests = args.get_usize("requests", 8);
-    let batch = 16usize; // must match the AOT artifact batch width
+    let ranks = args.get_usize("ranks", 4);
+    let batch = args.get_usize("batch", 64);
 
-    // N=256, 4 layers, P=4 → uniform 64×256 row blocks = the AOT shape.
-    let net = generate(&RadixNetConfig::graph_challenge(256, 4).expect("cfg"));
-    let ranks = 4usize;
-    let part = random_partition(&net.layers, ranks, 5);
-    let dir = artifacts_dir();
-    let eng = PjrtLayerEngine::load(&dir, 64, 256, batch)
-        .expect("artifacts missing — run `make artifacts` first");
+    // N=1024 neurons/layer (32×32 inputs), 12 layers — the small Graph
+    // Challenge configuration.
+    let net = generate(&RadixNetConfig::graph_challenge(1024, 12).expect("cfg"));
     println!(
-        "serving N=256 L=4 on {ranks} ranks via PJRT ({} platform), batch {batch}",
-        "cpu"
+        "serving N={} L={} ({} connections) on {ranks} ranks, batch {batch}",
+        net.input_dim(),
+        net.depth(),
+        net.total_nnz()
     );
 
-    // Pre-extract every rank's blocks + biases (startup cost, not hot path).
-    let mut blocks = Vec::new();
-    for rank in 0..ranks as u32 {
-        let per_layer: Vec<_> = (0..net.depth())
-            .map(|k| {
-                let rows = part.rows_of(k, rank);
-                let blk = net.layers[k].row_block(&rows);
-                let bias: Vec<f32> =
-                    rows.iter().map(|&r| net.biases[k][r as usize]).collect();
-                (rows, blk, bias)
-            })
-            .collect();
-        blocks.push(per_layer);
-    }
+    // Partition + communication plan are computed once at startup and
+    // reused across requests — only the per-request SpMM is on the clock.
+    let part = contiguous_partition(&net.layers, ranks);
+    let plan = CommPlan::build(&net.layers, &part);
 
-    let data = synthetic_mnist(16, requests * batch, 8); // 16×16=256 inputs
+    let data = synthetic_mnist(32, requests * batch, 8);
     let mut total_edges = 0f64;
     let mut total_secs = 0f64;
     for req in 0..requests {
         let (x0, b) = data.pack_batch(req * batch, (req + 1) * batch);
         let sw = Stopwatch::start();
-        // layer-by-layer: each rank's block through the PJRT artifact; the
-        // full-width activation buffer plays the role of the fabric here
-        // (single-host serving; the distributed variant is exercised by
-        // `spdnn infer` / the e2e example).
-        let mut cur = x0.clone();
-        for k in 0..net.depth() {
-            let mut next = vec![0f32; 256 * b];
-            for rank in 0..ranks {
-                let (rows, blk, bias) = &blocks[rank][k];
-                let out = eng.forward_batch(blk, &cur, bias).expect("pjrt");
-                for (i, &r) in rows.iter().enumerate() {
-                    next[r as usize * b..(r as usize + 1) * b]
-                        .copy_from_slice(&out[i * b..(i + 1) * b]);
-                }
-            }
-            cur = next;
-        }
+        let (out, _) = infer_with_plan(&net, &part, &plan, &x0, b);
         let secs = sw.elapsed_secs();
 
-        // validate against the native engine
-        let native = spdnn::dnn::inference::infer_batch(&net, &x0, b);
-        let maxerr = cur
+        // validate against the serial engine
+        let serial = infer_batch(&net, &x0, b);
+        let maxerr = out
             .iter()
-            .zip(native.iter())
+            .zip(serial.iter())
             .map(|(a, c)| (a - c).abs())
             .fold(0f32, f32::max);
-        assert!(maxerr < 1e-5, "request {req}: PJRT vs native {maxerr}");
+        assert!(maxerr < 1e-5, "request {req}: parallel vs serial {maxerr}");
+        let preds = classify_batch(&out, 10, b);
 
         let edges = net.total_nnz() as f64 * b as f64;
         total_edges += edges;
         total_secs += secs;
         println!(
-            "request {req:>2}: {b} images in {:.1} ms  ({:.2e} edges/s, maxerr {maxerr:.1e})",
+            "request {req:>2}: {b} images in {:.1} ms  ({:.2e} edges/s, maxerr {maxerr:.1e}, \
+             {} distinct classes)",
             secs * 1e3,
-            edges / secs
+            edges / secs,
+            preds.iter().collect::<std::collections::HashSet<_>>().len()
         );
     }
     println!(
-        "served {requests} batches: {:.2e} edges/s aggregate — Python was never on this path",
+        "served {requests} batches on {ranks} ranks: {:.2e} edges/s aggregate",
         total_edges / total_secs
     );
-    let _ = Activation::Sigmoid; // (used indirectly via artifacts)
 }

@@ -6,9 +6,17 @@
 //! which gives the same semantics as tag-matched MPI point-to-point.
 //! Every endpoint counts words/messages sent so live runs can be checked
 //! against the precomputed [`crate::partition::CommPlan`].
+//!
+//! All endpoints of one fabric share a **fault flag**: when a rank fails,
+//! the parallel engine ([`crate::runtime::parallel`]) poisons the fabric and
+//! every peer blocked in [`Endpoint::recv`] wakes up and unwinds instead of
+//! deadlocking on a message that will never arrive.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Communication phase tag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -30,12 +38,16 @@ pub struct Msg {
 
 type Key = (u32, Phase, u32, u32); // layer, phase, from, transfer
 
+/// How long a blocked receive sleeps between checks of the fault flag.
+const FAULT_POLL: Duration = Duration::from_millis(50);
+
 /// Per-rank endpoint.
 pub struct Endpoint {
     pub rank: u32,
     senders: Vec<Sender<Msg>>,
     inbox: Receiver<Msg>,
     stash: HashMap<Key, Vec<f32>>,
+    fault: Arc<AtomicBool>,
     /// Counters: words sent, messages sent.
     pub sent_words: u64,
     pub sent_msgs: u64,
@@ -60,29 +72,60 @@ impl Endpoint {
     }
 
     /// Blocking receive of the uniquely-tagged message; out-of-order
-    /// arrivals for other tags are stashed.
+    /// arrivals for other tags are stashed. Panics if the fabric is
+    /// poisoned while waiting (a peer rank failed).
     pub fn recv(&mut self, from: u32, layer: u32, phase: Phase, transfer: u32) -> Vec<f32> {
         let key: Key = (layer, phase, from, transfer);
         if let Some(p) = self.stash.remove(&key) {
             return p;
         }
         loop {
-            let m = self.inbox.recv().expect("fabric closed while receiving");
-            let k: Key = (m.layer, m.phase, m.from, m.transfer);
-            if k == key {
-                return m.payload;
+            match self.inbox.recv_timeout(FAULT_POLL) {
+                Ok(m) => {
+                    let k: Key = (m.layer, m.phase, m.from, m.transfer);
+                    if k == key {
+                        return m.payload;
+                    }
+                    self.stash.insert(k, m.payload);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.poisoned() {
+                        panic!(
+                            "fabric poisoned: a peer rank failed while rank {} waited",
+                            self.rank
+                        );
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("fabric closed while receiving");
+                }
             }
-            self.stash.insert(k, m.payload);
         }
     }
 
-    /// True if no unconsumed stashed messages remain (end-of-run check).
-    pub fn drained(&self) -> bool {
+    /// Mark the whole fabric as failed, waking every blocked receiver.
+    pub fn poison(&self) {
+        self.fault.store(true, Ordering::Release);
+    }
+
+    /// True once any endpoint of this fabric called [`Endpoint::poison`].
+    pub fn poisoned(&self) -> bool {
+        self.fault.load(Ordering::Acquire)
+    }
+
+    /// True if no unconsumed messages remain (end-of-run check). Pulls
+    /// anything still sitting in the channel into the stash first, so
+    /// messages that were sent but never received also count as leaks.
+    pub fn drained(&mut self) -> bool {
+        while let Ok(m) = self.inbox.try_recv() {
+            self.stash
+                .insert((m.layer, m.phase, m.from, m.transfer), m.payload);
+        }
         self.stash.is_empty()
     }
 }
 
-/// Build a fully-connected fabric of `n` endpoints.
+/// Build a fully-connected fabric of `n` endpoints sharing one fault flag.
 pub fn fabric(n: usize) -> Vec<Endpoint> {
     let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(n);
     let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n);
@@ -91,6 +134,7 @@ pub fn fabric(n: usize) -> Vec<Endpoint> {
         senders.push(tx);
         receivers.push(rx);
     }
+    let fault = Arc::new(AtomicBool::new(false));
     receivers
         .into_iter()
         .enumerate()
@@ -99,6 +143,7 @@ pub fn fabric(n: usize) -> Vec<Endpoint> {
             senders: senders.clone(),
             inbox,
             stash: HashMap::new(),
+            fault: fault.clone(),
             sent_words: 0,
             sent_msgs: 0,
         })
@@ -172,5 +217,23 @@ mod tests {
             let expect: f32 = (0..n as u32).filter(|&x| x != i as u32).map(|x| x as f32).sum();
             assert_eq!(sum, expect);
         }
+    }
+
+    #[test]
+    fn poison_unblocks_blocked_receiver() {
+        let mut eps = fabric(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                e0.recv(1, 0, Phase::Forward, 0)
+            }));
+            r.is_err()
+        });
+        // let the receiver block, then poison instead of sending
+        std::thread::sleep(Duration::from_millis(10));
+        e1.poison();
+        assert!(e1.poisoned());
+        assert!(t.join().unwrap(), "blocked receiver did not unwind");
     }
 }

@@ -11,9 +11,10 @@
 //! per-sample step (tested).
 
 use super::worker::RankState;
-use crate::comm::{fabric, Endpoint, Phase};
+use crate::comm::{Endpoint, Phase};
 use crate::dnn::SparseNet;
 use crate::partition::{CommPlan, DnnPartition};
+use crate::runtime::parallel;
 
 impl RankState {
     /// Batched forward that also returns the per-layer **batch-mean**
@@ -59,18 +60,15 @@ impl RankState {
             // received — the weight update (∇W = δ ⊗ x̄) needs them.
             means.push(row_means(&cur, b));
             let blk = &self.blocks[k];
+            let bias = &self.biases[k];
+            let act = self.activation;
             let mut z = vec![0f32; blk.nrows * b];
             self.timer.time("spmv", || {
-                blk.spmm_rowmajor(&cur, &mut z, b);
+                blk.spmm_fused_rowmajor(&cur, &mut z, b, act.fused_bias_epilogue(bias));
             });
             let mut out = vec![0f32; self.dims[k + 1] * b];
             for (i, &r) in self.rows[k].iter().enumerate() {
-                let zrow = &mut z[i * b..(i + 1) * b];
-                for v in zrow.iter_mut() {
-                    *v += self.biases[k][i];
-                }
-                self.activation.apply(zrow);
-                out[r as usize * b..(r as usize + 1) * b].copy_from_slice(zrow);
+                out[r as usize * b..(r as usize + 1) * b].copy_from_slice(&z[i * b..(i + 1) * b]);
             }
             // mean over the batch, only rows this rank knows (owned rows of
             // this layer); remote rows stay 0 and are neither read locally
@@ -184,7 +182,6 @@ pub fn train_distributed_minibatch(
     part.validate(&structure).expect("invalid partition");
     let plan = CommPlan::build(&structure, part);
     let nparts = part.nparts;
-    let endpoints = fabric(nparts);
     let nbatches = inputs.len() / b;
     let steps = nbatches * epochs;
     let n0 = net.input_dim();
@@ -203,45 +200,27 @@ pub fn train_distributed_minibatch(
     let xbatches: Vec<Vec<f32>> = (0..nbatches).map(|i| pack(inputs, n0, i * b)).collect();
     let ybatches: Vec<Vec<f32>> = (0..nbatches).map(|i| pack(targets, nl, i * b)).collect();
 
-    let mut results: Vec<Option<(RankState, Vec<f32>, u64, u64)>> =
-        (0..nparts).map(|_| None).collect();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(nparts);
-        for (rank, mut ep) in endpoints.into_iter().enumerate() {
-            let plan = &plan;
-            let net = &net;
-            let part = &part;
-            let xb = &xbatches;
-            let yb = &ybatches;
-            handles.push(scope.spawn(move || {
-                let mut state = RankState::build(net, part, rank as u32);
-                let mut losses = Vec::with_capacity(steps);
-                for _ in 0..epochs {
-                    for (x, y) in xb.iter().zip(yb.iter()) {
-                        losses.push(state.train_step_minibatch(&mut ep, plan, x, y, b, eta));
-                    }
-                }
-                assert!(ep.drained());
-                (state, losses, ep.sent_words, ep.sent_msgs)
-            }));
+    let run = parallel::run_ranks(nparts, |rank, ep| {
+        let mut state = RankState::build(net, part, rank as u32);
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..epochs {
+            for (x, y) in xbatches.iter().zip(ybatches.iter()) {
+                losses.push(state.train_step_minibatch(ep, &plan, x, y, b, eta));
+            }
         }
-        for (rank, h) in handles.into_iter().enumerate() {
-            results[rank] = Some(h.join().expect("worker panicked"));
-        }
-    });
+        (state, losses)
+    })
+    .unwrap_or_else(|f| panic!("distributed minibatch training failed: {f}"));
 
+    let timer = run.merged_timer(|(state, _)| &state.timer);
+    let sent = run.sent;
     let mut out = net.clone();
     let mut losses = vec![0f32; steps];
-    let mut sent = Vec::with_capacity(nparts);
-    let mut timer = crate::util::PhaseTimer::new();
-    for r in results.into_iter() {
-        let (state, local, words, msgs) = r.unwrap();
+    for (state, local) in run.outputs {
         state.merge_into(&mut out);
         for (i, l) in local.into_iter().enumerate() {
             losses[i] += l;
         }
-        timer.merge(&state.timer);
-        sent.push((words, msgs));
     }
     super::sgd::TrainRun {
         net: out,

@@ -1,15 +1,16 @@
-//! Live distributed SGD driver: spawns one thread per rank over the
-//! simulated fabric and runs the full Alg. 2 + Alg. 3 schedule.
+//! Live distributed SGD driver over the shared-memory parallel engine
+//! ([`crate::runtime::parallel`]): one OS thread per rank runs the full
+//! Alg. 2 + Alg. 3 schedule concurrently.
 //!
-//! The driver is the "leader": it carves the model into rank states,
-//! launches workers, feeds them the dataset, reduces losses, merges the
-//! trained row blocks back into a global model, and cross-checks the live
+//! The driver is the "leader": it carves the model into rank states, hands
+//! the engine a per-rank worker, reduces losses, merges the trained row
+//! blocks back into a global model, and cross-checks the live
 //! communication counters against the precomputed [`CommPlan`].
 
 use super::worker::RankState;
-use crate::comm::fabric;
 use crate::dnn::SparseNet;
 use crate::partition::{CommPlan, DnnPartition};
+use crate::runtime::parallel;
 use crate::util::PhaseTimer;
 
 /// Result of a distributed training run.
@@ -52,48 +53,30 @@ pub fn run_with_plan(
 ) -> TrainRun {
     assert_eq!(inputs.len(), targets.len());
     let nparts = part.nparts;
-    let endpoints = fabric(nparts);
     let steps = inputs.len() * epochs;
 
-    let mut results: Vec<Option<(RankState, Vec<f32>, u64, u64)>> =
-        (0..nparts).map(|_| None).collect();
-
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(nparts);
-        for (rank, mut ep) in endpoints.into_iter().enumerate() {
-            let plan = &plan;
-            let net = &net;
-            let part = &part;
-            handles.push(scope.spawn(move || {
-                let mut state = RankState::build(net, part, rank as u32);
-                let mut local_losses = Vec::with_capacity(steps);
-                for _ in 0..epochs {
-                    for (x, y) in inputs.iter().zip(targets.iter()) {
-                        local_losses.push(state.train_step(&mut ep, plan, x, y, eta));
-                    }
-                }
-                assert!(ep.drained(), "rank {rank}: unconsumed messages");
-                (state, local_losses, ep.sent_words, ep.sent_msgs)
-            }));
+    let run = parallel::run_ranks(nparts, |rank, ep| {
+        let mut state = RankState::build(net, part, rank as u32);
+        let mut local_losses = Vec::with_capacity(steps);
+        for _ in 0..epochs {
+            for (x, y) in inputs.iter().zip(targets.iter()) {
+                local_losses.push(state.train_step(ep, plan, x, y, eta));
+            }
         }
-        for (rank, h) in handles.into_iter().enumerate() {
-            results[rank] = Some(h.join().expect("worker panicked"));
-        }
-    });
+        (state, local_losses)
+    })
+    .unwrap_or_else(|f| panic!("distributed training failed: {f}"));
 
-    // merge blocks, reduce losses & timers
+    // merge blocks, reduce losses & timers (engine-aggregated)
+    let timer: PhaseTimer = run.merged_timer(|(state, _)| &state.timer);
+    let sent = run.sent;
     let mut out = net.clone();
     let mut losses = vec![0f32; steps];
-    let mut sent = Vec::with_capacity(nparts);
-    let mut timer = PhaseTimer::new();
-    for r in results.into_iter() {
-        let (state, local_losses, words, msgs) = r.unwrap();
+    for (state, local_losses) in run.outputs {
         state.merge_into(&mut out);
         for (i, l) in local_losses.into_iter().enumerate() {
             losses[i] += l;
         }
-        timer.merge(&state.timer);
-        sent.push((words, msgs));
     }
     TrainRun {
         net: out,
@@ -114,42 +97,43 @@ pub fn infer_distributed(
     let structure: Vec<_> = net.layers.clone();
     part.validate(&structure).expect("invalid partition");
     let plan = CommPlan::build(&structure, part);
+    infer_with_plan(net, part, &plan, x0, b)
+}
+
+/// Same as [`infer_distributed`] with a caller-provided plan — the serving
+/// path reuses one plan across requests (plans never change per input).
+pub fn infer_with_plan(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    x0: &[f32],
+    b: usize,
+) -> (Vec<f32>, Vec<(u64, u64)>) {
     let nparts = part.nparts;
-    let endpoints = fabric(nparts);
+    let run = parallel::run_ranks(nparts, |rank, ep| {
+        let mut state = RankState::build(net, part, rank as u32);
+        let full = state.infer_batch(ep, plan, x0, b);
+        // extract owned output rows
+        let owned = state.rows.last().unwrap();
+        owned
+            .iter()
+            .map(|&r| {
+                let r = r as usize;
+                (r as u32, full[r * b..(r + 1) * b].to_vec())
+            })
+            .collect::<Vec<(u32, Vec<f32>)>>()
+    })
+    .unwrap_or_else(|f| panic!("distributed inference failed: {f}"));
+
     let nl = net.output_dim();
     let mut output = vec![0f32; nl * b];
-    let mut sent = vec![(0u64, 0u64); nparts];
-
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(nparts);
-        for (rank, mut ep) in endpoints.into_iter().enumerate() {
-            let plan = &plan;
-            let net = &net;
-            let part = &part;
-            handles.push(scope.spawn(move || {
-                let mut state = RankState::build(net, part, rank as u32);
-                let full = state.infer_batch(&mut ep, plan, x0, b);
-                // extract owned output rows
-                let owned = state.rows.last().unwrap().clone();
-                let rows: Vec<(u32, Vec<f32>)> = owned
-                    .iter()
-                    .map(|&r| {
-                        let r = r as usize;
-                        (r as u32, full[r * b..(r + 1) * b].to_vec())
-                    })
-                    .collect();
-                (rows, ep.sent_words, ep.sent_msgs)
-            }));
+    for rows in &run.outputs {
+        for (r, vals) in rows {
+            let r = *r as usize;
+            output[r * b..(r + 1) * b].copy_from_slice(vals);
         }
-        for (rank, h) in handles.into_iter().enumerate() {
-            let (rows, words, msgs) = h.join().expect("worker panicked");
-            for (r, vals) in rows {
-                output[r as usize * b..(r as usize + 1) * b].copy_from_slice(&vals);
-            }
-            sent[rank] = (words, msgs);
-        }
-    });
-    (output, sent)
+    }
+    (output, run.sent)
 }
 
 #[cfg(test)]

@@ -257,19 +257,18 @@ impl RankState {
                     }
                 }
             });
+            // fused row-block SpMM: bias + activation applied per cache
+            // tile inside the accumulation pass (the serving hot loop)
             let blk = &self.blocks[k];
+            let bias = &self.biases[k];
+            let act = self.activation;
             let mut z = vec![0f32; blk.nrows * b];
             self.timer.time("spmv", || {
-                blk.spmm_rowmajor(&cur, &mut z, b);
+                blk.spmm_fused_rowmajor(&cur, &mut z, b, act.fused_bias_epilogue(bias));
             });
             let mut out = vec![0f32; self.dims[k + 1] * b];
             for (i, &r) in self.rows[k].iter().enumerate() {
-                let zrow = &mut z[i * b..(i + 1) * b];
-                for v in zrow.iter_mut() {
-                    *v += self.biases[k][i];
-                }
-                self.activation.apply(zrow);
-                out[r as usize * b..(r as usize + 1) * b].copy_from_slice(zrow);
+                out[r as usize * b..(r as usize + 1) * b].copy_from_slice(&z[i * b..(i + 1) * b]);
             }
             cur = out;
         }

@@ -72,6 +72,19 @@ impl Activation {
         }
     }
 
+    /// Epilogue for [`crate::sparse::Csr::spmm_fused_rowmajor`]: add the
+    /// per-row bias, then apply this activation — the fusion every batched
+    /// forward path (serial, per-rank, minibatch) shares.
+    pub fn fused_bias_epilogue(self, bias: &[f32]) -> impl FnMut(usize, &mut [f32]) + '_ {
+        move |r, tile| {
+            let b = bias[r];
+            for v in tile.iter_mut() {
+                *v += b;
+            }
+            self.apply(tile);
+        }
+    }
+
     pub fn from_name(name: &str) -> Option<Self> {
         match name {
             "sigmoid" => Some(Activation::Sigmoid),
@@ -138,6 +151,19 @@ mod tests {
             assert_eq!(Activation::from_name(a.name()), Some(a));
         }
         assert_eq!(Activation::from_name("nope"), None);
+    }
+
+    #[test]
+    fn fused_bias_epilogue_adds_then_activates() {
+        let bias = [1.0f32, -2.0];
+        let mut relu = Activation::Relu.fused_bias_epilogue(&bias);
+        let mut row0 = [0.5f32, -3.0];
+        relu(0, &mut row0);
+        assert_eq!(row0, [1.5, 0.0]); // (0.5+1, -3+1 clamped)
+        let mut ident = Activation::Identity.fused_bias_epilogue(&bias);
+        let mut row1 = [1.0f32];
+        ident(1, &mut row1);
+        assert_eq!(row1, [-1.0]);
     }
 
     #[test]

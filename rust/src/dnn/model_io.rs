@@ -3,9 +3,10 @@
 //! metadata file — the on-disk format the benchmark's reference data uses,
 //! so externally downloaded Graph Challenge networks drop in directly.
 
+use crate::bail;
 use crate::dnn::{Activation, SparseNet};
 use crate::sparse::io::{read_tsv, write_tsv};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Error, Result};
 use std::path::Path;
 
 /// Save a network into `dir` (created if needed).
@@ -80,7 +81,7 @@ pub fn load_network(dir: &Path) -> Result<SparseNet> {
             net.biases[k - 1][i - 1] = v;
         }
     }
-    net.validate().map_err(|e| anyhow::anyhow!(e))?;
+    net.validate().map_err(Error::msg)?;
     Ok(net)
 }
 

@@ -10,8 +10,18 @@
 //! - **L1 (python/compile/kernels/)**: the SpMV hot-spot as a Pallas
 //!   block-sparse masked-matmul kernel (interpret mode on CPU).
 //!
-//! The L3 hot path optionally executes the AOT artifacts through the PJRT
-//! CPU client (`runtime`), with Python never on the request path.
+//! The L3 hot path runs on the shared-memory rank-parallel engine
+//! (`runtime::parallel`: one OS thread per rank over the message-passing
+//! fabric), and can optionally execute the AOT artifacts through the PJRT
+//! CPU client (`runtime::pjrt`, feature `pjrt`), with Python never on the
+//! request path.
+
+// The CSR kernels and schedule code are index-heavy by nature; explicit
+// ranges over coupled arrays (indptr/indices/vals) read clearer than
+// iterator chains there.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
+
 pub mod comm;
 pub mod coordinator;
 pub mod data;

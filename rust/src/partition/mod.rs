@@ -89,10 +89,83 @@ impl DnnPartition {
     }
 }
 
+/// Contiguous nnz-balanced row blocks per layer — the shared-memory
+/// serving default. No cut minimization: on one node every "message" is a
+/// memcpy, so locality and balance are what matter, and contiguous blocks
+/// keep each rank's rows adjacent in memory for the tiled SpMM.
+pub fn contiguous_partition(structure: &[Csr], nparts: usize) -> DnnPartition {
+    assert!(nparts > 0);
+    fn balance(weights: &[u64], nparts: usize) -> Vec<u32> {
+        let total: u64 = weights.iter().sum();
+        let n = weights.len();
+        let mut parts = vec![0u32; n];
+        let mut acc = 0u64;
+        for (i, &w) in weights.iter().enumerate() {
+            // place each item by the midpoint of its cumulative weight span
+            let p = if total == 0 {
+                (i * nparts / n.max(1)) as u32
+            } else {
+                (((acc + w / 2) as u128 * nparts as u128) / total as u128) as u32
+            };
+            parts[i] = p.min(nparts as u32 - 1);
+            acc += w;
+        }
+        parts
+    }
+    let input_weights = vec![1u64; structure[0].ncols];
+    let input_parts = balance(&input_weights, nparts);
+    let layer_parts = structure
+        .iter()
+        .map(|w| {
+            let weights: Vec<u64> = (0..w.nrows).map(|r| w.row_nnz(r) as u64 + 1).collect();
+            balance(&weights, nparts)
+        })
+        .collect();
+    DnnPartition {
+        nparts,
+        input_parts,
+        layer_parts,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::radixnet::{generate_structure, RadixNetConfig};
+
+    #[test]
+    fn contiguous_partition_is_valid_contiguous_and_balanced() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(256, 4).unwrap());
+        for &p in &[1usize, 3, 4, 8] {
+            let part = contiguous_partition(&structure, p);
+            part.validate(&structure).unwrap();
+            // contiguity: rank ids are non-decreasing over rows
+            for parts in std::iter::once(&part.input_parts).chain(part.layer_parts.iter()) {
+                for w in parts.windows(2) {
+                    assert!(w[0] <= w[1], "non-contiguous block (P={p})");
+                }
+            }
+            // balance: within 2x of the mean nnz load (structure is uniform)
+            let loads = part.comp_loads(&structure);
+            let avg = loads.iter().sum::<u64>() as f64 / p as f64;
+            for &l in &loads {
+                assert!((l as f64) < avg * 2.0 + 1.0, "P={p}: loads {loads:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_partition_covers_all_ranks_when_possible() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(64, 2).unwrap());
+        let part = contiguous_partition(&structure, 4);
+        for parts in &part.layer_parts {
+            let mut seen = vec![false; 4];
+            for &x in parts {
+                seen[x as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "some rank owns no rows");
+        }
+    }
 
     #[test]
     fn owner_of_activation_chains_layers() {

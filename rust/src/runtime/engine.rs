@@ -9,8 +9,9 @@
 
 use super::pjrt::PjrtRuntime;
 use super::{bwd_artifact, fwd_artifact, fwd_batch_artifact};
+use crate::ensure;
 use crate::sparse::Csr;
-use anyhow::{ensure, Result};
+use crate::util::error::Result;
 use std::path::Path;
 
 /// Executes σ(Wx+b) / Wᵀδ blocks of a fixed padded shape via PJRT.

@@ -1,12 +1,26 @@
-//! PJRT runtime — loads the AOT artifacts (HLO text, produced once by
-//! `python/compile/aot.py`) and executes them on the XLA CPU client from
-//! the Rust hot path. Python is never on the request path.
+//! Execution runtimes for the live hot path.
+//!
+//! - [`parallel`]: the shared-memory rank-parallel engine — one OS thread
+//!   per rank over the simulated fabric, with panic-to-error rank
+//!   lifecycle management and per-rank timer aggregation. Always built.
+//! - `engine`/`pjrt` (feature `pjrt`): load the AOT artifacts (HLO text,
+//!   produced once by `python/compile/aot.py`) and execute them on the XLA
+//!   CPU client, with Python never on the request path. Gated because the
+//!   external `xla` crate needs a vendored checkout.
 
+pub mod parallel;
+
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+#[cfg(feature = "pjrt")]
 pub use engine::PjrtLayerEngine;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;
+
+pub use parallel::{run_ranks, ParallelRun, RankFailure};
 
 use std::path::PathBuf;
 

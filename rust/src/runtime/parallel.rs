@@ -1,0 +1,267 @@
+//! Shared-memory parallel execution engine: one OS thread per rank over the
+//! simulated message-passing fabric.
+//!
+//! This is the single place that owns rank lifecycles for live runs. Every
+//! distributed driver (SGD, minibatch SpMM, batched inference serving)
+//! hands the engine a per-rank worker closure; the engine
+//! - builds the fabric and spawns one scoped thread per rank,
+//! - converts rank panics into [`RankFailure`] errors instead of aborting
+//!   the process, poisoning the fabric so peers blocked in `recv` unwind
+//!   rather than deadlock,
+//! - enforces the end-of-run invariant that no rank leaves unconsumed
+//!   messages in its stash,
+//! - collects per-rank fabric counters and aggregates per-rank
+//!   [`PhaseTimer`]s for live breakdown reporting.
+
+use crate::comm::{fabric, Endpoint};
+use crate::util::PhaseTimer;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// A rank failed (panicked, or violated a fabric invariant).
+#[derive(Debug, Clone)]
+pub struct RankFailure {
+    pub rank: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank {} failed: {}", self.rank, self.message)
+    }
+}
+
+/// Result of a successful engine run: per-rank worker outputs (in rank
+/// order) plus the per-rank fabric counters.
+pub struct ParallelRun<T> {
+    pub outputs: Vec<T>,
+    /// Per-rank (words, messages) sent over the fabric.
+    pub sent: Vec<(u64, u64)>,
+}
+
+impl<T> ParallelRun<T> {
+    /// Sum the per-rank phase timers into one live breakdown — the
+    /// engine-owned aggregation point for SpMV / Updt / Comm reporting.
+    pub fn merged_timer<'a, F>(&'a self, timer_of: F) -> PhaseTimer
+    where
+        F: Fn(&'a T) -> &'a PhaseTimer,
+    {
+        let mut merged = PhaseTimer::new();
+        for out in &self.outputs {
+            merged.merge(timer_of(out));
+        }
+        merged
+    }
+}
+
+/// Run `worker(rank, endpoint)` on `nparts` concurrent OS threads over a
+/// fresh fully-connected fabric. Returns the outputs in rank order, or the
+/// most informative [`RankFailure`] if any rank failed.
+pub fn run_ranks<T, F>(nparts: usize, worker: F) -> Result<ParallelRun<T>, RankFailure>
+where
+    T: Send,
+    F: Fn(usize, &mut Endpoint) -> T + Sync,
+{
+    assert!(nparts > 0, "need at least one rank");
+    let endpoints = fabric(nparts);
+
+    let results: Vec<Result<(T, u64, u64), String>> = std::thread::scope(|scope| {
+        let worker = &worker;
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                scope.spawn(move || {
+                    let out = catch_unwind(AssertUnwindSafe(|| worker(rank, &mut ep)));
+                    match out {
+                        Ok(value) => {
+                            if ep.drained() {
+                                Ok((value, ep.sent_words, ep.sent_msgs))
+                            } else {
+                                ep.poison();
+                                Err("unconsumed messages left in stash".to_string())
+                            }
+                        }
+                        Err(payload) => {
+                            ep.poison();
+                            Err(panic_message(&payload))
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| Err(panic_message(&p))))
+            .collect()
+    });
+
+    let mut outputs = Vec::with_capacity(nparts);
+    let mut sent = Vec::with_capacity(nparts);
+    let mut failure: Option<RankFailure> = None;
+    for (rank, result) in results.into_iter().enumerate() {
+        match result {
+            Ok((value, words, msgs)) => {
+                outputs.push(value);
+                sent.push((words, msgs));
+            }
+            Err(message) => {
+                // Prefer the root cause over the secondary unwinds of
+                // ranks that were merely blocked on (or sending to) the
+                // rank that actually failed.
+                let candidate = RankFailure { rank, message };
+                let better = match &failure {
+                    None => true,
+                    Some(cur) => {
+                        is_secondary(&cur.message) && !is_secondary(&candidate.message)
+                    }
+                };
+                if better {
+                    failure = Some(candidate);
+                }
+            }
+        }
+    }
+    match failure {
+        Some(f) => Err(f),
+        None => Ok(ParallelRun { outputs, sent }),
+    }
+}
+
+/// True for failure messages that are consequences of another rank dying
+/// (blocked receivers woken by poisoning, sends to a hung-up peer) rather
+/// than root causes.
+fn is_secondary(message: &str) -> bool {
+    message.contains("fabric poisoned") || message.contains("peer rank hung up")
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Phase;
+
+    #[test]
+    fn all_to_all_sum_and_counters() {
+        let n = 6usize;
+        let run = run_ranks(n, |rank, ep| {
+            let me = rank as u32;
+            for to in 0..n as u32 {
+                if to != me {
+                    ep.send(to, 0, Phase::Forward, me, vec![me as f32]);
+                }
+            }
+            let mut sum = 0.0f32;
+            for from in 0..n as u32 {
+                if from != me {
+                    sum += ep.recv(from, 0, Phase::Forward, from)[0];
+                }
+            }
+            sum
+        })
+        .expect("run succeeds");
+        let all: f32 = (0..n as u32).map(|x| x as f32).sum();
+        for (rank, &sum) in run.outputs.iter().enumerate() {
+            assert_eq!(sum, all - rank as f32, "rank {rank}");
+        }
+        for &(words, msgs) in &run.sent {
+            assert_eq!(words, (n - 1) as u64);
+            assert_eq!(msgs, (n - 1) as u64);
+        }
+    }
+
+    #[test]
+    fn rank_panic_becomes_error_without_deadlock() {
+        // Rank 0 panics before sending; ranks 1..3 block on receives from
+        // it and must unwind via fabric poisoning instead of hanging.
+        let err = run_ranks(4, |rank, ep| {
+            if rank == 0 {
+                panic!("injected failure on rank 0");
+            }
+            ep.recv(0, 0, Phase::Forward, 0);
+        })
+        .expect_err("run must fail");
+        assert_eq!(err.rank, 0);
+        assert!(
+            err.message.contains("injected failure"),
+            "root cause lost: {}",
+            err.message
+        );
+    }
+
+    #[test]
+    fn send_to_dead_rank_does_not_mask_root_cause() {
+        // Rank 3 dies; rank 1 later sends to it and panics with the
+        // secondary "peer rank hung up" — the reported failure must still
+        // be rank 3's own panic.
+        let err = run_ranks(4, |rank, ep| match rank {
+            3 => panic!("rank 3 exploded"),
+            1 => {
+                std::thread::sleep(std::time::Duration::from_millis(150));
+                ep.send(3, 0, Phase::Forward, 0, vec![1.0]);
+            }
+            _ => {}
+        })
+        .expect_err("engine must surface the failure");
+        assert_eq!(err.rank, 3, "masked by: {}", err.message);
+        assert!(err.message.contains("exploded"), "{}", err.message);
+    }
+
+    #[test]
+    fn unreceived_channel_message_is_an_error() {
+        // Rank 0 sends a message rank 1 never receives at all (it stays in
+        // the channel, not the stash) — still flagged as a leak. The
+        // barrier guarantees the send lands before rank 1 returns.
+        let barrier = std::sync::Barrier::new(2);
+        let err = run_ranks(2, |rank, ep| {
+            if rank == 0 {
+                ep.send(1, 0, Phase::Forward, 0, vec![1.0]);
+            }
+            barrier.wait();
+        })
+        .expect_err("channel leak must fail");
+        assert_eq!(err.rank, 1);
+        assert!(err.message.contains("unconsumed"), "{}", err.message);
+    }
+
+    #[test]
+    fn undrained_stash_is_an_error() {
+        // Rank 0 sends two tags; rank 1 consumes only the second, leaving
+        // the first stashed — the engine must flag the leak.
+        let err = run_ranks(2, |rank, ep| {
+            if rank == 0 {
+                ep.send(1, 0, Phase::Forward, 0, vec![1.0]);
+                ep.send(1, 1, Phase::Forward, 0, vec![2.0]);
+            } else {
+                assert_eq!(ep.recv(0, 1, Phase::Forward, 0), vec![2.0]);
+            }
+        })
+        .expect_err("stash leak must fail");
+        assert_eq!(err.rank, 1);
+        assert!(err.message.contains("unconsumed"), "{}", err.message);
+    }
+
+    #[test]
+    fn timers_aggregate_across_ranks() {
+        let run = run_ranks(3, |rank, _ep| {
+            let mut t = PhaseTimer::new();
+            t.add_secs("spmv", (rank + 1) as f64);
+            t
+        })
+        .expect("run succeeds");
+        let merged = run.merged_timer(|t| t);
+        assert!((merged.get_secs("spmv") - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outputs_are_in_rank_order() {
+        let run = run_ranks(5, |rank, _ep| rank * 10).expect("run succeeds");
+        assert_eq!(run.outputs, vec![0, 10, 20, 30, 40]);
+    }
+}

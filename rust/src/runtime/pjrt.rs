@@ -1,7 +1,8 @@
 //! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
 //! compile once, execute many times (pattern from /opt/xla-example).
 
-use anyhow::{anyhow, Context, Result};
+use crate::format_err;
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -14,7 +15,7 @@ pub struct PjrtRuntime {
 impl PjrtRuntime {
     /// Create the CPU client.
     pub fn new() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format_err!("PJRT cpu client: {e:?}"))?;
         Ok(Self {
             client,
             exes: HashMap::new(),
@@ -34,12 +35,12 @@ impl PjrtRuntime {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
         )
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        .map_err(|e| format_err!("parse {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+            .map_err(|e| format_err!("compile {key}: {e:?}"))?;
         self.exes.insert(key.to_string(), exe);
         Ok(())
     }
@@ -55,23 +56,23 @@ impl PjrtRuntime {
         let exe = self
             .exes
             .get(key)
-            .ok_or_else(|| anyhow!("executable {key} not loaded"))?;
+            .ok_or_else(|| format_err!("executable {key} not loaded"))?;
         let mut literals = Vec::with_capacity(args.len());
         for (data, dims) in args {
             let lit = xla::Literal::vec1(data)
                 .reshape(dims)
-                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
+                .map_err(|e| format_err!("reshape to {dims:?}: {e:?}"))?;
             literals.push(lit);
         }
         let result = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {key}: {e:?}"))?[0][0]
+            .map_err(|e| format_err!("execute {key}: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            .map_err(|e| format_err!("fetch result: {e:?}"))?;
         let out = result
             .to_tuple1()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            .map_err(|e| format_err!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| format_err!("to_vec: {e:?}"))
     }
 }
 

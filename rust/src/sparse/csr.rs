@@ -6,6 +6,10 @@
 //! structure as a scatter, which is exactly the column-block view the paper
 //! describes (row partition of `W` == column partition of `W^T`).
 
+/// Batch columns per pass of the tiled SpMM: 64 f32 row segments keep the
+/// accumulator in registers/L1 while A streams through once per tile.
+pub const SPMM_TILE: usize = 64;
+
 /// CSR sparse matrix over f32.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
@@ -162,6 +166,43 @@ impl Csr {
                     *yj += v * xj;
                 }
             }
+        }
+    }
+
+    /// Y = A X for **row-major** X with the batch dimension processed in
+    /// cache-sized column tiles and a caller-supplied per-row epilogue
+    /// (bias + activation on the serving path) fused into the accumulation
+    /// pass. Each row tile is accumulated in a stack buffer, so the inner
+    /// loop is a fixed-width FMA over hot data; `epilogue(r, tile)` is
+    /// invoked once per (row, column-tile) with the finished tile.
+    pub fn spmm_fused_rowmajor<F>(&self, x: &[f32], y: &mut [f32], b: usize, mut epilogue: F)
+    where
+        F: FnMut(usize, &mut [f32]),
+    {
+        debug_assert_eq!(x.len(), self.ncols * b);
+        debug_assert_eq!(y.len(), self.nrows * b);
+        let mut acc = [0f32; SPMM_TILE];
+        let mut lo = 0usize;
+        while lo < b {
+            let w = SPMM_TILE.min(b - lo);
+            for r in 0..self.nrows {
+                let start = self.indptr[r] as usize;
+                let end = self.indptr[r + 1] as usize;
+                let tile = &mut acc[..w];
+                tile.fill(0.0);
+                for i in start..end {
+                    let v = self.vals[i];
+                    let c = self.indices[i] as usize;
+                    let xrow = &x[c * b + lo..c * b + lo + w];
+                    for (a, &xv) in tile.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                }
+                let yrow = &mut y[r * b + lo..r * b + lo + w];
+                yrow.copy_from_slice(tile);
+                epilogue(r, yrow);
+            }
+            lo += w;
         }
     }
 
@@ -387,6 +428,113 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn spmm_fused_matches_plain_spmm_across_tiles() {
+        // widths straddling the tile boundary exercise multi-tile passes
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(12), 1 + rng.gen_range(12));
+            let a = random_csr(rng, nr, nc, 0.3);
+            let b = 1 + rng.gen_range(3 * SPMM_TILE);
+            let x: Vec<f32> = (0..a.ncols * b).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let mut y1 = vec![0.0; a.nrows * b];
+            a.spmm_rowmajor(&x, &mut y1, b);
+            let mut y2 = vec![7.0; a.nrows * b]; // poisoned: must be overwritten
+            a.spmm_fused_rowmajor(&x, &mut y2, b, |_, _| {});
+            for (u, v) in y1.iter().zip(y2.iter()) {
+                assert!((u - v).abs() < 1e-4, "{u} vs {v} (b={b})");
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_fused_epilogue_equals_post_pass() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(10), 1 + rng.gen_range(10));
+            let a = random_csr(rng, nr, nc, 0.4);
+            let b = 1 + rng.gen_range(2 * SPMM_TILE);
+            let x: Vec<f32> = (0..a.ncols * b).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let bias: Vec<f32> = (0..a.nrows).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            // fused: bias + relu in the epilogue
+            let mut fused = vec![0.0; a.nrows * b];
+            a.spmm_fused_rowmajor(&x, &mut fused, b, |r, row| {
+                for v in row.iter_mut() {
+                    *v = (*v + bias[r]).max(0.0);
+                }
+            });
+            // reference: plain SpMM then a separate pass
+            let mut reference = vec![0.0; a.nrows * b];
+            a.spmm_rowmajor(&x, &mut reference, b);
+            for r in 0..a.nrows {
+                for v in reference[r * b..(r + 1) * b].iter_mut() {
+                    *v = (*v + bias[r]).max(0.0);
+                }
+            }
+            for (u, v) in fused.iter().zip(reference.iter()) {
+                assert!((u - v).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_fused_zero_batch_is_noop() {
+        let a = small();
+        let mut y: Vec<f32> = Vec::new();
+        let mut calls = 0usize;
+        a.spmm_fused_rowmajor(&[], &mut y, 0, |_, _| calls += 1);
+        assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn validate_fuzz_mutations_rejected() {
+        // satellite coverage: empty rows are fine; unsorted / duplicate /
+        // out-of-bounds indices and broken indptr are all rejected.
+        prop::check(|rng| {
+            let (nr, nc) = (2 + rng.gen_range(20), 2 + rng.gen_range(20));
+            let a = random_csr(rng, nr, nc, 0.2);
+            assert!(a.validate().is_ok());
+
+            if a.nnz() == 0 {
+                // fully-empty matrix (every row empty) still validates
+                assert_eq!(*a.indptr.last().unwrap(), 0);
+                return;
+            }
+            // pick a row with >= 2 entries and swap two columns: unsorted
+            if let Some(r) = (0..a.nrows).find(|&r| a.row_nnz(r) >= 2) {
+                let mut bad = a.clone();
+                let lo = bad.indptr[r] as usize;
+                bad.indices.swap(lo, lo + 1);
+                assert!(bad.validate().is_err(), "unsorted row accepted");
+                // duplicate column index (equal neighbours) also rejected
+                let mut dup = a.clone();
+                dup.indices[lo + 1] = dup.indices[lo];
+                assert!(dup.validate().is_err(), "duplicate column accepted");
+            }
+            // out-of-bounds column
+            let mut oob = a.clone();
+            let k = rng.gen_range(oob.nnz());
+            oob.indices[k] = oob.ncols as u32 + rng.gen_range(5) as u32;
+            assert!(oob.validate().is_err(), "oob column accepted");
+            // non-monotone indptr
+            let mut mono = a.clone();
+            mono.indptr[0] = mono.indptr[a.nrows].saturating_add(1);
+            assert!(mono.validate().is_err(), "broken indptr accepted");
+        });
+    }
+
+    #[test]
+    fn validate_accepts_empty_rows_everywhere() {
+        // an interleaving of empty and non-empty rows is structurally valid
+        let mut c = Coo::new(5, 4);
+        c.push(1, 2, 1.0);
+        c.push(3, 0, -2.0);
+        let m = c.to_csr();
+        assert!(m.validate().is_ok());
+        assert_eq!(m.row_nnz(0), 0);
+        assert_eq!(m.row_nnz(4), 0);
+        let z = Csr::zeros(6, 6);
+        assert!(z.validate().is_ok());
     }
 
     #[test]

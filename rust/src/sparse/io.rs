@@ -3,7 +3,8 @@
 
 use super::coo::Coo;
 use super::csr::Csr;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 

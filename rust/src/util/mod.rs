@@ -1,11 +1,14 @@
-//! Shared utilities: deterministic RNG, stats, timers, CLI args, mini-prop.
+//! Shared utilities: deterministic RNG, stats, timers, CLI args, mini-prop,
+//! and the crate's dependency-free error type.
 
 pub mod args;
+pub mod error;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
 pub use args::Args;
+pub use error::{Context, Error, Result};
 pub use rng::Rng;
 pub use timer::{PhaseTimer, Stopwatch};

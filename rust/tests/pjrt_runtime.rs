@@ -1,6 +1,8 @@
 //! Integration: the AOT round-trip — JAX/Pallas (L1+L2, build time) → HLO
 //! text → PJRT CPU client (L3 runtime) — produces the same numbers as the
-//! native Rust engine. Requires `make artifacts` (shapes 64x256 and 8x16).
+//! native Rust engine. Requires `make artifacts` (shapes 64x256 and 8x16)
+//! and the `pjrt` feature (vendored `xla` crate).
+#![cfg(feature = "pjrt")]
 
 use spdnn::dnn::{Activation, SparseNet};
 use spdnn::partition::random::random_partition;
