@@ -1,79 +1,128 @@
-//! Inference serving on the threaded rank-parallel engine — the
-//! throughput-oriented request path.
+//! Inference serving on the **persistent rank pool** — the
+//! heavy-traffic request path.
 //!
-//! A minimal request loop: the network is carved once into contiguous
-//! nnz-balanced row blocks with a precomputed communication plan, then
-//! each arriving batch of synthetic MNIST images runs the batched fused
-//! SpMM (`infer_with_plan`) on one OS thread per rank. Every batch is
-//! validated against the serial engine (≤1e-5) and latency/throughput are
-//! reported per batch and aggregate.
+//! The network is carved once into contiguous nnz-balanced row blocks
+//! with a precomputed communication plan, and [`RankPool`] spawns one
+//! long-lived OS thread per rank. Multiple concurrent client threads then
+//! submit batches of synthetic MNIST images; the adaptive micro-batching
+//! scheduler coalesces queued requests (every third client request is a
+//! single image to exercise coalescing) into fused SpMM dispatches.
+//! Every reply is validated against the serial engine (≤1e-5) and the
+//! run ends with the pool's `ServingStats`: aggregate edges/s plus
+//! p50/p95/p99 latency, also written as JSON for the CI smoke job.
 //!
 //! Run: `cargo run --release --example inference_serving -- \
-//!        [--requests 8] [--ranks 4] [--batch 64]`
-//!
-//! (The PJRT/AOT serving variant lives behind the `pjrt` feature; see
-//! `rust/tests/pjrt_runtime.rs`.)
+//!        [--requests 8] [--clients 4] [--ranks 4] [--batch 64] \
+//!        [--neurons 1024] [--layers 12] [--max-batch 128] \
+//!        [--max-wait-us 500] [--json BENCH_serving.json]`
 
-use spdnn::coordinator::sgd::infer_with_plan;
 use spdnn::data::synthetic_mnist;
 use spdnn::dnn::inference::{classify_batch, infer_batch};
-use spdnn::partition::{contiguous_partition, CommPlan};
 use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::serving::{PoolConfig, RankPool};
 use spdnn::util::{Args, Stopwatch};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
-    let requests = args.get_usize("requests", 8);
+    let requests = args.get_usize("requests", 8); // per client
+    let clients = args.get_usize("clients", 4);
     let ranks = args.get_usize("ranks", 4);
     let batch = args.get_usize("batch", 64);
+    let neurons = args.get_usize("neurons", 1024);
+    let layers = args.get_usize("layers", 12);
+    let max_batch = args.get_usize("max-batch", 2 * batch);
+    let max_wait_us = args.get_u64("max-wait-us", 500);
+    let json_path = args.get_str("json", "BENCH_serving.json");
 
-    // N=1024 neurons/layer (32×32 inputs), 12 layers — the small Graph
-    // Challenge configuration.
-    let net = generate(&RadixNetConfig::graph_challenge(1024, 12).expect("cfg"));
+    let net = generate(
+        &RadixNetConfig::graph_challenge(neurons, layers).expect("unsupported neuron count"),
+    );
+    let side = (net.input_dim() as f64).sqrt() as usize;
     println!(
-        "serving N={} L={} ({} connections) on {ranks} ranks, batch {batch}",
+        "serving N={} L={} ({} connections) on a {ranks}-rank pool: \
+         {clients} clients × {requests} requests, batch {batch}, \
+         max_batch {max_batch}, max_wait {max_wait_us}µs",
         net.input_dim(),
         net.depth(),
         net.total_nnz()
     );
 
-    // Partition + communication plan are computed once at startup and
-    // reused across requests — only the per-request SpMM is on the clock.
-    let part = contiguous_partition(&net.layers, ranks);
-    let plan = CommPlan::build(&net.layers, &part);
+    // Partition, plan, rank states, and rank threads are all built once
+    // here and reused for every request — only the fused SpMM dispatch is
+    // on the per-request clock.
+    let net = Arc::new(net);
+    let pool = Arc::new(RankPool::start(
+        (*net).clone(),
+        PoolConfig {
+            nranks: ranks,
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us),
+            adaptive: true,
+        },
+    ));
 
-    let data = synthetic_mnist(32, requests * batch, 8);
-    let mut total_edges = 0f64;
-    let mut total_secs = 0f64;
-    for req in 0..requests {
-        let (x0, b) = data.pack_batch(req * batch, (req + 1) * batch);
-        let sw = Stopwatch::start();
-        let (out, _) = infer_with_plan(&net, &part, &plan, &x0, b);
-        let secs = sw.elapsed_secs();
+    let sw = Stopwatch::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let net = Arc::clone(&net);
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || {
+                let data = synthetic_mnist(side, requests * batch, 8 + c as u64);
+                for r in 0..requests {
+                    // mixed sizes: every third request is a single image,
+                    // exercising the coalescer
+                    let b = if r % 3 == 0 { 1 } else { batch };
+                    let (x0, b) = data.pack_batch(r * batch, r * batch + b);
+                    let req_sw = Stopwatch::start();
+                    let out = pool
+                        .submit(x0.clone(), b)
+                        .wait()
+                        .unwrap_or_else(|f| panic!("client {c} request {r} failed: {f}"));
+                    let secs = req_sw.elapsed_secs();
 
-        // validate against the serial engine
-        let serial = infer_batch(&net, &x0, b);
-        let maxerr = out
-            .iter()
-            .zip(serial.iter())
-            .map(|(a, c)| (a - c).abs())
-            .fold(0f32, f32::max);
-        assert!(maxerr < 1e-5, "request {req}: parallel vs serial {maxerr}");
-        let preds = classify_batch(&out, 10, b);
-
-        let edges = net.total_nnz() as f64 * b as f64;
-        total_edges += edges;
-        total_secs += secs;
-        println!(
-            "request {req:>2}: {b} images in {:.1} ms  ({:.2e} edges/s, maxerr {maxerr:.1e}, \
-             {} distinct classes)",
-            secs * 1e3,
-            edges / secs,
-            preds.iter().collect::<std::collections::HashSet<_>>().len()
-        );
+                    // validate against the serial engine
+                    let serial = infer_batch(&net, &x0, b);
+                    let maxerr = out
+                        .iter()
+                        .zip(serial.iter())
+                        .map(|(a, s)| (a - s).abs())
+                        .fold(0f32, f32::max);
+                    assert!(maxerr < 1e-5, "client {c} request {r}: maxerr {maxerr}");
+                    let classes = classify_batch(&out, 10, b)
+                        .into_iter()
+                        .collect::<std::collections::HashSet<_>>()
+                        .len();
+                    println!(
+                        "client {c} req {r:>2}: {b:>3} images in {:.2} ms \
+                         (maxerr {maxerr:.1e}, {classes} distinct classes)",
+                        secs * 1e3
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked");
     }
-    println!(
-        "served {requests} batches on {ranks} ranks: {:.2e} edges/s aggregate",
-        total_edges / total_secs
+    let wall = sw.elapsed_secs();
+
+    let summary = pool.shutdown().expect("pool shutdown");
+    assert!(
+        summary.leaked_ranks.is_empty(),
+        "message leak at shutdown: ranks {:?}",
+        summary.leaked_ranks
     );
+    let s = &summary.stats;
+    println!("--- serving stats ({wall:.2}s wall) ---");
+    println!("{}", s.render());
+    println!(
+        "latency p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms",
+        s.p50_secs * 1e3,
+        s.p95_secs * 1e3,
+        s.p99_secs * 1e3
+    );
+    std::fs::write(&json_path, s.to_json()).expect("write serving json");
+    println!("wrote {json_path}");
 }

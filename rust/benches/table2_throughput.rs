@@ -8,10 +8,13 @@
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::coordinator::sgd::infer_with_plan;
+use spdnn::dnn::inference::infer_batch_parallel;
 use spdnn::experiments::table2;
 use spdnn::partition::{contiguous_partition, CommPlan};
 use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::serving::{PoolConfig, RankPool};
 use spdnn::util::{Rng, Stopwatch};
+use std::time::Duration;
 
 /// Live threaded engine: edges/s of the batched fused-SpMM inference path
 /// at `ranks`, with partition + plan built once (the serving setup cost is
@@ -85,5 +88,60 @@ fn main() {
         "[bench] live N={n} L={l} b={b}: 1 rank {eps1:.2E} edges/s, 4 ranks {eps4:.2E} edges/s \
          (speedup {:.2}x)",
         eps4 / eps1
+    );
+
+    // Persistent rank pool vs per-request respawn: the pool keeps rank
+    // threads + states + plan alive across the stream, the one-shot path
+    // rebuilds partition, plan, states, and threads on every request.
+    // Acceptance bar: pool ≥ 1.3× edges/s at 4 ranks over ≥ 32 requests.
+    println!("# Persistent pool vs one-shot respawn (sustained serving)");
+    let (reqs, pb, pranks) = (if full { 128usize } else { 32 }, 16usize, 4usize);
+    let mut rng = Rng::new(7);
+    let x0: Vec<f32> = (0..net.input_dim() * pb)
+        .map(|_| if rng.gen_bool(0.2) { 1.0 } else { 0.0 })
+        .collect();
+
+    let _ = infer_batch_parallel(&net, &x0, pb, pranks); // warm-up
+    let sw = Stopwatch::start();
+    for _ in 0..reqs {
+        let _ = infer_batch_parallel(&net, &x0, pb, pranks);
+    }
+    let oneshot_secs = sw.elapsed_secs();
+
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: pranks,
+            max_batch: 4 * pb,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+        },
+    );
+    let _ = pool.submit(x0.clone(), pb).wait().expect("warm-up"); // warm-up
+    let sw = Stopwatch::start();
+    let tickets: Vec<_> = (0..reqs).map(|_| pool.submit(x0.clone(), pb)).collect();
+    for t in tickets {
+        let _ = t.wait().expect("pool request failed");
+    }
+    let pool_secs = sw.elapsed_secs();
+    let snap = pool.stats();
+    let _ = pool.shutdown();
+
+    let edges = net.total_nnz() as f64 * (reqs * pb) as f64;
+    println!(
+        "[bench] serving {reqs} requests × b={pb} at {pranks} ranks: \
+         one-shot {:.2E} edges/s, pool {:.2E} edges/s (pool/one-shot {:.2}x)",
+        edges / oneshot_secs,
+        edges / pool_secs,
+        oneshot_secs / pool_secs
+    );
+    println!(
+        "[bench] pool latency p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms \
+         (mean batch {:.1} cols over {} dispatches)",
+        snap.p50_secs * 1e3,
+        snap.p95_secs * 1e3,
+        snap.p99_secs * 1e3,
+        snap.mean_batch,
+        snap.batches
     );
 }

@@ -16,4 +16,4 @@ pub mod worker;
 
 pub use replay::{replay, ReplayConfig, ReplayResult};
 pub use sgd::{infer_distributed, train_distributed, TrainRun};
-pub use worker::RankState;
+pub use worker::{RankScratch, RankState};

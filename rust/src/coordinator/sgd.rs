@@ -102,6 +102,10 @@ pub fn infer_distributed(
 
 /// Same as [`infer_distributed`] with a caller-provided plan — the serving
 /// path reuses one plan across requests (plans never change per input).
+///
+/// This one-shot form builds each rank's state and runs the same
+/// [`RankState::infer_owned_outputs`] body the persistent
+/// [`crate::serving::RankPool`] dispatches to its long-lived rank threads.
 pub fn infer_with_plan(
     net: &SparseNet,
     part: &DnnPartition,
@@ -112,28 +116,27 @@ pub fn infer_with_plan(
     let nparts = part.nparts;
     let run = parallel::run_ranks(nparts, |rank, ep| {
         let mut state = RankState::build(net, part, rank as u32);
-        let full = state.infer_batch(ep, plan, x0, b);
-        // extract owned output rows
-        let owned = state.rows.last().unwrap();
-        owned
-            .iter()
-            .map(|&r| {
-                let r = r as usize;
-                (r as u32, full[r * b..(r + 1) * b].to_vec())
-            })
-            .collect::<Vec<(u32, Vec<f32>)>>()
+        let mut scratch = crate::coordinator::worker::RankScratch::new();
+        state.infer_owned_outputs(ep, plan, x0, b, &mut scratch)
     })
     .unwrap_or_else(|f| panic!("distributed inference failed: {f}"));
 
-    let nl = net.output_dim();
+    let output = assemble_outputs(net.output_dim(), b, &run.outputs);
+    (output, run.sent)
+}
+
+/// Scatter per-rank owned output rows into the global `[nL × b]` row-major
+/// matrix — the driver-side half of the inference rank body, shared by the
+/// one-shot path above and the serving pool's batch completion.
+pub fn assemble_outputs(nl: usize, b: usize, rank_rows: &[Vec<(u32, Vec<f32>)>]) -> Vec<f32> {
     let mut output = vec![0f32; nl * b];
-    for rows in &run.outputs {
+    for rows in rank_rows {
         for (r, vals) in rows {
             let r = *r as usize;
             output[r * b..(r + 1) * b].copy_from_slice(vals);
         }
     }
-    (output, run.sent)
+    output
 }
 
 #[cfg(test)]

@@ -35,6 +35,36 @@ pub struct RankState {
     pub timer: PhaseTimer,
 }
 
+/// Reusable per-rank inference buffers: two full-width ping-pong activation
+/// matrices plus the local row-block SpMM output. Sized lazily to the widest
+/// layer × batch seen so far, so a pool rank thread serving a stream of
+/// requests stops touching the allocator after its first (largest) batch.
+/// The fused SpMM fully overwrites its output rows and the placeholder
+/// invariant (module doc) guarantees unwritten full-width slots are never
+/// read, so the buffers are never re-zeroed.
+#[derive(Default)]
+pub struct RankScratch {
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+    z: Vec<f32>,
+}
+
+impl RankScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, full: usize, local: usize) {
+        if self.ping.len() < full {
+            self.ping.resize(full, 0.0);
+            self.pong.resize(full, 0.0);
+        }
+        if self.z.len() < local {
+            self.z.resize(local, 0.0);
+        }
+    }
+}
+
 impl RankState {
     /// Carve this rank's slice out of the full model.
     pub fn build(net: &SparseNet, part: &DnnPartition, rank: u32) -> Self {
@@ -220,8 +250,8 @@ impl RankState {
 
     /// Inference-only forward for a batch of `b` inputs (SpMM, §5.1).
     /// `x0` is the full input matrix row-major `[n0 × b]`; only owned rows
-    /// are read. Returns the full-width `[nL × b]` buffer with owned rows
-    /// filled.
+    /// are read. Returns the full-width `[nL × b]` buffer — **only owned
+    /// rows are meaningful** (the rest may hold stale scratch contents).
     pub fn infer_batch(
         &mut self,
         ep: &mut Endpoint,
@@ -229,15 +259,37 @@ impl RankState {
         x0: &[f32],
         b: usize,
     ) -> Vec<f32> {
+        let mut scratch = RankScratch::new();
+        self.infer_batch_scratch(ep, plan, x0, b, &mut scratch)
+            .to_vec()
+    }
+
+    /// Allocation-reusing form of [`RankState::infer_batch`]: all activation
+    /// matrices live in the caller's [`RankScratch`], which the serving pool
+    /// keeps per rank thread across requests. Stale values from earlier
+    /// layers/requests may remain in the reused buffers; that is safe under
+    /// the module invariant — a slot is read only if this rank owns it
+    /// (written by the scatter below) or needs it (written by a receive).
+    pub fn infer_batch_scratch<'s>(
+        &mut self,
+        ep: &mut Endpoint,
+        plan: &CommPlan,
+        x0: &[f32],
+        b: usize,
+        scratch: &'s mut RankScratch,
+    ) -> &'s [f32] {
         let depth = self.blocks.len();
-        let mut cur = vec![0f32; self.in_width(0) * b];
+        let maxw = self.dims.iter().copied().max().unwrap_or(0);
+        let maxlocal = self.blocks.iter().map(|w| w.nrows).max().unwrap_or(0);
+        scratch.ensure(maxw * b, maxlocal * b);
         for &j in &self.input_rows {
             let j = j as usize;
-            cur[j * b..(j + 1) * b].copy_from_slice(&x0[j * b..(j + 1) * b]);
+            scratch.ping[j * b..(j + 1) * b].copy_from_slice(&x0[j * b..(j + 1) * b]);
         }
         for k in 0..depth {
             let lp = &plan.layers[k];
             let me = self.rank as usize;
+            let cur = &mut scratch.ping;
             self.timer.time("comm", || {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
@@ -262,17 +314,42 @@ impl RankState {
             let blk = &self.blocks[k];
             let bias = &self.biases[k];
             let act = self.activation;
-            let mut z = vec![0f32; blk.nrows * b];
+            let xin = &scratch.ping[..blk.ncols * b];
+            let z = &mut scratch.z[..blk.nrows * b];
             self.timer.time("spmv", || {
-                blk.spmm_fused_rowmajor(&cur, &mut z, b, act.fused_bias_epilogue(bias));
+                blk.spmm_fused_rowmajor(xin, z, b, act.fused_bias_epilogue(bias));
             });
-            let mut out = vec![0f32; self.dims[k + 1] * b];
             for (i, &r) in self.rows[k].iter().enumerate() {
-                out[r as usize * b..(r as usize + 1) * b].copy_from_slice(&z[i * b..(i + 1) * b]);
+                let r = r as usize;
+                scratch.pong[r * b..(r + 1) * b].copy_from_slice(&scratch.z[i * b..(i + 1) * b]);
             }
-            cur = out;
+            std::mem::swap(&mut scratch.ping, &mut scratch.pong);
         }
-        cur
+        &scratch.ping[..self.dims[depth] * b]
+    }
+
+    /// The per-rank batched-inference body shared by the one-shot engine
+    /// ([`crate::coordinator::sgd::infer_with_plan`]) and the persistent
+    /// serving pool ([`crate::serving::RankPool`]): run the forward SpMM
+    /// pass, then extract this rank's owned output rows as
+    /// `(global row, [b] values)` pairs ready for driver-side assembly.
+    pub fn infer_owned_outputs(
+        &mut self,
+        ep: &mut Endpoint,
+        plan: &CommPlan,
+        x0: &[f32],
+        b: usize,
+        scratch: &mut RankScratch,
+    ) -> Vec<(u32, Vec<f32>)> {
+        let full = self.infer_batch_scratch(ep, plan, x0, b, scratch);
+        let owned = self.rows.last().expect("network has at least one layer");
+        owned
+            .iter()
+            .map(|&r| {
+                let r = r as usize;
+                (r as u32, full[r * b..(r + 1) * b].to_vec())
+            })
+            .collect()
     }
 
     /// Reassemble this rank's rows into a global model (driver-side merge).

@@ -8,19 +8,72 @@ pub fn infer(net: &SparseNet, x0: &[f32]) -> Vec<f32> {
     acts.into_iter().last().unwrap()
 }
 
+/// Two ping-pong activation buffers reused across layers — and, on the
+/// serving path, across requests. Sized lazily to the widest layer of the
+/// networks it has seen; growing a request's batch size just regrows the
+/// buffers once. The fused SpMM fully overwrites its output rows, so the
+/// buffers never need re-zeroing between uses.
+#[derive(Default)]
+pub struct InferScratch {
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+}
+
+impl InferScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, len: usize) {
+        if self.ping.len() < len {
+            self.ping.resize(len, 0.0);
+            self.pong.resize(len, 0.0);
+        }
+    }
+}
+
 /// Batched inference via SpMM (§5.1): inputs row-major `[n0 x b]` where
 /// column j is input j; returns `[nL x b]` row-major. Uses the cache-tiled
 /// SpMM with bias + activation fused into the accumulation pass.
 pub fn infer_batch(net: &SparseNet, x0: &[f32], b: usize) -> Vec<f32> {
+    let mut scratch = InferScratch::new();
+    infer_batch_scratch(net, x0, b, &mut scratch).to_vec()
+}
+
+/// Allocation-free form of [`infer_batch`]: all layer activations live in
+/// the caller's [`InferScratch`], so a request loop touches the allocator
+/// zero times after the first call. Returns the `[nL x b]` output borrowed
+/// from the scratch (valid until its next use).
+pub fn infer_batch_scratch<'s>(
+    net: &SparseNet,
+    x0: &[f32],
+    b: usize,
+    scratch: &'s mut InferScratch,
+) -> &'s [f32] {
     assert_eq!(x0.len(), net.input_dim() * b);
-    let mut cur = x0.to_vec();
+    let maxw = net
+        .layers
+        .iter()
+        .map(|w| w.nrows)
+        .chain(std::iter::once(net.input_dim()))
+        .max()
+        .unwrap_or(0);
+    scratch.ensure(maxw * b);
+    let mut cur_len = x0.len();
+    scratch.ping[..cur_len].copy_from_slice(x0);
     for (k, w) in net.layers.iter().enumerate() {
-        let mut z = vec![0f32; w.nrows * b];
         let epilogue = net.activation.fused_bias_epilogue(&net.biases[k]);
-        w.spmm_fused_rowmajor(&cur, &mut z, b, epilogue);
-        cur = z;
+        let out_len = w.nrows * b;
+        w.spmm_fused_rowmajor(
+            &scratch.ping[..cur_len],
+            &mut scratch.pong[..out_len],
+            b,
+            epilogue,
+        );
+        std::mem::swap(&mut scratch.ping, &mut scratch.pong);
+        cur_len = out_len;
     }
-    cur
+    &scratch.ping[..cur_len]
 }
 
 /// Throughput-oriented batched inference on `nranks` OS threads: carves the
@@ -28,10 +81,11 @@ pub fn infer_batch(net: &SparseNet, x0: &[f32], b: usize) -> Vec<f32> {
 /// tiled SpMM concurrently over the rank-parallel engine. Numerically
 /// identical to [`infer_batch`]; faster whenever cores are available.
 ///
-/// This one-shot form rebuilds the partition and communication plan per
-/// call; request loops should build them once and call
-/// [`crate::coordinator::sgd::infer_with_plan`] instead (see
-/// `examples/inference_serving.rs`).
+/// This one-shot form rebuilds the partition, plan, rank states, and
+/// threads per call; request loops should use the persistent
+/// [`crate::serving::RankPool`] (see `examples/inference_serving.rs`), or
+/// at minimum reuse a plan via
+/// [`crate::coordinator::sgd::infer_with_plan`].
 pub fn infer_batch_parallel(net: &SparseNet, x0: &[f32], b: usize, nranks: usize) -> Vec<f32> {
     assert_eq!(x0.len(), net.input_dim() * b);
     let part = crate::partition::contiguous_partition(&net.layers, nranks);
@@ -117,6 +171,26 @@ mod tests {
             let parallel = infer_batch_parallel(&net, &x0, b, nranks);
             for (a, s) in parallel.iter().zip(serial.iter()) {
                 assert!((a - s).abs() < 1e-5, "nranks={nranks} b={b}");
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_across_requests_matches_fresh() {
+        // One scratch serving a stream of requests with varying batch
+        // sizes must give bit-identical results to fresh allocations.
+        prop::check(|rng| {
+            let net = random_net(rng, &[6, 9, 3, 5]);
+            let mut scratch = InferScratch::new();
+            for _ in 0..4 {
+                let b = 1 + rng.gen_range(7);
+                let x0: Vec<f32> = (0..6 * b).map(|_| rng.gen_f32()).collect();
+                let fresh = infer_batch(&net, &x0, b);
+                let reused = infer_batch_scratch(&net, &x0, b, &mut scratch);
+                assert_eq!(fresh.len(), reused.len());
+                for (a, c) in reused.iter().zip(fresh.iter()) {
+                    assert_eq!(a, c, "b={b}");
+                }
             }
         });
     }

@@ -12,9 +12,11 @@
 //!
 //! The L3 hot path runs on the shared-memory rank-parallel engine
 //! (`runtime::parallel`: one OS thread per rank over the message-passing
-//! fabric), and can optionally execute the AOT artifacts through the PJRT
-//! CPU client (`runtime::pjrt`, feature `pjrt`), with Python never on the
-//! request path.
+//! fabric); request streams are served by the persistent rank pool
+//! (`serving::RankPool`: long-lived rank threads, adaptive micro-batching,
+//! latency stats), and the AOT artifacts can optionally execute through
+//! the PJRT CPU client (`runtime::pjrt`, feature `pjrt`), with Python
+//! never on the request path.
 
 // The CSR kernels and schedule code are index-heavy by nature; explicit
 // ranges over coupled arrays (indptr/indices/vals) read clearer than
@@ -31,5 +33,6 @@ pub mod dnn;
 pub mod experiments;
 pub mod radixnet;
 pub mod runtime;
+pub mod serving;
 pub mod sparse;
 pub mod util;

@@ -14,7 +14,7 @@ pub mod plan;
 pub mod random;
 
 pub use metrics::PartitionMetrics;
-pub use plan::CommPlan;
+pub use plan::{CommPlan, ServingPlan};
 
 use crate::sparse::Csr;
 

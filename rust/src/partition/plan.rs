@@ -157,6 +157,38 @@ impl CommPlan {
     }
 }
 
+/// A partition bundled with its communication plan — everything the serving
+/// path reuses across a stream of requests. Plans depend only on the model
+/// structure (never on inputs), so one `ServingPlan` built at startup is
+/// valid for the lifetime of the weights; both the one-shot
+/// [`crate::coordinator::sgd::infer_with_plan`] path and the persistent
+/// [`crate::serving::RankPool`] consume it.
+#[derive(Debug, Clone)]
+pub struct ServingPlan {
+    pub part: DnnPartition,
+    pub plan: CommPlan,
+}
+
+impl ServingPlan {
+    /// Contiguous nnz-balanced row blocks + plan (the default serving
+    /// partition: zero partitioning latency at pool startup).
+    pub fn contiguous(structure: &[Csr], nranks: usize) -> Self {
+        Self::from_partition(structure, crate::partition::contiguous_partition(structure, nranks))
+    }
+
+    /// Bundle a caller-chosen partition (e.g. hypergraph) with its plan.
+    /// Panics if the partition is invalid for `structure`.
+    pub fn from_partition(structure: &[Csr], part: DnnPartition) -> Self {
+        part.validate(structure).expect("invalid partition");
+        let plan = CommPlan::build(structure, &part);
+        Self { part, plan }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.part.nparts
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

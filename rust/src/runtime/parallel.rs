@@ -129,12 +129,12 @@ where
 
 /// True for failure messages that are consequences of another rank dying
 /// (blocked receivers woken by poisoning, sends to a hung-up peer) rather
-/// than root causes.
-fn is_secondary(message: &str) -> bool {
+/// than root causes. Shared with the serving pool's failure triage.
+pub(crate) fn is_secondary(message: &str) -> bool {
     message.contains("fabric poisoned") || message.contains("peer rank hung up")
 }
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     payload
         .downcast_ref::<String>()
         .cloned()

@@ -1,0 +1,33 @@
+//! Persistent serving subsystem — the "serve heavy traffic" layer on top
+//! of the row-wise partitioned SpMM engine.
+//!
+//! The one-shot engine ([`crate::runtime::parallel`]) rebuilds rank states
+//! and respawns one OS thread per rank on every call; at-scale sparse-DNN
+//! serving gets its throughput by amortizing that setup across a stream of
+//! requests. This module provides:
+//!
+//! - [`RankPool`] — spawns the rank threads **once** per pool generation;
+//!   each thread builds its [`crate::coordinator::RankState`] and scratch
+//!   buffers once and then serves fused batches dispatched over control
+//!   channels, preserving the engine's panic→[`crate::runtime::RankFailure`]
+//!   poisoning semantics (a failed generation is torn down and respawned,
+//!   so one bad request never takes the pool down);
+//! - a request-queue front-end — [`RankPool::submit`] returns a [`Ticket`]
+//!   the caller blocks on ([`Ticket::wait`]) or polls ([`Ticket::poll`]);
+//! - an adaptive micro-batching scheduler — queued requests are coalesced
+//!   into one fused SpMM batch up to [`PoolConfig::max_batch`] columns or
+//!   [`PoolConfig::max_wait`], and the wait window is skipped entirely
+//!   while the observed inter-arrival gap says it cannot fill a batch;
+//! - [`ServingStats`] — throughput counters plus a latency histogram with
+//!   p50/p95/p99 ([`StatsSnapshot`]).
+//!
+//! See `examples/inference_serving.rs` for the end-to-end request loop and
+//! `benches/table2_throughput.rs` for pool-vs-one-shot throughput.
+
+mod pool;
+mod queue;
+mod stats;
+
+pub use pool::{PoolConfig, PoolSummary, RankPool};
+pub use queue::Ticket;
+pub use stats::{LatencyHistogram, ServingStats, StatsSnapshot};

@@ -1,0 +1,590 @@
+//! The long-lived rank pool: rank threads and their [`RankState`]s are
+//! built **once** per pool generation and serve a stream of fused batches
+//! dispatched over control channels — amortizing partition, plan, state
+//! build, and thread spawn across every request, where the one-shot
+//! engine ([`crate::runtime::parallel`]) pays them per call.
+//!
+//! Failure semantics mirror the one-shot engine: a rank panic poisons the
+//! fabric so blocked peers unwind instead of deadlocking, the in-flight
+//! fused batch fails with the root-cause [`RankFailure`], and the poisoned
+//! generation is torn down and respawned — the pool stays serviceable.
+
+use crate::comm::{fabric, Endpoint};
+use crate::coordinator::sgd::assemble_outputs;
+use crate::coordinator::{RankScratch, RankState};
+use crate::dnn::SparseNet;
+use crate::partition::ServingPlan;
+use crate::runtime::parallel::{is_secondary, panic_message};
+use crate::runtime::RankFailure;
+use crate::serving::queue::{effective_wait, Pending, SharedQueue, Ticket};
+use crate::serving::stats::{ServingStats, StatsSnapshot};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Micro-batching and sizing knobs for a [`RankPool`].
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Rank threads (row-block partitions) kept alive by the pool.
+    pub nranks: usize,
+    /// Maximum columns coalesced into one fused SpMM dispatch. A single
+    /// request larger than this is served alone, never split.
+    pub max_batch: usize,
+    /// Longest an under-filled batch is held open waiting for arrivals,
+    /// measured from the oldest queued request's submit time.
+    pub max_wait: Duration,
+    /// Adaptive batching: skip the wait window entirely while the observed
+    /// inter-arrival gap exceeds `max_wait` (sparse traffic cannot fill a
+    /// batch, so holding one open only adds latency).
+    pub adaptive: bool,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            nranks: 4,
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            adaptive: true,
+        }
+    }
+}
+
+/// One fused batch broadcast to every rank of the current generation.
+struct Job {
+    /// `[n0 × b]` row-major fused inputs.
+    x0: Vec<f32>,
+    b: usize,
+    /// Failure-injection: rank index that must panic serving this job.
+    sabotage: Option<usize>,
+}
+
+enum RankCmd {
+    Run(Arc<Job>),
+    Shutdown,
+}
+
+/// Owned output rows of one rank for one job: (global row, `[b]` values).
+type RankRows = Vec<(u32, Vec<f32>)>;
+
+/// Reply of one rank for one job (or the panic/leak message that killed
+/// it).
+type RankReply = (usize, Result<RankRows, String>);
+
+/// One set of live rank threads over one fabric. Discarded and respawned
+/// whenever a request poisons the fabric.
+///
+/// Jobs are strictly serialized: the scheduler collects every rank's reply
+/// (and each rank passes its drained-stash check) before the next job is
+/// dispatched, so reusing the per-layer fabric tags across jobs can never
+/// mismatch messages from different requests.
+struct Generation {
+    cmd_tx: Vec<Sender<RankCmd>>,
+    res_rx: Receiver<RankReply>,
+    /// Extra endpoint never used for traffic: lets the scheduler poison
+    /// the fabric during teardown so nothing can stay blocked in `recv`.
+    observer: Endpoint,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn spawn_generation(net: &Arc<SparseNet>, sp: &Arc<ServingPlan>) -> Generation {
+    let nranks = sp.nranks();
+    let mut endpoints = fabric(nranks + 1);
+    let observer = endpoints.pop().expect("fabric is non-empty");
+    let (res_tx, res_rx) = channel();
+    let mut cmd_tx = Vec::with_capacity(nranks);
+    let mut handles = Vec::with_capacity(nranks);
+    for (rank, ep) in endpoints.into_iter().enumerate() {
+        let (tx, rx) = channel::<RankCmd>();
+        let net = Arc::clone(net);
+        let sp = Arc::clone(sp);
+        let res = res_tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("spdnn-pool-rank-{rank}"))
+            .spawn(move || rank_loop(rank, ep, &net, &sp, &rx, &res))
+            .expect("failed to spawn pool rank thread");
+        cmd_tx.push(tx);
+        handles.push(handle);
+    }
+    Generation {
+        cmd_tx,
+        res_rx,
+        observer,
+        handles,
+    }
+}
+
+/// Long-lived body of one pool rank thread: build the rank state once,
+/// then serve jobs until shutdown or failure. Runs the same
+/// [`RankState::infer_owned_outputs`] body as the one-shot engine, with
+/// the engine's lifecycle invariants (panic → poison + error report,
+/// drained-stash check after every job) enforced per job instead of per
+/// process.
+fn rank_loop(
+    rank: usize,
+    mut ep: Endpoint,
+    net: &SparseNet,
+    sp: &ServingPlan,
+    cmds: &Receiver<RankCmd>,
+    res: &Sender<RankReply>,
+) {
+    let mut state = RankState::build(net, &sp.part, rank as u32);
+    let mut scratch = RankScratch::new();
+    loop {
+        let job = match cmds.recv() {
+            Ok(RankCmd::Run(job)) => job,
+            Ok(RankCmd::Shutdown) | Err(_) => {
+                // Final drain check: a clean generation leaves no messages.
+                let reply = if ep.drained() {
+                    Ok(Vec::new())
+                } else {
+                    Err("unconsumed messages left in stash at shutdown".to_string())
+                };
+                let _ = res.send((rank, reply));
+                return;
+            }
+        };
+        let out = catch_unwind(AssertUnwindSafe(|| {
+            if job.sabotage == Some(rank) {
+                panic!("injected failure on rank {rank}");
+            }
+            state.infer_owned_outputs(&mut ep, &sp.plan, &job.x0, job.b, &mut scratch)
+        }));
+        match out {
+            Ok(rows) => {
+                if ep.drained() {
+                    if res.send((rank, Ok(rows))).is_err() {
+                        return; // pool dropped mid-flight
+                    }
+                } else {
+                    ep.poison();
+                    let msg = "unconsumed messages left in stash".to_string();
+                    let _ = res.send((rank, Err(msg)));
+                    return;
+                }
+            }
+            Err(payload) => {
+                ep.poison();
+                let _ = res.send((rank, Err(panic_message(&payload))));
+                return;
+            }
+        }
+    }
+}
+
+/// Tear down a (possibly poisoned) generation: wake anything still blocked
+/// on the fabric, close the control channels, join every rank thread.
+fn teardown(gen: Generation) {
+    gen.observer.poison();
+    drop(gen.cmd_tx);
+    drop(gen.res_rx);
+    for h in gen.handles {
+        let _ = h.join();
+    }
+}
+
+struct SchedulerReport {
+    leaked_ranks: Vec<usize>,
+}
+
+/// Persistent serving pool over the row-wise partitioned SpMM engine.
+///
+/// ```no_run
+/// use spdnn::radixnet::{generate, RadixNetConfig};
+/// use spdnn::serving::{PoolConfig, RankPool};
+///
+/// let net = generate(&RadixNetConfig::graph_challenge(1024, 12).unwrap());
+/// let pool = RankPool::start(net, PoolConfig::default());
+/// let b = 4;
+/// let ticket = pool.submit(vec![0.0; 1024 * b], b);
+/// let _logits = ticket.wait().expect("served");
+/// let summary = pool.shutdown().unwrap();
+/// assert!(summary.leaked_ranks.is_empty());
+/// ```
+pub struct RankPool {
+    shared: Arc<SharedQueue>,
+    stats: Arc<ServingStats>,
+    scheduler: Mutex<Option<JoinHandle<SchedulerReport>>>,
+    input_dim: usize,
+}
+
+impl RankPool {
+    /// Spawn the pool over a contiguous nnz-balanced partition at
+    /// `cfg.nranks` (zero partitioning latency at startup); rank threads
+    /// and states are built immediately and reused for every request.
+    pub fn start(net: SparseNet, cfg: PoolConfig) -> Self {
+        let sp = ServingPlan::contiguous(&net.layers, cfg.nranks);
+        Self::start_with_plan(net, sp, cfg)
+    }
+
+    /// Spawn the pool over a caller-chosen partition/plan bundle (e.g. a
+    /// hypergraph partition). `cfg.nranks` is ignored in favour of the
+    /// plan's rank count.
+    pub fn start_with_plan(net: SparseNet, sp: ServingPlan, cfg: PoolConfig) -> Self {
+        assert!(sp.nranks() > 0, "pool needs at least one rank");
+        assert!(cfg.max_batch > 0, "max_batch must be positive");
+        let input_dim = net.input_dim();
+        let output_dim = net.output_dim();
+        let edges_per_col = net.total_nnz() as f64;
+        let net = Arc::new(net);
+        let sp = Arc::new(sp);
+        let shared = Arc::new(SharedQueue::default());
+        let stats = Arc::new(ServingStats::new());
+        let sched_shared = Arc::clone(&shared);
+        let sched_stats = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("spdnn-pool-scheduler".to_string())
+            .spawn(move || {
+                scheduler_loop(
+                    net,
+                    sp,
+                    cfg,
+                    sched_shared,
+                    sched_stats,
+                    output_dim,
+                    edges_per_col,
+                )
+            })
+            .expect("failed to spawn pool scheduler");
+        Self {
+            shared,
+            stats,
+            scheduler: Mutex::new(Some(handle)),
+            input_dim,
+        }
+    }
+
+    /// Submit one `[n0 × b]` row-major batch (column j = input j). Returns
+    /// immediately; block on or poll the ticket for the `[nL × b]` output.
+    pub fn submit(&self, x0: Vec<f32>, b: usize) -> Ticket {
+        self.submit_inner(x0, b, None)
+    }
+
+    /// Failure-injection hook for tests: `panic_rank` panics while serving
+    /// the fused batch this request lands in.
+    #[doc(hidden)]
+    pub fn submit_sabotaged(&self, x0: Vec<f32>, b: usize, panic_rank: usize) -> Ticket {
+        self.submit_inner(x0, b, Some(panic_rank))
+    }
+
+    fn submit_inner(&self, x0: Vec<f32>, b: usize, sabotage: Option<usize>) -> Ticket {
+        assert!(b > 0, "batch must be non-empty");
+        assert_eq!(
+            x0.len(),
+            self.input_dim * b,
+            "input must be [n0 × b] row-major"
+        );
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.shutdown {
+                drop(st);
+                panic!("submit after pool shutdown");
+            }
+            st.note_arrival(now);
+            st.queue.push_back(Pending {
+                x0,
+                b,
+                tx,
+                submitted: now,
+                sabotage,
+            });
+        }
+        self.shared.cv.notify_all();
+        Ticket { rx }
+    }
+
+    /// Current counters: throughput, batching efficiency, latency
+    /// percentiles.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Graceful shutdown: every already-queued request is still served,
+    /// then the rank threads exit after a final message-leak check.
+    /// Idempotent — returns `None` on the second call (also invoked by
+    /// `Drop`).
+    pub fn shutdown(&self) -> Option<PoolSummary> {
+        let handle = self.scheduler.lock().unwrap().take()?;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        let report = handle.join().expect("pool scheduler panicked");
+        Some(PoolSummary {
+            stats: self.stats.snapshot(),
+            leaked_ranks: report.leaked_ranks,
+        })
+    }
+}
+
+impl Drop for RankPool {
+    fn drop(&mut self) {
+        // Never panic out of Drop (e.g. while unwinding a failing test):
+        // a scheduler that itself died just loses its final leak report.
+        let _ = catch_unwind(AssertUnwindSafe(|| self.shutdown()));
+    }
+}
+
+/// Final report of a pool lifetime.
+#[derive(Debug, Clone)]
+pub struct PoolSummary {
+    pub stats: StatsSnapshot,
+    /// Ranks whose endpoints still held unconsumed messages at shutdown —
+    /// empty for a healthy pool (the stress tests assert this).
+    pub leaked_ranks: Vec<usize>,
+}
+
+fn scheduler_loop(
+    net: Arc<SparseNet>,
+    sp: Arc<ServingPlan>,
+    cfg: PoolConfig,
+    shared: Arc<SharedQueue>,
+    stats: Arc<ServingStats>,
+    output_dim: usize,
+    edges_per_col: f64,
+) -> SchedulerReport {
+    let mut gen = spawn_generation(&net, &sp);
+    while let Some(batch) = collect_batch(&shared, &cfg) {
+        let nreq = batch.len();
+        let total_cols: usize = batch.iter().map(|p| p.b).sum();
+        let sw = Instant::now();
+        match dispatch(&gen, &batch) {
+            Ok(rank_rows) => {
+                let service_secs = sw.elapsed().as_secs_f64();
+                let out = assemble_outputs(output_dim, total_cols, &rank_rows);
+                let done = Instant::now();
+                // record before replying: a stats() read racing a just-woken
+                // waiter must already see this batch's counters
+                for p in &batch {
+                    stats.record_latency(done.duration_since(p.submitted).as_secs_f64());
+                }
+                stats.record_batch(
+                    nreq,
+                    total_cols,
+                    edges_per_col * total_cols as f64,
+                    service_secs,
+                );
+                // de-interleave the fused columns back per request
+                let mut off = 0usize;
+                for p in &batch {
+                    let mut slice = vec![0f32; output_dim * p.b];
+                    for i in 0..output_dim {
+                        let src = i * total_cols + off;
+                        slice[i * p.b..(i + 1) * p.b]
+                            .copy_from_slice(&out[src..src + p.b]);
+                    }
+                    off += p.b;
+                    let _ = p.tx.send(Ok(slice));
+                }
+            }
+            Err(failure) => {
+                stats.record_failure(nreq);
+                for p in &batch {
+                    let _ = p.tx.send(Err(failure.clone()));
+                }
+                // the fabric is poisoned — respawn the whole generation
+                teardown(gen);
+                gen = spawn_generation(&net, &sp);
+            }
+        }
+    }
+    // graceful shutdown: stop the ranks, collect their final drain checks
+    let nranks = gen.cmd_tx.len();
+    for tx in &gen.cmd_tx {
+        let _ = tx.send(RankCmd::Shutdown);
+    }
+    let mut leaked_ranks = Vec::new();
+    for _ in 0..nranks {
+        match gen.res_rx.recv() {
+            Ok((_, Ok(_))) => {}
+            Ok((rank, Err(_))) => leaked_ranks.push(rank),
+            Err(_) => break,
+        }
+    }
+    for h in gen.handles {
+        let _ = h.join();
+    }
+    leaked_ranks.sort_unstable();
+    SchedulerReport { leaked_ranks }
+}
+
+/// Pop the next micro-batch: block for the first request, then hold the
+/// batch open — up to `max_batch` columns or the adaptive wait deadline —
+/// coalescing FIFO-adjacent requests. `None` once the pool is shutting
+/// down and the queue is drained.
+fn collect_batch(shared: &SharedQueue, cfg: &PoolConfig) -> Option<Vec<Pending>> {
+    let mut st = shared.state.lock().unwrap();
+    let first = loop {
+        if let Some(p) = st.queue.pop_front() {
+            break p;
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = shared.cv.wait(st).unwrap();
+    };
+    let wait = if cfg.adaptive {
+        effective_wait(cfg.max_wait, st.ewma_gap)
+    } else {
+        cfg.max_wait
+    };
+    let deadline = first.submitted + wait;
+    let mut cols = first.b;
+    let mut batch = vec![first];
+    while cols < cfg.max_batch {
+        if let Some(front) = st.queue.front() {
+            if cols + front.b <= cfg.max_batch {
+                let p = st.queue.pop_front().expect("front exists");
+                cols += p.b;
+                batch.push(p);
+                continue;
+            }
+            break; // head-of-line request doesn't fit; keep FIFO order
+        }
+        if st.shutdown {
+            break; // drain fast, don't hold batches open
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+        st = guard;
+    }
+    Some(batch)
+}
+
+/// Broadcast one fused job to every rank and collect their owned output
+/// rows in rank order. Any rank error fails the whole job with the most
+/// informative failure — root causes preferred over secondary unwinds,
+/// exactly like the one-shot engine's triage.
+fn dispatch(gen: &Generation, batch: &[Pending]) -> Result<Vec<RankRows>, RankFailure> {
+    let nranks = gen.cmd_tx.len();
+    let total_cols: usize = batch.iter().map(|p| p.b).sum();
+    let n0 = batch[0].x0.len() / batch[0].b;
+    // interleave the per-request column blocks into one [n0 × B] matrix
+    let mut x0 = vec![0f32; n0 * total_cols];
+    for i in 0..n0 {
+        let mut off = 0usize;
+        for p in batch {
+            let dst = i * total_cols + off;
+            x0[dst..dst + p.b].copy_from_slice(&p.x0[i * p.b..(i + 1) * p.b]);
+            off += p.b;
+        }
+    }
+    let sabotage = batch.iter().find_map(|p| p.sabotage);
+    let job = Arc::new(Job {
+        x0,
+        b: total_cols,
+        sabotage,
+    });
+    for tx in &gen.cmd_tx {
+        if tx.send(RankCmd::Run(Arc::clone(&job))).is_err() {
+            return Err(RankFailure {
+                rank: 0,
+                message: "pool rank thread is gone".to_string(),
+            });
+        }
+    }
+    let mut outputs: Vec<Option<RankRows>> = (0..nranks).map(|_| None).collect();
+    let mut failure: Option<RankFailure> = None;
+    for _ in 0..nranks {
+        match gen.res_rx.recv() {
+            Ok((rank, Ok(rows))) => outputs[rank] = Some(rows),
+            Ok((rank, Err(message))) => {
+                let candidate = RankFailure { rank, message };
+                let better = match &failure {
+                    None => true,
+                    Some(cur) => is_secondary(&cur.message) && !is_secondary(&candidate.message),
+                };
+                if better {
+                    failure = Some(candidate);
+                }
+            }
+            Err(_) => {
+                return Err(failure.unwrap_or_else(|| RankFailure {
+                    rank: 0,
+                    message: "pool rank threads disconnected".to_string(),
+                }))
+            }
+        }
+    }
+    match failure {
+        Some(f) => Err(f),
+        None => Ok(outputs
+            .into_iter()
+            .map(|o| o.expect("every rank reported"))
+            .collect()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::inference::infer_batch;
+    use crate::radixnet::{generate, RadixNetConfig};
+    use crate::util::Rng;
+
+    fn net64() -> SparseNet {
+        generate(&RadixNetConfig::graph_challenge(64, 3).expect("cfg"))
+    }
+
+    fn random_input(rng: &mut Rng, n: usize, b: usize) -> Vec<f32> {
+        (0..n * b)
+            .map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn pool_matches_serial_across_requests() {
+        let net = net64();
+        let pool = RankPool::start(
+            net.clone(),
+            PoolConfig {
+                nranks: 3,
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                adaptive: true,
+            },
+        );
+        let mut rng = Rng::new(11);
+        for req in 0..6 {
+            let b = 1 + (req % 4);
+            let x0 = random_input(&mut rng, 64, b);
+            let out = pool.submit(x0.clone(), b).wait().expect("served");
+            let serial = infer_batch(&net, &x0, b);
+            assert_eq!(out.len(), serial.len());
+            for (a, s) in out.iter().zip(serial.iter()) {
+                assert!((a - s).abs() < 1e-5, "req {req} b={b}");
+            }
+        }
+        let summary = pool.shutdown().expect("first shutdown");
+        assert!(summary.leaked_ranks.is_empty());
+        assert_eq!(summary.stats.requests, 6);
+        assert_eq!(summary.stats.failed_requests, 0);
+        assert!(summary.stats.p50_secs > 0.0);
+        assert!(pool.shutdown().is_none(), "shutdown is idempotent");
+    }
+
+    #[test]
+    fn hypergraph_plan_pool_matches_serial() {
+        use crate::partition::phases::{hypergraph_partition, PhaseConfig};
+        let net = net64();
+        let part = hypergraph_partition(&net.layers, &PhaseConfig::new(4));
+        let sp = ServingPlan::from_partition(&net.layers, part);
+        let pool = RankPool::start_with_plan(net.clone(), sp, PoolConfig::default());
+        let mut rng = Rng::new(3);
+        let b = 5;
+        let x0 = random_input(&mut rng, 64, b);
+        let out = pool.submit(x0.clone(), b).wait().expect("served");
+        let serial = infer_batch(&net, &x0, b);
+        for (a, s) in out.iter().zip(serial.iter()) {
+            assert!((a - s).abs() < 1e-5);
+        }
+    }
+}

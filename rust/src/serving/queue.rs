@@ -1,0 +1,153 @@
+//! Request-queue front-end of the serving pool: submitters push [`Pending`]
+//! entries into a mutex+condvar queue and hold a [`Ticket`] to block on or
+//! poll; the scheduler thread pops and coalesces them into fused batches.
+
+use crate::runtime::RankFailure;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What a ticket resolves to: the `[nL × b]` row-major output, or the
+/// failure of the rank that killed this request's fused batch.
+pub(crate) type Reply = Result<Vec<f32>, RankFailure>;
+
+/// One queued inference request.
+pub(crate) struct Pending {
+    /// `[n0 × b]` row-major inputs.
+    pub x0: Vec<f32>,
+    pub b: usize,
+    /// Reply channel of the submitter's ticket.
+    pub tx: Sender<Reply>,
+    pub submitted: Instant,
+    /// Failure-injection hook: rank index that must panic while serving
+    /// the batch this request lands in (tests only).
+    pub sabotage: Option<usize>,
+}
+
+/// Handle to one submitted request. Block with [`Ticket::wait`] or poll
+/// with [`Ticket::poll`]; dropping it abandons the result harmlessly.
+pub struct Ticket {
+    pub(crate) rx: Receiver<Reply>,
+}
+
+impl Ticket {
+    /// Block until the request completes.
+    pub fn wait(self) -> Result<Vec<f32>, RankFailure> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(RankFailure {
+                rank: 0,
+                message: "pool shut down before the request completed".to_string(),
+            })
+        })
+    }
+
+    /// Non-blocking: `None` while the request is still in flight.
+    pub fn poll(&self) -> Option<Result<Vec<f32>, RankFailure>> {
+        match self.rx.try_recv() {
+            Ok(reply) => Some(reply),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(RankFailure {
+                rank: 0,
+                message: "pool shut down before the request completed".to_string(),
+            })),
+        }
+    }
+}
+
+/// Scheduler-visible queue state, guarded by [`SharedQueue::state`].
+#[derive(Default)]
+pub(crate) struct QueueState {
+    pub queue: VecDeque<Pending>,
+    pub shutdown: bool,
+    /// EWMA of the request inter-arrival gap in seconds — the adaptive
+    /// batching signal. `None` until two arrivals have been observed.
+    pub ewma_gap: Option<f64>,
+    last_arrival: Option<Instant>,
+}
+
+impl QueueState {
+    /// Fold one arrival into the inter-arrival EWMA (α = 0.2).
+    pub fn note_arrival(&mut self, now: Instant) {
+        if let Some(prev) = self.last_arrival {
+            let gap = now.duration_since(prev).as_secs_f64();
+            self.ewma_gap = Some(match self.ewma_gap {
+                Some(e) => 0.8 * e + 0.2 * gap,
+                None => gap,
+            });
+        }
+        self.last_arrival = Some(now);
+    }
+}
+
+/// The queue shared between submitters and the scheduler thread.
+#[derive(Default)]
+pub(crate) struct SharedQueue {
+    pub state: Mutex<QueueState>,
+    pub cv: Condvar,
+}
+
+/// How long the scheduler holds an under-filled batch open waiting for
+/// more arrivals. Adaptive policy: once the observed inter-arrival gap
+/// exceeds `max_wait`, waiting cannot fill the batch — traffic is too
+/// sparse — so dispatch immediately instead of taxing every request with
+/// queueing latency for nothing.
+pub(crate) fn effective_wait(max_wait: Duration, ewma_gap: Option<f64>) -> Duration {
+    match ewma_gap {
+        Some(gap) if gap > max_wait.as_secs_f64() => Duration::ZERO,
+        _ => max_wait,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_wait_dense_traffic_keeps_window() {
+        let w = Duration::from_millis(2);
+        assert_eq!(effective_wait(w, None), w);
+        assert_eq!(effective_wait(w, Some(0.0005)), w);
+    }
+
+    #[test]
+    fn effective_wait_sparse_traffic_skips_window() {
+        let w = Duration::from_millis(2);
+        assert_eq!(effective_wait(w, Some(0.5)), Duration::ZERO);
+    }
+
+    #[test]
+    fn ewma_tracks_arrival_gaps() {
+        let mut st = QueueState::default();
+        let t0 = Instant::now();
+        st.note_arrival(t0);
+        assert!(st.ewma_gap.is_none(), "one arrival gives no gap yet");
+        st.note_arrival(t0 + Duration::from_millis(10));
+        let g1 = st.ewma_gap.expect("gap after two arrivals");
+        assert!((g1 - 0.010).abs() < 1e-9);
+        st.note_arrival(t0 + Duration::from_millis(30));
+        let g2 = st.ewma_gap.unwrap();
+        assert!((g2 - (0.8 * 0.010 + 0.2 * 0.020)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ticket_poll_none_then_value() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let ticket = Ticket { rx };
+        assert!(ticket.poll().is_none());
+        tx.send(Ok(vec![1.0])).unwrap();
+        match ticket.poll() {
+            Some(Ok(v)) => assert_eq!(v, vec![1.0]),
+            other => panic!("unexpected poll result: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_sender_resolves_to_failure() {
+        let (tx, rx) = std::sync::mpsc::channel::<Reply>();
+        drop(tx);
+        let ticket = Ticket { rx };
+        let err = ticket.wait().expect_err("must fail");
+        assert!(err.message.contains("shut down"), "{}", err.message);
+    }
+}

@@ -1,0 +1,311 @@
+//! Serving statistics: throughput counters plus a log-bucketed latency
+//! histogram with p50/p95/p99 extraction. Recorded by the pool scheduler,
+//! readable at any time via [`ServingStats::snapshot`].
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Geometric bucket layout: bucket 0 covers (0, `BUCKET0`], bucket i>0
+/// covers (`BUCKET0`·G^(i-1), `BUCKET0`·G^i] — 1 µs up to ~27 minutes.
+const BUCKET0: f64 = 1e-6;
+const GROWTH: f64 = 1.25;
+const NBUCKETS: usize = 96;
+
+/// Log-bucketed latency histogram over seconds. Constant memory, O(1)
+/// record, quantiles accurate to one bucket (±25 %) — plenty for p50/p95/
+/// p99 serving dashboards without storing per-request samples.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            counts: vec![0; NBUCKETS],
+            total: 0,
+            sum: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        if secs.is_nan() || secs <= BUCKET0 {
+            return 0;
+        }
+        let i = (secs / BUCKET0).ln() / GROWTH.ln();
+        (i.ceil() as usize).min(NBUCKETS - 1)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::bucket_of(secs)] += 1;
+        self.total += 1;
+        self.sum += secs.max(0.0);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Nearest-rank quantile, `q` in [0, 1]: the upper bound of the bucket
+    /// holding the ⌈q·n⌉-th smallest observation. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return BUCKET0 * GROWTH.powi(i as i32);
+            }
+        }
+        BUCKET0 * GROWTH.powi(NBUCKETS as i32 - 1)
+    }
+}
+
+#[derive(Debug, Default)]
+struct StatsInner {
+    requests: u64,
+    failed_requests: u64,
+    batches: u64,
+    pool_rebuilds: u64,
+    columns: u64,
+    edges: f64,
+    busy_secs: f64,
+    latency: LatencyHistogram,
+}
+
+/// Shared, thread-safe serving counters. One instance lives for the whole
+/// pool lifetime; the scheduler thread records, any thread may snapshot.
+pub struct ServingStats {
+    inner: Mutex<StatsInner>,
+    started: Instant,
+}
+
+impl ServingStats {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(StatsInner::default()),
+            started: Instant::now(),
+        }
+    }
+
+    /// One successfully served fused batch: `requests` tickets answered,
+    /// `columns` total SpMM columns, `edges` nnz·columns, `service_secs`
+    /// end-to-end dispatch time (send → all ranks reported).
+    pub(crate) fn record_batch(
+        &self,
+        requests: usize,
+        columns: usize,
+        edges: f64,
+        service_secs: f64,
+    ) {
+        let mut s = self.inner.lock().unwrap();
+        s.requests += requests as u64;
+        s.batches += 1;
+        s.columns += columns as u64;
+        s.edges += edges;
+        s.busy_secs += service_secs;
+    }
+
+    /// Per-request submit→reply latency.
+    pub(crate) fn record_latency(&self, secs: f64) {
+        self.inner.lock().unwrap().latency.record(secs);
+    }
+
+    /// One failed fused batch (`requests` tickets got a `RankFailure`) and
+    /// the generation rebuild it forced.
+    pub(crate) fn record_failure(&self, requests: usize) {
+        let mut s = self.inner.lock().unwrap();
+        s.failed_requests += requests as u64;
+        s.pool_rebuilds += 1;
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let s = self.inner.lock().unwrap();
+        let wall = self.started.elapsed().as_secs_f64();
+        StatsSnapshot {
+            requests: s.requests,
+            failed_requests: s.failed_requests,
+            batches: s.batches,
+            pool_rebuilds: s.pool_rebuilds,
+            columns: s.columns,
+            mean_batch: if s.batches == 0 {
+                0.0
+            } else {
+                s.columns as f64 / s.batches as f64
+            },
+            edges_per_sec: if wall > 0.0 { s.edges / wall } else { 0.0 },
+            edges_per_sec_busy: if s.busy_secs > 0.0 {
+                s.edges / s.busy_secs
+            } else {
+                0.0
+            },
+            p50_secs: s.latency.quantile(0.50),
+            p95_secs: s.latency.quantile(0.95),
+            p99_secs: s.latency.quantile(0.99),
+            mean_latency_secs: s.latency.mean(),
+            wall_secs: wall,
+        }
+    }
+}
+
+impl Default for ServingStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time view of the serving counters.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub failed_requests: u64,
+    /// Fused dispatches; `requests / batches` ≥ 1 shows coalescing.
+    pub batches: u64,
+    /// Generation rebuilds forced by rank failures.
+    pub pool_rebuilds: u64,
+    /// Total SpMM columns served.
+    pub columns: u64,
+    pub mean_batch: f64,
+    /// Aggregate edges/s over wall-clock since pool start.
+    pub edges_per_sec: f64,
+    /// Edges/s over time the ranks were actually serving a batch.
+    pub edges_per_sec_busy: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub p99_secs: f64,
+    pub mean_latency_secs: f64,
+    pub wall_secs: f64,
+}
+
+impl StatsSnapshot {
+    /// Human summary for example/bench output.
+    pub fn render(&self) -> String {
+        format!(
+            "{} requests in {} batches (mean {:.1} cols/batch), {:.2e} edges/s wall \
+             ({:.2e} busy), latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms \
+             (mean {:.2} ms), {} failed, {} rebuilds",
+            self.requests,
+            self.batches,
+            self.mean_batch,
+            self.edges_per_sec,
+            self.edges_per_sec_busy,
+            self.p50_secs * 1e3,
+            self.p95_secs * 1e3,
+            self.p99_secs * 1e3,
+            self.mean_latency_secs * 1e3,
+            self.failed_requests,
+            self.pool_rebuilds,
+        )
+    }
+
+    /// Machine-readable JSON (the CI smoke job writes `BENCH_serving.json`
+    /// from this).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"requests\":{},\"failed_requests\":{},\"batches\":{},\"pool_rebuilds\":{},\
+             \"columns\":{},\"mean_batch\":{:.3},\"edges_per_sec\":{:.1},\
+             \"edges_per_sec_busy\":{:.1},\"p50_ms\":{:.4},\"p95_ms\":{:.4},\
+             \"p99_ms\":{:.4},\"mean_latency_ms\":{:.4},\"wall_secs\":{:.4}}}",
+            self.requests,
+            self.failed_requests,
+            self.batches,
+            self.pool_rebuilds,
+            self.columns,
+            self.mean_batch,
+            self.edges_per_sec,
+            self.edges_per_sec_busy,
+            self.p50_secs * 1e3,
+            self.p95_secs * 1e3,
+            self.p99_secs * 1e3,
+            self.mean_latency_secs * 1e3,
+            self.wall_secs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_bracket_recorded_values() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100u32 {
+            h.record(i as f64 * 1e-3); // 1..100 ms
+        }
+        assert_eq!(h.count(), 100);
+        // bucketed quantiles are exact to one geometric bucket (±25 %)
+        let p50 = h.quantile(0.50);
+        assert!(p50 > 0.035 && p50 < 0.070, "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 > 0.079 && p99 < 0.130, "p99 {p99}");
+        assert!((h.mean() - 0.0505).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantile_monotone_and_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        let mut h = LatencyHistogram::new();
+        h.record(1e-4);
+        h.record(1e-2);
+        h.record(1.0);
+        assert!(h.quantile(0.1) <= h.quantile(0.5));
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn extreme_values_clamp_to_edge_buckets() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(1.0) > 0.0);
+    }
+
+    #[test]
+    fn stats_snapshot_aggregates() {
+        let stats = ServingStats::new();
+        stats.record_batch(3, 12, 1200.0, 0.010);
+        stats.record_batch(1, 4, 400.0, 0.010);
+        stats.record_latency(0.002);
+        stats.record_latency(0.004);
+        stats.record_latency(0.006);
+        stats.record_latency(0.008);
+        stats.record_failure(2);
+        let s = stats.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.failed_requests, 2);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.pool_rebuilds, 1);
+        assert_eq!(s.columns, 16);
+        assert!((s.mean_batch - 8.0).abs() < 1e-9);
+        assert!((s.edges_per_sec_busy - 1600.0 / 0.020).abs() < 1e-6);
+        assert!(s.p50_secs > 0.0 && s.p99_secs >= s.p50_secs);
+        let json = s.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"requests\":4"));
+        assert!(json.contains("\"p99_ms\":"));
+    }
+}

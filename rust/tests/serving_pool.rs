@@ -1,0 +1,221 @@
+//! Integration: the persistent serving pool — multi-threaded stress
+//! against the serial reference, micro-batch coalescing, rank-failure
+//! recovery, and graceful shutdown with the no-message-leak invariant.
+
+use spdnn::dnn::inference::infer_batch;
+use spdnn::dnn::SparseNet;
+use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::serving::{PoolConfig, RankPool};
+use spdnn::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn net64() -> SparseNet {
+    generate(&RadixNetConfig::graph_challenge(64, 3).expect("cfg"))
+}
+
+fn random_input(rng: &mut Rng, n: usize, b: usize) -> Vec<f32> {
+    (0..n * b)
+        .map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 })
+        .collect()
+}
+
+fn assert_matches_serial(net: &SparseNet, x0: &[f32], b: usize, out: &[f32], ctx: &str) {
+    let serial = infer_batch(net, x0, b);
+    assert_eq!(out.len(), serial.len(), "{ctx}: output shape");
+    for (i, (a, s)) in out.iter().zip(serial.iter()).enumerate() {
+        assert!((a - s).abs() < 1e-5, "{ctx}: entry {i}: {a} vs serial {s}");
+    }
+}
+
+/// THE scheduler stress test: 8 client threads × 50 requests each with
+/// mixed batch sizes; every ticket must match the serial engine within
+/// 1e-5 and the pool must shut down without leaking a single message.
+#[test]
+fn stress_eight_clients_fifty_requests_match_serial() {
+    let net = Arc::new(net64());
+    let pool = Arc::new(RankPool::start(
+        (*net).clone(),
+        PoolConfig {
+            nranks: 4,
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            adaptive: true,
+        },
+    ));
+    let clients = 8usize;
+    let requests = 50usize;
+    let sizes = [1usize, 2, 3, 5, 8];
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let net = Arc::clone(&net);
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + c as u64);
+                for r in 0..requests {
+                    let b = sizes[(c + r) % sizes.len()];
+                    let x0 = random_input(&mut rng, 64, b);
+                    let out = pool
+                        .submit(x0.clone(), b)
+                        .wait()
+                        .unwrap_or_else(|f| panic!("client {c} req {r}: {f}"));
+                    assert_matches_serial(&net, &x0, b, &out, &format!("client {c} req {r}"));
+                }
+            })
+        })
+        .collect();
+    let total_cols: usize = (0..clients)
+        .flat_map(|c| (0..requests).map(move |r| sizes[(c + r) % sizes.len()]))
+        .sum();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let summary = pool.shutdown().expect("first shutdown");
+    assert!(
+        summary.leaked_ranks.is_empty(),
+        "messages leaked at shutdown: ranks {:?}",
+        summary.leaked_ranks
+    );
+    let s = &summary.stats;
+    assert_eq!(s.requests, (clients * requests) as u64);
+    assert_eq!(s.failed_requests, 0);
+    assert_eq!(s.pool_rebuilds, 0);
+    assert_eq!(s.columns, total_cols as u64);
+    assert!(s.batches <= s.requests, "batches never exceed requests");
+    assert!(s.p50_secs > 0.0 && s.p99_secs >= s.p50_secs);
+}
+
+/// A burst of single-image requests must be coalesced into far fewer
+/// fused dispatches than requests.
+#[test]
+fn queued_singles_coalesce_into_batches() {
+    let net = net64();
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 2,
+            max_batch: 16,
+            max_wait: Duration::from_millis(200),
+            adaptive: false,
+        },
+    );
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Vec<f32>> = (0..16).map(|_| random_input(&mut rng, 64, 1)).collect();
+    let tickets: Vec<_> = inputs.iter().map(|x0| pool.submit(x0.clone(), 1)).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().expect("served");
+        assert_matches_serial(&net, &inputs[i], 1, &out, &format!("single {i}"));
+    }
+    let summary = pool.shutdown().expect("shutdown");
+    assert!(summary.leaked_ranks.is_empty());
+    assert_eq!(summary.stats.requests, 16);
+    assert!(
+        summary.stats.batches <= 4,
+        "16 back-to-back singles should coalesce, got {} batches",
+        summary.stats.batches
+    );
+    assert!(summary.stats.mean_batch >= 4.0);
+}
+
+/// Satellite regression: a rank panic mid-request fails only that
+/// request's ticket with a root-cause `RankFailure`, and the pool rebuilds
+/// its generation and keeps serving correctly afterwards.
+#[test]
+fn rank_panic_fails_one_request_then_pool_recovers() {
+    let net = net64();
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 4,
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+        },
+    );
+    let mut rng = Rng::new(21);
+
+    // healthy request before the fault
+    let x0 = random_input(&mut rng, 64, 3);
+    let out = pool.submit(x0.clone(), 3).wait().expect("pre-fault request");
+    assert_matches_serial(&net, &x0, 3, &out, "pre-fault");
+
+    // injected fault: rank 2 panics mid-request
+    let x0 = random_input(&mut rng, 64, 2);
+    let err = pool
+        .submit_sabotaged(x0, 2, 2)
+        .wait()
+        .expect_err("sabotaged request must fail");
+    assert_eq!(err.rank, 2, "root cause must not be masked: {}", err.message);
+    assert!(
+        err.message.contains("injected failure"),
+        "unexpected failure message: {}",
+        err.message
+    );
+
+    // the pool must still be fully serviceable afterwards
+    for r in 0..5 {
+        let b = 1 + (r % 3);
+        let x0 = random_input(&mut rng, 64, b);
+        let out = pool
+            .submit(x0.clone(), b)
+            .wait()
+            .unwrap_or_else(|f| panic!("post-fault request {r}: {f}"));
+        assert_matches_serial(&net, &x0, b, &out, &format!("post-fault {r}"));
+    }
+
+    let summary = pool.shutdown().expect("shutdown");
+    assert!(summary.leaked_ranks.is_empty(), "post-recovery leak");
+    assert_eq!(summary.stats.failed_requests, 1);
+    assert_eq!(summary.stats.pool_rebuilds, 1);
+    assert_eq!(summary.stats.requests, 6, "only successful requests count");
+}
+
+/// Graceful shutdown: requests already queued when shutdown is requested
+/// are still served (and correctly).
+#[test]
+fn shutdown_drains_queued_requests() {
+    let net = net64();
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            adaptive: false,
+        },
+    );
+    let mut rng = Rng::new(33);
+    let inputs: Vec<Vec<f32>> = (0..12).map(|_| random_input(&mut rng, 64, 2)).collect();
+    let tickets: Vec<_> = inputs.iter().map(|x0| pool.submit(x0.clone(), 2)).collect();
+    let summary = pool.shutdown().expect("shutdown");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().expect("queued request served during drain");
+        assert_matches_serial(&net, &inputs[i], 2, &out, &format!("drained {i}"));
+    }
+    assert_eq!(summary.stats.requests, 12);
+    assert!(summary.leaked_ranks.is_empty());
+}
+
+/// A request larger than `max_batch` is served alone (never split) and
+/// still matches serial.
+#[test]
+fn oversized_request_served_alone() {
+    let net = net64();
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 3,
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+        },
+    );
+    let mut rng = Rng::new(5);
+    let b = 10;
+    let x0 = random_input(&mut rng, 64, b);
+    let out = pool.submit(x0.clone(), b).wait().expect("served");
+    assert_matches_serial(&net, &x0, b, &out, "oversized");
+    let summary = pool.shutdown().expect("shutdown");
+    assert_eq!(summary.stats.batches, 1);
+    assert_eq!(summary.stats.columns, b as u64);
+}
