@@ -16,6 +16,7 @@
 //!        [--neurons 1024] [--layers 12] [--max-batch 128] \
 //!        [--max-wait-us 500] [--json BENCH_serving.json]`
 
+use spdnn::coordinator::ExecMode;
 use spdnn::data::synthetic_mnist;
 use spdnn::dnn::inference::{classify_batch, infer_batch};
 use spdnn::radixnet::{generate, RadixNetConfig};
@@ -60,6 +61,7 @@ fn main() {
             max_batch,
             max_wait: Duration::from_micros(max_wait_us),
             adaptive: true,
+            mode: ExecMode::Overlap,
         },
     ));
 

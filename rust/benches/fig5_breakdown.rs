@@ -23,4 +23,13 @@ fn main() {
         println!("{}", fig5_breakdown::render(n, &bars));
         println!("[bench] N={n}: computed in {secs:.2}s\n");
     }
+
+    // Live engines on real threads: how much of the blocking schedule's
+    // receive stall does the split-CSR overlapped engine hide?
+    println!("# Live blocking-vs-overlap training breakdown (real threads)");
+    let (n, l, p, samples) = if full { (4096, 24, 8, 32) } else { (1024, 12, 4, 16) };
+    let sw = Stopwatch::start();
+    let live = fig5_breakdown::run_live(n, l, p, samples, 1);
+    println!("{}", fig5_breakdown::render_live(&live));
+    println!("[bench] live N={n} L={l} P={p}: measured in {:.2}s", sw.elapsed_secs());
 }

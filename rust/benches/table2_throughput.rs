@@ -1,20 +1,94 @@
 //! Bench/regenerator for **Table 2**: inference throughput (edges/s),
 //! H-SpFF (model-parallel) vs GB (data-parallel GraphBLAS-style baseline),
-//! plus a **live** section measuring the threaded rank-parallel engine's
-//! batched SpMM path at 1 vs 4 ranks on real OS threads.
+//! plus **live** sections measuring the threaded rank-parallel engine's
+//! batched SpMM path at 1 vs 4 ranks on real OS threads and the split-CSR
+//! **overlap-vs-blocking** speedup on the bundled digits workload.
 //!
 //! `cargo bench --bench table2_throughput` — `SPDNN_FULL=1` adds the
-//! deeper (480/1920-layer) configurations of the paper.
+//! deeper (480/1920-layer) configurations of the paper;
+//! `SPDNN_SECTION=overlap` runs only the overlap-vs-blocking section
+//! (the CI bench-smoke path), and `SPDNN_ENFORCE=1` fails the run if the
+//! overlapped engine does not beat the blocking engine by ≥ 1.15× at
+//! 4 ranks.
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::coordinator::sgd::infer_with_plan;
+use spdnn::coordinator::{ExecMode, RankScratch, RankState};
+use spdnn::data::synthetic_mnist;
 use spdnn::dnn::inference::infer_batch_parallel;
 use spdnn::experiments::table2;
 use spdnn::partition::{contiguous_partition, CommPlan};
 use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::runtime::parallel::run_ranks;
 use spdnn::serving::{PoolConfig, RankPool};
 use spdnn::util::{Rng, Stopwatch};
 use std::time::Duration;
+
+/// Acceptance bar for the overlapped engine at 4 ranks (enforced in the
+/// CI bench-smoke job via `SPDNN_ENFORCE=1`).
+const OVERLAP_BAR: f64 = 1.15;
+
+/// Overlap-vs-blocking on the bundled digits workload: the same net,
+/// partition, plan, and digit batch pushed through both engines; edges/s
+/// of the better of `reps` passes per engine (alternating, so OS noise
+/// hits both evenly). Writes `BENCH_overlap.json`.
+fn overlap_section(full: bool, enforce: bool) {
+    let (n, l, ranks) = (1024usize, 24usize, 4usize);
+    let b = 16usize; // small batches keep the per-layer sync cost visible
+    let passes = if full { 128usize } else { 48 };
+    let reps = 3usize;
+    println!("# Overlap vs blocking (split-CSR, digits workload, {ranks} ranks)");
+    let net = generate(&RadixNetConfig::graph_challenge(n, l).expect("cfg"));
+    let side = (n as f64).sqrt() as usize;
+    let data = synthetic_mnist(side, b, 42);
+    let (x0, b) = data.pack_batch(0, b);
+    let part = contiguous_partition(&net.layers, ranks);
+    let plan = CommPlan::build(&net.layers, &part);
+
+    // Steady-state serving loop, like a pool generation: rank threads,
+    // states, and scratch built once per engine, only the per-pass layer
+    // schedule on the clock. Wall time = slowest rank's loop.
+    let eps_of = |mode: ExecMode| -> f64 {
+        let run = run_ranks(ranks, |rank, ep| {
+            let mut state = RankState::build(&net, &part, &plan, rank as u32, mode);
+            let mut scratch = RankScratch::new();
+            let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch); // warm-up
+            let sw = Stopwatch::start();
+            for _ in 0..passes {
+                let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch);
+            }
+            sw.elapsed_secs()
+        })
+        .expect("overlap bench run failed");
+        let secs = run.outputs.into_iter().fold(0f64, f64::max);
+        net.total_nnz() as f64 * (passes * b) as f64 / secs
+    };
+    let mut eps_block = 0f64;
+    let mut eps_overlap = 0f64;
+    for _ in 0..reps {
+        eps_block = eps_block.max(eps_of(ExecMode::Blocking));
+        eps_overlap = eps_overlap.max(eps_of(ExecMode::Overlap));
+    }
+    let speedup = eps_overlap / eps_block;
+    println!(
+        "[bench] overlap N={n} L={l} b={b} ranks={ranks}: blocking {eps_block:.2E} edges/s, \
+         overlap {eps_overlap:.2E} edges/s (speedup {speedup:.2}x, bar {OVERLAP_BAR}x)"
+    );
+    let json = format!(
+        "{{\"neurons\":{n},\"layers\":{l},\"batch\":{b},\"ranks\":{ranks},\
+         \"passes\":{passes},\"blocking_eps\":{eps_block:.1},\
+         \"overlap_eps\":{eps_overlap:.1},\"speedup\":{speedup:.4},\
+         \"bar\":{OVERLAP_BAR}}}"
+    );
+    std::fs::write("BENCH_overlap.json", &json).expect("write BENCH_overlap.json");
+    println!("wrote BENCH_overlap.json: {json}");
+    if enforce {
+        assert!(
+            speedup >= OVERLAP_BAR,
+            "overlap speedup {speedup:.3}x below the {OVERLAP_BAR}x bar"
+        );
+    }
+}
 
 /// Live threaded engine: edges/s of the batched fused-SpMM inference path
 /// at `ranks`, with partition + plan built once (the serving setup cost is
@@ -41,6 +115,12 @@ fn live_parallel_eps(net: &spdnn::dnn::SparseNet, b: usize, inputs: usize, ranks
 
 fn main() {
     let full = std::env::var("SPDNN_FULL").is_ok();
+    let enforce = std::env::var("SPDNN_ENFORCE").is_ok();
+    if std::env::var("SPDNN_SECTION").as_deref() == Ok("overlap") {
+        // CI bench-smoke path: just the overlap-vs-blocking bar
+        overlap_section(full, enforce);
+        return;
+    }
     // (neurons, layers) grid; the paper runs L ∈ {120, 480, 1920} at each N
     let grid: Vec<(usize, usize)> = if full {
         let mut g = Vec::new();
@@ -115,6 +195,7 @@ fn main() {
             max_batch: 4 * pb,
             max_wait: Duration::ZERO,
             adaptive: false,
+            mode: ExecMode::Overlap,
         },
     );
     let _ = pool.submit(x0.clone(), pb).wait().expect("warm-up"); // warm-up
@@ -144,4 +225,7 @@ fn main() {
         snap.mean_batch,
         snap.batches
     );
+
+    println!();
+    overlap_section(full, enforce);
 }

@@ -12,7 +12,7 @@
 //! every peer blocked in [`Endpoint::recv`] wakes up and unwinds instead of
 //! deadlocking on a message that will never arrive.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -41,13 +41,27 @@ type Key = (u32, Phase, u32, u32); // layer, phase, from, transfer
 /// How long a blocked receive sleeps between checks of the fault flag.
 const FAULT_POLL: Duration = Duration::from_millis(50);
 
+/// Cap on recycled payload buffers kept per endpoint (bounds memory while
+/// still covering every in-flight transfer of a layer step).
+const MAX_SPARE_BUFS: usize = 32;
+
 /// Per-rank endpoint.
 pub struct Endpoint {
     pub rank: u32,
     senders: Vec<Sender<Msg>>,
     inbox: Receiver<Msg>,
-    stash: HashMap<Key, Vec<f32>>,
+    /// Out-of-order arrivals, FIFO **per tag**: unsynchronized steady-state
+    /// loops (e.g. a rank lapping a slower peer in a forward-only request
+    /// stream) legitimately put two messages with the same tag in flight,
+    /// and per-sender channel order guarantees the earlier pass's payload
+    /// is queued first.
+    stash: HashMap<Key, VecDeque<Vec<f32>>>,
     fault: Arc<AtomicBool>,
+    /// Recycled payload buffers: consumed receives return their allocation
+    /// here and send sites reuse it, so a steady-state layer loop (and a
+    /// pool rank serving a stream of requests) stops touching the
+    /// allocator for payloads entirely.
+    spare: Vec<Vec<f32>>,
     /// Counters: words sent, messages sent.
     pub sent_words: u64,
     pub sent_msgs: u64,
@@ -71,12 +85,30 @@ impl Endpoint {
             .expect("peer rank hung up");
     }
 
-    /// Blocking receive of the uniquely-tagged message; out-of-order
-    /// arrivals for other tags are stashed. Panics if the fabric is
-    /// poisoned while waiting (a peer rank failed).
+    /// Pop the oldest stashed payload for `key`, dropping empty queues so
+    /// [`Endpoint::drained`] stays a plain emptiness check.
+    fn stash_pop(&mut self, key: &Key) -> Option<Vec<f32>> {
+        let (payload, now_empty) = match self.stash.get_mut(key) {
+            Some(q) => (q.pop_front(), q.is_empty()),
+            None => return None,
+        };
+        if now_empty {
+            self.stash.remove(key);
+        }
+        payload
+    }
+
+    fn stash_push(&mut self, key: Key, payload: Vec<f32>) {
+        self.stash.entry(key).or_default().push_back(payload);
+    }
+
+    /// Blocking receive of the tagged message (oldest first if the tag is
+    /// in flight more than once); out-of-order arrivals for other tags are
+    /// stashed. Panics if the fabric is poisoned while waiting (a peer
+    /// rank failed).
     pub fn recv(&mut self, from: u32, layer: u32, phase: Phase, transfer: u32) -> Vec<f32> {
         let key: Key = (layer, phase, from, transfer);
-        if let Some(p) = self.stash.remove(&key) {
+        if let Some(p) = self.stash_pop(&key) {
             return p;
         }
         loop {
@@ -86,7 +118,7 @@ impl Endpoint {
                     if k == key {
                         return m.payload;
                     }
-                    self.stash.insert(k, m.payload);
+                    self.stash_push(k, m.payload);
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if self.poisoned() {
@@ -100,6 +132,91 @@ impl Endpoint {
                     panic!("fabric closed while receiving");
                 }
             }
+        }
+    }
+
+    /// Non-blocking receive: the payload if the uniquely-tagged message is
+    /// already here (stashed or sitting in the channel), else `None`.
+    /// Everything drained from the channel on the way is stashed, so no
+    /// message is ever lost to a miss.
+    pub fn try_recv(
+        &mut self,
+        from: u32,
+        layer: u32,
+        phase: Phase,
+        transfer: u32,
+    ) -> Option<Vec<f32>> {
+        let key: Key = (layer, phase, from, transfer);
+        if let Some(p) = self.stash_pop(&key) {
+            return Some(p);
+        }
+        while let Ok(m) = self.inbox.try_recv() {
+            let k: Key = (m.layer, m.phase, m.from, m.transfer);
+            if k == key {
+                return Some(m.payload);
+            }
+            self.stash_push(k, m.payload);
+        }
+        None
+    }
+
+    /// Block until **any** of the wanted `(from, transfer)` messages of
+    /// `(layer, phase)` arrives; returns its index in `wants` plus the
+    /// payload. Arrival order, not plan order — the overlapped engine
+    /// applies each remote segment the moment its activations land.
+    /// Panics if the fabric is poisoned while waiting.
+    pub fn recv_any(
+        &mut self,
+        layer: u32,
+        phase: Phase,
+        wants: &[(u32, u32)],
+    ) -> (usize, Vec<f32>) {
+        assert!(!wants.is_empty(), "recv_any needs at least one want");
+        for (i, &(from, transfer)) in wants.iter().enumerate() {
+            let key: Key = (layer, phase, from, transfer);
+            if let Some(p) = self.stash_pop(&key) {
+                return (i, p);
+            }
+        }
+        loop {
+            match self.inbox.recv_timeout(FAULT_POLL) {
+                Ok(m) => {
+                    if m.layer == layer && m.phase == phase {
+                        if let Some(i) = wants
+                            .iter()
+                            .position(|&(f, t)| f == m.from && t == m.transfer)
+                        {
+                            return (i, m.payload);
+                        }
+                    }
+                    self.stash_push((m.layer, m.phase, m.from, m.transfer), m.payload);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.poisoned() {
+                        panic!(
+                            "fabric poisoned: a peer rank failed while rank {} waited",
+                            self.rank
+                        );
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("fabric closed while receiving");
+                }
+            }
+        }
+    }
+
+    /// An empty payload buffer, reusing a recycled allocation when one is
+    /// available. Pair with [`Endpoint::recycle`] on the receive side.
+    pub fn take_buf(&mut self) -> Vec<f32> {
+        self.spare.pop().unwrap_or_default()
+    }
+
+    /// Return a consumed payload's allocation for reuse by later sends.
+    pub fn recycle(&mut self, mut buf: Vec<f32>) {
+        if self.spare.len() < MAX_SPARE_BUFS {
+            buf.clear();
+            self.spare.push(buf);
         }
     }
 
@@ -118,8 +235,7 @@ impl Endpoint {
     /// messages that were sent but never received also count as leaks.
     pub fn drained(&mut self) -> bool {
         while let Ok(m) = self.inbox.try_recv() {
-            self.stash
-                .insert((m.layer, m.phase, m.from, m.transfer), m.payload);
+            self.stash_push((m.layer, m.phase, m.from, m.transfer), m.payload);
         }
         self.stash.is_empty()
     }
@@ -144,6 +260,7 @@ pub fn fabric(n: usize) -> Vec<Endpoint> {
             inbox,
             stash: HashMap::new(),
             fault: fault.clone(),
+            spare: Vec::new(),
             sent_words: 0,
             sent_msgs: 0,
         })
@@ -217,6 +334,110 @@ mod tests {
             let expect: f32 = (0..n as u32).filter(|&x| x != i as u32).map(|x| x as f32).sum();
             assert_eq!(sum, expect);
         }
+    }
+
+    #[test]
+    fn try_recv_misses_then_hits_and_stashes() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        assert!(e0.try_recv(1, 0, Phase::Forward, 0).is_none());
+        e1.send(0, 1, Phase::Forward, 5, vec![9.0]); // wrong tag: stashed
+        e1.send(0, 0, Phase::Forward, 0, vec![1.0, 2.0]);
+        // give the in-process channel a moment to flush
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let p = loop {
+            if let Some(p) = e0.try_recv(1, 0, Phase::Forward, 0) {
+                break p;
+            }
+            assert!(std::time::Instant::now() < deadline, "message never arrived");
+            std::thread::yield_now();
+        };
+        assert_eq!(p, vec![1.0, 2.0]);
+        // the mis-tagged message was stashed, not dropped
+        assert_eq!(e0.recv(1, 1, Phase::Forward, 5), vec![9.0]);
+        assert!(e0.drained());
+    }
+
+    #[test]
+    fn recv_any_returns_in_arrival_order() {
+        let mut eps = fabric(3);
+        let mut e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // rank 2 sends immediately; rank 1 sends late
+        let t2 = std::thread::spawn(move || e2.send(0, 0, Phase::Forward, 7, vec![2.0]));
+        let t1 = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            e1.send(0, 0, Phase::Forward, 3, vec![1.0]);
+        });
+        let wants = [(1u32, 3u32), (2u32, 7u32)];
+        let (i, p) = e0.recv_any(0, Phase::Forward, &wants);
+        assert_eq!((i, p), (1, vec![2.0]), "late sender must not block the early one");
+        let (i, p) = e0.recv_any(0, Phase::Forward, &wants);
+        assert_eq!((i, p), (0, vec![1.0]));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        assert!(e0.drained());
+    }
+
+    #[test]
+    fn recv_any_checks_stash_and_ignores_other_tags() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, 9, Phase::Backward, 0, vec![5.0]); // unrelated tag
+        e1.send(0, 2, Phase::Forward, 1, vec![6.0]);
+        // blocking recv of the unrelated tag stashes the wanted one
+        assert_eq!(e0.recv(1, 9, Phase::Backward, 0), vec![5.0]);
+        let (i, p) = e0.recv_any(2, Phase::Forward, &[(1, 1)]);
+        assert_eq!((i, p), (0, vec![6.0]));
+        assert!(e0.drained());
+    }
+
+    #[test]
+    fn duplicate_tags_deliver_in_fifo_order() {
+        // A rank lapping a slower peer reuses tags; the stash must queue
+        // duplicates (never overwrite) and deliver oldest-first.
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, 0, Phase::Forward, 0, vec![1.0]); // pass 1
+        e1.send(0, 0, Phase::Forward, 0, vec![2.0]); // pass 2, same tag
+        e1.send(0, 1, Phase::Forward, 0, vec![9.0]);
+        // receiving the unrelated tag stashes BOTH same-key duplicates
+        assert_eq!(e0.recv(1, 1, Phase::Forward, 0), vec![9.0]);
+        assert_eq!(e0.recv(1, 0, Phase::Forward, 0), vec![1.0]);
+        assert_eq!(e0.try_recv(1, 0, Phase::Forward, 0), Some(vec![2.0]));
+        assert!(e0.drained());
+        // and via recv_any too
+        e1.send(0, 2, Phase::Backward, 3, vec![4.0]);
+        e1.send(0, 2, Phase::Backward, 3, vec![5.0]);
+        e1.send(0, 7, Phase::Forward, 0, vec![8.0]);
+        assert_eq!(e0.recv(1, 7, Phase::Forward, 0), vec![8.0]);
+        let wants = [(1u32, 3u32)];
+        assert_eq!(e0.recv_any(2, Phase::Backward, &wants), (0, vec![4.0]));
+        assert_eq!(e0.recv_any(2, Phase::Backward, &wants), (0, vec![5.0]));
+        assert!(e0.drained());
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused_and_bounded() {
+        let mut eps = fabric(1);
+        let mut e = eps.pop().unwrap();
+        let mut buf = e.take_buf();
+        assert!(buf.is_empty());
+        buf.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let cap = buf.capacity();
+        e.recycle(buf);
+        let again = e.take_buf();
+        assert!(again.is_empty());
+        assert_eq!(again.capacity(), cap, "allocation must be reused");
+        e.recycle(again);
+        for _ in 0..100 {
+            e.recycle(Vec::with_capacity(8));
+        }
+        assert!(e.spare.len() <= MAX_SPARE_BUFS);
     }
 
     #[test]

@@ -10,16 +10,18 @@
 //! batch-mean activations. For batch = 1 this reduces bit-for-bit to the
 //! per-sample step (tested).
 
-use super::worker::RankState;
+use super::worker::{ExecMode, RankState, Repr};
 use crate::comm::{Endpoint, Phase};
 use crate::dnn::SparseNet;
 use crate::partition::{CommPlan, DnnPartition};
 use crate::runtime::parallel;
 
 impl RankState {
-    /// Batched forward that also returns the per-layer **batch-mean**
-    /// activation buffers (x̄^0..x̄^L), which drive the single-vector SpBP.
-    /// `x0` row-major `[n0 × b]`.
+    /// Batched forward on the **blocking** engine that also returns the
+    /// per-layer **batch-mean** activation buffers (x̄^0..x̄^L), which
+    /// drive the single-vector SpBP. `x0` row-major `[n0 × b]`. Panics on
+    /// an overlap-mode state (its compact mirror lives in
+    /// [`RankState::train_step_minibatch`]'s overlap arm).
     pub fn forward_batch_with_means(
         &mut self,
         ep: &mut Endpoint,
@@ -27,26 +29,35 @@ impl RankState {
         x0: &[f32],
         b: usize,
     ) -> (Vec<f32>, Vec<Vec<f32>>) {
-        let depth = self.blocks.len();
+        let depth = self.depth();
         let mut means: Vec<Vec<f32>> = Vec::with_capacity(depth + 1);
         let mut cur = vec![0f32; self.dims[0] * b];
         for &j in &self.input_rows {
             let j = j as usize;
             cur[j * b..(j + 1) * b].copy_from_slice(&x0[j * b..(j + 1) * b]);
         }
+        let blocks = match &self.repr {
+            Repr::Full { blocks } => blocks,
+            Repr::Split { .. } => {
+                panic!("forward_batch_with_means requires ExecMode::Blocking")
+            }
+        };
         for k in 0..depth {
             let lp = &plan.layers[k];
             let me = self.rank as usize;
             self.timer.time("comm", || {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
-                    let mut payload = Vec::with_capacity(t.indices.len() * b);
+                    let mut payload = ep.take_buf();
+                    payload.reserve(t.indices.len() * b);
                     for &j in &t.indices {
                         let j = j as usize;
                         payload.extend_from_slice(&cur[j * b..(j + 1) * b]);
                     }
                     ep.send(t.to, k as u32, Phase::Forward, tid, payload);
                 }
+            });
+            self.timer.time("wait", || {
                 for &tid in &lp.recv_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.from, k as u32, Phase::Forward, tid);
@@ -54,12 +65,13 @@ impl RankState {
                         let j = j as usize;
                         cur[j * b..(j + 1) * b].copy_from_slice(&payload[i * b..(i + 1) * b]);
                     }
+                    ep.recycle(payload);
                 }
             });
             // x̄^{k}: mean input to weight layer k INCLUDING entries just
             // received — the weight update (∇W = δ ⊗ x̄) needs them.
             means.push(row_means(&cur, b));
-            let blk = &self.blocks[k];
+            let blk = &blocks[k];
             let bias = &self.biases[k];
             let act = self.activation;
             let mut z = vec![0f32; blk.nrows * b];
@@ -83,7 +95,7 @@ impl RankState {
 
     /// One minibatch SGD step (§5.1): batched SpFF + batch-averaged δ^L +
     /// single-vector SpBP over the batch-mean activations. Returns this
-    /// rank's partial (batch-averaged) loss.
+    /// rank's partial (batch-averaged) loss. Dispatches on the build mode.
     pub fn train_step_minibatch(
         &mut self,
         ep: &mut Endpoint,
@@ -93,7 +105,23 @@ impl RankState {
         b: usize,
         eta: f32,
     ) -> f32 {
-        let depth = self.blocks.len();
+        match self.repr {
+            Repr::Full { .. } => self.train_step_minibatch_blocking(ep, plan, x0, y, b, eta),
+            Repr::Split { .. } => self.train_step_overlap(ep, plan, x0, y, b, eta),
+        }
+    }
+
+    /// Blocking-engine minibatch step (the seed schedule).
+    fn train_step_minibatch_blocking(
+        &mut self,
+        ep: &mut Endpoint,
+        plan: &CommPlan,
+        x0: &[f32],
+        y: &[f32],
+        b: usize,
+        eta: f32,
+    ) -> f32 {
+        let depth = self.depth();
         let (xl, means) = self.forward_batch_with_means(ep, plan, x0, b);
 
         // δ^L averaged over the batch (Eq. 6, then mean over columns)
@@ -114,34 +142,39 @@ impl RankState {
         }
 
         // single-vector SpBP over mean activations (paper §5.1)
+        let blocks = match &mut self.repr {
+            Repr::Full { blocks } => blocks,
+            Repr::Split { .. } => unreachable!("dispatched on Full"),
+        };
         for k in (0..depth).rev() {
             let lp = &plan.layers[k];
             let me = self.rank as usize;
-            let mut s = vec![0f32; self.blocks[k].ncols];
+            let mut s = vec![0f32; blocks[k].ncols];
             self.timer.time("spmv", || {
-                self.blocks[k].spmv_t_add(&delta, &mut s);
+                blocks[k].spmv_t_add(&delta, &mut s);
             });
             self.timer.time("comm", || {
                 for &tid in &lp.recv_of[me] {
                     let t = &lp.transfers[tid as usize];
-                    let payload: Vec<f32> =
-                        t.indices.iter().map(|&j| s[j as usize]).collect();
+                    let mut payload = ep.take_buf();
+                    payload.extend(t.indices.iter().map(|&j| s[j as usize]));
                     ep.send(t.from, k as u32, Phase::Backward, tid, payload);
                 }
             });
             self.timer.time("updt", || {
-                self.blocks[k].sgd_update(&delta, &means[k], eta);
+                blocks[k].sgd_update(&delta, &means[k], eta);
             });
             for (i, d) in delta.iter().enumerate() {
                 self.biases[k][i] -= eta * d;
             }
-            self.timer.time("comm", || {
+            self.timer.time("wait", || {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.to, k as u32, Phase::Backward, tid);
                     for (i, &j) in t.indices.iter().enumerate() {
                         s[j as usize] += payload[i];
                     }
+                    ep.recycle(payload);
                 }
             });
             if k > 0 {
@@ -158,8 +191,9 @@ impl RankState {
     }
 }
 
-/// Row means of a row-major `[n × b]` buffer.
-fn row_means(x: &[f32], b: usize) -> Vec<f32> {
+/// Row means of a row-major `[n × b]` buffer (shared with the overlapped
+/// engine, which feeds it compact activations and retained payloads).
+pub(crate) fn row_means(x: &[f32], b: usize) -> Vec<f32> {
     let n = x.len() / b;
     let inv = 1.0 / b as f32;
     (0..n)
@@ -201,7 +235,7 @@ pub fn train_distributed_minibatch(
     let ybatches: Vec<Vec<f32>> = (0..nbatches).map(|i| pack(targets, nl, i * b)).collect();
 
     let run = parallel::run_ranks(nparts, |rank, ep| {
-        let mut state = RankState::build(net, part, rank as u32);
+        let mut state = RankState::build(net, part, &plan, rank as u32, ExecMode::Overlap);
         let mut losses = Vec::with_capacity(steps);
         for _ in 0..epochs {
             for (x, y) in xbatches.iter().zip(ybatches.iter()) {

@@ -1,6 +1,9 @@
 //! L3 coordinator — the paper's system contribution.
 //!
-//! - [`worker`]: rank-local state + the SpFF/SpBP step logic (Alg. 2–3);
+//! - [`worker`]: rank-local state + the SpFF/SpBP step logic (Alg. 2–3),
+//!   with the blocking (full-width) engine and the mode dispatch;
+//! - [`overlap`]: the split-CSR overlapped engine — local-segment compute
+//!   runs while remote activations are in flight;
 //! - [`sgd`]: live threaded distributed training/inference over the
 //!   simulated fabric, with counter cross-checks against the plan;
 //! - [`replay`]: deterministic timing simulator (Fig. 4/5, Table 2) using
@@ -10,10 +13,11 @@
 
 pub mod gb_baseline;
 pub mod minibatch;
+pub mod overlap;
 pub mod replay;
 pub mod sgd;
 pub mod worker;
 
 pub use replay::{replay, ReplayConfig, ReplayResult};
 pub use sgd::{infer_distributed, train_distributed, TrainRun};
-pub use worker::{RankScratch, RankState};
+pub use worker::{ExecMode, RankScratch, RankState};

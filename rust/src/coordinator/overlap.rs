@@ -1,0 +1,325 @@
+//! The split-CSR **overlapped** execution engine ([`ExecMode::Overlap`]).
+//!
+//! Every layer step follows the same schedule:
+//!
+//! 1. post the non-blocking sends of owned activations (gathered straight
+//!    from the compact activation vector — no full-width buffer exists);
+//! 2. run the **local segment** SpMM immediately — this is the compute
+//!    that hides the in-flight receives;
+//! 3. drain arrivals: already-landed payloads are consumed without
+//!    blocking ([`Endpoint::try_recv`]), the rest as they land in
+//!    **arrival order** ([`Endpoint::recv_any`]), each applied as a
+//!    compact remote-segment SpMM directly on the payload;
+//! 4. apply the bias + activation epilogue once all contributions are in.
+//!
+//! Only step 3's actual blocked time is charged to the `wait` phase, so
+//! live breakdowns show exactly how much of the blocking engine's receive
+//! stall the overlap hides. The backward mirror keeps the same idea: each
+//! remote segment's partial gradient is computed and sent *before* the
+//! local transpose and weight update, and the mirrored receives are
+//! consumed in arrival order behind the update window.
+
+use super::minibatch::row_means;
+use super::worker::{RankScratch, RankState, Repr};
+use crate::comm::{Endpoint, Phase};
+use crate::partition::CommPlan;
+
+impl RankState {
+    /// Overlapped batched forward over compact activations. Returns the
+    /// final layer's owned rows `[local_L × b]` row-major, borrowed from
+    /// `scratch.ping` (where the last layer's output lands after the final
+    /// ping-pong swap).
+    ///
+    /// The layer step here and the retaining one in
+    /// [`RankState::train_step_overlap`] are intentional twins (scratch
+    /// ping-pong + recycled payloads vs per-layer buffers + retained
+    /// payloads for the update); a change to the send/drain schedule in
+    /// one must be mirrored in the other.
+    pub(crate) fn infer_overlap_compact<'s>(
+        &mut self,
+        ep: &mut Endpoint,
+        _plan: &CommPlan, // schedule is fully precompiled into the split layers
+        x0: &[f32],
+        b: usize,
+        scratch: &'s mut RankScratch,
+    ) -> &'s [f32] {
+        let depth = self.depth();
+        let maxcompact = self
+            .input_rows
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        scratch.ensure(maxcompact * b, 0);
+        for (i, &j) in self.input_rows.iter().enumerate() {
+            let j = j as usize;
+            scratch.ping[i * b..(i + 1) * b].copy_from_slice(&x0[j * b..(j + 1) * b]);
+        }
+        let layers = match &self.repr {
+            Repr::Split { layers } => layers,
+            Repr::Full { .. } => unreachable!("overlap path dispatched on Split"),
+        };
+        for (k, sl) in layers.iter().enumerate().take(depth) {
+            let inw = sl.mat.local_gcols.len();
+            let nloc = sl.mat.nrows;
+            // 1. sends, gathered from the compact activation vector
+            {
+                let cur = &scratch.ping[..inw * b];
+                self.timer.time("comm", || {
+                    for s in &sl.sends {
+                        let mut payload = ep.take_buf();
+                        payload.reserve(s.pos.len() * b);
+                        for &p in &s.pos {
+                            let p = p as usize;
+                            payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
+                        }
+                        ep.send(s.to, k as u32, Phase::Forward, s.tid, payload);
+                    }
+                });
+            }
+            // 2. local segment, while remote activations are in flight.
+            // With no remote segments the epilogue fuses into this pass.
+            let fuse_now = sl.mat.remote.is_empty();
+            {
+                let x = &scratch.ping[..inw * b];
+                let z = &mut scratch.pong[..nloc * b];
+                let bias = &self.biases[k];
+                let act = self.activation;
+                self.timer.time("spmv", || {
+                    if fuse_now {
+                        sl.mat
+                            .local
+                            .spmm_fused_rowmajor(x, z, b, act.fused_bias_epilogue(bias));
+                    } else {
+                        sl.mat.local.spmm_fused_rowmajor(x, z, b, |_, _| {});
+                    }
+                });
+            }
+            if !fuse_now {
+                // 3a. apply everything that already landed, without blocking
+                scratch.wants.clear();
+                scratch.want_seg.clear();
+                for (si, &(src, tid)) in sl.recv_wants.iter().enumerate() {
+                    if let Some(payload) = ep.try_recv(src, k as u32, Phase::Forward, tid) {
+                        let z = &mut scratch.pong[..nloc * b];
+                        let seg = &sl.mat.remote[si].csr;
+                        self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, z, b));
+                        ep.recycle(payload);
+                    } else {
+                        scratch.wants.push((src, tid));
+                        scratch.want_seg.push(si);
+                    }
+                }
+                // 3b. the rest in arrival order; only this blocks
+                while !scratch.wants.is_empty() {
+                    let (i, payload) = {
+                        let wants = &scratch.wants;
+                        self.timer
+                            .time("wait", || ep.recv_any(k as u32, Phase::Forward, wants))
+                    };
+                    let si = scratch.want_seg[i];
+                    scratch.wants.swap_remove(i);
+                    scratch.want_seg.swap_remove(i);
+                    let z = &mut scratch.pong[..nloc * b];
+                    let seg = &sl.mat.remote[si].csr;
+                    self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, z, b));
+                    ep.recycle(payload);
+                }
+                // 4. bias + activation once every contribution is in
+                let z = &mut scratch.pong[..nloc * b];
+                let bias = &self.biases[k];
+                let act = self.activation;
+                self.timer.time("spmv", || {
+                    let mut epi = act.fused_bias_epilogue(bias);
+                    for i in 0..nloc {
+                        epi(i, &mut z[i * b..(i + 1) * b]);
+                    }
+                });
+            }
+            std::mem::swap(&mut scratch.ping, &mut scratch.pong);
+        }
+        &scratch.ping[..self.rows[depth - 1].len() * b]
+    }
+
+    /// Overlapped minibatch train step (§5.1 semantics: batched SpFF,
+    /// batch-averaged δ^L, single-vector SpBP over batch-mean
+    /// activations). [`RankState::train_step`] is the `b = 1` case, where
+    /// the means reduce to the activations themselves. Returns this rank's
+    /// partial (batch-averaged) loss.
+    pub(crate) fn train_step_overlap(
+        &mut self,
+        ep: &mut Endpoint,
+        _plan: &CommPlan, // schedule is fully precompiled into the split layers
+        x0: &[f32],
+        y: &[f32],
+        b: usize,
+        eta: f32,
+    ) -> f32 {
+        let depth = self.depth();
+
+        // ---- overlapped forward, retaining per-layer activations and the
+        // received payloads (both feed the weight update); the layer step
+        // mirrors `infer_overlap_compact` — keep the two in sync ----
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(depth + 1);
+        let mut payloads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(depth);
+        let mut a0 = vec![0f32; self.input_rows.len() * b];
+        for (i, &j) in self.input_rows.iter().enumerate() {
+            let j = j as usize;
+            a0[i * b..(i + 1) * b].copy_from_slice(&x0[j * b..(j + 1) * b]);
+        }
+        acts.push(a0);
+        {
+            let layers = match &self.repr {
+                Repr::Split { layers } => layers,
+                Repr::Full { .. } => unreachable!("overlap path dispatched on Split"),
+            };
+            for (k, sl) in layers.iter().enumerate().take(depth) {
+                let nloc = sl.mat.nrows;
+                let mut z = vec![0f32; nloc * b];
+                let fuse_now = sl.mat.remote.is_empty();
+                {
+                    let cur = &acts[k];
+                    self.timer.time("comm", || {
+                        for s in &sl.sends {
+                            let mut payload = ep.take_buf();
+                            payload.reserve(s.pos.len() * b);
+                            for &p in &s.pos {
+                                let p = p as usize;
+                                payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
+                            }
+                            ep.send(s.to, k as u32, Phase::Forward, s.tid, payload);
+                        }
+                    });
+                    let bias = &self.biases[k];
+                    let act = self.activation;
+                    self.timer.time("spmv", || {
+                        if fuse_now {
+                            sl.mat
+                                .local
+                                .spmm_fused_rowmajor(cur, &mut z, b, act.fused_bias_epilogue(bias));
+                        } else {
+                            sl.mat.local.spmm_fused_rowmajor(cur, &mut z, b, |_, _| {});
+                        }
+                    });
+                }
+                let nsegs = sl.mat.remote.len();
+                let mut lay_payloads: Vec<Vec<f32>> = vec![Vec::new(); nsegs];
+                if !fuse_now {
+                    let mut wants: Vec<(u32, u32)> = Vec::with_capacity(nsegs);
+                    let mut want_seg: Vec<usize> = Vec::with_capacity(nsegs);
+                    for (si, &(src, tid)) in sl.recv_wants.iter().enumerate() {
+                        if let Some(payload) = ep.try_recv(src, k as u32, Phase::Forward, tid) {
+                            let seg = &sl.mat.remote[si].csr;
+                            self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, &mut z, b));
+                            lay_payloads[si] = payload;
+                        } else {
+                            wants.push((src, tid));
+                            want_seg.push(si);
+                        }
+                    }
+                    while !wants.is_empty() {
+                        let (i, payload) = self
+                            .timer
+                            .time("wait", || ep.recv_any(k as u32, Phase::Forward, &wants));
+                        let si = want_seg[i];
+                        wants.swap_remove(i);
+                        want_seg.swap_remove(i);
+                        let seg = &sl.mat.remote[si].csr;
+                        self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, &mut z, b));
+                        lay_payloads[si] = payload;
+                    }
+                    let bias = &self.biases[k];
+                    let act = self.activation;
+                    self.timer.time("spmv", || {
+                        let mut epi = act.fused_bias_epilogue(bias);
+                        for i in 0..nloc {
+                            epi(i, &mut z[i * b..(i + 1) * b]);
+                        }
+                    });
+                }
+                acts.push(z);
+                payloads.push(lay_payloads);
+            }
+        }
+
+        // ---- δ^L averaged over the batch (Alg. 3 line 2 / Eq. 6) ----
+        let act = self.activation;
+        let inv_b = 1.0 / b as f32;
+        let last = &self.rows[depth - 1];
+        let xl = &acts[depth];
+        let mut delta: Vec<f32> = Vec::with_capacity(last.len());
+        let mut local_loss = 0f32;
+        for (i, &r) in last.iter().enumerate() {
+            let r = r as usize;
+            let mut d = 0f32;
+            for j in 0..b {
+                let xr = xl[i * b + j];
+                let yr = y[r * b + j];
+                local_loss += 0.5 * (xr - yr) * (xr - yr) * inv_b;
+                d += (xr - yr) * act.derivative_from_output(xr);
+            }
+            delta.push(d * inv_b);
+        }
+
+        // ---- overlapped backward (Alg. 3, mirror schedule) ----
+        let layers = match &mut self.repr {
+            Repr::Split { layers } => layers,
+            Repr::Full { .. } => unreachable!("overlap path dispatched on Split"),
+        };
+        for k in (0..depth).rev() {
+            let sl = &mut layers[k];
+            let inw = sl.mat.local_gcols.len();
+            // 1. per-segment partial gradients, sent the moment each is
+            // ready (mirror of the forward receives)
+            for seg in &sl.mat.remote {
+                let mut sseg = ep.take_buf();
+                sseg.resize(seg.csr.ncols, 0.0);
+                self.timer.time("spmv", || seg.csr.spmv_t_add(&delta, &mut sseg));
+                self.timer
+                    .time("comm", || ep.send(seg.src, k as u32, Phase::Backward, seg.tid, sseg));
+            }
+            // 2. local transpose over owned slots
+            let mut s_local = vec![0f32; inw];
+            self.timer.time("spmv", || sl.mat.local.spmv_t_add(&delta, &mut s_local));
+            // 3. weight + bias update in the overlap window, against the
+            // batch-mean activations (local compact + per-segment payload)
+            let mx_local = row_means(&acts[k], b);
+            let mx_segs: Vec<Vec<f32>> = payloads[k].iter().map(|p| row_means(p, b)).collect();
+            self.timer.time("updt", || sl.mat.sgd_update(&delta, &mx_local, &mx_segs, eta));
+            for (i, d) in delta.iter().enumerate() {
+                self.biases[k][i] -= eta * d;
+            }
+            // 4. mirrored receives in arrival order (behind the update)
+            if !sl.sends.is_empty() {
+                let mut wants: Vec<(u32, u32)> = sl.sends.iter().map(|s| (s.to, s.tid)).collect();
+                let mut which: Vec<usize> = (0..sl.sends.len()).collect();
+                while !wants.is_empty() {
+                    let (i, payload) =
+                        self.timer.time("wait", || ep.recv_any(k as u32, Phase::Backward, &wants));
+                    let sj = which[i];
+                    wants.swap_remove(i);
+                    which.swap_remove(i);
+                    for (idx, &p) in sl.sends[sj].pos.iter().enumerate() {
+                        s_local[p as usize] += payload[idx];
+                    }
+                    ep.recycle(payload);
+                }
+            }
+            // 5. δ^{k-1} = s ⊙ f'(x̄^k) over owned slots (compact)
+            if k > 0 {
+                let mut next = Vec::with_capacity(inw);
+                for i in 0..inw {
+                    next.push(s_local[i] * act.derivative_from_output(mx_local[i]));
+                }
+                delta = next;
+            }
+        }
+        // return the retained payload allocations to the endpoint pool
+        for lay in payloads {
+            for p in lay {
+                if p.capacity() > 0 {
+                    ep.recycle(p);
+                }
+            }
+        }
+        local_loss
+    }
+}

@@ -7,7 +7,7 @@
 //! blocks back into a global model, and cross-checks the live
 //! communication counters against the precomputed [`CommPlan`].
 
-use super::worker::RankState;
+use super::worker::{ExecMode, RankState};
 use crate::dnn::SparseNet;
 use crate::partition::{CommPlan, DnnPartition};
 use crate::runtime::parallel;
@@ -41,7 +41,8 @@ pub fn train_distributed(
     run_with_plan(net, part, &plan, inputs, targets, eta, epochs)
 }
 
-/// Same as [`train_distributed`] with a caller-provided plan.
+/// Same as [`train_distributed`] with a caller-provided plan (overlapped
+/// engine).
 pub fn run_with_plan(
     net: &SparseNet,
     part: &DnnPartition,
@@ -51,12 +52,29 @@ pub fn run_with_plan(
     eta: f32,
     epochs: usize,
 ) -> TrainRun {
+    run_with_plan_mode(net, part, plan, inputs, targets, eta, epochs, ExecMode::Overlap)
+}
+
+/// [`run_with_plan`] with an explicit execution mode — the live
+/// blocking-vs-overlap breakdown (Fig. 5 live section) trains the same
+/// model both ways and compares the per-phase timers.
+#[allow(clippy::too_many_arguments)]
+pub fn run_with_plan_mode(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    eta: f32,
+    epochs: usize,
+    mode: ExecMode,
+) -> TrainRun {
     assert_eq!(inputs.len(), targets.len());
     let nparts = part.nparts;
     let steps = inputs.len() * epochs;
 
     let run = parallel::run_ranks(nparts, |rank, ep| {
-        let mut state = RankState::build(net, part, rank as u32);
+        let mut state = RankState::build(net, part, plan, rank as u32, mode);
         let mut local_losses = Vec::with_capacity(steps);
         for _ in 0..epochs {
             for (x, y) in inputs.iter().zip(targets.iter()) {
@@ -106,6 +124,7 @@ pub fn infer_distributed(
 /// This one-shot form builds each rank's state and runs the same
 /// [`RankState::infer_owned_outputs`] body the persistent
 /// [`crate::serving::RankPool`] dispatches to its long-lived rank threads.
+/// Runs the overlapped split-CSR engine.
 pub fn infer_with_plan(
     net: &SparseNet,
     part: &DnnPartition,
@@ -113,9 +132,23 @@ pub fn infer_with_plan(
     x0: &[f32],
     b: usize,
 ) -> (Vec<f32>, Vec<(u64, u64)>) {
+    infer_with_plan_mode(net, part, plan, x0, b, ExecMode::Overlap)
+}
+
+/// [`infer_with_plan`] with an explicit execution mode — the
+/// overlap-vs-blocking throughput section of `benches/table2_throughput`
+/// measures both engines over the same plan.
+pub fn infer_with_plan_mode(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    x0: &[f32],
+    b: usize,
+    mode: ExecMode,
+) -> (Vec<f32>, Vec<(u64, u64)>) {
     let nparts = part.nparts;
     let run = parallel::run_ranks(nparts, |rank, ep| {
-        let mut state = RankState::build(net, part, rank as u32);
+        let mut state = RankState::build(net, part, plan, rank as u32, mode);
         let mut scratch = crate::coordinator::worker::RankScratch::new();
         state.infer_owned_outputs(ep, plan, x0, b, &mut scratch)
     })

@@ -78,8 +78,10 @@ pub fn infer_batch_scratch<'s>(
 
 /// Throughput-oriented batched inference on `nranks` OS threads: carves the
 /// network into contiguous nnz-balanced row blocks and runs the per-rank
-/// tiled SpMM concurrently over the rank-parallel engine. Numerically
-/// identical to [`infer_batch`]; faster whenever cores are available.
+/// tiled SpMM concurrently over the rank-parallel engine's **overlapped**
+/// split-CSR path (local-segment compute hides the activation transfers).
+/// Numerically identical to [`infer_batch`]; faster whenever cores are
+/// available.
 ///
 /// This one-shot form rebuilds the partition, plan, rank states, and
 /// threads per call; request loops should use the persistent
@@ -87,9 +89,22 @@ pub fn infer_batch_scratch<'s>(
 /// at minimum reuse a plan via
 /// [`crate::coordinator::sgd::infer_with_plan`].
 pub fn infer_batch_parallel(net: &SparseNet, x0: &[f32], b: usize, nranks: usize) -> Vec<f32> {
+    infer_batch_parallel_mode(net, x0, b, nranks, crate::coordinator::ExecMode::Overlap)
+}
+
+/// [`infer_batch_parallel`] with an explicit engine choice — benches pit
+/// the blocking schedule against the overlapped one on identical plans.
+pub fn infer_batch_parallel_mode(
+    net: &SparseNet,
+    x0: &[f32],
+    b: usize,
+    nranks: usize,
+    mode: crate::coordinator::ExecMode,
+) -> Vec<f32> {
     assert_eq!(x0.len(), net.input_dim() * b);
     let part = crate::partition::contiguous_partition(&net.layers, nranks);
-    let (out, _) = crate::coordinator::sgd::infer_distributed(net, &part, x0, b);
+    let plan = crate::partition::CommPlan::build(&net.layers, &part);
+    let (out, _) = crate::coordinator::sgd::infer_with_plan_mode(net, &part, &plan, x0, b, mode);
     out
 }
 

@@ -39,6 +39,32 @@ impl LayerPlan {
     pub fn message_count(&self) -> u64 {
         self.transfers.len() as u64
     }
+
+    /// Inbound transfers of `rank` in receive order, as
+    /// `(source rank, transfer id, activation indices)` — the segment
+    /// recipe consumed by [`crate::sparse::SplitCsr::build`] when the
+    /// rank's row block is reordered for the overlapped engine.
+    pub fn inbound_of(&self, rank: usize) -> Vec<(u32, u32, &[u32])> {
+        self.recv_of[rank]
+            .iter()
+            .map(|&tid| {
+                let t = &self.transfers[tid as usize];
+                (t.from, tid, t.indices.as_slice())
+            })
+            .collect()
+    }
+
+    /// Outbound transfers of `rank` in send order, as
+    /// `(destination rank, transfer id, activation indices)`.
+    pub fn outbound_of(&self, rank: usize) -> Vec<(u32, u32, &[u32])> {
+        self.send_of[rank]
+            .iter()
+            .map(|&tid| {
+                let t = &self.transfers[tid as usize];
+                (t.to, tid, t.indices.as_slice())
+            })
+            .collect()
+    }
 }
 
 /// The full per-layer communication plan of one (structure, partition) pair.
@@ -314,6 +340,22 @@ mod tests {
                 assert!(!t.indices.is_empty());
             }
         }
+    }
+
+    #[test]
+    fn inbound_outbound_views_mirror_transfer_lists() {
+        let (structure, part) = two_rank_example();
+        let plan = CommPlan::build(&structure, &part);
+        let l = &plan.layers[0];
+        let in1 = l.inbound_of(1);
+        assert_eq!(in1.len(), 1);
+        assert_eq!(in1[0].0, 0, "rank 1 receives from rank 0");
+        assert_eq!(in1[0].2, &[0][..]);
+        let out0 = l.outbound_of(0);
+        assert_eq!(out0.len(), 1);
+        assert_eq!(out0[0].0, 1, "rank 0 sends to rank 1");
+        assert_eq!(out0[0].1, in1[0].1, "same transfer id on both views");
+        assert!(l.inbound_of(0).len() == 1 && l.outbound_of(1).len() == 1);
     }
 
     #[test]

@@ -14,6 +14,9 @@
 //!   so one bad request never takes the pool down);
 //! - a request-queue front-end — [`RankPool::submit`] returns a [`Ticket`]
 //!   the caller blocks on ([`Ticket::wait`]) or polls ([`Ticket::poll`]);
+//!   [`RankPool::submit_with_deadline`] attaches a queue-wait SLO, and the
+//!   scheduler **sheds** tickets that blew it
+//!   ([`ServeError::DeadlineExceeded`]) instead of serving them late;
 //! - an adaptive micro-batching scheduler — queued requests are coalesced
 //!   into one fused SpMM batch up to [`PoolConfig::max_batch`] columns or
 //!   [`PoolConfig::max_wait`], and the wait window is skipped entirely
@@ -29,5 +32,5 @@ mod queue;
 mod stats;
 
 pub use pool::{PoolConfig, PoolSummary, RankPool};
-pub use queue::Ticket;
+pub use queue::{ServeError, Ticket};
 pub use stats::{LatencyHistogram, ServingStats, StatsSnapshot};

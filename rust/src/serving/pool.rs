@@ -11,12 +11,12 @@
 
 use crate::comm::{fabric, Endpoint};
 use crate::coordinator::sgd::assemble_outputs;
-use crate::coordinator::{RankScratch, RankState};
+use crate::coordinator::{ExecMode, RankScratch, RankState};
 use crate::dnn::SparseNet;
 use crate::partition::ServingPlan;
 use crate::runtime::parallel::{is_secondary, panic_message};
 use crate::runtime::RankFailure;
-use crate::serving::queue::{effective_wait, Pending, SharedQueue, Ticket};
+use crate::serving::queue::{effective_wait, Pending, ServeError, SharedQueue, Ticket};
 use crate::serving::stats::{ServingStats, StatsSnapshot};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -39,6 +39,9 @@ pub struct PoolConfig {
     /// inter-arrival gap exceeds `max_wait` (sparse traffic cannot fill a
     /// batch, so holding one open only adds latency).
     pub adaptive: bool,
+    /// Which per-rank engine the pool threads run: the overlapped
+    /// split-CSR path (default) or the blocking baseline.
+    pub mode: ExecMode,
 }
 
 impl Default for PoolConfig {
@@ -48,6 +51,7 @@ impl Default for PoolConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             adaptive: true,
+            mode: ExecMode::Overlap,
         }
     }
 }
@@ -89,7 +93,7 @@ struct Generation {
     handles: Vec<JoinHandle<()>>,
 }
 
-fn spawn_generation(net: &Arc<SparseNet>, sp: &Arc<ServingPlan>) -> Generation {
+fn spawn_generation(net: &Arc<SparseNet>, sp: &Arc<ServingPlan>, mode: ExecMode) -> Generation {
     let nranks = sp.nranks();
     let mut endpoints = fabric(nranks + 1);
     let observer = endpoints.pop().expect("fabric is non-empty");
@@ -103,7 +107,7 @@ fn spawn_generation(net: &Arc<SparseNet>, sp: &Arc<ServingPlan>) -> Generation {
         let res = res_tx.clone();
         let handle = std::thread::Builder::new()
             .name(format!("spdnn-pool-rank-{rank}"))
-            .spawn(move || rank_loop(rank, ep, &net, &sp, &rx, &res))
+            .spawn(move || rank_loop(rank, ep, &net, &sp, mode, &rx, &res))
             .expect("failed to spawn pool rank thread");
         cmd_tx.push(tx);
         handles.push(handle);
@@ -127,10 +131,11 @@ fn rank_loop(
     mut ep: Endpoint,
     net: &SparseNet,
     sp: &ServingPlan,
+    mode: ExecMode,
     cmds: &Receiver<RankCmd>,
     res: &Sender<RankReply>,
 ) {
-    let mut state = RankState::build(net, &sp.part, rank as u32);
+    let mut state = RankState::build(net, &sp.part, &sp.plan, rank as u32, mode);
     let mut scratch = RankScratch::new();
     loop {
         let job = match cmds.recv() {
@@ -259,17 +264,33 @@ impl RankPool {
     /// Submit one `[n0 × b]` row-major batch (column j = input j). Returns
     /// immediately; block on or poll the ticket for the `[nL × b]` output.
     pub fn submit(&self, x0: Vec<f32>, b: usize) -> Ticket {
-        self.submit_inner(x0, b, None)
+        self.submit_inner(x0, b, None, None)
+    }
+
+    /// [`RankPool::submit`] with a queue-wait SLO: if the scheduler
+    /// reaches the request only after it has been queued longer than
+    /// `slo`, the ticket fails with
+    /// [`ServeError::DeadlineExceeded`] instead of being served late —
+    /// under overload the pool sheds stale work rather than letting every
+    /// queued request's latency grow without bound.
+    pub fn submit_with_deadline(&self, x0: Vec<f32>, b: usize, slo: Duration) -> Ticket {
+        self.submit_inner(x0, b, Some(slo), None)
     }
 
     /// Failure-injection hook for tests: `panic_rank` panics while serving
     /// the fused batch this request lands in.
     #[doc(hidden)]
     pub fn submit_sabotaged(&self, x0: Vec<f32>, b: usize, panic_rank: usize) -> Ticket {
-        self.submit_inner(x0, b, Some(panic_rank))
+        self.submit_inner(x0, b, None, Some(panic_rank))
     }
 
-    fn submit_inner(&self, x0: Vec<f32>, b: usize, sabotage: Option<usize>) -> Ticket {
+    fn submit_inner(
+        &self,
+        x0: Vec<f32>,
+        b: usize,
+        deadline: Option<Duration>,
+        sabotage: Option<usize>,
+    ) -> Ticket {
         assert!(b > 0, "batch must be non-empty");
         assert_eq!(
             x0.len(),
@@ -290,6 +311,7 @@ impl RankPool {
                 b,
                 tx,
                 submitted: now,
+                deadline,
                 sabotage,
             });
         }
@@ -348,8 +370,8 @@ fn scheduler_loop(
     output_dim: usize,
     edges_per_col: f64,
 ) -> SchedulerReport {
-    let mut gen = spawn_generation(&net, &sp);
-    while let Some(batch) = collect_batch(&shared, &cfg) {
+    let mut gen = spawn_generation(&net, &sp, cfg.mode);
+    while let Some(batch) = collect_batch(&shared, &cfg, &stats) {
         let nreq = batch.len();
         let total_cols: usize = batch.iter().map(|p| p.b).sum();
         let sw = Instant::now();
@@ -384,12 +406,13 @@ fn scheduler_loop(
             }
             Err(failure) => {
                 stats.record_failure(nreq);
+                let err = ServeError::from(failure);
                 for p in &batch {
-                    let _ = p.tx.send(Err(failure.clone()));
+                    let _ = p.tx.send(Err(err.clone()));
                 }
                 // the fabric is poisoned — respawn the whole generation
                 teardown(gen);
-                gen = spawn_generation(&net, &sp);
+                gen = spawn_generation(&net, &sp, cfg.mode);
             }
         }
     }
@@ -413,14 +436,37 @@ fn scheduler_loop(
     SchedulerReport { leaked_ranks }
 }
 
+/// Fail a request whose queue wait blew its SLO (load shedding) and count
+/// it. The reply goes out while the scheduler still holds the queue lock —
+/// an unbounded-channel send, never blocking.
+fn shed(stats: &ServingStats, p: Pending, slo: Duration) {
+    stats.record_shed(1);
+    let waited = p.submitted.elapsed();
+    let _ = p.tx.send(Err(ServeError::DeadlineExceeded { waited, slo }));
+}
+
+/// True if the request has waited past its deadline.
+fn expired(p: &Pending) -> Option<Duration> {
+    p.deadline.filter(|&slo| p.submitted.elapsed() > slo)
+}
+
 /// Pop the next micro-batch: block for the first request, then hold the
 /// batch open — up to `max_batch` columns or the adaptive wait deadline —
-/// coalescing FIFO-adjacent requests. `None` once the pool is shutting
-/// down and the queue is drained.
-fn collect_batch(shared: &SharedQueue, cfg: &PoolConfig) -> Option<Vec<Pending>> {
+/// coalescing FIFO-adjacent requests. Requests whose queue wait already
+/// exceeds their SLO are shed on the spot instead of joining the batch.
+/// `None` once the pool is shutting down and the queue is drained.
+fn collect_batch(
+    shared: &SharedQueue,
+    cfg: &PoolConfig,
+    stats: &ServingStats,
+) -> Option<Vec<Pending>> {
     let mut st = shared.state.lock().unwrap();
     let first = loop {
         if let Some(p) = st.queue.pop_front() {
+            if let Some(slo) = expired(&p) {
+                shed(stats, p, slo);
+                continue;
+            }
             break p;
         }
         if st.shutdown {
@@ -438,6 +484,12 @@ fn collect_batch(shared: &SharedQueue, cfg: &PoolConfig) -> Option<Vec<Pending>>
     let mut batch = vec![first];
     while cols < cfg.max_batch {
         if let Some(front) = st.queue.front() {
+            if expired(front).is_some() {
+                let p = st.queue.pop_front().expect("front exists");
+                let slo = p.deadline.expect("expired implies a deadline");
+                shed(stats, p, slo);
+                continue;
+            }
             if cols + front.b <= cfg.max_batch {
                 let p = st.queue.pop_front().expect("front exists");
                 cols += p.b;
@@ -550,6 +602,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_micros(200),
                 adaptive: true,
+                mode: ExecMode::Overlap,
             },
         );
         let mut rng = Rng::new(11);
@@ -586,5 +639,32 @@ mod tests {
         for (a, s) in out.iter().zip(serial.iter()) {
             assert!((a - s).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn blocking_mode_pool_matches_serial() {
+        // the measured baseline engine stays correct behind the pool too
+        let net = net64();
+        let pool = RankPool::start(
+            net.clone(),
+            PoolConfig {
+                nranks: 3,
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+                adaptive: false,
+                mode: ExecMode::Blocking,
+            },
+        );
+        let mut rng = Rng::new(19);
+        for b in [1usize, 4, 7] {
+            let x0 = random_input(&mut rng, 64, b);
+            let out = pool.submit(x0.clone(), b).wait().expect("served");
+            let serial = infer_batch(&net, &x0, b);
+            for (a, s) in out.iter().zip(serial.iter()) {
+                assert!((a - s).abs() < 1e-5, "b={b}");
+            }
+        }
+        let summary = pool.shutdown().expect("shutdown");
+        assert!(summary.leaked_ranks.is_empty());
     }
 }

@@ -1,6 +1,7 @@
 //! Request-queue front-end of the serving pool: submitters push [`Pending`]
 //! entries into a mutex+condvar queue and hold a [`Ticket`] to block on or
-//! poll; the scheduler thread pops and coalesces them into fused batches.
+//! poll; the scheduler thread pops and coalesces them into fused batches,
+//! shedding tickets whose queue wait has already blown their deadline.
 
 use crate::runtime::RankFailure;
 use std::collections::VecDeque;
@@ -8,9 +9,67 @@ use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// What a ticket resolves to: the `[nL × b]` row-major output, or the
-/// failure of the rank that killed this request's fused batch.
-pub(crate) type Reply = Result<Vec<f32>, RankFailure>;
+/// Why a submitted request did not produce an output.
+#[derive(Debug, Clone)]
+pub enum ServeError {
+    /// A rank failed while serving the fused batch this request landed in;
+    /// the pool rebuilt its generation and keeps serving.
+    Rank(RankFailure),
+    /// Load shedding: the request waited in the queue longer than the SLO
+    /// it was submitted with, so the scheduler failed it instead of
+    /// serving it late ([`crate::serving::RankPool::submit_with_deadline`]).
+    DeadlineExceeded {
+        /// How long the request had been queued when the scheduler reached
+        /// it.
+        waited: Duration,
+        /// The queue-wait SLO it was submitted with.
+        slo: Duration,
+    },
+    /// The pool shut down before the request completed.
+    Shutdown,
+}
+
+impl ServeError {
+    /// The underlying rank failure, when that is what killed the request.
+    pub fn rank_failure(&self) -> Option<&RankFailure> {
+        match self {
+            ServeError::Rank(f) => Some(f),
+            _ => None,
+        }
+    }
+
+    /// True for deadline-shed requests.
+    pub fn is_deadline(&self) -> bool {
+        matches!(self, ServeError::DeadlineExceeded { .. })
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rank(rf) => write!(f, "{rf}"),
+            ServeError::DeadlineExceeded { waited, slo } => write!(
+                f,
+                "deadline exceeded: queued {:.3} ms against an SLO of {:.3} ms",
+                waited.as_secs_f64() * 1e3,
+                slo.as_secs_f64() * 1e3
+            ),
+            ServeError::Shutdown => {
+                write!(f, "pool shut down before the request completed")
+            }
+        }
+    }
+}
+
+impl From<RankFailure> for ServeError {
+    fn from(f: RankFailure) -> Self {
+        ServeError::Rank(f)
+    }
+}
+
+/// What a ticket resolves to: the `[nL × b]` row-major output, or why the
+/// request was not served.
+pub(crate) type Reply = Result<Vec<f32>, ServeError>;
 
 /// One queued inference request.
 pub(crate) struct Pending {
@@ -20,6 +79,9 @@ pub(crate) struct Pending {
     /// Reply channel of the submitter's ticket.
     pub tx: Sender<Reply>,
     pub submitted: Instant,
+    /// Queue-wait SLO: the scheduler sheds this request instead of serving
+    /// it once `submitted.elapsed()` exceeds it. `None` = serve whenever.
+    pub deadline: Option<Duration>,
     /// Failure-injection hook: rank index that must panic while serving
     /// the batch this request lands in (tests only).
     pub sabotage: Option<usize>,
@@ -32,25 +94,17 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    /// Block until the request completes.
-    pub fn wait(self) -> Result<Vec<f32>, RankFailure> {
-        self.rx.recv().unwrap_or_else(|_| {
-            Err(RankFailure {
-                rank: 0,
-                message: "pool shut down before the request completed".to_string(),
-            })
-        })
+    /// Block until the request completes (or is failed/shed).
+    pub fn wait(self) -> Result<Vec<f32>, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::Shutdown))
     }
 
     /// Non-blocking: `None` while the request is still in flight.
-    pub fn poll(&self) -> Option<Result<Vec<f32>, RankFailure>> {
+    pub fn poll(&self) -> Option<Result<Vec<f32>, ServeError>> {
         match self.rx.try_recv() {
             Ok(reply) => Some(reply),
             Err(TryRecvError::Empty) => None,
-            Err(TryRecvError::Disconnected) => Some(Err(RankFailure {
-                rank: 0,
-                message: "pool shut down before the request completed".to_string(),
-            })),
+            Err(TryRecvError::Disconnected) => Some(Err(ServeError::Shutdown)),
         }
     }
 }
@@ -143,11 +197,29 @@ mod tests {
     }
 
     #[test]
-    fn dropped_sender_resolves_to_failure() {
+    fn dropped_sender_resolves_to_shutdown() {
         let (tx, rx) = std::sync::mpsc::channel::<Reply>();
         drop(tx);
         let ticket = Ticket { rx };
         let err = ticket.wait().expect_err("must fail");
-        assert!(err.message.contains("shut down"), "{}", err.message);
+        assert!(matches!(err, ServeError::Shutdown));
+        assert!(err.to_string().contains("shut down"), "{err}");
+        assert!(err.rank_failure().is_none() && !err.is_deadline());
+    }
+
+    #[test]
+    fn serve_error_accessors_and_display() {
+        let e = ServeError::Rank(RankFailure {
+            rank: 3,
+            message: "boom".into(),
+        });
+        assert_eq!(e.rank_failure().unwrap().rank, 3);
+        assert!(e.to_string().contains("boom"));
+        let d = ServeError::DeadlineExceeded {
+            waited: Duration::from_millis(5),
+            slo: Duration::from_millis(2),
+        };
+        assert!(d.is_deadline());
+        assert!(d.to_string().contains("deadline exceeded"), "{d}");
     }
 }

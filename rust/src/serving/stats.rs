@@ -84,6 +84,7 @@ impl LatencyHistogram {
 struct StatsInner {
     requests: u64,
     failed_requests: u64,
+    shed_requests: u64,
     batches: u64,
     pool_rebuilds: u64,
     columns: u64,
@@ -138,12 +139,19 @@ impl ServingStats {
         s.pool_rebuilds += 1;
     }
 
+    /// Requests shed for blowing their queue-wait SLO (deadline load
+    /// shedding) — failed without a dispatch, so no rebuild.
+    pub(crate) fn record_shed(&self, requests: usize) {
+        self.inner.lock().unwrap().shed_requests += requests as u64;
+    }
+
     pub fn snapshot(&self) -> StatsSnapshot {
         let s = self.inner.lock().unwrap();
         let wall = self.started.elapsed().as_secs_f64();
         StatsSnapshot {
             requests: s.requests,
             failed_requests: s.failed_requests,
+            shed_requests: s.shed_requests,
             batches: s.batches,
             pool_rebuilds: s.pool_rebuilds,
             columns: s.columns,
@@ -178,6 +186,8 @@ impl Default for ServingStats {
 pub struct StatsSnapshot {
     pub requests: u64,
     pub failed_requests: u64,
+    /// Requests failed for blowing their queue-wait SLO (load shedding).
+    pub shed_requests: u64,
     /// Fused dispatches; `requests / batches` ≥ 1 shows coalescing.
     pub batches: u64,
     /// Generation rebuilds forced by rank failures.
@@ -202,7 +212,7 @@ impl StatsSnapshot {
         format!(
             "{} requests in {} batches (mean {:.1} cols/batch), {:.2e} edges/s wall \
              ({:.2e} busy), latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms \
-             (mean {:.2} ms), {} failed, {} rebuilds",
+             (mean {:.2} ms), {} failed, {} shed, {} rebuilds",
             self.requests,
             self.batches,
             self.mean_batch,
@@ -213,6 +223,7 @@ impl StatsSnapshot {
             self.p99_secs * 1e3,
             self.mean_latency_secs * 1e3,
             self.failed_requests,
+            self.shed_requests,
             self.pool_rebuilds,
         )
     }
@@ -221,12 +232,14 @@ impl StatsSnapshot {
     /// from this).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"requests\":{},\"failed_requests\":{},\"batches\":{},\"pool_rebuilds\":{},\
+            "{{\"requests\":{},\"failed_requests\":{},\"shed_requests\":{},\
+             \"batches\":{},\"pool_rebuilds\":{},\
              \"columns\":{},\"mean_batch\":{:.3},\"edges_per_sec\":{:.1},\
              \"edges_per_sec_busy\":{:.1},\"p50_ms\":{:.4},\"p95_ms\":{:.4},\
              \"p99_ms\":{:.4},\"mean_latency_ms\":{:.4},\"wall_secs\":{:.4}}}",
             self.requests,
             self.failed_requests,
+            self.shed_requests,
             self.batches,
             self.pool_rebuilds,
             self.columns,
@@ -294,9 +307,13 @@ mod tests {
         stats.record_latency(0.006);
         stats.record_latency(0.008);
         stats.record_failure(2);
+        stats.record_shed(3);
         let s = stats.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.failed_requests, 2);
+        assert_eq!(s.shed_requests, 3);
+        assert!(s.to_json().contains("\"shed_requests\":3"));
+        assert!(s.render().contains("3 shed"));
         assert_eq!(s.batches, 2);
         assert_eq!(s.pool_rebuilds, 1);
         assert_eq!(s.columns, 16);

@@ -206,6 +206,43 @@ impl Csr {
         }
     }
 
+    /// Y += A X for **row-major** X, batch dimension tiled like
+    /// [`Csr::spmm_fused_rowmajor`] but accumulating into `y` instead of
+    /// overwriting it — the remote-segment kernel of the split-CSR
+    /// overlapped path, where each in-flight payload's contribution lands
+    /// on top of the local-segment partial sums.
+    pub fn spmm_add_rowmajor(&self, x: &[f32], y: &mut [f32], b: usize) {
+        debug_assert_eq!(x.len(), self.ncols * b);
+        debug_assert_eq!(y.len(), self.nrows * b);
+        let mut acc = [0f32; SPMM_TILE];
+        let mut lo = 0usize;
+        while lo < b {
+            let w = SPMM_TILE.min(b - lo);
+            for r in 0..self.nrows {
+                let start = self.indptr[r] as usize;
+                let end = self.indptr[r + 1] as usize;
+                if start == end {
+                    continue;
+                }
+                let tile = &mut acc[..w];
+                tile.fill(0.0);
+                for i in start..end {
+                    let v = self.vals[i];
+                    let c = self.indices[i] as usize;
+                    let xrow = &x[c * b + lo..c * b + lo + w];
+                    for (a, &xv) in tile.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                }
+                let yrow = &mut y[r * b + lo..r * b + lo + w];
+                for (yv, &a) in yrow.iter_mut().zip(tile.iter()) {
+                    *yv += a;
+                }
+            }
+            lo += w;
+        }
+    }
+
     /// Gradient update on existing nonzeros only (Eq. 4–5):
     /// `W(r, c) -= eta * delta(r) * x(c)` for each stored (r, c).
     /// Sparse DNN training never densifies: pruned connections stay pruned.
@@ -475,6 +512,32 @@ mod tests {
                 assert!((u - v).abs() < 1e-4);
             }
         });
+    }
+
+    #[test]
+    fn spmm_add_accumulates_onto_existing() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(12), 1 + rng.gen_range(12));
+            let a = random_csr(rng, nr, nc, 0.3);
+            let b = 1 + rng.gen_range(2 * SPMM_TILE);
+            let x: Vec<f32> = (0..a.ncols * b).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let base: Vec<f32> = (0..a.nrows * b).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let mut plain = vec![0.0; a.nrows * b];
+            a.spmm_rowmajor(&x, &mut plain, b);
+            let mut acc = base.clone();
+            a.spmm_add_rowmajor(&x, &mut acc, b);
+            for i in 0..acc.len() {
+                assert!((acc[i] - (base[i] + plain[i])).abs() < 1e-4, "i={i} b={b}");
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_add_zero_batch_is_noop() {
+        let a = small();
+        let mut y: Vec<f32> = Vec::new();
+        a.spmm_add_rowmajor(&[], &mut y, 0);
+        assert!(y.is_empty());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 pub mod coo;
 pub mod csr;
 pub mod io;
+pub mod split;
 
 pub use coo::Coo;
 pub use csr::Csr;
+pub use split::{SplitCsr, SplitSegment};

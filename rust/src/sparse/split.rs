@@ -1,0 +1,365 @@
+//! Split-CSR: a rank's row block reordered into a **local-column segment**
+//! plus one **remote segment per source rank** (Hidayetoğlu et al.,
+//! arXiv:2007.14152 — the at-scale sparse-DNN overlap layout).
+//!
+//! The local segment's columns are renumbered into the rank's *compact
+//! owned-activation space* (position in the ascending list of activation
+//! entries the rank computes itself), and each remote segment's columns are
+//! renumbered into *payload positions* of the one inbound transfer carrying
+//! them. The overlapped engine can therefore run the local segment the
+//! moment the previous layer finishes — no full-width activation buffer,
+//! no receive-side scatter — and apply each remote segment directly on a
+//! payload the instant it lands.
+
+use super::Csr;
+
+/// One remote segment: the nonzeros of the row block whose columns arrive
+/// in a single inbound transfer, with columns renumbered to payload
+/// positions.
+#[derive(Debug, Clone)]
+pub struct SplitSegment {
+    /// Source rank of the transfer feeding this segment.
+    pub src: u32,
+    /// Transfer id within the layer's [`crate::partition::LayerPlan`].
+    pub tid: u32,
+    /// `nrows × payload_len`; column j reads payload position j.
+    pub csr: Csr,
+    /// Global activation index per payload position (== transfer indices).
+    pub gcols: Vec<u32>,
+}
+
+/// A row block split into local + per-source remote segments. Values live
+/// here (not in the original block): training updates and merges operate
+/// on the split representation directly.
+#[derive(Debug, Clone)]
+pub struct SplitCsr {
+    pub nrows: usize,
+    /// Width of the global (full) activation space, for bookkeeping.
+    pub full_width: usize,
+    /// `nrows × local_gcols.len()`; column j reads compact owned slot j.
+    pub local: Csr,
+    /// Global activation index per compact local column, ascending — the
+    /// rank's owned-activation list for this layer's input.
+    pub local_gcols: Vec<u32>,
+    /// One segment per inbound transfer, in the layer plan's receive order.
+    pub remote: Vec<SplitSegment>,
+}
+
+/// Column destination during the split: local slot or (segment, position).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Dest {
+    Unmapped,
+    Local(u32),
+    Remote(u32, u32),
+}
+
+impl SplitCsr {
+    /// Split `block` (a rank's row block, global column space) against the
+    /// rank's ascending owned-activation list and its inbound transfers
+    /// `(src, tid, indices)` — one per source rank, in receive order.
+    /// Every column with a nonzero must be owned or covered by exactly one
+    /// transfer (the communication-plan invariant); anything else is an
+    /// error.
+    pub fn build(
+        block: &Csr,
+        owned_acts: &[u32],
+        inbound: &[(u32, u32, &[u32])],
+    ) -> Result<SplitCsr, String> {
+        let mut dest = vec![Dest::Unmapped; block.ncols];
+        for (pos, &j) in owned_acts.iter().enumerate() {
+            if j as usize >= block.ncols {
+                return Err(format!("owned activation {j} out of bounds"));
+            }
+            dest[j as usize] = Dest::Local(pos as u32);
+        }
+        for (s, (_, _, indices)) in inbound.iter().enumerate() {
+            for (pos, &j) in indices.iter().enumerate() {
+                if j as usize >= block.ncols {
+                    return Err(format!("transfer index {j} out of bounds"));
+                }
+                if dest[j as usize] != Dest::Unmapped {
+                    return Err(format!("column {j} covered twice (segment {s})"));
+                }
+                dest[j as usize] = Dest::Remote(s as u32, pos as u32);
+            }
+        }
+
+        // Per-target CSR builders. Global columns are sorted within each
+        // row and both owned_acts and transfer indices ascend, so compact
+        // columns stay sorted per target without re-sorting.
+        let mut local = CsrBuilder::new(owned_acts.len());
+        let mut segs: Vec<CsrBuilder> = inbound
+            .iter()
+            .map(|(_, _, idx)| CsrBuilder::new(idx.len()))
+            .collect();
+        for r in 0..block.nrows {
+            let (cols, vals) = block.row(r);
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                match dest[c as usize] {
+                    Dest::Local(p) => local.push(p, v),
+                    Dest::Remote(s, p) => segs[s as usize].push(p, v),
+                    Dest::Unmapped => {
+                        return Err(format!(
+                            "row {r} column {c} neither owned nor received"
+                        ))
+                    }
+                }
+            }
+            local.end_row();
+            for s in segs.iter_mut() {
+                s.end_row();
+            }
+        }
+        let remote = segs
+            .into_iter()
+            .zip(inbound.iter())
+            .map(|(b, &(src, tid, indices))| SplitSegment {
+                src,
+                tid,
+                csr: b.finish(),
+                gcols: indices.to_vec(),
+            })
+            .collect();
+        Ok(SplitCsr {
+            nrows: block.nrows,
+            full_width: block.ncols,
+            local: local.finish(),
+            local_gcols: owned_acts.to_vec(),
+            remote,
+        })
+    }
+
+    /// Total nonzeros across all segments (== the original block's nnz).
+    pub fn nnz(&self) -> usize {
+        self.local.nnz() + self.remote.iter().map(|s| s.csr.nnz()).sum::<usize>()
+    }
+
+    /// Gradient update on every stored nonzero (Eq. 4–5) against the
+    /// compact activations that fed the forward pass: `x_local` over the
+    /// owned slots and one `x_segs[i]` per remote segment (the retained
+    /// forward payload, or its batch mean).
+    pub fn sgd_update(&mut self, delta: &[f32], x_local: &[f32], x_segs: &[Vec<f32>], eta: f32) {
+        debug_assert_eq!(x_segs.len(), self.remote.len());
+        self.local.sgd_update(delta, x_local, eta);
+        for (seg, x) in self.remote.iter_mut().zip(x_segs.iter()) {
+            seg.csr.sgd_update(delta, x, eta);
+        }
+    }
+
+    /// One row's `(global column, value)` pairs, sorted by global column —
+    /// exactly the original block's row layout, for merging trained values
+    /// back into the global model.
+    pub fn gather_row(&self, r: usize) -> Vec<(u32, f32)> {
+        let mut out = Vec::with_capacity(self.local.row_nnz(r));
+        let (cols, vals) = self.local.row(r);
+        for (&c, &v) in cols.iter().zip(vals.iter()) {
+            out.push((self.local_gcols[c as usize], v));
+        }
+        for seg in &self.remote {
+            let (cols, vals) = seg.csr.row(r);
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                out.push((seg.gcols[c as usize], v));
+            }
+        }
+        out.sort_unstable_by_key(|&(c, _)| c);
+        out
+    }
+
+    /// Reassemble the original (global-column) row block — test helper and
+    /// cross-check for the split invariants.
+    pub fn unsplit(&self) -> Csr {
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        indptr.push(0u32);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut vals = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            for (c, v) in self.gather_row(r) {
+                indices.push(c);
+                vals.push(v);
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Csr {
+            nrows: self.nrows,
+            ncols: self.full_width,
+            indptr,
+            indices,
+            vals,
+        }
+    }
+}
+
+/// Incremental CSR assembly in row order.
+struct CsrBuilder {
+    ncols: usize,
+    indptr: Vec<u32>,
+    indices: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl CsrBuilder {
+    fn new(ncols: usize) -> Self {
+        Self {
+            ncols,
+            indptr: vec![0],
+            indices: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, col: u32, val: f32) {
+        self.indices.push(col);
+        self.vals.push(val);
+    }
+
+    fn end_row(&mut self) {
+        self.indptr.push(self.indices.len() as u32);
+    }
+
+    fn finish(self) -> Csr {
+        Csr {
+            nrows: self.indptr.len() - 1,
+            ncols: self.ncols,
+            indptr: self.indptr,
+            indices: self.indices,
+            vals: self.vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::{prop, Rng};
+
+    /// Random block + a random cover of its columns into owned + segments.
+    fn random_split(
+        rng: &mut Rng,
+        nrows: usize,
+        ncols: usize,
+    ) -> (Csr, Vec<u32>, Vec<Vec<u32>>) {
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.gen_bool(0.35) {
+                    coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+                }
+            }
+        }
+        let block = coo.to_csr();
+        let nsegs = rng.gen_range(3); // 0..=2 remote sources
+        let mut owned = Vec::new();
+        let mut segs: Vec<Vec<u32>> = vec![Vec::new(); nsegs];
+        for c in 0..ncols as u32 {
+            let pick = rng.gen_range(nsegs + 1);
+            if pick == 0 {
+                owned.push(c);
+            } else {
+                segs[pick - 1].push(c);
+            }
+        }
+        (block, owned, segs)
+    }
+
+    fn build_from(block: &Csr, owned: &[u32], segs: &[Vec<u32>]) -> Result<SplitCsr, String> {
+        let inbound: Vec<(u32, u32, &[u32])> = segs
+            .iter()
+            .enumerate()
+            .map(|(i, idx)| (i as u32 + 1, i as u32, idx.as_slice()))
+            .collect();
+        SplitCsr::build(block, owned, &inbound)
+    }
+
+    #[test]
+    fn split_preserves_nnz_and_unsplits_exactly() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(12), 1 + rng.gen_range(12));
+            let (block, owned, segs) = random_split(rng, nr, nc);
+            let split = build_from(&block, &owned, &segs).expect("valid cover");
+            assert_eq!(split.nnz(), block.nnz());
+            assert_eq!(split.unsplit(), block);
+            for seg in &split.remote {
+                assert!(seg.csr.validate().is_ok());
+            }
+            assert!(split.local.validate().is_ok());
+        });
+    }
+
+    #[test]
+    fn local_plus_segments_equals_full_spmv() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(15), 1 + rng.gen_range(15));
+            let (block, owned, segs) = random_split(rng, nr, nc);
+            let split = build_from(&block, &owned, &segs).expect("valid cover");
+            let x: Vec<f32> = (0..nc).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            // reference: full-width SpMV
+            let mut want = vec![0.0; nr];
+            block.spmv(&x, &mut want);
+            // split: local over compact owned slots, then segment payloads
+            let x_local: Vec<f32> = split.local_gcols.iter().map(|&j| x[j as usize]).collect();
+            let mut got = vec![0.0; nr];
+            split.local.spmv(&x_local, &mut got);
+            for seg in &split.remote {
+                let payload: Vec<f32> = seg.gcols.iter().map(|&j| x[j as usize]).collect();
+                seg.csr.spmv_add(&payload, &mut got);
+            }
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn split_sgd_update_matches_full_update() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(10), 1 + rng.gen_range(10));
+            let (block, owned, segs) = random_split(rng, nr, nc);
+            let mut split = build_from(&block, &owned, &segs).expect("valid cover");
+            let x: Vec<f32> = (0..nc).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let delta: Vec<f32> = (0..nr).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let x_local: Vec<f32> = split.local_gcols.iter().map(|&j| x[j as usize]).collect();
+            let x_segs: Vec<Vec<f32>> = split
+                .remote
+                .iter()
+                .map(|s| s.gcols.iter().map(|&j| x[j as usize]).collect())
+                .collect();
+            split.sgd_update(&delta, &x_local, &x_segs, 0.3);
+            let mut full = block.clone();
+            full.sgd_update(&delta, &x, 0.3);
+            assert_eq!(split.unsplit(), full);
+        });
+    }
+
+    #[test]
+    fn uncovered_and_double_covered_columns_rejected() {
+        let mut coo = Coo::new(2, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 2, 2.0);
+        let block = coo.to_csr();
+        // column 2 has a nonzero but is neither owned nor received
+        let err = build_from(&block, &[0], &[vec![1]]).expect_err("uncovered");
+        assert!(err.contains("neither owned nor received"), "{err}");
+        // column 1 claimed by both the owned list and a transfer
+        let err = build_from(&block, &[0, 1], &[vec![1, 2]]).expect_err("double");
+        assert!(err.contains("covered twice"), "{err}");
+        // out-of-bounds transfer index
+        let err = build_from(&block, &[0, 1, 2], &[vec![9]]).expect_err("oob");
+        assert!(err.contains("out of bounds"), "{err}");
+    }
+
+    #[test]
+    fn empty_cover_pieces_are_fine() {
+        // a column with no nonzero may be left unmapped; empty segments and
+        // an empty owned list are structurally valid
+        let mut coo = Coo::new(2, 4);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 1, -1.0);
+        let block = coo.to_csr();
+        let split = build_from(&block, &[], &[vec![1], vec![3]]).expect("valid");
+        assert_eq!(split.local.nnz(), 0);
+        assert_eq!(split.remote[0].csr.nnz(), 2);
+        assert_eq!(split.remote[1].csr.nnz(), 0);
+        assert_eq!(split.unsplit(), block);
+    }
+}

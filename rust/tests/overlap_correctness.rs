@@ -1,0 +1,239 @@
+//! Property tests for the split-CSR **overlapped** engine: across random
+//! nets, random partitions, 1–8 ranks, and batch sizes including the
+//! degenerate b = 0 and b = 1, the overlapped path matches the serial
+//! engine within 1e-5, agrees with the blocking engine, and trains to the
+//! same weights.
+
+use spdnn::coordinator::sgd::{infer_with_plan_mode, run_with_plan_mode};
+use spdnn::coordinator::{ExecMode, RankState};
+use spdnn::dnn::inference::infer_batch;
+use spdnn::dnn::{sgd_serial, Activation, SparseNet};
+use spdnn::partition::plan::CommPlan;
+use spdnn::partition::random::random_partition;
+use spdnn::partition::DnnPartition;
+use spdnn::runtime::parallel::run_ranks;
+use spdnn::sparse::Coo;
+use spdnn::util::{prop, Rng};
+
+/// Random sparse net with every neuron connected (so values flow).
+fn random_net(rng: &mut Rng, n: usize, layers: usize, p: f64) -> SparseNet {
+    let mut ws = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let mut any = false;
+            for c in 0..n {
+                if rng.gen_bool(p) {
+                    coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+                    any = true;
+                }
+            }
+            if !any {
+                coo.push(r, rng.gen_range(n), rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+        ws.push(coo.to_csr());
+    }
+    SparseNet::new(ws, Activation::Sigmoid)
+}
+
+/// THE satellite property: overlapped batched inference equals the serial
+/// engine within 1e-5 for random partitions, 1–8 ranks, and batch sizes
+/// including b = 0 and b = 1.
+#[test]
+fn overlap_inference_matches_serial_any_partition_rank_batch() {
+    prop::check_seeded(0x0E21, 14, |rng| {
+        let n = 8 + rng.gen_range(16);
+        let layers = 2 + rng.gen_range(3);
+        let nparts = 1 + rng.gen_range(8); // 1..=8 ranks
+        let b = match rng.gen_range(4) {
+            0 => 0usize, // degenerate: empty batch
+            1 => 1,      // single column
+            _ => 2 + rng.gen_range(7),
+        };
+        let net = random_net(rng, n, layers, 0.2);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let plan = CommPlan::build(&net.layers, &part);
+        let x0: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+
+        let serial = infer_batch(&net, &x0, b);
+        let (overlap, _) = infer_with_plan_mode(&net, &part, &plan, &x0, b, ExecMode::Overlap);
+        assert_eq!(overlap.len(), serial.len(), "P={nparts} b={b}: shape");
+        for (i, (o, s)) in overlap.iter().zip(serial.iter()).enumerate() {
+            assert!(
+                (o - s).abs() < 1e-5,
+                "P={nparts} b={b} entry {i}: overlap {o} vs serial {s}"
+            );
+        }
+
+        let (blocking, _) = infer_with_plan_mode(&net, &part, &plan, &x0, b, ExecMode::Blocking);
+        for (i, (o, bl)) in overlap.iter().zip(blocking.iter()).enumerate() {
+            assert!(
+                (o - bl).abs() < 1e-5,
+                "P={nparts} b={b} entry {i}: overlap {o} vs blocking {bl}"
+            );
+        }
+    });
+}
+
+/// Training under the overlapped engine converges to the same weights as
+/// the blocking engine and the serial oracle.
+#[test]
+fn overlap_training_matches_blocking_and_serial() {
+    prop::check_seeded(0x7A11, 6, |rng| {
+        let n = 8 + rng.gen_range(10);
+        let layers = 2 + rng.gen_range(2);
+        let nparts = 1 + rng.gen_range(8);
+        let net = random_net(rng, n, layers, 0.25);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let plan = CommPlan::build(&net.layers, &part);
+        let samples = 3usize;
+        let inputs: Vec<Vec<f32>> = (0..samples)
+            .map(|_| (0..n).map(|_| rng.gen_f32()).collect())
+            .collect();
+        let targets: Vec<Vec<f32>> = (0..samples)
+            .map(|_| {
+                (0..n)
+                    .map(|_| if rng.gen_bool(0.2) { 1.0 } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+
+        let ov = run_with_plan_mode(
+            &net, &part, &plan, &inputs, &targets, 0.4, 2, ExecMode::Overlap,
+        );
+        let bl = run_with_plan_mode(
+            &net, &part, &plan, &inputs, &targets, 0.4, 2, ExecMode::Blocking,
+        );
+        let mut serial = net.clone();
+        let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.4, 2);
+
+        for (i, (a, s)) in ov.losses.iter().zip(sl.iter()).enumerate() {
+            assert!((a - s).abs() < 1e-4, "P={nparts} step {i}: loss {a} vs {s}");
+        }
+        for k in 0..net.depth() {
+            for (i, ((o, b), s)) in ov.net.layers[k]
+                .vals
+                .iter()
+                .zip(bl.net.layers[k].vals.iter())
+                .zip(serial.layers[k].vals.iter())
+                .enumerate()
+            {
+                assert!((o - b).abs() < 1e-4, "P={nparts} layer {k} nnz {i}: {o} vs blocking {b}");
+                assert!((o - s).abs() < 1e-4, "P={nparts} layer {k} nnz {i}: {o} vs serial {s}");
+            }
+            for ((o, b), s) in ov.net.biases[k]
+                .iter()
+                .zip(bl.net.biases[k].iter())
+                .zip(serial.biases[k].iter())
+            {
+                assert!((o - b).abs() < 1e-4 && (o - s).abs() < 1e-4, "P={nparts} bias layer {k}");
+            }
+        }
+    });
+}
+
+/// Minibatch steps agree between the two engines (the overlapped engine's
+/// compact batch-mean SpBP mirrors the full-width one).
+#[test]
+fn minibatch_overlap_matches_blocking() {
+    prop::check_seeded(0x3B1C, 5, |rng| {
+        let n = 8 + rng.gen_range(10);
+        let layers = 2 + rng.gen_range(2);
+        let nparts = 2 + rng.gen_range(5);
+        let b = 1 + rng.gen_range(4);
+        let net = random_net(rng, n, layers, 0.25);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let plan = CommPlan::build(&net.layers, &part);
+        // one packed batch, row-major [n × b]
+        let x: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+        let y: Vec<f32> = (0..n * b)
+            .map(|_| if rng.gen_bool(0.2) { 1.0 } else { 0.0 })
+            .collect();
+
+        let trained = |mode: ExecMode| -> (SparseNet, f32) {
+            let run = run_ranks(part.nparts, |rank, ep| {
+                let mut st = RankState::build(&net, &part, &plan, rank as u32, mode);
+                let loss = st.train_step_minibatch(ep, &plan, &x, &y, b, 0.3);
+                (st, loss)
+            })
+            .expect("minibatch run");
+            let mut out = net.clone();
+            let mut loss = 0f32;
+            for (st, l) in run.outputs {
+                st.merge_into(&mut out);
+                loss += l;
+            }
+            (out, loss)
+        };
+        let (ov, ov_loss) = trained(ExecMode::Overlap);
+        let (bl, bl_loss) = trained(ExecMode::Blocking);
+        assert!(
+            (ov_loss - bl_loss).abs() < 1e-4,
+            "P={nparts} b={b}: loss {ov_loss} vs {bl_loss}"
+        );
+        for k in 0..net.depth() {
+            for (i, (o, bv)) in ov.layers[k]
+                .vals
+                .iter()
+                .zip(bl.layers[k].vals.iter())
+                .enumerate()
+            {
+                assert!(
+                    (o - bv).abs() < 1e-4,
+                    "P={nparts} b={b} layer {k} nnz {i}: {o} vs {bv}"
+                );
+            }
+        }
+    });
+}
+
+/// The merge of a split-mode state reconstructs the exact original weights
+/// when nothing was trained — the split/merge round-trip is lossless.
+#[test]
+fn split_merge_roundtrip_is_lossless() {
+    prop::check_seeded(0x90FD, 10, |rng| {
+        let n = 8 + rng.gen_range(12);
+        let layers = 2 + rng.gen_range(3);
+        let nparts = 1 + rng.gen_range(8);
+        let net = random_net(rng, n, layers, 0.25);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let plan = CommPlan::build(&net.layers, &part);
+        let mut merged = net.clone();
+        // zero out to prove the merge rewrites every value
+        for w in merged.layers.iter_mut() {
+            w.vals.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for rank in 0..nparts as u32 {
+            let st = RankState::build(&net, &part, &plan, rank, ExecMode::Overlap);
+            st.merge_into(&mut merged);
+        }
+        for k in 0..net.depth() {
+            assert_eq!(
+                merged.layers[k].vals, net.layers[k].vals,
+                "P={nparts} layer {k}: split→merge changed values"
+            );
+        }
+    });
+}
+
+/// Contiguous serving partitions (the pool default) run the overlapped
+/// engine correctly too — the exact configuration the benches measure.
+#[test]
+fn overlap_matches_serial_on_contiguous_partition() {
+    let mut rng = Rng::new(1234);
+    let net = random_net(&mut rng, 32, 4, 0.2);
+    for nparts in [1usize, 2, 4, 8] {
+        let part: DnnPartition = spdnn::partition::contiguous_partition(&net.layers, nparts);
+        let plan = CommPlan::build(&net.layers, &part);
+        for b in [0usize, 1, 5, 16] {
+            let x0: Vec<f32> = (0..32 * b).map(|_| rng.gen_f32()).collect();
+            let serial = infer_batch(&net, &x0, b);
+            let (out, _) = infer_with_plan_mode(&net, &part, &plan, &x0, b, ExecMode::Overlap);
+            assert_eq!(out.len(), serial.len());
+            for (o, s) in out.iter().zip(serial.iter()) {
+                assert!((o - s).abs() < 1e-5, "P={nparts} b={b}");
+            }
+        }
+    }
+}

@@ -5,7 +5,7 @@
 
 use spdnn::comm::Phase;
 use spdnn::coordinator::sgd::train_distributed;
-use spdnn::coordinator::RankState;
+use spdnn::coordinator::{ExecMode, RankState};
 use spdnn::dnn::{sgd_serial, Activation, SparseNet};
 use spdnn::partition::plan::CommPlan;
 use spdnn::partition::random::random_partition;
@@ -48,8 +48,10 @@ fn threaded_forward_activations_match_serial_within_1e5() {
 
         let serial = sgd_serial::feedforward(&net, &x0);
 
+        // the blocking engine's full-width forward (the overlapped engine's
+        // compact mirror is covered by tests/overlap_correctness.rs)
         let run = run_ranks(nparts, |rank, ep| {
-            let mut state = RankState::build(&net, &part, rank as u32);
+            let mut state = RankState::build(&net, &part, &plan, rank as u32, ExecMode::Blocking);
             let acts = state.forward(ep, &plan, &x0);
             (state.rows.clone(), acts)
         })

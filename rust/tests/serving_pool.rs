@@ -2,10 +2,11 @@
 //! against the serial reference, micro-batch coalescing, rank-failure
 //! recovery, and graceful shutdown with the no-message-leak invariant.
 
+use spdnn::coordinator::ExecMode;
 use spdnn::dnn::inference::infer_batch;
 use spdnn::dnn::SparseNet;
 use spdnn::radixnet::{generate, RadixNetConfig};
-use spdnn::serving::{PoolConfig, RankPool};
+use spdnn::serving::{PoolConfig, RankPool, ServeError};
 use spdnn::util::Rng;
 use std::sync::Arc;
 use std::time::Duration;
@@ -41,6 +42,7 @@ fn stress_eight_clients_fifty_requests_match_serial() {
             max_batch: 32,
             max_wait: Duration::from_millis(1),
             adaptive: true,
+            mode: ExecMode::Overlap,
         },
     ));
     let clients = 8usize;
@@ -97,6 +99,7 @@ fn queued_singles_coalesce_into_batches() {
             max_batch: 16,
             max_wait: Duration::from_millis(200),
             adaptive: false,
+            mode: ExecMode::Overlap,
         },
     );
     let mut rng = Rng::new(7);
@@ -130,6 +133,7 @@ fn rank_panic_fails_one_request_then_pool_recovers() {
             max_batch: 8,
             max_wait: Duration::ZERO,
             adaptive: false,
+            mode: ExecMode::Overlap,
         },
     );
     let mut rng = Rng::new(21);
@@ -145,11 +149,12 @@ fn rank_panic_fails_one_request_then_pool_recovers() {
         .submit_sabotaged(x0, 2, 2)
         .wait()
         .expect_err("sabotaged request must fail");
-    assert_eq!(err.rank, 2, "root cause must not be masked: {}", err.message);
+    let rf = err.rank_failure().expect("expected a rank failure");
+    assert_eq!(rf.rank, 2, "root cause must not be masked: {}", rf.message);
     assert!(
-        err.message.contains("injected failure"),
+        rf.message.contains("injected failure"),
         "unexpected failure message: {}",
-        err.message
+        rf.message
     );
 
     // the pool must still be fully serviceable afterwards
@@ -182,6 +187,7 @@ fn shutdown_drains_queued_requests() {
             max_batch: 4,
             max_wait: Duration::from_millis(50),
             adaptive: false,
+            mode: ExecMode::Overlap,
         },
     );
     let mut rng = Rng::new(33);
@@ -208,6 +214,7 @@ fn oversized_request_served_alone() {
             max_batch: 4,
             max_wait: Duration::ZERO,
             adaptive: false,
+            mode: ExecMode::Overlap,
         },
     );
     let mut rng = Rng::new(5);
@@ -218,4 +225,87 @@ fn oversized_request_served_alone() {
     let summary = pool.shutdown().expect("shutdown");
     assert_eq!(summary.stats.batches, 1);
     assert_eq!(summary.stats.columns, b as u64);
+}
+
+/// Satellite: a ticket whose queue wait blows its SLO is shed with
+/// `ServeError::DeadlineExceeded` instead of being served late, and the
+/// shed shows up in the stats — while a generous SLO is served normally.
+#[test]
+fn deadline_blown_ticket_is_shed_not_served_late() {
+    let net = net64();
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 2,
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+            mode: ExecMode::Overlap,
+        },
+    );
+    let mut rng = Rng::new(77);
+
+    // keep the scheduler busy so the deadline ticket has to queue
+    let busy: Vec<_> = (0..4)
+        .map(|_| {
+            let x0 = random_input(&mut rng, 64, 8);
+            pool.submit(x0, 8)
+        })
+        .collect();
+    // zero SLO: any nonzero queue wait blows it
+    let x0 = random_input(&mut rng, 64, 2);
+    let doomed = pool.submit_with_deadline(x0, 2, Duration::ZERO);
+    let err = doomed.wait().expect_err("zero-SLO ticket must be shed");
+    assert!(err.is_deadline(), "expected deadline shed, got: {err}");
+    match err {
+        ServeError::DeadlineExceeded { waited, slo } => {
+            assert_eq!(slo, Duration::ZERO);
+            assert!(waited > Duration::ZERO);
+        }
+        other => panic!("expected DeadlineExceeded, got {other}"),
+    }
+    for t in busy {
+        t.wait().expect("busy traffic still served");
+    }
+
+    // a generous SLO is served normally and matches serial
+    let x0 = random_input(&mut rng, 64, 3);
+    let out = pool
+        .submit_with_deadline(x0.clone(), 3, Duration::from_secs(60))
+        .wait()
+        .expect("generous SLO served");
+    assert_matches_serial(&net, &x0, 3, &out, "generous SLO");
+
+    let summary = pool.shutdown().expect("shutdown");
+    assert!(summary.leaked_ranks.is_empty());
+    assert_eq!(summary.stats.shed_requests, 1);
+    assert_eq!(summary.stats.failed_requests, 0, "shed is not a rank failure");
+    assert_eq!(summary.stats.pool_rebuilds, 0, "shedding forces no rebuild");
+    assert_eq!(summary.stats.requests, 5, "4 busy + 1 generous served");
+}
+
+/// Deadline shedding also applies while draining the queue at shutdown:
+/// stale tickets fail fast instead of being served long past their SLO.
+#[test]
+fn shutdown_drain_sheds_expired_tickets() {
+    let net = net64();
+    let pool = RankPool::start(
+        net,
+        PoolConfig {
+            nranks: 2,
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+            mode: ExecMode::Overlap,
+        },
+    );
+    let mut rng = Rng::new(41);
+    let x0 = random_input(&mut rng, 64, 2);
+    let kept = pool.submit(x0, 2);
+    let x0 = random_input(&mut rng, 64, 2);
+    let doomed = pool.submit_with_deadline(x0, 2, Duration::ZERO);
+    let summary = pool.shutdown().expect("shutdown");
+    kept.wait().expect("undeadlined ticket drains normally");
+    assert!(doomed.wait().expect_err("expired at drain").is_deadline());
+    assert_eq!(summary.stats.shed_requests, 1);
 }
