@@ -6,10 +6,11 @@
 //!
 //! `cargo bench --bench table2_throughput` — `SPDNN_FULL=1` adds the
 //! deeper (480/1920-layer) configurations of the paper;
-//! `SPDNN_SECTION=overlap` runs only the overlap-vs-blocking section
-//! (the CI bench-smoke path), and `SPDNN_ENFORCE=1` fails the run if the
-//! overlapped engine does not beat the blocking engine by ≥ 1.15× at
-//! 4 ranks.
+//! `SPDNN_SECTION=overlap` runs only the overlap-vs-blocking section and
+//! `SPDNN_SECTION=pipeline` only the pipelined-vs-overlap section (the CI
+//! bench-smoke paths); `SPDNN_ENFORCE=1` fails the run if the overlapped
+//! engine does not beat the blocking engine by ≥ 1.15× at 4 ranks, or the
+//! pipelined engine loses to the overlap baseline.
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::coordinator::sgd::infer_with_plan;
@@ -27,6 +28,13 @@ use std::time::Duration;
 /// Acceptance bar for the overlapped engine at 4 ranks (enforced in the
 /// CI bench-smoke job via `SPDNN_ENFORCE=1`).
 const OVERLAP_BAR: f64 = 1.15;
+
+/// Acceptance bar for the pipelined engine vs the overlap baseline at
+/// 4 ranks: posting sends at boundary-row granularity must at minimum not
+/// lose to the whole-layer send schedule (enforced only under
+/// `SPDNN_ENFORCE=1` — repo convention, bars are unverifiable on dev
+/// laptops).
+const PIPELINE_BAR: f64 = 1.0;
 
 /// Overlap-vs-blocking on the bundled digits workload: the same net,
 /// partition, plan, and digit batch pushed through both engines; edges/s
@@ -90,6 +98,67 @@ fn overlap_section(full: bool, enforce: bool) {
     }
 }
 
+/// Pipelined-vs-overlap on the bundled digits workload: the same net,
+/// partition, plan, and digit batch pushed through the send-side
+/// pipelined engine and the whole-layer-send overlap baseline; edges/s of
+/// the better of `reps` passes per engine. Writes `BENCH_pipeline.json`.
+fn pipeline_section(full: bool, enforce: bool) {
+    let (n, l, ranks) = (1024usize, 24usize, 4usize);
+    let b = 16usize; // small batches keep the per-layer sync cost visible
+    let passes = if full { 128usize } else { 48 };
+    let reps = 3usize;
+    let chunk_acts = spdnn::coordinator::DEFAULT_CHUNK_ACTS;
+    println!("# Pipelined vs overlap (send-side row-range pipelining, digits workload, {ranks} ranks)");
+    let net = generate(&RadixNetConfig::graph_challenge(n, l).expect("cfg"));
+    let side = (n as f64).sqrt() as usize;
+    let data = synthetic_mnist(side, b, 42);
+    let (x0, b) = data.pack_batch(0, b);
+    let part = contiguous_partition(&net.layers, ranks);
+    let plan = CommPlan::build(&net.layers, &part);
+
+    let eps_of = |mode: ExecMode| -> f64 {
+        let run = run_ranks(ranks, |rank, ep| {
+            let mut state = RankState::build(&net, &part, &plan, rank as u32, mode);
+            let mut scratch = RankScratch::new();
+            let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch); // warm-up
+            let sw = Stopwatch::start();
+            for _ in 0..passes {
+                let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch);
+            }
+            sw.elapsed_secs()
+        })
+        .expect("pipeline bench run failed");
+        let secs = run.outputs.into_iter().fold(0f64, f64::max);
+        net.total_nnz() as f64 * (passes * b) as f64 / secs
+    };
+    let mut eps_overlap = 0f64;
+    let mut eps_pipeline = 0f64;
+    for _ in 0..reps {
+        eps_overlap = eps_overlap.max(eps_of(ExecMode::Overlap));
+        eps_pipeline = eps_pipeline.max(eps_of(ExecMode::Pipelined { chunk_acts }));
+    }
+    let speedup = eps_pipeline / eps_overlap;
+    println!(
+        "[bench] pipeline N={n} L={l} b={b} ranks={ranks} chunk={chunk_acts}: \
+         overlap {eps_overlap:.2E} edges/s, pipelined {eps_pipeline:.2E} edges/s \
+         (speedup {speedup:.2}x, bar {PIPELINE_BAR}x)"
+    );
+    let json = format!(
+        "{{\"neurons\":{n},\"layers\":{l},\"batch\":{b},\"ranks\":{ranks},\
+         \"passes\":{passes},\"chunk_acts\":{chunk_acts},\
+         \"overlap_eps\":{eps_overlap:.1},\"pipelined_eps\":{eps_pipeline:.1},\
+         \"speedup\":{speedup:.4},\"bar\":{PIPELINE_BAR}}}"
+    );
+    std::fs::write("BENCH_pipeline.json", &json).expect("write BENCH_pipeline.json");
+    println!("wrote BENCH_pipeline.json: {json}");
+    if enforce {
+        assert!(
+            speedup >= PIPELINE_BAR,
+            "pipelined speedup {speedup:.3}x below the {PIPELINE_BAR}x bar"
+        );
+    }
+}
+
 /// Live threaded engine: edges/s of the batched fused-SpMM inference path
 /// at `ranks`, with partition + plan built once (the serving setup cost is
 /// off the clock, as in a real request loop).
@@ -116,10 +185,18 @@ fn live_parallel_eps(net: &spdnn::dnn::SparseNet, b: usize, inputs: usize, ranks
 fn main() {
     let full = std::env::var("SPDNN_FULL").is_ok();
     let enforce = std::env::var("SPDNN_ENFORCE").is_ok();
-    if std::env::var("SPDNN_SECTION").as_deref() == Ok("overlap") {
-        // CI bench-smoke path: just the overlap-vs-blocking bar
-        overlap_section(full, enforce);
-        return;
+    match std::env::var("SPDNN_SECTION").as_deref() {
+        Ok("overlap") => {
+            // CI bench-smoke path: just the overlap-vs-blocking bar
+            overlap_section(full, enforce);
+            return;
+        }
+        Ok("pipeline") => {
+            // CI bench-smoke path: just the pipelined-vs-overlap bar
+            pipeline_section(full, enforce);
+            return;
+        }
+        _ => {}
     }
     // (neurons, layers) grid; the paper runs L ∈ {120, 480, 1920} at each N
     let grid: Vec<(usize, usize)> = if full {
@@ -228,4 +305,6 @@ fn main() {
 
     println!();
     overlap_section(full, enforce);
+    println!();
+    pipeline_section(full, enforce);
 }

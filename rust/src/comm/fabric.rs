@@ -2,8 +2,13 @@
 //!
 //! Ranks are threads; each rank holds an [`Endpoint`] with channels to every
 //! other rank. Sends are non-blocking (like `MPI_Isend` in Alg. 2 line 5);
-//! receives match on (layer, phase, transfer-id) with out-of-order stashing,
-//! which gives the same semantics as tag-matched MPI point-to-point.
+//! receives match on (layer, phase, transfer-id, chunk-id) with out-of-order
+//! stashing, which gives the same semantics as tag-matched MPI
+//! point-to-point. The chunk id carries **sub-transfer pipelining**: the
+//! pipelined send schedule splits one logical transfer into several chunks
+//! posted as each row range finishes, and [`Endpoint::recv_any`] lets the
+//! receiver apply those partial payloads in arrival order. Whole-transfer
+//! senders use chunk 0 ([`Endpoint::send`]).
 //! Every endpoint counts words/messages sent so live runs can be checked
 //! against the precomputed [`crate::partition::CommPlan`].
 //!
@@ -33,10 +38,16 @@ pub struct Msg {
     pub from: u32,
     /// Transfer id within the layer plan (unique per (from,to) pair).
     pub transfer: u32,
+    /// Sub-transfer chunk id (0 for whole-transfer sends).
+    pub chunk: u32,
     pub payload: Vec<f32>,
 }
 
-type Key = (u32, Phase, u32, u32); // layer, phase, from, transfer
+type Key = (u32, Phase, u32, u32, u32); // layer, phase, from, transfer, chunk
+
+/// One entry of a [`Endpoint::recv_any`] want-list:
+/// `(source rank, transfer id, chunk id)`.
+pub type Want = (u32, u32, u32);
 
 /// How long a blocked receive sleeps between checks of the fault flag.
 const FAULT_POLL: Duration = Duration::from_millis(50);
@@ -44,6 +55,16 @@ const FAULT_POLL: Duration = Duration::from_millis(50);
 /// Cap on recycled payload buffers kept per endpoint (bounds memory while
 /// still covering every in-flight transfer of a layer step).
 const MAX_SPARE_BUFS: usize = 32;
+
+/// A recycled buffer whose capacity exceeds this multiple of the largest
+/// payload the endpoint has recently handled is dropped instead of kept:
+/// one spike of oversized batches must not pin worst-case allocations in
+/// the spare list forever.
+const SPARE_CAP_MULTIPLE: usize = 8;
+
+/// Floor for the recent-payload watermark, so tiny control-sized payloads
+/// don't make the spare list reject every normal buffer.
+const SPARE_CAP_FLOOR: usize = 64;
 
 /// Per-rank endpoint.
 pub struct Endpoint {
@@ -62,14 +83,31 @@ pub struct Endpoint {
     /// pool rank serving a stream of requests) stops touching the
     /// allocator for payloads entirely.
     spare: Vec<Vec<f32>>,
+    /// Decaying watermark of recently recycled payload lengths — the
+    /// capacity bound for the spare list.
+    recent_payload: usize,
     /// Counters: words sent, messages sent.
     pub sent_words: u64,
     pub sent_msgs: u64,
 }
 
 impl Endpoint {
-    /// Non-blocking send of `payload` to `to`.
+    /// Non-blocking send of a whole-transfer `payload` to `to` (chunk 0).
     pub fn send(&mut self, to: u32, layer: u32, phase: Phase, transfer: u32, payload: Vec<f32>) {
+        self.send_chunk(to, layer, phase, transfer, 0, payload);
+    }
+
+    /// Non-blocking send of one sub-transfer chunk — the pipelined engine
+    /// posts each chunk the moment its row range finishes computing.
+    pub fn send_chunk(
+        &mut self,
+        to: u32,
+        layer: u32,
+        phase: Phase,
+        transfer: u32,
+        chunk: u32,
+        payload: Vec<f32>,
+    ) {
         self.sent_words += payload.len() as u64;
         self.sent_msgs += 1;
         let msg = Msg {
@@ -77,12 +115,23 @@ impl Endpoint {
             phase,
             from: self.rank,
             transfer,
+            chunk,
             payload,
         };
-        // A disconnected peer means that rank panicked; propagate.
-        self.senders[to as usize]
-            .send(msg)
-            .expect("peer rank hung up");
+        // A disconnected peer means that rank died. During a poisoned
+        // teardown that is an *expected consequence* of the root-cause
+        // failure, not news: unwind with the standard secondary message so
+        // the failure triage ([`crate::runtime::parallel`], the serving
+        // pool) never mistakes this for an independent fault.
+        if self.senders[to as usize].send(msg).is_err() {
+            if self.poisoned() {
+                panic!(
+                    "fabric poisoned: a peer rank failed while rank {} was sending",
+                    self.rank
+                );
+            }
+            panic!("peer rank hung up");
+        }
     }
 
     /// Pop the oldest stashed payload for `key`, dropping empty queues so
@@ -107,14 +156,14 @@ impl Endpoint {
     /// stashed. Panics if the fabric is poisoned while waiting (a peer
     /// rank failed).
     pub fn recv(&mut self, from: u32, layer: u32, phase: Phase, transfer: u32) -> Vec<f32> {
-        let key: Key = (layer, phase, from, transfer);
+        let key: Key = (layer, phase, from, transfer, 0);
         if let Some(p) = self.stash_pop(&key) {
             return p;
         }
         loop {
             match self.inbox.recv_timeout(FAULT_POLL) {
                 Ok(m) => {
-                    let k: Key = (m.layer, m.phase, m.from, m.transfer);
+                    let k: Key = (m.layer, m.phase, m.from, m.transfer, m.chunk);
                     if k == key {
                         return m.payload;
                     }
@@ -135,10 +184,10 @@ impl Endpoint {
         }
     }
 
-    /// Non-blocking receive: the payload if the uniquely-tagged message is
-    /// already here (stashed or sitting in the channel), else `None`.
-    /// Everything drained from the channel on the way is stashed, so no
-    /// message is ever lost to a miss.
+    /// Non-blocking receive of a whole-transfer message (chunk 0): the
+    /// payload if the uniquely-tagged message is already here (stashed or
+    /// sitting in the channel), else `None`. Everything drained from the
+    /// channel on the way is stashed, so no message is ever lost to a miss.
     pub fn try_recv(
         &mut self,
         from: u32,
@@ -146,12 +195,24 @@ impl Endpoint {
         phase: Phase,
         transfer: u32,
     ) -> Option<Vec<f32>> {
-        let key: Key = (layer, phase, from, transfer);
+        self.try_recv_chunk(from, layer, phase, transfer, 0)
+    }
+
+    /// [`Endpoint::try_recv`] for one sub-transfer chunk.
+    pub fn try_recv_chunk(
+        &mut self,
+        from: u32,
+        layer: u32,
+        phase: Phase,
+        transfer: u32,
+        chunk: u32,
+    ) -> Option<Vec<f32>> {
+        let key: Key = (layer, phase, from, transfer, chunk);
         if let Some(p) = self.stash_pop(&key) {
             return Some(p);
         }
         while let Ok(m) = self.inbox.try_recv() {
-            let k: Key = (m.layer, m.phase, m.from, m.transfer);
+            let k: Key = (m.layer, m.phase, m.from, m.transfer, m.chunk);
             if k == key {
                 return Some(m.payload);
             }
@@ -160,20 +221,16 @@ impl Endpoint {
         None
     }
 
-    /// Block until **any** of the wanted `(from, transfer)` messages of
-    /// `(layer, phase)` arrives; returns its index in `wants` plus the
+    /// Block until **any** of the wanted `(from, transfer, chunk)` messages
+    /// of `(layer, phase)` arrives; returns its index in `wants` plus the
     /// payload. Arrival order, not plan order — the overlapped engine
-    /// applies each remote segment the moment its activations land.
+    /// applies each remote segment (and the pipelined engine each partial
+    /// chunk payload) the moment its activations land.
     /// Panics if the fabric is poisoned while waiting.
-    pub fn recv_any(
-        &mut self,
-        layer: u32,
-        phase: Phase,
-        wants: &[(u32, u32)],
-    ) -> (usize, Vec<f32>) {
+    pub fn recv_any(&mut self, layer: u32, phase: Phase, wants: &[Want]) -> (usize, Vec<f32>) {
         assert!(!wants.is_empty(), "recv_any needs at least one want");
-        for (i, &(from, transfer)) in wants.iter().enumerate() {
-            let key: Key = (layer, phase, from, transfer);
+        for (i, &(from, transfer, chunk)) in wants.iter().enumerate() {
+            let key: Key = (layer, phase, from, transfer, chunk);
             if let Some(p) = self.stash_pop(&key) {
                 return (i, p);
             }
@@ -184,12 +241,12 @@ impl Endpoint {
                     if m.layer == layer && m.phase == phase {
                         if let Some(i) = wants
                             .iter()
-                            .position(|&(f, t)| f == m.from && t == m.transfer)
+                            .position(|&(f, t, c)| f == m.from && t == m.transfer && c == m.chunk)
                         {
                             return (i, m.payload);
                         }
                     }
-                    self.stash_push((m.layer, m.phase, m.from, m.transfer), m.payload);
+                    self.stash_push((m.layer, m.phase, m.from, m.transfer, m.chunk), m.payload);
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if self.poisoned() {
@@ -213,8 +270,22 @@ impl Endpoint {
     }
 
     /// Return a consumed payload's allocation for reuse by later sends.
+    ///
+    /// The spare list is bounded in **count** ([`MAX_SPARE_BUFS`]) and in
+    /// **capacity**: a decaying watermark tracks recent payload lengths,
+    /// and buffers whose capacity exceeds [`SPARE_CAP_MULTIPLE`] times
+    /// that watermark are dropped — so one spike of oversized batches
+    /// through a long-lived pool endpoint cannot pin worst-case payload
+    /// allocations forever. Because [`Endpoint::take_buf`] pops from the
+    /// top of the stack, spares buried under it never re-enter `recycle`
+    /// on their own — so every call also evicts stored spares the decayed
+    /// watermark no longer justifies.
     pub fn recycle(&mut self, mut buf: Vec<f32>) {
-        if self.spare.len() < MAX_SPARE_BUFS {
+        // decay by 1/16 per recycle, then absorb the new sample
+        self.recent_payload = (self.recent_payload - self.recent_payload / 16).max(buf.len());
+        let cap_bound = SPARE_CAP_MULTIPLE * self.recent_payload.max(SPARE_CAP_FLOOR);
+        self.spare.retain(|b| b.capacity() <= cap_bound);
+        if self.spare.len() < MAX_SPARE_BUFS && buf.capacity() <= cap_bound {
             buf.clear();
             self.spare.push(buf);
         }
@@ -235,7 +306,7 @@ impl Endpoint {
     /// messages that were sent but never received also count as leaks.
     pub fn drained(&mut self) -> bool {
         while let Ok(m) = self.inbox.try_recv() {
-            self.stash_push((m.layer, m.phase, m.from, m.transfer), m.payload);
+            self.stash_push((m.layer, m.phase, m.from, m.transfer, m.chunk), m.payload);
         }
         self.stash.is_empty()
     }
@@ -261,6 +332,7 @@ pub fn fabric(n: usize) -> Vec<Endpoint> {
             stash: HashMap::new(),
             fault: fault.clone(),
             spare: Vec::new(),
+            recent_payload: 0,
             sent_words: 0,
             sent_msgs: 0,
         })
@@ -371,7 +443,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(300));
             e1.send(0, 0, Phase::Forward, 3, vec![1.0]);
         });
-        let wants = [(1u32, 3u32), (2u32, 7u32)];
+        let wants = [(1u32, 3u32, 0u32), (2u32, 7u32, 0u32)];
         let (i, p) = e0.recv_any(0, Phase::Forward, &wants);
         assert_eq!((i, p), (1, vec![2.0]), "late sender must not block the early one");
         let (i, p) = e0.recv_any(0, Phase::Forward, &wants);
@@ -390,7 +462,7 @@ mod tests {
         e1.send(0, 2, Phase::Forward, 1, vec![6.0]);
         // blocking recv of the unrelated tag stashes the wanted one
         assert_eq!(e0.recv(1, 9, Phase::Backward, 0), vec![5.0]);
-        let (i, p) = e0.recv_any(2, Phase::Forward, &[(1, 1)]);
+        let (i, p) = e0.recv_any(2, Phase::Forward, &[(1, 1, 0)]);
         assert_eq!((i, p), (0, vec![6.0]));
         assert!(e0.drained());
     }
@@ -415,10 +487,138 @@ mod tests {
         e1.send(0, 2, Phase::Backward, 3, vec![5.0]);
         e1.send(0, 7, Phase::Forward, 0, vec![8.0]);
         assert_eq!(e0.recv(1, 7, Phase::Forward, 0), vec![8.0]);
-        let wants = [(1u32, 3u32)];
+        let wants = [(1u32, 3u32, 0u32)];
         assert_eq!(e0.recv_any(2, Phase::Backward, &wants), (0, vec![4.0]));
         assert_eq!(e0.recv_any(2, Phase::Backward, &wants), (0, vec![5.0]));
         assert!(e0.drained());
+    }
+
+    #[test]
+    fn chunked_subtransfers_match_by_chunk_id_in_arrival_order() {
+        // One logical transfer posted as three chunks, deliberately out of
+        // chunk order: recv_any must hand them back as they arrive, keyed
+        // by (from, transfer, chunk), and try_recv_chunk must hit too.
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send_chunk(0, 4, Phase::Forward, 2, 1, vec![10.0]);
+        e1.send_chunk(0, 4, Phase::Forward, 2, 0, vec![20.0]);
+        e1.send_chunk(0, 4, Phase::Forward, 2, 2, vec![30.0]);
+        let mut wants = vec![(1u32, 2u32, 0u32), (1, 2, 1), (1, 2, 2)];
+        let mut got = vec![0f32; 3];
+        while !wants.is_empty() {
+            let (i, p) = e0.recv_any(4, Phase::Forward, &wants);
+            got[wants[i].2 as usize] = p[0];
+            wants.swap_remove(i);
+        }
+        assert_eq!(got, vec![20.0, 10.0, 30.0]);
+        assert!(e0.drained());
+        // a chunked send is NOT visible to a chunk-0 (whole-transfer) recv
+        e1.send_chunk(0, 5, Phase::Forward, 0, 3, vec![7.0]);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            assert!(e0.try_recv(1, 5, Phase::Forward, 0).is_none());
+            if let Some(p) = e0.try_recv_chunk(1, 5, Phase::Forward, 0, 3) {
+                assert_eq!(p, vec![7.0]);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "chunk never arrived");
+            std::thread::yield_now();
+        }
+        assert!(e0.drained());
+    }
+
+    #[test]
+    fn send_to_gone_peer_on_poisoned_fabric_reports_poisoning() {
+        // A peer endpoint dropped during a poisoned teardown must surface
+        // the standard secondary "fabric poisoned" message, not the
+        // misleading independent "peer rank hung up" panic.
+        let mut eps = fabric(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.poison();
+        drop(e1);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e0.send(1, 0, Phase::Forward, 0, vec![1.0])
+        }))
+        .expect_err("send to a dropped peer must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("fabric poisoned"), "{msg}");
+        // without poisoning, the hang-up is an independent fault
+        let mut eps = fabric(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        drop(e1);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e0.send(1, 0, Phase::Forward, 0, vec![1.0])
+        }))
+        .expect_err("send to a dropped peer must panic");
+        let msg = err
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .unwrap_or_default();
+        assert!(msg.contains("peer rank hung up"), "{msg}");
+    }
+
+    #[test]
+    fn recycle_drops_buffers_far_above_recent_payload_size() {
+        let mut eps = fabric(1);
+        let mut e = eps.pop().unwrap();
+        // steady small traffic establishes the watermark
+        for _ in 0..32 {
+            let mut b = e.take_buf();
+            b.resize(100, 0.0);
+            e.recycle(b);
+        }
+        let spare_before = e.spare.len();
+        // an over-reserved allocation far above the watermark must not be
+        // retained by the spare list
+        let huge = Vec::with_capacity(100 * SPARE_CAP_MULTIPLE * 100);
+        e.recycle(huge);
+        assert_eq!(e.spare.len(), spare_before, "oversized buffer was pinned");
+        assert!(e.spare.iter().all(|b| b.capacity() < 100 * SPARE_CAP_MULTIPLE * 100));
+        // steady LARGE traffic is retained: the watermark follows the load
+        for _ in 0..8 {
+            e.recycle(vec![0.0f32; 50_000]);
+        }
+        assert!(
+            e.spare.iter().any(|b| b.capacity() >= 50_000),
+            "legitimate steady-state large buffers must be reusable"
+        );
+    }
+
+    #[test]
+    fn recycle_unpins_spike_buffers_after_traffic_shrinks() {
+        // The regression ISSUE names: a spike of genuinely large payloads
+        // (len == capacity) is retained at spike time, sinks below the
+        // LIFO top, and would otherwise stay pinned forever once traffic
+        // returns to small batches — the watermark decay must evict it.
+        let mut eps = fabric(1);
+        let mut e = eps.pop().unwrap();
+        for _ in 0..4 {
+            e.recycle(vec![0.0f32; 50_000]);
+        }
+        assert!(
+            e.spare.iter().any(|b| b.capacity() >= 50_000),
+            "spike buffers are retained while the load looks large"
+        );
+        // small traffic resumes; the watermark decays by 1/16 per recycle,
+        // and once 8x the watermark drops below the spike capacity the
+        // stored spares are evicted even though they never re-enter
+        // recycle themselves
+        for _ in 0..200 {
+            let mut b = e.take_buf();
+            b.resize(100, 0.0);
+            e.recycle(b);
+        }
+        assert!(
+            e.spare.iter().all(|b| b.capacity() < 50_000),
+            "spike allocations stayed pinned after the load shrank"
+        );
+        assert!(!e.spare.is_empty(), "normal-size buffers are still pooled");
     }
 
     #[test]

@@ -4,5 +4,5 @@
 pub mod fabric;
 pub mod netmodel;
 
-pub use fabric::{fabric, Endpoint, Msg, Phase};
+pub use fabric::{fabric, Endpoint, Msg, Phase, Want};
 pub use netmodel::{ComputeModel, NetModel};

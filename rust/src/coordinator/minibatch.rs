@@ -105,9 +105,10 @@ impl RankState {
         b: usize,
         eta: f32,
     ) -> f32 {
-        match self.repr {
-            Repr::Full { .. } => self.train_step_minibatch_blocking(ep, plan, x0, y, b, eta),
-            Repr::Split { .. } => self.train_step_overlap(ep, plan, x0, y, b, eta),
+        match self.mode() {
+            ExecMode::Blocking => self.train_step_minibatch_blocking(ep, plan, x0, y, b, eta),
+            ExecMode::Overlap => self.train_step_overlap(ep, plan, x0, y, b, eta),
+            ExecMode::Pipelined { .. } => self.train_step_pipelined(ep, plan, x0, y, b, eta),
         }
     }
 

@@ -4,6 +4,9 @@
 //!   with the blocking (full-width) engine and the mode dispatch;
 //! - [`overlap`]: the split-CSR overlapped engine — local-segment compute
 //!   runs while remote activations are in flight;
+//! - [`pipeline`]: the send-side pipelined engine — boundary rows compute
+//!   first and every outbound payload posts as chunked sub-transfers
+//!   before the interior rows, overlapping with the peers' receives;
 //! - [`sgd`]: live threaded distributed training/inference over the
 //!   simulated fabric, with counter cross-checks against the plan;
 //! - [`replay`]: deterministic timing simulator (Fig. 4/5, Table 2) using
@@ -14,10 +17,11 @@
 pub mod gb_baseline;
 pub mod minibatch;
 pub mod overlap;
+pub mod pipeline;
 pub mod replay;
 pub mod sgd;
 pub mod worker;
 
 pub use replay::{replay, ReplayConfig, ReplayResult};
 pub use sgd::{infer_distributed, train_distributed, TrainRun};
-pub use worker::{ExecMode, RankScratch, RankState};
+pub use worker::{ExecMode, RankScratch, RankState, DEFAULT_CHUNK_ACTS};

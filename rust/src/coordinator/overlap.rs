@@ -21,7 +21,7 @@
 
 use super::minibatch::row_means;
 use super::worker::{RankScratch, RankState, Repr};
-use crate::comm::{Endpoint, Phase};
+use crate::comm::{Endpoint, Phase, Want};
 use crate::partition::CommPlan;
 
 impl RankState {
@@ -97,14 +97,16 @@ impl RankState {
                 // 3a. apply everything that already landed, without blocking
                 scratch.wants.clear();
                 scratch.want_seg.clear();
-                for (si, &(src, tid)) in sl.recv_wants.iter().enumerate() {
-                    if let Some(payload) = ep.try_recv(src, k as u32, Phase::Forward, tid) {
+                for (si, &(src, tid, chunk)) in sl.recv_wants.iter().enumerate() {
+                    if let Some(payload) =
+                        ep.try_recv_chunk(src, k as u32, Phase::Forward, tid, chunk)
+                    {
                         let z = &mut scratch.pong[..nloc * b];
                         let seg = &sl.mat.remote[si].csr;
                         self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, z, b));
                         ep.recycle(payload);
                     } else {
-                        scratch.wants.push((src, tid));
+                        scratch.wants.push((src, tid, chunk));
                         scratch.want_seg.push(si);
                     }
                 }
@@ -203,15 +205,17 @@ impl RankState {
                 let nsegs = sl.mat.remote.len();
                 let mut lay_payloads: Vec<Vec<f32>> = vec![Vec::new(); nsegs];
                 if !fuse_now {
-                    let mut wants: Vec<(u32, u32)> = Vec::with_capacity(nsegs);
+                    let mut wants: Vec<Want> = Vec::with_capacity(nsegs);
                     let mut want_seg: Vec<usize> = Vec::with_capacity(nsegs);
-                    for (si, &(src, tid)) in sl.recv_wants.iter().enumerate() {
-                        if let Some(payload) = ep.try_recv(src, k as u32, Phase::Forward, tid) {
+                    for (si, &(src, tid, chunk)) in sl.recv_wants.iter().enumerate() {
+                        if let Some(payload) =
+                            ep.try_recv_chunk(src, k as u32, Phase::Forward, tid, chunk)
+                        {
                             let seg = &sl.mat.remote[si].csr;
                             self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, &mut z, b));
                             lay_payloads[si] = payload;
                         } else {
-                            wants.push((src, tid));
+                            wants.push((src, tid, chunk));
                             want_seg.push(si);
                         }
                     }
@@ -273,8 +277,9 @@ impl RankState {
                 let mut sseg = ep.take_buf();
                 sseg.resize(seg.csr.ncols, 0.0);
                 self.timer.time("spmv", || seg.csr.spmv_t_add(&delta, &mut sseg));
-                self.timer
-                    .time("comm", || ep.send(seg.src, k as u32, Phase::Backward, seg.tid, sseg));
+                self.timer.time("comm", || {
+                    ep.send_chunk(seg.src, k as u32, Phase::Backward, seg.tid, seg.chunk, sseg)
+                });
             }
             // 2. local transpose over owned slots
             let mut s_local = vec![0f32; inw];
@@ -289,7 +294,8 @@ impl RankState {
             }
             // 4. mirrored receives in arrival order (behind the update)
             if !sl.sends.is_empty() {
-                let mut wants: Vec<(u32, u32)> = sl.sends.iter().map(|s| (s.to, s.tid)).collect();
+                let mut wants: Vec<Want> =
+                    sl.sends.iter().map(|s| (s.to, s.tid, 0)).collect();
                 let mut which: Vec<usize> = (0..sl.sends.len()).collect();
                 while !wants.is_empty() {
                     let (i, payload) =

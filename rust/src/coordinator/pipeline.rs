@@ -1,0 +1,559 @@
+//! The split-CSR **pipelined** execution engine ([`ExecMode::Pipelined`]):
+//! send-side row-range pipelining on top of the overlap layout.
+//!
+//! The overlap engine ([`ExecMode::Overlap`]) hides the *receive* wait
+//! behind local-segment compute, but every outbound payload still waits
+//! for the whole previous layer to finish — the sender side of Alg. 2's
+//! SpMV pipeline stays bulk-synchronous. This engine fixes that: at build
+//! time each layer's rows are regrouped so **boundary rows** (rows whose
+//! activations feed a remote destination in the next layer) are packed
+//! first, grouped per outbound chunk ([`crate::sparse::regroup_rows`]),
+//! and every layer step runs:
+//!
+//! 1. local-segment pass over the **boundary rows only**;
+//! 2. drain inbound chunk payloads — each applied to the boundary rows
+//!    the moment it lands (non-blocking first, then in arrival order),
+//!    with **interior local tiles computed between polls** so the rank is
+//!    never idle while payloads are in flight;
+//! 3. the instant every boundary-feeding payload is in: epilogue on the
+//!    boundary block and **post every outbound payload of the next layer
+//!    as chunked sub-transfers** — before any remaining interior row
+//!    computes, so peers' receives overlap this rank's interior work;
+//! 4. finish the interior local rows, apply every payload's interior
+//!    contribution, interior epilogue.
+//!
+//! The backward mirror posts each remote segment's partial gradient as
+//! the same sub-transfer chunks *before* the weight-update window, and
+//! drains the mirrored gradient receives behind it in arrival order.
+//! Layer-0 sends (the network input is available immediately) post at the
+//! very start of the step.
+//!
+//! Like the overlap twins, the inference step here and the retaining one
+//! in [`RankState::train_step_pipelined`] are intentional mirrors — a
+//! change to the send/drain schedule in one must be mirrored in the other.
+
+use super::minibatch::row_means;
+use super::worker::{ChunkSend, RankScratch, RankState, Repr, SplitLayer};
+use crate::comm::{Endpoint, Phase, Want};
+use crate::partition::CommPlan;
+
+/// Interior rows computed per tile between receive polls: small enough to
+/// notice a landing payload quickly, large enough to amortize the sweep.
+const INTERIOR_TILE_ROWS: usize = 64;
+
+impl RankState {
+    /// Pipelined batched forward over compact activations (permuted,
+    /// boundary-first row layout per layer; the last layer keeps its
+    /// original order). Returns the final layer's owned rows
+    /// `[local_L × b]` row-major, borrowed from `scratch.ping`.
+    pub(crate) fn infer_pipelined_compact<'s>(
+        &mut self,
+        ep: &mut Endpoint,
+        _plan: &CommPlan, // schedule is fully precompiled into the split layers
+        x0: &[f32],
+        b: usize,
+        scratch: &'s mut RankScratch,
+    ) -> &'s [f32] {
+        let depth = self.depth();
+        let maxcompact = self
+            .input_rows
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        scratch.ensure(maxcompact * b, 0);
+        for (i, &j) in self.input_rows.iter().enumerate() {
+            let j = j as usize;
+            scratch.ping[i * b..(i + 1) * b].copy_from_slice(&x0[j * b..(j + 1) * b]);
+        }
+        let layers = match &self.repr {
+            Repr::Split { layers } => layers,
+            Repr::Full { .. } => unreachable!("pipelined path dispatched on Split"),
+        };
+        let input_sends = &self.input_sends;
+        for (k, sl) in layers.iter().enumerate().take(depth) {
+            let pipe = sl.pipe.as_ref().expect("pipelined layer schedule");
+            let inw = sl.mat.local_gcols.len();
+            let nloc = sl.mat.nrows;
+            let nb = pipe.boundary_end;
+            // 0. layer 0 only: the input vector is available the moment the
+            // step starts — post its outbound chunks immediately. Deeper
+            // layers' inputs were posted during the previous layer's step.
+            if k == 0 {
+                let cur = &scratch.ping[..inw * b];
+                self.timer.time("comm", || {
+                    for s in input_sends {
+                        let mut payload = ep.take_buf();
+                        payload.reserve(s.pos.len() * b);
+                        for &p in &s.pos {
+                            let p = p as usize;
+                            payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
+                        }
+                        ep.send_chunk(s.to, 0, Phase::Forward, s.tid, s.chunk, payload);
+                    }
+                });
+            }
+            // 1. local pass over the boundary rows only
+            {
+                let x = &scratch.ping[..inw * b];
+                let z = &mut scratch.pong[..nloc * b];
+                self.timer.time("spmv", || {
+                    sl.mat.local.spmm_fused_range_rowmajor(x, z, b, 0, nb, |_, _| {});
+                });
+            }
+            // 2. drain arrivals / interleave interior tiles / post outbound
+            scratch.wants.clear();
+            scratch.want_seg.clear();
+            for (si, &w) in sl.recv_wants.iter().enumerate() {
+                scratch.wants.push(w);
+                scratch.want_seg.push(si);
+            }
+            scratch.held.clear();
+            scratch.held.resize_with(sl.mat.remote.len(), || None);
+            let mut boundary_pending = pipe.seg_feeds_boundary.iter().filter(|&&f| f).count();
+            let mut interior_done = nb;
+            let mut posted = false;
+            loop {
+                // 3. the moment the boundary block is final, apply its
+                // epilogue and post every outbound chunk of the next layer
+                // — interior rows are still uncomputed at this point.
+                if !posted && boundary_pending == 0 {
+                    {
+                        let z = &mut scratch.pong[..nloc * b];
+                        let bias = &self.biases[k];
+                        let act = self.activation;
+                        let perm = &pipe.perm;
+                        self.timer.time("spmv", || {
+                            let mut epi = act.fused_bias_epilogue(bias);
+                            for r in 0..nb {
+                                epi(perm[r] as usize, &mut z[r * b..(r + 1) * b]);
+                            }
+                        });
+                    }
+                    let z = &scratch.pong[..nloc * b];
+                    self.timer.time("comm", || {
+                        for s in &pipe.out_sends {
+                            let mut payload = ep.take_buf();
+                            payload.reserve(s.pos.len() * b);
+                            for &p in &s.pos {
+                                let p = p as usize;
+                                payload.extend_from_slice(&z[p * b..(p + 1) * b]);
+                            }
+                            ep.send_chunk(
+                                s.to,
+                                (k + 1) as u32,
+                                Phase::Forward,
+                                s.tid,
+                                s.chunk,
+                                payload,
+                            );
+                        }
+                    });
+                    posted = true;
+                }
+                if scratch.wants.is_empty() {
+                    break;
+                }
+                // non-blocking sweep of everything already here
+                let mut progressed = false;
+                let mut i = 0;
+                while i < scratch.wants.len() {
+                    let (src, tid, chunk) = scratch.wants[i];
+                    if let Some(payload) =
+                        ep.try_recv_chunk(src, k as u32, Phase::Forward, tid, chunk)
+                    {
+                        let si = scratch.want_seg[i];
+                        scratch.wants.swap_remove(i);
+                        scratch.want_seg.swap_remove(i);
+                        let z = &mut scratch.pong[..nloc * b];
+                        let seg = &sl.mat.remote[si].csr;
+                        self.timer
+                            .time("spmv", || seg.spmm_add_range_rowmajor(&payload, z, b, 0, nb));
+                        if pipe.seg_feeds_boundary[si] {
+                            boundary_pending -= 1;
+                        }
+                        scratch.held[si] = Some(payload);
+                        progressed = true;
+                    } else {
+                        i += 1;
+                    }
+                }
+                if progressed {
+                    continue; // recheck the post condition first
+                }
+                // nothing has landed: compute an interior tile between
+                // polls, or block once the interior is exhausted
+                if interior_done < nloc {
+                    let hi = (interior_done + INTERIOR_TILE_ROWS).min(nloc);
+                    let x = &scratch.ping[..inw * b];
+                    let z = &mut scratch.pong[..nloc * b];
+                    self.timer.time("spmv", || {
+                        sl.mat
+                            .local
+                            .spmm_fused_range_rowmajor(x, z, b, interior_done, hi, |_, _| {});
+                    });
+                    interior_done = hi;
+                    continue;
+                }
+                let (i, payload) = {
+                    let wants = &scratch.wants;
+                    self.timer
+                        .time("wait", || ep.recv_any(k as u32, Phase::Forward, wants))
+                };
+                let si = scratch.want_seg[i];
+                scratch.wants.swap_remove(i);
+                scratch.want_seg.swap_remove(i);
+                let z = &mut scratch.pong[..nloc * b];
+                let seg = &sl.mat.remote[si].csr;
+                self.timer
+                    .time("spmv", || seg.spmm_add_range_rowmajor(&payload, z, b, 0, nb));
+                if pipe.seg_feeds_boundary[si] {
+                    boundary_pending -= 1;
+                }
+                scratch.held[si] = Some(payload);
+            }
+            // 4. finish interior local rows, add every payload's interior
+            // contribution, interior epilogue
+            if interior_done < nloc {
+                let x = &scratch.ping[..inw * b];
+                let z = &mut scratch.pong[..nloc * b];
+                self.timer.time("spmv", || {
+                    sl.mat
+                        .local
+                        .spmm_fused_range_rowmajor(x, z, b, interior_done, nloc, |_, _| {});
+                });
+            }
+            for (si, held) in scratch.held.iter_mut().enumerate() {
+                if let Some(payload) = held.take() {
+                    let z = &mut scratch.pong[..nloc * b];
+                    let seg = &sl.mat.remote[si].csr;
+                    self.timer
+                        .time("spmv", || seg.spmm_add_range_rowmajor(&payload, z, b, nb, nloc));
+                    ep.recycle(payload);
+                }
+            }
+            {
+                let z = &mut scratch.pong[..nloc * b];
+                let bias = &self.biases[k];
+                let act = self.activation;
+                let perm = &pipe.perm;
+                self.timer.time("spmv", || {
+                    let mut epi = act.fused_bias_epilogue(bias);
+                    for r in nb..nloc {
+                        epi(perm[r] as usize, &mut z[r * b..(r + 1) * b]);
+                    }
+                });
+            }
+            std::mem::swap(&mut scratch.ping, &mut scratch.pong);
+        }
+        &scratch.ping[..self.rows[depth - 1].len() * b]
+    }
+
+    /// Pipelined minibatch train step (§5.1 semantics, like
+    /// [`RankState::train_step_overlap`] — `b = 1` is the per-sample
+    /// step). Forward retains the permuted-layout activations and the
+    /// received chunk payloads for the update; backward posts each chunk's
+    /// partial gradient before the update window and drains the mirrored
+    /// receives behind it. Returns this rank's partial (batch-averaged)
+    /// loss.
+    pub(crate) fn train_step_pipelined(
+        &mut self,
+        ep: &mut Endpoint,
+        _plan: &CommPlan, // schedule is fully precompiled into the split layers
+        x0: &[f32],
+        y: &[f32],
+        b: usize,
+        eta: f32,
+    ) -> f32 {
+        let depth = self.depth();
+
+        // ---- pipelined forward, retaining per-layer activations (in each
+        // layer's permuted row layout) and the received payloads; mirrors
+        // `infer_pipelined_compact` — keep the two in sync ----
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(depth + 1);
+        let mut payloads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(depth);
+        let mut a0 = vec![0f32; self.input_rows.len() * b];
+        for (i, &j) in self.input_rows.iter().enumerate() {
+            let j = j as usize;
+            a0[i * b..(i + 1) * b].copy_from_slice(&x0[j * b..(j + 1) * b]);
+        }
+        acts.push(a0);
+        {
+            let layers = match &self.repr {
+                Repr::Split { layers } => layers,
+                Repr::Full { .. } => unreachable!("pipelined path dispatched on Split"),
+            };
+            let input_sends = &self.input_sends;
+            for (k, sl) in layers.iter().enumerate().take(depth) {
+                let pipe = sl.pipe.as_ref().expect("pipelined layer schedule");
+                let nloc = sl.mat.nrows;
+                let nb = pipe.boundary_end;
+                let mut z = vec![0f32; nloc * b];
+                if k == 0 {
+                    let cur = &acts[0];
+                    self.timer.time("comm", || {
+                        for s in input_sends {
+                            let mut payload = ep.take_buf();
+                            payload.reserve(s.pos.len() * b);
+                            for &p in &s.pos {
+                                let p = p as usize;
+                                payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
+                            }
+                            ep.send_chunk(s.to, 0, Phase::Forward, s.tid, s.chunk, payload);
+                        }
+                    });
+                }
+                {
+                    let cur = &acts[k];
+                    self.timer.time("spmv", || {
+                        sl.mat.local.spmm_fused_range_rowmajor(cur, &mut z, b, 0, nb, |_, _| {});
+                    });
+                }
+                let nsegs = sl.mat.remote.len();
+                let mut lay_payloads: Vec<Vec<f32>> = vec![Vec::new(); nsegs];
+                let mut wants: Vec<Want> = sl.recv_wants.clone();
+                let mut want_seg: Vec<usize> = (0..nsegs).collect();
+                let mut boundary_pending =
+                    pipe.seg_feeds_boundary.iter().filter(|&&f| f).count();
+                let mut interior_done = nb;
+                let mut posted = false;
+                loop {
+                    if !posted && boundary_pending == 0 {
+                        {
+                            let bias = &self.biases[k];
+                            let act = self.activation;
+                            let perm = &pipe.perm;
+                            let zb = &mut z;
+                            self.timer.time("spmv", || {
+                                let mut epi = act.fused_bias_epilogue(bias);
+                                for r in 0..nb {
+                                    epi(perm[r] as usize, &mut zb[r * b..(r + 1) * b]);
+                                }
+                            });
+                        }
+                        let zr = &z;
+                        self.timer.time("comm", || {
+                            for s in &pipe.out_sends {
+                                let mut payload = ep.take_buf();
+                                payload.reserve(s.pos.len() * b);
+                                for &p in &s.pos {
+                                    let p = p as usize;
+                                    payload.extend_from_slice(&zr[p * b..(p + 1) * b]);
+                                }
+                                ep.send_chunk(
+                                    s.to,
+                                    (k + 1) as u32,
+                                    Phase::Forward,
+                                    s.tid,
+                                    s.chunk,
+                                    payload,
+                                );
+                            }
+                        });
+                        posted = true;
+                    }
+                    if wants.is_empty() {
+                        break;
+                    }
+                    let mut progressed = false;
+                    let mut i = 0;
+                    while i < wants.len() {
+                        let (src, tid, chunk) = wants[i];
+                        if let Some(payload) =
+                            ep.try_recv_chunk(src, k as u32, Phase::Forward, tid, chunk)
+                        {
+                            let si = want_seg[i];
+                            wants.swap_remove(i);
+                            want_seg.swap_remove(i);
+                            let seg = &sl.mat.remote[si].csr;
+                            self.timer.time("spmv", || {
+                                seg.spmm_add_range_rowmajor(&payload, &mut z, b, 0, nb)
+                            });
+                            if pipe.seg_feeds_boundary[si] {
+                                boundary_pending -= 1;
+                            }
+                            lay_payloads[si] = payload;
+                            progressed = true;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    if progressed {
+                        continue;
+                    }
+                    if interior_done < nloc {
+                        let hi = (interior_done + INTERIOR_TILE_ROWS).min(nloc);
+                        let cur = &acts[k];
+                        self.timer.time("spmv", || {
+                            sl.mat.local.spmm_fused_range_rowmajor(
+                                cur,
+                                &mut z,
+                                b,
+                                interior_done,
+                                hi,
+                                |_, _| {},
+                            );
+                        });
+                        interior_done = hi;
+                        continue;
+                    }
+                    let (i, payload) = self
+                        .timer
+                        .time("wait", || ep.recv_any(k as u32, Phase::Forward, &wants));
+                    let si = want_seg[i];
+                    wants.swap_remove(i);
+                    want_seg.swap_remove(i);
+                    let seg = &sl.mat.remote[si].csr;
+                    self.timer
+                        .time("spmv", || seg.spmm_add_range_rowmajor(&payload, &mut z, b, 0, nb));
+                    if pipe.seg_feeds_boundary[si] {
+                        boundary_pending -= 1;
+                    }
+                    lay_payloads[si] = payload;
+                }
+                if interior_done < nloc {
+                    let cur = &acts[k];
+                    self.timer.time("spmv", || {
+                        sl.mat.local.spmm_fused_range_rowmajor(
+                            cur,
+                            &mut z,
+                            b,
+                            interior_done,
+                            nloc,
+                            |_, _| {},
+                        );
+                    });
+                }
+                for (si, p) in lay_payloads.iter().enumerate() {
+                    let seg = &sl.mat.remote[si].csr;
+                    self.timer
+                        .time("spmv", || seg.spmm_add_range_rowmajor(p, &mut z, b, nb, nloc));
+                }
+                {
+                    let bias = &self.biases[k];
+                    let act = self.activation;
+                    let perm = &pipe.perm;
+                    let zb = &mut z;
+                    self.timer.time("spmv", || {
+                        let mut epi = act.fused_bias_epilogue(bias);
+                        for r in nb..nloc {
+                            epi(perm[r] as usize, &mut zb[r * b..(r + 1) * b]);
+                        }
+                    });
+                }
+                acts.push(z);
+                payloads.push(lay_payloads);
+            }
+        }
+
+        // ---- δ^L averaged over the batch (Alg. 3 line 2 / Eq. 6); the
+        // last layer keeps its original row order, so this matches the
+        // overlap engine exactly ----
+        let act = self.activation;
+        let inv_b = 1.0 / b as f32;
+        let last = &self.rows[depth - 1];
+        let xl = &acts[depth];
+        let mut delta: Vec<f32> = Vec::with_capacity(last.len());
+        let mut local_loss = 0f32;
+        for (i, &r) in last.iter().enumerate() {
+            let r = r as usize;
+            let mut d = 0f32;
+            for j in 0..b {
+                let xr = xl[i * b + j];
+                let yr = y[r * b + j];
+                local_loss += 0.5 * (xr - yr) * (xr - yr) * inv_b;
+                d += (xr - yr) * act.derivative_from_output(xr);
+            }
+            delta.push(d * inv_b);
+        }
+
+        // ---- pipelined backward (Alg. 3, mirror schedule): the partial
+        // gradient of every inbound chunk is posted before the update
+        // window; the mirrored receives drain behind it ----
+        for k in (0..depth).rev() {
+            let (inw, mx_local, mut s_local) = {
+                let layers = match &mut self.repr {
+                    Repr::Split { layers } => layers,
+                    Repr::Full { .. } => unreachable!("pipelined path dispatched on Split"),
+                };
+                let SplitLayer { mat, pipe, .. } = &mut layers[k];
+                let pipe = pipe.as_ref().expect("pipelined layer schedule");
+                let inw = mat.local_gcols.len();
+                // 1. per-chunk partial gradients, sent the moment each is
+                // ready — before the local transpose and the update
+                for seg in &mat.remote {
+                    let mut sseg = ep.take_buf();
+                    sseg.resize(seg.csr.ncols, 0.0);
+                    self.timer.time("spmv", || seg.csr.spmv_t_add(&delta, &mut sseg));
+                    self.timer.time("comm", || {
+                        ep.send_chunk(seg.src, k as u32, Phase::Backward, seg.tid, seg.chunk, sseg)
+                    });
+                }
+                // 2. local transpose over the compact input slots
+                let mut s_local = vec![0f32; inw];
+                self.timer.time("spmv", || mat.local.spmv_t_add(&delta, &mut s_local));
+                // 3. weight + bias update in the overlap window, against
+                // the batch-mean activations (delta and the split rows
+                // share the permuted layout; biases are canonical, so the
+                // bias index goes through perm)
+                let mx_local = row_means(&acts[k], b);
+                let mx_segs: Vec<Vec<f32>> = payloads[k].iter().map(|p| row_means(p, b)).collect();
+                self.timer
+                    .time("updt", || mat.sgd_update(&delta, &mx_local, &mx_segs, eta));
+                for (r, d) in delta.iter().enumerate() {
+                    self.biases[k][pipe.perm[r] as usize] -= eta * d;
+                }
+                (inw, mx_local, s_local)
+            };
+            // 4. mirrored receives in arrival order (behind the update):
+            // the gradients for the chunks this rank posted during layer
+            // k-1 (the input sends for k = 0)
+            let layers = match &self.repr {
+                Repr::Split { layers } => layers,
+                Repr::Full { .. } => unreachable!("pipelined path dispatched on Split"),
+            };
+            let in_sends: &[ChunkSend] = if k > 0 {
+                &layers[k - 1]
+                    .pipe
+                    .as_ref()
+                    .expect("pipelined layer schedule")
+                    .out_sends
+            } else {
+                &self.input_sends
+            };
+            if !in_sends.is_empty() {
+                let mut wants: Vec<Want> =
+                    in_sends.iter().map(|s| (s.to, s.tid, s.chunk)).collect();
+                let mut which: Vec<usize> = (0..in_sends.len()).collect();
+                while !wants.is_empty() {
+                    let (i, payload) = self
+                        .timer
+                        .time("wait", || ep.recv_any(k as u32, Phase::Backward, &wants));
+                    let sj = which[i];
+                    wants.swap_remove(i);
+                    which.swap_remove(i);
+                    for (idx, &p) in in_sends[sj].pos.iter().enumerate() {
+                        s_local[p as usize] += payload[idx];
+                    }
+                    ep.recycle(payload);
+                }
+            }
+            // 5. δ^{k-1} = s ⊙ f'(x̄^k) over the compact input slots (the
+            // previous layer's permuted output layout)
+            if k > 0 {
+                let mut next = Vec::with_capacity(inw);
+                for i in 0..inw {
+                    next.push(s_local[i] * act.derivative_from_output(mx_local[i]));
+                }
+                delta = next;
+            }
+        }
+        // return the retained payload allocations to the endpoint pool
+        for lay in payloads {
+            for p in lay {
+                if p.capacity() > 0 {
+                    ep.recycle(p);
+                }
+            }
+        }
+        local_loss
+    }
+}

@@ -17,12 +17,26 @@
 //!   segment the moment its payload lands ([`Endpoint::recv_any`]) — the
 //!   receive wait hides behind local compute instead of preceding it, and
 //!   no full-width buffer or receive-side scatter exists at all.
+//! - **Pipelined** ([`ExecMode::Pipelined`], the send-side pipeline on top
+//!   of the split-CSR layout): each layer's rows are additionally
+//!   regrouped at build time so **boundary rows** — rows whose activations
+//!   feed a remote destination in the next layer — are packed first,
+//!   grouped per outbound chunk ([`crate::sparse::regroup_rows`]). The
+//!   layer step computes the boundary block, applies the inbound payloads
+//!   it needs, and posts every outbound payload as chunked sub-transfers
+//!   **before** the interior (local-only) rows compute — so peers start
+//!   receiving while this rank is still working, instead of after the
+//!   whole layer finishes.
 
-use crate::comm::{Endpoint, Phase};
+use crate::comm::{Endpoint, Phase, Want};
 use crate::dnn::{Activation, Loss, SparseNet};
 use crate::partition::{CommPlan, DnnPartition};
-use crate::sparse::{Csr, SplitCsr};
+use crate::sparse::{regroup_rows, Csr, RowRegroup, SplitCsr};
 use crate::util::PhaseTimer;
+
+/// Default sub-transfer chunk size (activation entries per chunk) of the
+/// pipelined engine — see [`ExecMode::pipelined`].
+pub const DEFAULT_CHUNK_ACTS: usize = 128;
 
 /// Which engine a [`RankState`] is built for. The mode fixes the internal
 /// weight representation, so it is chosen at build time.
@@ -32,9 +46,31 @@ pub enum ExecMode {
     /// (the seed engine — kept as the measured baseline).
     Blocking,
     /// Split-CSR engine: local-segment compute overlaps in-flight
-    /// receives.
+    /// receives; sends still go out whole, after the previous layer
+    /// finishes (the PR-3 schedule, kept as the measured baseline for the
+    /// pipelined sender).
     #[default]
     Overlap,
+    /// Split-CSR engine with **send-side row-range pipelining**: boundary
+    /// rows compute first and each outbound payload posts the moment its
+    /// row range is final, as sub-transfers of at most `chunk_acts`
+    /// activation entries, while interior rows compute afterwards —
+    /// overlapping with the peers' receives.
+    Pipelined {
+        /// Max activation entries per posted chunk (0 = unchunked: one
+        /// chunk per transfer). Smaller chunks start peers earlier but pay
+        /// more per-message overhead; see the README tuning note.
+        chunk_acts: usize,
+    },
+}
+
+impl ExecMode {
+    /// The pipelined engine with the default chunk size.
+    pub fn pipelined() -> Self {
+        ExecMode::Pipelined {
+            chunk_acts: DEFAULT_CHUNK_ACTS,
+        }
+    }
 }
 
 /// One outbound transfer of a layer, precompiled for the overlapped
@@ -47,14 +83,51 @@ pub(crate) struct SendSpec {
     pub(crate) pos: Vec<u32>,
 }
 
-/// One weight layer compiled for the overlapped engine.
+/// One outbound sub-transfer chunk, precompiled for the pipelined engine.
+pub(crate) struct ChunkSend {
+    pub(crate) to: u32,
+    pub(crate) tid: u32,
+    pub(crate) chunk: u32,
+    /// Gather positions into the source compact vector: the **permuted**
+    /// output rows of the producing layer (or the compact input vector for
+    /// the layer-0 input sends). All positions lie in the boundary prefix.
+    pub(crate) pos: Vec<u32>,
+}
+
+/// The send-side pipeline schedule of one layer (pipelined mode only).
+pub(crate) struct PipeSchedule {
+    /// Permuted row order: row `r'` of the split matrices is the rank's
+    /// original local row `perm[r']`. Boundary rows come first.
+    pub(crate) perm: Vec<u32>,
+    /// Inverse of `perm`: original local row `i` sits at `inv[i]`.
+    pub(crate) inv: Vec<u32>,
+    /// Rows `[0, boundary_end)` feed at least one next-layer outbound
+    /// chunk; rows `[boundary_end, nrows)` are interior (local-only).
+    pub(crate) boundary_end: usize,
+    /// Next-layer outbound chunks (tagged layer k+1), ordered by the
+    /// prefix length that completes them — posted together the moment the
+    /// boundary block is final, before any interior row computes.
+    pub(crate) out_sends: Vec<ChunkSend>,
+    /// Per remote segment of this layer: whether it has nonzeros in the
+    /// boundary rows (and must therefore be applied before the outbound
+    /// chunks can post). Interior-only segments never gate the sends.
+    pub(crate) seg_feeds_boundary: Vec<bool>,
+}
+
+/// One weight layer compiled for the overlapped/pipelined engines.
 pub(crate) struct SplitLayer {
-    /// Local segment + one compact remote segment per source rank.
+    /// Local segment + one compact remote segment per inbound payload
+    /// (whole transfers in overlap mode, chunk-granular in pipelined
+    /// mode).
     pub(crate) mat: SplitCsr,
-    /// `(source rank, transfer id)` want-list aligned with `mat.remote`.
-    pub(crate) recv_wants: Vec<(u32, u32)>,
-    /// Outbound transfers in plan send order.
+    /// `(source rank, transfer id, chunk id)` want-list aligned with
+    /// `mat.remote`.
+    pub(crate) recv_wants: Vec<Want>,
+    /// Outbound transfers in plan send order (overlap mode; empty in
+    /// pipelined mode, whose sends live in [`PipeSchedule::out_sends`]).
     pub(crate) sends: Vec<SendSpec>,
+    /// Send-side pipeline schedule (pipelined mode only).
+    pub(crate) pipe: Option<PipeSchedule>,
 }
 
 /// Mode-specific weight representation. Exactly one exists per state, so
@@ -71,10 +144,16 @@ pub(crate) enum Repr {
 pub struct RankState {
     pub rank: u32,
     pub nparts: usize,
+    /// The mode this state was built for (fixes `repr`'s variant and, for
+    /// pipelined, the chunk size baked into the schedules).
+    mode: ExecMode,
     /// Owned global row ids per weight layer, ascending.
     pub rows: Vec<Vec<u32>>,
     /// Mode-specific weight storage.
     pub(crate) repr: Repr,
+    /// Layer-0 outbound chunks (pipelined mode): the input vector is
+    /// available the moment the step starts, so these post immediately.
+    pub(crate) input_sends: Vec<ChunkSend>,
     /// Local bias entries per layer (aligned with `rows`).
     pub biases: Vec<Vec<f32>>,
     pub activation: Activation,
@@ -107,10 +186,13 @@ pub struct RankScratch {
     /// Full-width output staging for the one-shot full-width API when the
     /// state runs the compact overlapped engine.
     pub(crate) full_out: Vec<f32>,
-    /// Shrinking `(from, transfer)` want-set for the drain loop.
-    pub(crate) wants: Vec<(u32, u32)>,
+    /// Shrinking `(from, transfer, chunk)` want-set for the drain loop.
+    pub(crate) wants: Vec<Want>,
     /// Segment index per entry of `wants`.
     pub(crate) want_seg: Vec<usize>,
+    /// Received payloads held per segment until the interior rows have
+    /// been computed (pipelined inference drain loop).
+    pub(crate) held: Vec<Option<Vec<f32>>>,
 }
 
 impl RankScratch {
@@ -172,22 +254,28 @@ impl RankState {
         for w in &net.layers {
             dims.push(w.nrows);
         }
+        let me = rank as usize;
+        let mut input_sends = Vec::new();
         let repr = match mode {
             ExecMode::Blocking => Repr::Full { blocks },
             ExecMode::Overlap => {
-                let me = rank as usize;
                 let layers = blocks
                     .iter()
                     .enumerate()
                     .map(|(k, block)| {
                         let owned_acts: &[u32] = if k == 0 { &input_rows } else { &rows[k - 1] };
                         let lp = &plan.layers[k];
-                        let inbound = lp.inbound_of(me);
+                        let inbound: Vec<(u32, u32, u32, &[u32])> = lp
+                            .inbound_of(me)
+                            .into_iter()
+                            .map(|(src, tid, idx)| (src, tid, 0, idx))
+                            .collect();
                         let mat = SplitCsr::build(block, owned_acts, &inbound)
                             .unwrap_or_else(|e| {
                                 panic!("rank {rank} layer {k}: plan does not cover block: {e}")
                             });
-                        let recv_wants = inbound.iter().map(|&(src, tid, _)| (src, tid)).collect();
+                        let recv_wants =
+                            inbound.iter().map(|&(src, tid, c, _)| (src, tid, c)).collect();
                         let sends = lp
                             .outbound_of(me)
                             .into_iter()
@@ -209,7 +297,133 @@ impl RankState {
                             mat,
                             recv_wants,
                             sends,
+                            pipe: None,
                         }
+                    })
+                    .collect();
+                Repr::Split { layers }
+            }
+            ExecMode::Pipelined { chunk_acts } => {
+                let depth = blocks.len();
+                // Pass 1: regroup each layer's rows so the rows feeding
+                // each NEXT-layer outbound chunk (its activations are this
+                // layer's output) form the boundary prefix.
+                let mut regroups: Vec<RowRegroup> = Vec::with_capacity(depth);
+                let mut out_chunks: Vec<Vec<(u32, u32, u32, &[u32])>> =
+                    Vec::with_capacity(depth);
+                for k in 0..depth {
+                    let chunks = if k + 1 < depth {
+                        plan.layers[k + 1].outbound_chunks_of(me, chunk_acts)
+                    } else {
+                        Vec::new()
+                    };
+                    let owned = &rows[k];
+                    let groups: Vec<Vec<u32>> = chunks
+                        .iter()
+                        .map(|&(_, _, _, idx)| {
+                            idx.iter()
+                                .map(|&j| {
+                                    owned
+                                        .binary_search(&j)
+                                        .expect("outbound index is owned") as u32
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    regroups.push(regroup_rows(owned.len(), &groups));
+                    out_chunks.push(chunks);
+                }
+                // Pass 2: build each layer's split matrices over the
+                // PERMUTED row block, with chunk-granular remote segments
+                // and the previous layer's permuted output as the compact
+                // input layout.
+                let layers = (0..depth)
+                    .map(|k| {
+                        let rg = &regroups[k];
+                        let pblock = blocks[k].row_block(&rg.perm);
+                        let owned_acts: Vec<u32> = if k == 0 {
+                            input_rows.clone()
+                        } else {
+                            regroups[k - 1]
+                                .perm
+                                .iter()
+                                .map(|&p| rows[k - 1][p as usize])
+                                .collect()
+                        };
+                        let inbound = plan.layers[k].inbound_chunks_of(me, chunk_acts);
+                        let mat = SplitCsr::build(&pblock, &owned_acts, &inbound)
+                            .unwrap_or_else(|e| {
+                                panic!("rank {rank} layer {k}: plan does not cover block: {e}")
+                            });
+                        let recv_wants =
+                            inbound.iter().map(|&(src, tid, c, _)| (src, tid, c)).collect();
+                        let seg_feeds_boundary = mat
+                            .remote
+                            .iter()
+                            .map(|s| s.csr.indptr[rg.boundary_end] > 0)
+                            .collect();
+                        // outbound chunks ordered by completion prefix, so
+                        // the earliest-finished row range posts first
+                        let mut order: Vec<usize> = (0..out_chunks[k].len()).collect();
+                        order.sort_by_key(|&i| rg.ready[i]);
+                        let out_sends = order
+                            .into_iter()
+                            .map(|i| {
+                                let (to, tid, chunk, idx) = out_chunks[k][i];
+                                ChunkSend {
+                                    to,
+                                    tid,
+                                    chunk,
+                                    pos: idx
+                                        .iter()
+                                        .map(|&j| {
+                                            let p = rows[k]
+                                                .binary_search(&j)
+                                                .expect("outbound index is owned");
+                                            rg.inv[p]
+                                        })
+                                        .collect(),
+                                }
+                            })
+                            .collect();
+                        SplitLayer {
+                            mat,
+                            recv_wants,
+                            sends: Vec::new(),
+                            pipe: Some(PipeSchedule {
+                                perm: rg.perm.clone(),
+                                inv: rg.inv.clone(),
+                                boundary_end: rg.boundary_end,
+                                out_sends,
+                                seg_feeds_boundary,
+                            }),
+                        }
+                    })
+                    .collect();
+                // MSRV 1.74: map_or, not Option::is_none_or (1.82)
+                debug_assert!(
+                    regroups.last().map_or(true, |rg| {
+                        rg.perm.iter().enumerate().all(|(i, &p)| i == p as usize)
+                    }),
+                    "last layer must keep its row order (no next-layer sends)"
+                );
+                // layer-0 sends gather straight from the compact input
+                input_sends = plan.layers[0]
+                    .outbound_chunks_of(me, chunk_acts)
+                    .into_iter()
+                    .map(|(to, tid, chunk, idx)| ChunkSend {
+                        to,
+                        tid,
+                        chunk,
+                        pos: idx
+                            .iter()
+                            .map(|&j| {
+                                input_rows
+                                    .binary_search(&j)
+                                    .expect("outbound index is owned")
+                                    as u32
+                            })
+                            .collect(),
                     })
                     .collect();
                 Repr::Split { layers }
@@ -218,8 +432,10 @@ impl RankState {
         Self {
             rank,
             nparts: part.nparts,
+            mode,
             rows,
             repr,
+            input_sends,
             biases,
             activation: net.activation,
             loss: net.loss,
@@ -231,10 +447,7 @@ impl RankState {
 
     /// Which engine this state was built for.
     pub fn mode(&self) -> ExecMode {
-        match self.repr {
-            Repr::Full { .. } => ExecMode::Blocking,
-            Repr::Split { .. } => ExecMode::Overlap,
-        }
+        self.mode
     }
 
     /// Depth in weight layers.
@@ -317,10 +530,11 @@ impl RankState {
         y: &[f32],
         eta: f32,
     ) -> f32 {
-        match self.repr {
-            Repr::Full { .. } => self.train_step_blocking(ep, plan, x0, y, eta),
+        match self.mode {
+            ExecMode::Blocking => self.train_step_blocking(ep, plan, x0, y, eta),
             // a single vector is a batch of one in row-major layout
-            Repr::Split { .. } => self.train_step_overlap(ep, plan, x0, y, 1, eta),
+            ExecMode::Overlap => self.train_step_overlap(ep, plan, x0, y, 1, eta),
+            ExecMode::Pipelined { .. } => self.train_step_pipelined(ep, plan, x0, y, 1, eta),
         }
     }
 
@@ -442,7 +656,7 @@ impl RankState {
                 let depth = self.depth();
                 let nl = self.dims[depth];
                 let compact_len = {
-                    let out = self.infer_overlap_compact(ep, plan, x0, b, scratch);
+                    let out = self.infer_compact(ep, plan, x0, b, scratch);
                     out.len()
                 };
                 assert_eq!(compact_len, self.rows[depth - 1].len() * b);
@@ -553,7 +767,10 @@ impl RankState {
                     .collect()
             }
             Repr::Split { .. } => {
-                let compact = self.infer_overlap_compact(ep, plan, x0, b, scratch);
+                // Both compact engines leave the LAST layer in its original
+                // row order (it has no next-layer sends to regroup for), so
+                // the owned-row extraction is shared.
+                let compact = self.infer_compact(ep, plan, x0, b, scratch);
                 let owned = self.rows.last().expect("network has at least one layer");
                 owned
                     .iter()
@@ -561,6 +778,23 @@ impl RankState {
                     .map(|(i, &r)| (r, compact[i * b..(i + 1) * b].to_vec()))
                     .collect()
             }
+        }
+    }
+
+    /// Compact batched forward for a split-repr state, dispatched on the
+    /// build mode (overlap vs pipelined).
+    pub(crate) fn infer_compact<'s>(
+        &mut self,
+        ep: &mut Endpoint,
+        plan: &CommPlan,
+        x0: &[f32],
+        b: usize,
+        scratch: &'s mut RankScratch,
+    ) -> &'s [f32] {
+        match self.mode {
+            ExecMode::Overlap => self.infer_overlap_compact(ep, plan, x0, b, scratch),
+            ExecMode::Pipelined { .. } => self.infer_pipelined_compact(ep, plan, x0, b, scratch),
+            ExecMode::Blocking => unreachable!("compact path dispatched on Split repr"),
         }
     }
 
@@ -581,7 +815,13 @@ impl RankState {
             Repr::Split { layers } => {
                 for (k, owned) in self.rows.iter().enumerate() {
                     for (i, &r) in owned.iter().enumerate() {
-                        let pairs = layers[k].mat.gather_row(i);
+                        // pipelined layers store rows boundary-first; the
+                        // original local row i sits at inv[i]
+                        let split_row = match &layers[k].pipe {
+                            Some(pipe) => pipe.inv[i] as usize,
+                            None => i,
+                        };
+                        let pairs = layers[k].mat.gather_row(split_row);
                         let lo = net.layers[k].indptr[r as usize] as usize;
                         let hi = net.layers[k].indptr[r as usize + 1] as usize;
                         debug_assert_eq!(hi - lo, pairs.len(), "row {r} nnz mismatch");

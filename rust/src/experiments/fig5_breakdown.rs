@@ -90,14 +90,18 @@ impl LivePhases {
     }
 }
 
-/// Live blocking-vs-overlap phase breakdown: the same model, partition,
-/// plan, and data trained under both engines on real rank threads.
+/// Live blocking-vs-overlap-vs-pipelined phase breakdown: the same model,
+/// partition, plan, and data trained under all three engines on real rank
+/// threads.
 #[derive(Debug, Clone)]
 pub struct LiveOverlapBreakdown {
     pub neurons: usize,
     pub nparts: usize,
     pub blocking: LivePhases,
     pub overlap: LivePhases,
+    /// The send-side pipelined engine ([`ExecMode::Pipelined`]) — its
+    /// residual wait is what the chunked send schedule could not hide.
+    pub pipelined: LivePhases,
 }
 
 impl LiveOverlapBreakdown {
@@ -106,10 +110,18 @@ impl LiveOverlapBreakdown {
     /// slightly negative under scheduler noise; 0 when there was nothing
     /// to hide.
     pub fn hidden_wait_fraction(&self) -> f64 {
+        1.0 - self.residual_wait_fraction(&self.overlap)
+    }
+
+    /// What remains of the blocking engine's receive stall under `engine`
+    /// (`wait_engine / wait_blocking`); 1.0 when there was nothing to
+    /// hide. The pipelined engine's residual is the number this PR's send
+    /// schedule attacks.
+    pub fn residual_wait_fraction(&self, engine: &LivePhases) -> f64 {
         if self.blocking.wait <= 0.0 {
-            0.0
+            1.0
         } else {
-            1.0 - self.overlap.wait / self.blocking.wait
+            engine.wait / self.blocking.wait
         }
     }
 }
@@ -158,14 +170,19 @@ pub fn run_live(
         nparts,
         blocking: phases_of(ExecMode::Blocking),
         overlap: phases_of(ExecMode::Overlap),
+        pipelined: phases_of(ExecMode::pipelined()),
     }
 }
 
 pub fn render_live(b: &LiveOverlapBreakdown) -> String {
     let mut t = Table::new(&[
-        "N", "P", "engine", "SpMV(s)", "Updt(s)", "Comm(s)", "Wait(s)", "Total(s)",
+        "N", "P", "engine", "SpMV(s)", "Updt(s)", "Comm(s)", "Wait(s)", "Total(s)", "Wait%",
     ]);
-    for (label, p) in [("blocking", &b.blocking), ("overlap", &b.overlap)] {
+    for (label, p) in [
+        ("blocking", &b.blocking),
+        ("overlap", &b.overlap),
+        ("pipelined", &b.pipelined),
+    ] {
         t.row(vec![
             b.neurons.to_string(),
             b.nparts.to_string(),
@@ -175,12 +192,15 @@ pub fn render_live(b: &LiveOverlapBreakdown) -> String {
             format!("{:.3e}", p.comm),
             format!("{:.3e}", p.wait),
             format!("{:.3e}", p.total()),
+            format!("{:.0}%", b.residual_wait_fraction(p) * 100.0),
         ]);
     }
     format!(
-        "{}comm-wait hidden by overlap: {:.0}%\n",
+        "{}comm-wait hidden by overlap: {:.0}%  |  residual wait: overlap {:.0}%, pipelined {:.0}% of blocking\n",
         t.render(),
-        b.hidden_wait_fraction() * 100.0
+        b.hidden_wait_fraction() * 100.0,
+        b.residual_wait_fraction(&b.overlap) * 100.0,
+        b.residual_wait_fraction(&b.pipelined) * 100.0,
     )
 }
 
@@ -208,16 +228,19 @@ mod tests {
     }
 
     #[test]
-    fn live_breakdown_reports_both_engines() {
+    fn live_breakdown_reports_all_three_engines() {
         let b = run_live(64, 3, 4, 4, 11);
-        // both engines did real compute, and the hidden fraction is a
+        // every engine did real compute, and the hidden fraction is a
         // sane ratio (noise can push it slightly negative, never above 1)
-        assert!(b.blocking.spmv > 0.0 && b.overlap.spmv > 0.0);
-        assert!(b.blocking.total() > 0.0 && b.overlap.total() > 0.0);
+        assert!(b.blocking.spmv > 0.0 && b.overlap.spmv > 0.0 && b.pipelined.spmv > 0.0);
+        assert!(b.blocking.total() > 0.0 && b.overlap.total() > 0.0 && b.pipelined.total() > 0.0);
         let h = b.hidden_wait_fraction();
         assert!(h.is_finite() && h <= 1.0, "hidden fraction {h}");
+        let rp = b.residual_wait_fraction(&b.pipelined);
+        assert!(rp.is_finite() && rp >= 0.0, "residual fraction {rp}");
         let s = render_live(&b);
         assert!(s.contains("Wait(s)") && s.contains("overlap") && s.contains("blocking"));
+        assert!(s.contains("pipelined") && s.contains("residual wait"));
         assert!(s.contains("comm-wait hidden by overlap"));
     }
 }

@@ -21,6 +21,25 @@ pub struct Transfer {
     pub indices: Vec<u32>,
 }
 
+impl Transfer {
+    /// The transfer's **chunk schedule**: its index list cut into
+    /// sub-transfers of at most `chunk_acts` activation entries each —
+    /// the unit the pipelined engine posts the moment a chunk's source
+    /// rows finish computing. `chunk_acts == 0` means unchunked (one
+    /// chunk covering the whole transfer).
+    pub fn chunks(&self, chunk_acts: usize) -> impl Iterator<Item = (u32, &[u32])> {
+        let size = if chunk_acts == 0 {
+            self.indices.len().max(1)
+        } else {
+            chunk_acts
+        };
+        self.indices
+            .chunks(size)
+            .enumerate()
+            .map(|(c, idx)| (c as u32, idx))
+    }
+}
+
 /// All transfers of one layer, plus per-rank views.
 #[derive(Debug, Clone, Default)]
 pub struct LayerPlan {
@@ -62,6 +81,44 @@ impl LayerPlan {
             .map(|&tid| {
                 let t = &self.transfers[tid as usize];
                 (t.to, tid, t.indices.as_slice())
+            })
+            .collect()
+    }
+
+    /// Chunk-granular inbound view: one entry per sub-transfer of every
+    /// inbound transfer of `rank`, in receive order, as
+    /// `(source rank, transfer id, chunk id, activation indices)` — the
+    /// segment recipe the pipelined engine feeds to
+    /// [`crate::sparse::SplitCsr::build`] so each partial payload can be
+    /// applied the moment it lands.
+    pub fn inbound_chunks_of(
+        &self,
+        rank: usize,
+        chunk_acts: usize,
+    ) -> Vec<(u32, u32, u32, &[u32])> {
+        self.recv_of[rank]
+            .iter()
+            .flat_map(|&tid| {
+                let t = &self.transfers[tid as usize];
+                t.chunks(chunk_acts).map(move |(c, idx)| (t.from, tid, c, idx))
+            })
+            .collect()
+    }
+
+    /// Chunk-granular outbound view of `rank`, mirroring
+    /// [`LayerPlan::inbound_chunks_of`]: the **row ranges** the sender
+    /// posts as each finishes, as
+    /// `(destination rank, transfer id, chunk id, activation indices)`.
+    pub fn outbound_chunks_of(
+        &self,
+        rank: usize,
+        chunk_acts: usize,
+    ) -> Vec<(u32, u32, u32, &[u32])> {
+        self.send_of[rank]
+            .iter()
+            .flat_map(|&tid| {
+                let t = &self.transfers[tid as usize];
+                t.chunks(chunk_acts).map(move |(c, idx)| (t.to, tid, c, idx))
             })
             .collect()
     }
@@ -356,6 +413,53 @@ mod tests {
         assert_eq!(out0[0].0, 1, "rank 0 sends to rank 1");
         assert_eq!(out0[0].1, in1[0].1, "same transfer id on both views");
         assert!(l.inbound_of(0).len() == 1 && l.outbound_of(1).len() == 1);
+    }
+
+    #[test]
+    fn chunked_views_partition_each_transfer_exactly() {
+        let structure = generate_structure(&RadixNetConfig::graph_challenge(128, 5).unwrap());
+        let part = random_partition(&structure, 4, 9);
+        let plan = CommPlan::build(&structure, &part);
+        for chunk_acts in [0usize, 1, 3, 7, 1024] {
+            for l in &plan.layers {
+                for rank in 0..4usize {
+                    let whole = l.inbound_of(rank);
+                    let chunked = l.inbound_chunks_of(rank, chunk_acts);
+                    // reassembling the chunks of each tid gives the transfer
+                    for &(src, tid, idx) in &whole {
+                        let glued: Vec<u32> = chunked
+                            .iter()
+                            .filter(|&&(s, t, _, _)| s == src && t == tid)
+                            .flat_map(|&(_, _, _, i)| i.iter().copied())
+                            .collect();
+                        assert_eq!(glued.as_slice(), idx, "tid {tid} chunk_acts {chunk_acts}");
+                    }
+                    // chunk ids are dense from 0 and sized to chunk_acts
+                    for &(_, tid, c, idx) in &chunked {
+                        assert!(!idx.is_empty());
+                        if chunk_acts > 0 {
+                            assert!(idx.len() <= chunk_acts);
+                            let t = &l.transfers[tid as usize];
+                            let nchunks = t.indices.len().div_ceil(chunk_acts);
+                            assert!((c as usize) < nchunks);
+                        } else {
+                            assert_eq!(c, 0);
+                        }
+                    }
+                    // outbound view mirrors inbound on the sending side
+                    let out = l.outbound_chunks_of(rank, chunk_acts);
+                    for &(_, tid, c, idx) in &out {
+                        let t = &l.transfers[tid as usize];
+                        assert_eq!(t.from as usize, rank);
+                        let found = t
+                            .chunks(chunk_acts)
+                            .find(|&(cc, _)| cc == c)
+                            .expect("chunk exists");
+                        assert_eq!(found.1, idx);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,9 @@ use crate::dnn::SparseNet;
 use crate::partition::ServingPlan;
 use crate::runtime::parallel::{is_secondary, panic_message};
 use crate::runtime::RankFailure;
-use crate::serving::queue::{effective_wait, Pending, ServeError, SharedQueue, Ticket};
+use crate::serving::queue::{
+    effective_wait, Pending, ServeError, SharedQueue, Ticket, GAP_CLAMP_MULT,
+};
 use crate::serving::stats::{ServingStats, StatsSnapshot};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -40,7 +42,8 @@ pub struct PoolConfig {
     /// batch, so holding one open only adds latency).
     pub adaptive: bool,
     /// Which per-rank engine the pool threads run: the overlapped
-    /// split-CSR path (default) or the blocking baseline.
+    /// split-CSR path (default), the send-side pipelined schedule
+    /// (`ExecMode::pipelined()`), or the blocking baseline.
     pub mode: ExecMode,
 }
 
@@ -236,6 +239,10 @@ impl RankPool {
         let net = Arc::new(net);
         let sp = Arc::new(sp);
         let shared = Arc::new(SharedQueue::default());
+        // Idle gaps saturate at a small multiple of the batch window when
+        // entering the inter-arrival EWMA — one quiet period must not keep
+        // the adaptive scheduler in skip-the-wait mode after load returns.
+        shared.state.lock().unwrap().gap_clamp = Some(cfg.max_wait * GAP_CLAMP_MULT);
         let stats = Arc::new(ServingStats::new());
         let sched_shared = Arc::clone(&shared);
         let sched_stats = Arc::clone(&stats);

@@ -109,6 +109,12 @@ impl Ticket {
     }
 }
 
+/// Multiple of `max_wait` at which an idle gap stops carrying information:
+/// a gap this long already proves the batch window cannot fill, and
+/// anything beyond it is the service being *idle*, not traffic being
+/// sparse. See [`QueueState::note_arrival`].
+pub(crate) const GAP_CLAMP_MULT: u32 = 8;
+
 /// Scheduler-visible queue state, guarded by [`SharedQueue::state`].
 #[derive(Default)]
 pub(crate) struct QueueState {
@@ -117,14 +123,28 @@ pub(crate) struct QueueState {
     /// EWMA of the request inter-arrival gap in seconds — the adaptive
     /// batching signal. `None` until two arrivals have been observed.
     pub ewma_gap: Option<f64>,
+    /// Clamp applied to each gap sample before it enters the EWMA
+    /// (`None` = unclamped). The pool sets this to
+    /// `GAP_CLAMP_MULT × max_wait`: without it, one long idle period (a
+    /// quiet night) drives the EWMA so high that the scheduler keeps
+    /// skipping the coalesce wait long after dense traffic returns.
+    pub gap_clamp: Option<Duration>,
     last_arrival: Option<Instant>,
 }
 
 impl QueueState {
-    /// Fold one arrival into the inter-arrival EWMA (α = 0.2).
+    /// Fold one arrival into the inter-arrival EWMA (α = 0.2), clamping
+    /// the gap sample first so idle periods saturate instead of poisoning
+    /// the average. The clamp sits above the `effective_wait` threshold
+    /// (`max_wait`), so genuinely sparse traffic still disables the wait
+    /// window — but a handful of dense arrivals now brings the EWMA back
+    /// under the threshold.
     pub fn note_arrival(&mut self, now: Instant) {
         if let Some(prev) = self.last_arrival {
-            let gap = now.duration_since(prev).as_secs_f64();
+            let mut gap = now.duration_since(prev).as_secs_f64();
+            if let Some(clamp) = self.gap_clamp {
+                gap = gap.min(clamp.as_secs_f64());
+            }
             self.ewma_gap = Some(match self.ewma_gap {
                 Some(e) => 0.8 * e + 0.2 * gap,
                 None => gap,
@@ -182,6 +202,48 @@ mod tests {
         st.note_arrival(t0 + Duration::from_millis(30));
         let g2 = st.ewma_gap.unwrap();
         assert!((g2 - (0.8 * 0.010 + 0.2 * 0.020)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_gap_is_clamped_before_entering_the_ewma() {
+        // regression: one long idle period must not convince the scheduler
+        // that traffic is sparse for ages after load returns
+        let max_wait = Duration::from_millis(2);
+        let mut st = QueueState {
+            gap_clamp: Some(max_wait * GAP_CLAMP_MULT),
+            ..QueueState::default()
+        };
+        let t0 = Instant::now();
+        st.note_arrival(t0);
+        st.note_arrival(t0 + Duration::from_millis(1)); // dense traffic
+        // a one-hour quiet period
+        st.note_arrival(t0 + Duration::from_secs(3600));
+        let after_idle = st.ewma_gap.unwrap();
+        let clamp = (max_wait * GAP_CLAMP_MULT).as_secs_f64();
+        assert!(
+            after_idle <= 0.8 * 0.001 + 0.2 * clamp + 1e-9,
+            "idle gap leaked into the EWMA: {after_idle}"
+        );
+        // the clamp saturates ABOVE max_wait: sparse traffic still skips
+        // the window right after the idle period
+        assert_eq!(effective_wait(max_wait, st.ewma_gap), Duration::ZERO);
+        // ... and a handful of dense arrivals restores the window
+        let mut t = t0 + Duration::from_secs(3600);
+        for _ in 0..12 {
+            t += Duration::from_micros(100);
+            st.note_arrival(t);
+        }
+        assert_eq!(
+            effective_wait(max_wait, st.ewma_gap),
+            max_wait,
+            "dense traffic must re-enable the coalesce wait quickly (ewma {:?})",
+            st.ewma_gap
+        );
+        // unclamped state keeps the old behaviour
+        let mut raw = QueueState::default();
+        raw.note_arrival(t0);
+        raw.note_arrival(t0 + Duration::from_secs(3600));
+        assert!(raw.ewma_gap.unwrap() > 3599.0);
     }
 
     #[test]

@@ -243,6 +243,93 @@ impl Csr {
         }
     }
 
+    /// [`Csr::spmm_fused_rowmajor`] restricted to rows `[r0, r1)` —
+    /// overwrites exactly those output rows and touches nothing else. The
+    /// pipelined engine computes its boundary row block with one call and
+    /// streams the interior in tiles between receive polls.
+    pub fn spmm_fused_range_rowmajor<F>(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        b: usize,
+        r0: usize,
+        r1: usize,
+        mut epilogue: F,
+    ) where
+        F: FnMut(usize, &mut [f32]),
+    {
+        debug_assert_eq!(x.len(), self.ncols * b);
+        debug_assert_eq!(y.len(), self.nrows * b);
+        debug_assert!(r0 <= r1 && r1 <= self.nrows);
+        let mut acc = [0f32; SPMM_TILE];
+        let mut lo = 0usize;
+        while lo < b {
+            let w = SPMM_TILE.min(b - lo);
+            for r in r0..r1 {
+                let start = self.indptr[r] as usize;
+                let end = self.indptr[r + 1] as usize;
+                let tile = &mut acc[..w];
+                tile.fill(0.0);
+                for i in start..end {
+                    let v = self.vals[i];
+                    let c = self.indices[i] as usize;
+                    let xrow = &x[c * b + lo..c * b + lo + w];
+                    for (a, &xv) in tile.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                }
+                let yrow = &mut y[r * b + lo..r * b + lo + w];
+                yrow.copy_from_slice(tile);
+                epilogue(r, yrow);
+            }
+            lo += w;
+        }
+    }
+
+    /// [`Csr::spmm_add_rowmajor`] restricted to rows `[r0, r1)` — the
+    /// pipelined engine applies each in-flight payload to the boundary row
+    /// block first (so outbound chunks can post) and to the interior rows
+    /// later, after their local pass has written them.
+    pub fn spmm_add_range_rowmajor(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        b: usize,
+        r0: usize,
+        r1: usize,
+    ) {
+        debug_assert_eq!(x.len(), self.ncols * b);
+        debug_assert_eq!(y.len(), self.nrows * b);
+        debug_assert!(r0 <= r1 && r1 <= self.nrows);
+        let mut acc = [0f32; SPMM_TILE];
+        let mut lo = 0usize;
+        while lo < b {
+            let w = SPMM_TILE.min(b - lo);
+            for r in r0..r1 {
+                let start = self.indptr[r] as usize;
+                let end = self.indptr[r + 1] as usize;
+                if start == end {
+                    continue;
+                }
+                let tile = &mut acc[..w];
+                tile.fill(0.0);
+                for i in start..end {
+                    let v = self.vals[i];
+                    let c = self.indices[i] as usize;
+                    let xrow = &x[c * b + lo..c * b + lo + w];
+                    for (a, &xv) in tile.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                }
+                let yrow = &mut y[r * b + lo..r * b + lo + w];
+                for (yv, &a) in yrow.iter_mut().zip(tile.iter()) {
+                    *yv += a;
+                }
+            }
+            lo += w;
+        }
+    }
+
     /// Gradient update on existing nonzeros only (Eq. 4–5):
     /// `W(r, c) -= eta * delta(r) * x(c)` for each stored (r, c).
     /// Sparse DNN training never densifies: pruned connections stay pruned.
@@ -530,6 +617,53 @@ mod tests {
                 assert!((acc[i] - (base[i] + plain[i])).abs() < 1e-4, "i={i} b={b}");
             }
         });
+    }
+
+    #[test]
+    fn range_kernels_cover_exactly_their_rows() {
+        // stitching disjoint row ranges back together reproduces the
+        // whole-matrix kernels, and rows outside the range are untouched
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(14), 1 + rng.gen_range(14));
+            let a = random_csr(rng, nr, nc, 0.3);
+            let b = 1 + rng.gen_range(2 * SPMM_TILE);
+            let x: Vec<f32> = (0..a.ncols * b).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let cut = rng.gen_range(a.nrows + 1);
+            // fused overwrite: [0,cut) then [cut,nr) == full pass
+            let mut whole = vec![0.0; a.nrows * b];
+            a.spmm_fused_rowmajor(&x, &mut whole, b, |_, _| {});
+            let mut stitched = vec![9.0; a.nrows * b]; // poisoned
+            a.spmm_fused_range_rowmajor(&x, &mut stitched, b, 0, cut, |_, _| {});
+            a.spmm_fused_range_rowmajor(&x, &mut stitched, b, cut, a.nrows, |_, _| {});
+            for (u, v) in stitched.iter().zip(whole.iter()) {
+                assert!((u - v).abs() < 1e-4, "{u} vs {v} (cut={cut} b={b})");
+            }
+            // add: ranges accumulate only inside their rows
+            let base: Vec<f32> = (0..a.nrows * b).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let mut acc = base.clone();
+            a.spmm_add_range_rowmajor(&x, &mut acc, b, 0, cut);
+            for r in cut..a.nrows {
+                for j in 0..b {
+                    assert_eq!(acc[r * b + j], base[r * b + j], "row {r} outside range touched");
+                }
+            }
+            a.spmm_add_range_rowmajor(&x, &mut acc, b, cut, a.nrows);
+            let mut full = base.clone();
+            a.spmm_add_rowmajor(&x, &mut full, b);
+            for (u, v) in acc.iter().zip(full.iter()) {
+                assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn range_kernel_empty_range_is_noop() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = vec![5.0; 2];
+        a.spmm_fused_range_rowmajor(&x, &mut y, 1, 1, 1, |_, _| {});
+        a.spmm_add_range_rowmajor(&x, &mut y, 1, 2, 2);
+        assert_eq!(y, vec![5.0, 5.0]);
     }
 
     #[test]

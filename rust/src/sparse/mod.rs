@@ -12,4 +12,4 @@ pub mod split;
 
 pub use coo::Coo;
 pub use csr::Csr;
-pub use split::{SplitCsr, SplitSegment};
+pub use split::{regroup_rows, RowRegroup, SplitCsr, SplitSegment};

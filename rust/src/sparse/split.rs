@@ -14,14 +14,16 @@
 use super::Csr;
 
 /// One remote segment: the nonzeros of the row block whose columns arrive
-/// in a single inbound transfer, with columns renumbered to payload
-/// positions.
+/// in a single inbound transfer (or one sub-transfer **chunk** of it, for
+/// the pipelined schedule), with columns renumbered to payload positions.
 #[derive(Debug, Clone)]
 pub struct SplitSegment {
     /// Source rank of the transfer feeding this segment.
     pub src: u32,
     /// Transfer id within the layer's [`crate::partition::LayerPlan`].
     pub tid: u32,
+    /// Sub-transfer chunk id (0 for whole-transfer segments).
+    pub chunk: u32,
     /// `nrows × payload_len`; column j reads payload position j.
     pub csr: Csr,
     /// Global activation index per payload position (== transfer indices).
@@ -55,24 +57,33 @@ enum Dest {
 
 impl SplitCsr {
     /// Split `block` (a rank's row block, global column space) against the
-    /// rank's ascending owned-activation list and its inbound transfers
-    /// `(src, tid, indices)` — one per source rank, in receive order.
+    /// rank's owned-activation list and its inbound transfers
+    /// `(src, tid, chunk, indices)` — one per inbound payload (whole
+    /// transfers with chunk 0, or chunk-granular sub-transfers for the
+    /// pipelined schedule), in receive order.
+    /// `owned_acts` is usually ascending, but the pipelined engine passes
+    /// it in **boundary-first permuted order** (the previous layer's output
+    /// layout); compact local columns are re-sorted per row in that case so
+    /// the CSR invariant holds either way.
     /// Every column with a nonzero must be owned or covered by exactly one
     /// transfer (the communication-plan invariant); anything else is an
     /// error.
     pub fn build(
         block: &Csr,
         owned_acts: &[u32],
-        inbound: &[(u32, u32, &[u32])],
+        inbound: &[(u32, u32, u32, &[u32])],
     ) -> Result<SplitCsr, String> {
         let mut dest = vec![Dest::Unmapped; block.ncols];
         for (pos, &j) in owned_acts.iter().enumerate() {
             if j as usize >= block.ncols {
                 return Err(format!("owned activation {j} out of bounds"));
             }
+            if dest[j as usize] != Dest::Unmapped {
+                return Err(format!("owned activation {j} listed twice"));
+            }
             dest[j as usize] = Dest::Local(pos as u32);
         }
-        for (s, (_, _, indices)) in inbound.iter().enumerate() {
+        for (s, (_, _, _, indices)) in inbound.iter().enumerate() {
             for (pos, &j) in indices.iter().enumerate() {
                 if j as usize >= block.ncols {
                     return Err(format!("transfer index {j} out of bounds"));
@@ -85,12 +96,13 @@ impl SplitCsr {
         }
 
         // Per-target CSR builders. Global columns are sorted within each
-        // row and both owned_acts and transfer indices ascend, so compact
-        // columns stay sorted per target without re-sorting.
+        // row and transfer indices ascend, so remote compact columns stay
+        // sorted per target without re-sorting; the local segment is
+        // re-sorted below when owned_acts is permuted.
         let mut local = CsrBuilder::new(owned_acts.len());
         let mut segs: Vec<CsrBuilder> = inbound
             .iter()
-            .map(|(_, _, idx)| CsrBuilder::new(idx.len()))
+            .map(|(_, _, _, idx)| CsrBuilder::new(idx.len()))
             .collect();
         for r in 0..block.nrows {
             let (cols, vals) = block.row(r);
@@ -110,12 +122,17 @@ impl SplitCsr {
                 s.end_row();
             }
         }
+        let mut local = local.finish();
+        if !owned_acts.windows(2).all(|w| w[0] < w[1]) {
+            sort_rows_by_column(&mut local);
+        }
         let remote = segs
             .into_iter()
             .zip(inbound.iter())
-            .map(|(b, &(src, tid, indices))| SplitSegment {
+            .map(|(b, &(src, tid, chunk, indices))| SplitSegment {
                 src,
                 tid,
+                chunk,
                 csr: b.finish(),
                 gcols: indices.to_vec(),
             })
@@ -123,7 +140,7 @@ impl SplitCsr {
         Ok(SplitCsr {
             nrows: block.nrows,
             full_width: block.ncols,
-            local: local.finish(),
+            local,
             local_gcols: owned_acts.to_vec(),
             remote,
         })
@@ -186,6 +203,82 @@ impl SplitCsr {
             indices,
             vals,
         }
+    }
+}
+
+/// Restore the per-row sorted-column CSR invariant after a permuted
+/// compact renumbering.
+fn sort_rows_by_column(m: &mut Csr) {
+    for r in 0..m.nrows {
+        let lo = m.indptr[r] as usize;
+        let hi = m.indptr[r + 1] as usize;
+        let mut pairs: Vec<(u32, f32)> = m.indices[lo..hi]
+            .iter()
+            .copied()
+            .zip(m.vals[lo..hi].iter().copied())
+            .collect();
+        pairs.sort_unstable_by_key(|&(c, _)| c);
+        for (i, (c, v)) in pairs.into_iter().enumerate() {
+            m.indices[lo + i] = c;
+            m.vals[lo + i] = v;
+        }
+    }
+}
+
+/// Boundary/interior row regrouping for the **pipelined send schedule**:
+/// given, per outbound chunk, the local rows whose activations it carries,
+/// produce a row permutation that packs those "boundary" rows first —
+/// grouped by the chunk that first needs them, in post order — followed by
+/// the interior (local-only) rows. Under this order every chunk's rows lie
+/// inside a prefix, so the sender can post chunk `i`'s payload the moment
+/// `ready[i]` rows are finished, while interior rows are still computing.
+#[derive(Debug, Clone)]
+pub struct RowRegroup {
+    /// New row `r'` holds old row `perm[r']`.
+    pub perm: Vec<u32>,
+    /// Old row `p` now sits at row `inv[p]`.
+    pub inv: Vec<u32>,
+    /// Rows `[0, boundary_end)` feed at least one outbound chunk.
+    pub boundary_end: usize,
+    /// Per input group: number of prefix rows (in the new order) that must
+    /// be finished before that chunk's payload is complete. A group whose
+    /// rows were all claimed by earlier groups (an *empty boundary range*)
+    /// gets the earlier prefix it depends on.
+    pub ready: Vec<usize>,
+}
+
+/// Compute a [`RowRegroup`] for `nrows` rows and per-chunk row lists
+/// (`groups[i]` = old row indices feeding outbound chunk `i`). Shared rows
+/// are claimed by the first group that needs them; interior rows keep
+/// their relative (ascending) order after the boundary block.
+pub fn regroup_rows(nrows: usize, groups: &[Vec<u32>]) -> RowRegroup {
+    let mut inv = vec![u32::MAX; nrows];
+    let mut perm: Vec<u32> = Vec::with_capacity(nrows);
+    let mut ready = Vec::with_capacity(groups.len());
+    for rows in groups {
+        let mut hi = 0usize;
+        for &p in rows {
+            debug_assert!((p as usize) < nrows, "group row out of bounds");
+            if inv[p as usize] == u32::MAX {
+                inv[p as usize] = perm.len() as u32;
+                perm.push(p);
+            }
+            hi = hi.max(inv[p as usize] as usize + 1);
+        }
+        ready.push(hi);
+    }
+    let boundary_end = perm.len();
+    for p in 0..nrows as u32 {
+        if inv[p as usize] == u32::MAX {
+            inv[p as usize] = perm.len() as u32;
+            perm.push(p);
+        }
+    }
+    RowRegroup {
+        perm,
+        inv,
+        boundary_end,
+        ready,
     }
 }
 
@@ -263,10 +356,10 @@ mod tests {
     }
 
     fn build_from(block: &Csr, owned: &[u32], segs: &[Vec<u32>]) -> Result<SplitCsr, String> {
-        let inbound: Vec<(u32, u32, &[u32])> = segs
+        let inbound: Vec<(u32, u32, u32, &[u32])> = segs
             .iter()
             .enumerate()
-            .map(|(i, idx)| (i as u32 + 1, i as u32, idx.as_slice()))
+            .map(|(i, idx)| (i as u32 + 1, i as u32, 0, idx.as_slice()))
             .collect();
         SplitCsr::build(block, owned, &inbound)
     }
@@ -346,6 +439,76 @@ mod tests {
         // out-of-bounds transfer index
         let err = build_from(&block, &[0, 1, 2], &[vec![9]]).expect_err("oob");
         assert!(err.contains("out of bounds"), "{err}");
+    }
+
+    #[test]
+    fn permuted_owned_list_builds_sorted_local_and_same_spmv() {
+        // the pipelined engine passes owned_acts in boundary-first permuted
+        // order; the split must stay a valid CSR and compute the same SpMV
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(12), 2 + rng.gen_range(12));
+            let (block, owned, segs) = random_split(rng, nr, nc);
+            if owned.len() < 2 {
+                return;
+            }
+            let shuffled: Vec<u32> = {
+                let idx = rng.permutation(owned.len());
+                idx.iter().map(|&i| owned[i as usize]).collect()
+            };
+            let inbound: Vec<(u32, u32, u32, &[u32])> = segs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (i as u32 + 1, i as u32, 0, s.as_slice()))
+                .collect();
+            let split = SplitCsr::build(&block, &shuffled, &inbound).expect("valid cover");
+            assert!(split.local.validate().is_ok(), "local rows must stay sorted");
+            assert_eq!(split.unsplit(), block);
+            let x: Vec<f32> = (0..nc).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let mut want = vec![0.0; nr];
+            block.spmv(&x, &mut want);
+            let x_local: Vec<f32> = split.local_gcols.iter().map(|&j| x[j as usize]).collect();
+            let mut got = vec![0.0; nr];
+            split.local.spmv(&x_local, &mut got);
+            for seg in &split.remote {
+                let payload: Vec<f32> = seg.gcols.iter().map(|&j| x[j as usize]).collect();
+                seg.csr.spmv_add(&payload, &mut got);
+            }
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn regroup_rows_packs_boundary_prefix_per_group() {
+        // groups over 8 rows: chunk 0 needs {5,1}, chunk 1 needs {1,6}
+        // (row 1 shared — claimed by chunk 0), chunk 2 needs nothing new
+        let g = regroup_rows(8, &[vec![5, 1], vec![1, 6], vec![5]]);
+        assert_eq!(&g.perm[..3], &[5, 1, 6], "boundary rows in claim order");
+        assert_eq!(g.boundary_end, 3);
+        // chunk 0 complete after 2 prefix rows, chunk 1 after 3, chunk 2
+        // (all rows claimed earlier — an empty boundary range) after 1
+        assert_eq!(g.ready, vec![2, 3, 1]);
+        // interior rows follow in ascending order
+        assert_eq!(&g.perm[3..], &[0, 2, 3, 4, 7]);
+        // perm/inv are mutual inverses
+        for (r, &p) in g.perm.iter().enumerate() {
+            assert_eq!(g.inv[p as usize] as usize, r);
+        }
+        // every group's rows lie within its ready prefix
+        for (gi, rows) in [vec![5u32, 1], vec![1, 6], vec![5]].iter().enumerate() {
+            for &p in rows {
+                assert!((g.inv[p as usize] as usize) < g.ready[gi]);
+            }
+        }
+    }
+
+    #[test]
+    fn regroup_rows_no_groups_is_identity() {
+        let g = regroup_rows(4, &[]);
+        assert_eq!(g.perm, vec![0, 1, 2, 3]);
+        assert_eq!(g.boundary_end, 0);
+        assert!(g.ready.is_empty());
     }
 
     #[test]

@@ -1,8 +1,9 @@
-//! Property tests for the split-CSR **overlapped** engine: across random
-//! nets, random partitions, 1–8 ranks, and batch sizes including the
-//! degenerate b = 0 and b = 1, the overlapped path matches the serial
-//! engine within 1e-5, agrees with the blocking engine, and trains to the
-//! same weights.
+//! Property tests for the split-CSR **overlapped** and **pipelined**
+//! engines: across random nets, random partitions, 1–8 ranks, and batch
+//! sizes including the degenerate b = 0 and b = 1, both compact paths
+//! match the serial engine within 1e-5, agree with the blocking engine,
+//! and train to the same weights — including ranks that own zero rows in
+//! some layer and destinations whose boundary row range is empty.
 
 use spdnn::coordinator::sgd::{infer_with_plan_mode, run_with_plan_mode};
 use spdnn::coordinator::{ExecMode, RankState};
@@ -37,11 +38,12 @@ fn random_net(rng: &mut Rng, n: usize, layers: usize, p: f64) -> SparseNet {
     SparseNet::new(ws, Activation::Sigmoid)
 }
 
-/// THE satellite property: overlapped batched inference equals the serial
-/// engine within 1e-5 for random partitions, 1–8 ranks, and batch sizes
-/// including b = 0 and b = 1.
+/// THE satellite property: overlapped AND pipelined batched inference
+/// equal the serial engine within 1e-5 for random partitions, 1–8 ranks,
+/// and batch sizes including b = 0 and b = 1. Tiny chunk sizes force
+/// multi-chunk sub-transfers through the pipelined schedule.
 #[test]
-fn overlap_inference_matches_serial_any_partition_rank_batch() {
+fn overlap_and_pipelined_inference_match_serial_any_partition_rank_batch() {
     prop::check_seeded(0x0E21, 14, |rng| {
         let n = 8 + rng.gen_range(16);
         let layers = 2 + rng.gen_range(3);
@@ -51,6 +53,7 @@ fn overlap_inference_matches_serial_any_partition_rank_batch() {
             1 => 1,      // single column
             _ => 2 + rng.gen_range(7),
         };
+        let chunk_acts = 1 + rng.gen_range(5); // 1..=5 entries per chunk
         let net = random_net(rng, n, layers, 0.2);
         let part = random_partition(&net.layers, nparts, rng.next_u64());
         let plan = CommPlan::build(&net.layers, &part);
@@ -73,17 +76,35 @@ fn overlap_inference_matches_serial_any_partition_rank_batch() {
                 "P={nparts} b={b} entry {i}: overlap {o} vs blocking {bl}"
             );
         }
+
+        let (piped, _) = infer_with_plan_mode(
+            &net,
+            &part,
+            &plan,
+            &x0,
+            b,
+            ExecMode::Pipelined { chunk_acts },
+        );
+        for (i, (p, s)) in piped.iter().zip(serial.iter()).enumerate() {
+            assert!(
+                (p - s).abs() < 1e-5,
+                "P={nparts} b={b} chunk={chunk_acts} entry {i}: pipelined {p} vs serial {s}"
+            );
+        }
     });
 }
 
-/// Training under the overlapped engine converges to the same weights as
-/// the blocking engine and the serial oracle.
+/// Training under the overlapped AND pipelined engines converges to the
+/// same weights as the blocking engine and the serial oracle — the
+/// pipelined backward posts partial-gradient chunks before the update
+/// window and must still produce identical updates.
 #[test]
-fn overlap_training_matches_blocking_and_serial() {
+fn overlap_and_pipelined_training_match_blocking_and_serial() {
     prop::check_seeded(0x7A11, 6, |rng| {
         let n = 8 + rng.gen_range(10);
         let layers = 2 + rng.gen_range(2);
         let nparts = 1 + rng.gen_range(8);
+        let chunk_acts = 1 + rng.gen_range(4);
         let net = random_net(rng, n, layers, 0.25);
         let part = random_partition(&net.layers, nparts, rng.next_u64());
         let plan = CommPlan::build(&net.layers, &part);
@@ -105,29 +126,47 @@ fn overlap_training_matches_blocking_and_serial() {
         let bl = run_with_plan_mode(
             &net, &part, &plan, &inputs, &targets, 0.4, 2, ExecMode::Blocking,
         );
+        let pi = run_with_plan_mode(
+            &net,
+            &part,
+            &plan,
+            &inputs,
+            &targets,
+            0.4,
+            2,
+            ExecMode::Pipelined { chunk_acts },
+        );
         let mut serial = net.clone();
         let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.4, 2);
 
-        for (i, (a, s)) in ov.losses.iter().zip(sl.iter()).enumerate() {
+        for (i, ((a, p), s)) in ov.losses.iter().zip(pi.losses.iter()).zip(sl.iter()).enumerate() {
             assert!((a - s).abs() < 1e-4, "P={nparts} step {i}: loss {a} vs {s}");
+            assert!((p - s).abs() < 1e-4, "P={nparts} step {i}: pipelined loss {p} vs {s}");
         }
         for k in 0..net.depth() {
-            for (i, ((o, b), s)) in ov.net.layers[k]
+            for (i, (((o, b), p), s)) in ov.net.layers[k]
                 .vals
                 .iter()
                 .zip(bl.net.layers[k].vals.iter())
+                .zip(pi.net.layers[k].vals.iter())
                 .zip(serial.layers[k].vals.iter())
                 .enumerate()
             {
                 assert!((o - b).abs() < 1e-4, "P={nparts} layer {k} nnz {i}: {o} vs blocking {b}");
                 assert!((o - s).abs() < 1e-4, "P={nparts} layer {k} nnz {i}: {o} vs serial {s}");
+                assert!(
+                    (p - s).abs() < 1e-4,
+                    "P={nparts} chunk={chunk_acts} layer {k} nnz {i}: pipelined {p} vs serial {s}"
+                );
             }
-            for ((o, b), s) in ov.net.biases[k]
+            for (((o, b), p), s) in ov.net.biases[k]
                 .iter()
                 .zip(bl.net.biases[k].iter())
+                .zip(pi.net.biases[k].iter())
                 .zip(serial.biases[k].iter())
             {
                 assert!((o - b).abs() < 1e-4 && (o - s).abs() < 1e-4, "P={nparts} bias layer {k}");
+                assert!((p - s).abs() < 1e-4, "P={nparts} pipelined bias layer {k}");
             }
         }
     });
@@ -168,20 +207,30 @@ fn minibatch_overlap_matches_blocking() {
         };
         let (ov, ov_loss) = trained(ExecMode::Overlap);
         let (bl, bl_loss) = trained(ExecMode::Blocking);
+        let (pi, pi_loss) = trained(ExecMode::Pipelined { chunk_acts: 1 + b % 4 });
         assert!(
             (ov_loss - bl_loss).abs() < 1e-4,
             "P={nparts} b={b}: loss {ov_loss} vs {bl_loss}"
         );
+        assert!(
+            (pi_loss - bl_loss).abs() < 1e-4,
+            "P={nparts} b={b}: pipelined loss {pi_loss} vs {bl_loss}"
+        );
         for k in 0..net.depth() {
-            for (i, (o, bv)) in ov.layers[k]
+            for (i, ((o, bv), p)) in ov.layers[k]
                 .vals
                 .iter()
                 .zip(bl.layers[k].vals.iter())
+                .zip(pi.layers[k].vals.iter())
                 .enumerate()
             {
                 assert!(
                     (o - bv).abs() < 1e-4,
                     "P={nparts} b={b} layer {k} nnz {i}: {o} vs {bv}"
+                );
+                assert!(
+                    (p - bv).abs() < 1e-4,
+                    "P={nparts} b={b} layer {k} nnz {i}: pipelined {p} vs {bv}"
                 );
             }
         }
@@ -189,7 +238,8 @@ fn minibatch_overlap_matches_blocking() {
 }
 
 /// The merge of a split-mode state reconstructs the exact original weights
-/// when nothing was trained — the split/merge round-trip is lossless.
+/// when nothing was trained — the split/merge round-trip is lossless, in
+/// both the overlap layout and the pipelined boundary-first row layout.
 #[test]
 fn split_merge_roundtrip_is_lossless() {
     prop::check_seeded(0x90FD, 10, |rng| {
@@ -199,28 +249,31 @@ fn split_merge_roundtrip_is_lossless() {
         let net = random_net(rng, n, layers, 0.25);
         let part = random_partition(&net.layers, nparts, rng.next_u64());
         let plan = CommPlan::build(&net.layers, &part);
-        let mut merged = net.clone();
-        // zero out to prove the merge rewrites every value
-        for w in merged.layers.iter_mut() {
-            w.vals.iter_mut().for_each(|v| *v = 0.0);
-        }
-        for rank in 0..nparts as u32 {
-            let st = RankState::build(&net, &part, &plan, rank, ExecMode::Overlap);
-            st.merge_into(&mut merged);
-        }
-        for k in 0..net.depth() {
-            assert_eq!(
-                merged.layers[k].vals, net.layers[k].vals,
-                "P={nparts} layer {k}: split→merge changed values"
-            );
+        for mode in [ExecMode::Overlap, ExecMode::Pipelined { chunk_acts: 2 }] {
+            let mut merged = net.clone();
+            // zero out to prove the merge rewrites every value
+            for w in merged.layers.iter_mut() {
+                w.vals.iter_mut().for_each(|v| *v = 0.0);
+            }
+            for rank in 0..nparts as u32 {
+                let st = RankState::build(&net, &part, &plan, rank, mode);
+                st.merge_into(&mut merged);
+            }
+            for k in 0..net.depth() {
+                assert_eq!(
+                    merged.layers[k].vals, net.layers[k].vals,
+                    "P={nparts} layer {k} ({mode:?}): split→merge changed values"
+                );
+            }
         }
     });
 }
 
 /// Contiguous serving partitions (the pool default) run the overlapped
-/// engine correctly too — the exact configuration the benches measure.
+/// and pipelined engines correctly too — the exact configurations the
+/// benches measure.
 #[test]
-fn overlap_matches_serial_on_contiguous_partition() {
+fn overlap_and_pipelined_match_serial_on_contiguous_partition() {
     let mut rng = Rng::new(1234);
     let net = random_net(&mut rng, 32, 4, 0.2);
     for nparts in [1usize, 2, 4, 8] {
@@ -229,11 +282,166 @@ fn overlap_matches_serial_on_contiguous_partition() {
         for b in [0usize, 1, 5, 16] {
             let x0: Vec<f32> = (0..32 * b).map(|_| rng.gen_f32()).collect();
             let serial = infer_batch(&net, &x0, b);
-            let (out, _) = infer_with_plan_mode(&net, &part, &plan, &x0, b, ExecMode::Overlap);
-            assert_eq!(out.len(), serial.len());
-            for (o, s) in out.iter().zip(serial.iter()) {
-                assert!((o - s).abs() < 1e-5, "P={nparts} b={b}");
+            for mode in [
+                ExecMode::Overlap,
+                ExecMode::pipelined(),
+                ExecMode::Pipelined { chunk_acts: 3 },
+            ] {
+                let (out, _) = infer_with_plan_mode(&net, &part, &plan, &x0, b, mode);
+                assert_eq!(out.len(), serial.len());
+                for (o, s) in out.iter().zip(serial.iter()) {
+                    assert!((o - s).abs() < 1e-5, "P={nparts} b={b} {mode:?}");
+                }
             }
+        }
+    }
+}
+
+/// A rank that owns ZERO rows in some layer (empty local segment, no
+/// outbound transfers from that layer) must flow through both compact
+/// engines, forward and backward.
+#[test]
+fn zero_row_rank_layers_are_correct_in_all_modes() {
+    let n = 6;
+    let mut rng = Rng::new(77);
+    let mut ws = Vec::new();
+    for _ in 0..3 {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let mut any = false;
+            for c in 0..n {
+                if rng.gen_bool(0.5) {
+                    coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+                    any = true;
+                }
+            }
+            if !any {
+                coo.push(r, r, 1.0);
+            }
+        }
+        ws.push(coo.to_csr());
+    }
+    let net = SparseNet::new(ws, Activation::Sigmoid);
+    // rank 1 owns nothing in layer 1; rank 2 owns nothing in layer 0
+    let part = DnnPartition {
+        nparts: 3,
+        input_parts: vec![0, 0, 1, 1, 2, 2],
+        layer_parts: vec![
+            vec![0, 0, 1, 1, 0, 1],
+            vec![0, 0, 0, 2, 2, 2],
+            vec![0, 1, 1, 2, 0, 1],
+        ],
+    };
+    part.validate(&net.layers).expect("valid partition");
+    let plan = CommPlan::build(&net.layers, &part);
+    let mut rng = Rng::new(5);
+    for b in [0usize, 1, 4] {
+        let x0: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+        let serial = infer_batch(&net, &x0, b);
+        for mode in [
+            ExecMode::Overlap,
+            ExecMode::Pipelined { chunk_acts: 1 },
+            ExecMode::Pipelined { chunk_acts: 0 },
+        ] {
+            let (out, _) = infer_with_plan_mode(&net, &part, &plan, &x0, b, mode);
+            for (o, s) in out.iter().zip(serial.iter()) {
+                assert!((o - s).abs() < 1e-5, "b={b} {mode:?}");
+            }
+        }
+    }
+    // backward too: one epoch of training matches the serial oracle
+    let inputs: Vec<Vec<f32>> = (0..3).map(|_| (0..n).map(|_| rng.gen_f32()).collect()).collect();
+    let targets: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..n).map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let mut serial = net.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.4, 1);
+    for mode in [ExecMode::Overlap, ExecMode::Pipelined { chunk_acts: 2 }] {
+        let run = run_with_plan_mode(&net, &part, &plan, &inputs, &targets, 0.4, 1, mode);
+        for (a, s) in run.losses.iter().zip(sl.iter()) {
+            assert!((a - s).abs() < 1e-4, "{mode:?}: loss {a} vs {s}");
+        }
+        for k in 0..net.depth() {
+            for (a, s) in run.net.layers[k].vals.iter().zip(serial.layers[k].vals.iter()) {
+                assert!((a - s).abs() < 1e-4, "{mode:?} layer {k}");
+            }
+        }
+    }
+}
+
+/// Two destinations that need the SAME boundary rows: the second group's
+/// boundary row range is empty (all rows claimed by the first), and its
+/// payload must still post correctly.
+#[test]
+fn empty_boundary_range_destination_is_correct() {
+    // W^0 is diagonal (no layer-0 transfers). In W^1, the rows owned by
+    // ranks 1 and 2 read exactly the two activation columns owned by
+    // rank 0 — two outbound transfers from rank 0 with identical index
+    // sets {0, 1}.
+    let mut w0 = Coo::new(4, 4);
+    for r in 0..4 {
+        w0.push(r, r, 0.5 + r as f32 * 0.1);
+    }
+    let mut w1 = Coo::new(4, 4);
+    w1.push(0, 0, 1.0);
+    w1.push(0, 1, -0.5);
+    w1.push(1, 0, 0.3);
+    w1.push(1, 1, 0.7);
+    w1.push(2, 0, -0.2);
+    w1.push(2, 1, 0.9);
+    w1.push(3, 0, 0.4);
+    w1.push(3, 1, -0.8);
+    let net = SparseNet::new(vec![w0.to_csr(), w1.to_csr()], Activation::Sigmoid);
+    let part = DnnPartition {
+        nparts: 3,
+        input_parts: vec![0, 0, 1, 2],
+        layer_parts: vec![vec![0, 0, 1, 2], vec![0, 0, 1, 2]],
+    };
+    part.validate(&net.layers).expect("valid partition");
+    let plan = CommPlan::build(&net.layers, &part);
+    // sanity: the two transfers of layer 1 really share their index set
+    let out0 = plan.layers[1].outbound_of(0);
+    assert_eq!(out0.len(), 2, "rank 0 must feed two destinations");
+    assert_eq!(out0[0].2, out0[1].2, "identical boundary rows");
+    let mut rng = Rng::new(9);
+    for b in [0usize, 1, 3] {
+        let x0: Vec<f32> = (0..4 * b).map(|_| rng.gen_f32()).collect();
+        let serial = infer_batch(&net, &x0, b);
+        for chunk_acts in [0usize, 1, 2] {
+            let (out, _) = infer_with_plan_mode(
+                &net,
+                &part,
+                &plan,
+                &x0,
+                b,
+                ExecMode::Pipelined { chunk_acts },
+            );
+            for (o, s) in out.iter().zip(serial.iter()) {
+                assert!((o - s).abs() < 1e-5, "b={b} chunk={chunk_acts}");
+            }
+        }
+    }
+    // and the backward mirror over the duplicated-destination transfers
+    let inputs = vec![vec![0.4, 0.9, 0.1, 0.7]];
+    let targets = vec![vec![1.0, 0.0, 0.0, 1.0]];
+    let mut serial = net.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.5, 2);
+    let run = run_with_plan_mode(
+        &net,
+        &part,
+        &plan,
+        &inputs,
+        &targets,
+        0.5,
+        2,
+        ExecMode::Pipelined { chunk_acts: 1 },
+    );
+    for (a, s) in run.losses.iter().zip(sl.iter()) {
+        assert!((a - s).abs() < 1e-4, "loss {a} vs {s}");
+    }
+    for k in 0..net.depth() {
+        for (a, s) in run.net.layers[k].vals.iter().zip(serial.layers[k].vals.iter()) {
+            assert!((a - s).abs() < 1e-4, "layer {k}: {a} vs {s}");
         }
     }
 }

@@ -309,3 +309,32 @@ fn shutdown_drain_sheds_expired_tickets() {
     assert!(doomed.wait().expect_err("expired at drain").is_deadline());
     assert_eq!(summary.stats.shed_requests, 1);
 }
+
+/// The pipelined engine serves correctly behind the pool — mixed batch
+/// sizes over long-lived rank threads, chunked sub-transfer tags reused
+/// across requests without cross-request mismatches.
+#[test]
+fn pipelined_mode_pool_matches_serial() {
+    let net = net64();
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 3,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            adaptive: true,
+            mode: ExecMode::Pipelined { chunk_acts: 4 },
+        },
+    );
+    let mut rng = Rng::new(23);
+    for req in 0..8 {
+        let b = 1 + (req % 4);
+        let x0 = random_input(&mut rng, 64, b);
+        let out = pool.submit(x0.clone(), b).wait().expect("served");
+        assert_matches_serial(&net, &x0, b, &out, &format!("pipelined req {req}"));
+    }
+    let summary = pool.shutdown().expect("shutdown");
+    assert!(summary.leaked_ranks.is_empty(), "chunked tags leaked messages");
+    assert_eq!(summary.stats.requests, 8);
+    assert_eq!(summary.stats.failed_requests, 0);
+}
