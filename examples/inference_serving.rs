@@ -14,8 +14,14 @@
 //! Run: `cargo run --release --example inference_serving -- \
 //!        [--requests 8] [--clients 4] [--ranks 4] [--batch 64] \
 //!        [--neurons 1024] [--layers 12] [--max-batch 128] \
-//!        [--max-wait-us 500] [--json BENCH_serving.json]`
+//!        [--max-wait-us 500] [--mode pipelined|overlap|blocking] \
+//!        [--codec f32|f16|int8] [--json BENCH_serving.json]`
+//!
+//! With a lossy `--codec` the replies are validated against the serial
+//! engine under a codec-matched tolerance, and the final stats line
+//! reports the live wire-compression ratio (raw vs encoded bytes).
 
+use spdnn::comm::Codec;
 use spdnn::coordinator::ExecMode;
 use spdnn::data::synthetic_mnist;
 use spdnn::dnn::inference::{classify_batch, infer_batch};
@@ -36,6 +42,21 @@ fn main() {
     let max_batch = args.get_usize("max-batch", 2 * batch);
     let max_wait_us = args.get_u64("max-wait-us", 500);
     let json_path = args.get_str("json", "BENCH_serving.json");
+    let mode = match args.get_str("mode", "pipelined").as_str() {
+        "overlap" => ExecMode::Overlap,
+        "blocking" => ExecMode::Blocking,
+        "pipelined" => ExecMode::pipelined(),
+        other => panic!("unknown mode '{other}' (expected pipelined | overlap | blocking)"),
+    };
+    let codec = Codec::parse(&args.get_str("codec", "f32"))
+        .expect("unknown codec (expected f32 | f16 | int8)");
+    // reply validation tolerance vs the serial engine, matched to the
+    // codec's bounded activation error compounding across layers
+    let tol: f32 = match codec {
+        Codec::F32 => 1e-5,
+        Codec::F16 => 2e-2,
+        Codec::Int8 { .. } => 0.25,
+    };
 
     let net = generate(
         &RadixNetConfig::graph_challenge(neurons, layers).expect("unsupported neuron count"),
@@ -44,10 +65,12 @@ fn main() {
     println!(
         "serving N={} L={} ({} connections) on a {ranks}-rank pool: \
          {clients} clients × {requests} requests, batch {batch}, \
-         max_batch {max_batch}, max_wait {max_wait_us}µs",
+         max_batch {max_batch}, max_wait {max_wait_us}µs, \
+         mode {mode:?}, codec {}",
         net.input_dim(),
         net.depth(),
-        net.total_nnz()
+        net.total_nnz(),
+        codec.label()
     );
 
     // Partition, plan, rank states, and rank threads are all built once
@@ -61,7 +84,8 @@ fn main() {
             max_batch,
             max_wait: Duration::from_micros(max_wait_us),
             adaptive: true,
-            mode: ExecMode::Overlap,
+            mode,
+            codec,
         },
     ));
 
@@ -91,7 +115,7 @@ fn main() {
                         .zip(serial.iter())
                         .map(|(a, s)| (a - s).abs())
                         .fold(0f32, f32::max);
-                    assert!(maxerr < 1e-5, "client {c} request {r}: maxerr {maxerr}");
+                    assert!(maxerr < tol, "client {c} request {r}: maxerr {maxerr}");
                     let classes = classify_batch(&out, 10, b)
                         .into_iter()
                         .collect::<std::collections::HashSet<_>>()
@@ -124,6 +148,13 @@ fn main() {
         s.p50_secs * 1e3,
         s.p95_secs * 1e3,
         s.p99_secs * 1e3
+    );
+    println!(
+        "wire: {} B raw → {} B shipped ({:.2}x compression, codec {})",
+        s.raw_bytes,
+        s.wire_bytes,
+        s.wire_compression(),
+        codec.label()
     );
     std::fs::write(&json_path, s.to_json()).expect("write serving json");
     println!("wrote {json_path}");

@@ -6,18 +6,22 @@
 //!
 //! `cargo bench --bench table2_throughput` — `SPDNN_FULL=1` adds the
 //! deeper (480/1920-layer) configurations of the paper;
-//! `SPDNN_SECTION=overlap` runs only the overlap-vs-blocking section and
-//! `SPDNN_SECTION=pipeline` only the pipelined-vs-overlap section (the CI
-//! bench-smoke paths); `SPDNN_ENFORCE=1` fails the run if the overlapped
-//! engine does not beat the blocking engine by ≥ 1.15× at 4 ranks, or the
-//! pipelined engine loses to the overlap baseline.
+//! `SPDNN_SECTION=overlap` runs only the overlap-vs-blocking section,
+//! `SPDNN_SECTION=pipeline` only the pipelined-vs-overlap section, and
+//! `SPDNN_SECTION=codec` only the wire-codec section (the CI bench-smoke
+//! paths); `SPDNN_ENFORCE=1` fails the run if the overlapped engine does
+//! not beat the blocking engine by ≥ 1.15× at 4 ranks, the pipelined
+//! engine loses to the overlap baseline, or the f16 wire codec loses
+//! throughput / fails to ~halve bytes-on-wire / shifts digits SGD loss by
+//! more than 1%.
 
 use spdnn::comm::netmodel::ComputeModel;
+use spdnn::comm::Codec;
 use spdnn::coordinator::sgd::infer_with_plan;
 use spdnn::coordinator::{ExecMode, RankScratch, RankState};
 use spdnn::data::synthetic_mnist;
 use spdnn::dnn::inference::infer_batch_parallel;
-use spdnn::experiments::table2;
+use spdnn::experiments::{ablation, table2};
 use spdnn::partition::{contiguous_partition, CommPlan};
 use spdnn::radixnet::{generate, RadixNetConfig};
 use spdnn::runtime::parallel::run_ranks;
@@ -159,6 +163,125 @@ fn pipeline_section(full: bool, enforce: bool) {
     }
 }
 
+/// Acceptance bars for the wire-codec section (enforced only under
+/// `SPDNN_ENFORCE=1`): f16 must not lose throughput to the raw-f32 wire
+/// at 4 ranks, must at least ~halve the measured bytes-on-wire, and must
+/// keep the digits SGD final loss within 1% of the f32 run.
+const CODEC_EPS_BAR: f64 = 1.0;
+const CODEC_BYTE_BAR: f64 = 0.55;
+const CODEC_LOSS_BAR: f64 = 0.01;
+
+/// Wire-codec section: the same digits workload pushed through the
+/// overlapped engine with f32/f16/int8 fabric payloads — measured
+/// bytes-on-wire and edges/s per codec, plus the digits SGD convergence
+/// delta each codec costs. Writes `BENCH_codec.json`.
+fn codec_section(full: bool, enforce: bool) {
+    let (n, l, ranks) = (1024usize, 24usize, 4usize);
+    let b = 16usize;
+    let passes = if full { 128usize } else { 48 };
+    let reps = 3usize;
+    println!("# Wire codecs (f32 vs f16 vs int8 payloads, digits workload, {ranks} ranks)");
+    let net = generate(&RadixNetConfig::graph_challenge(n, l).expect("cfg"));
+    let side = (n as f64).sqrt() as usize;
+    let data = synthetic_mnist(side, b, 42);
+    let (x0, b) = data.pack_batch(0, b);
+    let part = contiguous_partition(&net.layers, ranks);
+
+    // steady-state serving loop per codec (same harness as the overlap
+    // section); bytes-on-wire measured from the live endpoint counters
+    let measure = |codec: Codec| -> (f64, u64) {
+        let plan = CommPlan::build_with_codec(&net.layers, &part, codec, codec);
+        let mut best_eps = 0f64;
+        let mut bytes_per_pass = 0u64;
+        for _ in 0..reps {
+            let run = run_ranks(ranks, |rank, ep| {
+                let mut state =
+                    RankState::build(&net, &part, &plan, rank as u32, ExecMode::Overlap);
+                let mut scratch = RankScratch::new();
+                let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch); // warm-up
+                let sw = Stopwatch::start();
+                for _ in 0..passes {
+                    let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch);
+                }
+                sw.elapsed_secs()
+            })
+            .expect("codec bench run failed");
+            let secs = run.outputs.into_iter().fold(0f64, f64::max);
+            best_eps = best_eps.max(net.total_nnz() as f64 * (passes * b) as f64 / secs);
+            // sent words count the warm-up pass too: passes + 1 in total
+            let wire: u64 = 4 * run.sent.iter().map(|&(w, _)| w).sum::<u64>();
+            bytes_per_pass = wire / (passes as u64 + 1);
+        }
+        (best_eps, bytes_per_pass)
+    };
+
+    // digits SGD convergence delta per codec (accuracy half of the table)
+    let sgd_steps = if full { 400 } else { 150 };
+    let sgd = ablation::codec_convergence(256, 8, ranks, sgd_steps, 0.1, 7);
+
+    let codecs = [Codec::F32, Codec::F16, Codec::int8()];
+    let mut eps = [0f64; 3];
+    let mut bytes = [0u64; 3];
+    for (i, &c) in codecs.iter().enumerate() {
+        let (e, wb) = measure(c);
+        eps[i] = e;
+        bytes[i] = wb;
+        println!(
+            "[bench] codec {:>4}: {e:.2E} edges/s, {wb} B/pass on the wire, \
+             SGD final loss {:.5} ({:+.3}% vs f32)",
+            c.label(),
+            sgd[i].final_loss,
+            sgd[i].loss_delta * 100.0
+        );
+    }
+    let f16_speedup = eps[1] / eps[0];
+    let f16_byte_ratio = bytes[1] as f64 / bytes[0] as f64;
+    println!(
+        "[bench] f16 vs f32: {f16_speedup:.2}x throughput (bar {CODEC_EPS_BAR}x), \
+         {f16_byte_ratio:.3} of the bytes (bar {CODEC_BYTE_BAR}), \
+         SGD Δ {:+.3}% (bar ±{:.0}%)",
+        sgd[1].loss_delta * 100.0,
+        CODEC_LOSS_BAR * 100.0
+    );
+    let codec_rows: Vec<String> = (0..3)
+        .map(|i| {
+            format!(
+                "{{\"codec\":\"{}\",\"eps\":{:.1},\"wire_bytes_per_pass\":{},\
+                 \"sgd_final_loss\":{:.6},\"sgd_loss_delta\":{:.6}}}",
+                codecs[i].label(),
+                eps[i],
+                bytes[i],
+                sgd[i].final_loss,
+                sgd[i].loss_delta
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"neurons\":{n},\"layers\":{l},\"batch\":{b},\"ranks\":{ranks},\
+         \"passes\":{passes},\"codecs\":[{}],\"f16_speedup\":{f16_speedup:.4},\
+         \"f16_byte_ratio\":{f16_byte_ratio:.4},\"eps_bar\":{CODEC_EPS_BAR},\
+         \"byte_bar\":{CODEC_BYTE_BAR},\"loss_bar\":{CODEC_LOSS_BAR}}}",
+        codec_rows.join(",")
+    );
+    std::fs::write("BENCH_codec.json", &json).expect("write BENCH_codec.json");
+    println!("wrote BENCH_codec.json: {json}");
+    if enforce {
+        assert!(
+            f16_byte_ratio <= CODEC_BYTE_BAR,
+            "f16 shipped {f16_byte_ratio:.3} of the f32 bytes, above the {CODEC_BYTE_BAR} bar"
+        );
+        assert!(
+            sgd[1].loss_delta.abs() <= CODEC_LOSS_BAR,
+            "f16 digits SGD loss delta {:.4} outside the ±{CODEC_LOSS_BAR} bar",
+            sgd[1].loss_delta
+        );
+        assert!(
+            f16_speedup >= CODEC_EPS_BAR,
+            "f16 throughput {f16_speedup:.3}x below the {CODEC_EPS_BAR}x bar"
+        );
+    }
+}
+
 /// Live threaded engine: edges/s of the batched fused-SpMM inference path
 /// at `ranks`, with partition + plan built once (the serving setup cost is
 /// off the clock, as in a real request loop).
@@ -194,6 +317,11 @@ fn main() {
         Ok("pipeline") => {
             // CI bench-smoke path: just the pipelined-vs-overlap bar
             pipeline_section(full, enforce);
+            return;
+        }
+        Ok("codec") => {
+            // CI bench-smoke path: wire-codec throughput/bytes/accuracy bars
+            codec_section(full, enforce);
             return;
         }
         _ => {}
@@ -273,6 +401,7 @@ fn main() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
+            codec: Codec::F32,
         },
     );
     let _ = pool.submit(x0.clone(), pb).wait().expect("warm-up"); // warm-up
@@ -307,4 +436,6 @@ fn main() {
     overlap_section(full, enforce);
     println!();
     pipeline_section(full, enforce);
+    println!();
+    codec_section(full, enforce);
 }

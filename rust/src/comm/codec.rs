@@ -1,0 +1,498 @@
+//! Wire codecs: compressed activation / gradient payloads for the fabric.
+//!
+//! The partitioner minimizes communication volume in *words*; the codec
+//! layer shrinks the bytes each word costs on the wire, composing
+//! multiplicatively with the cut reduction. Three codecs:
+//!
+//! - [`Codec::F32`] — lossless passthrough. The wire payload is the raw
+//!   `f32` slice, bit-identical to the pre-codec fabric (no header, no
+//!   reshaping), so the default path costs nothing and live word counters
+//!   still equal the plan's volume exactly.
+//! - [`Codec::F16`] — IEEE 754 binary16 with round-to-nearest-even,
+//!   two halves packed per wire word: ~2× fewer bytes, ≤ 2⁻¹¹ relative
+//!   error over the normal range (sigmoid activations and SGD gradients
+//!   sit comfortably inside it).
+//! - [`Codec::Int8`] — symmetric absmax-scaled 8-bit quantization, four
+//!   lanes per wire word, one f32 scale per `group` elements carried in
+//!   the header: ~4× fewer bytes, error ≤ half a quantization step of the
+//!   group's absmax. A group whose absmax is 0 (or non-finite) encodes
+//!   scale 0 and decodes to exact zeros — decode never manufactures NaN.
+//!
+//! **Wire format.** The fabric transports `Vec<f32>` payloads, so encoded
+//! bytes are packed into `f32` words via bit-casts (the buffer pool and
+//! channel plumbing stay untouched). Lossy codecs are self-describing:
+//!
+//! ```text
+//! word 0   MAGIC (upper 16 bits) | codec id (lower 16 bits)
+//! word 1   element count
+//! words 2… Int8 only: one f32 scale per group
+//! rest     packed elements (2 halves / 4 int8 lanes per word)
+//! ```
+//!
+//! [`Codec::wire_words`] / [`Codec::wire_bytes`] give the exact on-wire
+//! footprint for any payload length — the same arithmetic the α-β network
+//! model ([`crate::comm::netmodel`]) and the live byte counters use, so
+//! predicted and measured volumes agree.
+
+/// Bit pattern marking an encoded payload's header word.
+const MAGIC: u32 = 0xC0DE_0000;
+const MAGIC_MASK: u32 = 0xFFFF_0000;
+/// Header words before the (per-codec) scale block.
+const HDR_WORDS: usize = 2;
+
+/// Elements per Int8 scale group when none is given (`group == 0`).
+pub const DEFAULT_INT8_GROUP: usize = 256;
+
+/// A wire codec for fabric payloads. `Copy` and tiny: the plan stores one
+/// per layer per phase and the engines read it on every transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    /// Lossless raw-f32 passthrough (the pre-codec wire format).
+    #[default]
+    F32,
+    /// IEEE binary16, round-to-nearest-even, 2 elements per wire word.
+    F16,
+    /// Symmetric absmax int8, 4 elements per wire word, one f32 scale per
+    /// `group` elements (0 = [`DEFAULT_INT8_GROUP`]).
+    Int8 {
+        /// Elements sharing one absmax scale. Smaller groups track local
+        /// dynamic range better but spend more header words.
+        group: usize,
+    },
+}
+
+impl Codec {
+    /// The int8 codec with the default scale-group size.
+    pub fn int8() -> Self {
+        Codec::Int8 { group: 0 }
+    }
+
+    /// Wire id carried in the header (and the CLI/env spelling).
+    pub fn id(&self) -> u16 {
+        match self {
+            Codec::F32 => 0,
+            Codec::F16 => 1,
+            Codec::Int8 { .. } => 2,
+        }
+    }
+
+    /// Parse a CLI/env spelling (`f32` | `f16` | `int8`). `None` on
+    /// anything else.
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "raw" => Some(Codec::F32),
+            "f16" | "half" => Some(Codec::F16),
+            "int8" | "i8" | "q8" => Some(Codec::int8()),
+            _ => None,
+        }
+    }
+
+    /// Display spelling, matching [`Codec::parse`].
+    pub fn label(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::F16 => "f16",
+            Codec::Int8 { .. } => "int8",
+        }
+    }
+
+    fn int8_group(group: usize) -> usize {
+        if group == 0 {
+            DEFAULT_INT8_GROUP
+        } else {
+            group
+        }
+    }
+
+    /// Exact wire footprint, in f32 words, of a `len`-element payload.
+    pub fn wire_words(&self, len: usize) -> usize {
+        match *self {
+            Codec::F32 => len,
+            Codec::F16 => HDR_WORDS + len.div_ceil(2),
+            Codec::Int8 { group } => {
+                let g = Self::int8_group(group);
+                HDR_WORDS + len.div_ceil(g) + len.div_ceil(4)
+            }
+        }
+    }
+
+    /// Exact wire footprint in bytes (wire words × 4).
+    pub fn wire_bytes(&self, len: usize) -> u64 {
+        4 * self.wire_words(len) as u64
+    }
+
+    /// Encode `src` into `dst` (cleared first). On return `dst.len()`
+    /// equals [`Codec::wire_words`]`(src.len())`.
+    pub fn encode_into(&self, src: &[f32], dst: &mut Vec<f32>) {
+        dst.clear();
+        match *self {
+            Codec::F32 => dst.extend_from_slice(src),
+            Codec::F16 => {
+                dst.reserve(self.wire_words(src.len()));
+                push_header(dst, self.id(), src.len());
+                for pair in src.chunks(2) {
+                    let lo = f32_to_f16_bits(pair[0]) as u32;
+                    let hi = if pair.len() > 1 {
+                        f32_to_f16_bits(pair[1]) as u32
+                    } else {
+                        0
+                    };
+                    dst.push(f32::from_bits(lo | (hi << 16)));
+                }
+            }
+            Codec::Int8 { group } => {
+                let g = Self::int8_group(group);
+                dst.reserve(self.wire_words(src.len()));
+                push_header(dst, self.id(), src.len());
+                // scales live in the header block of dst itself — no
+                // scratch allocation on the send path
+                for grp in src.chunks(g) {
+                    dst.push(int8_scale_of(grp));
+                }
+                for (qi, quad) in src.chunks(4).enumerate() {
+                    let mut word = 0u32;
+                    for (lane, &x) in quad.iter().enumerate() {
+                        let scale = dst[HDR_WORDS + (qi * 4 + lane) / g];
+                        let q = quantize_i8(x, scale);
+                        word |= ((q as u8) as u32) << (8 * lane);
+                    }
+                    dst.push(f32::from_bits(word));
+                }
+            }
+        }
+    }
+
+    /// Decode a wire payload into `dst` (cleared first). Panics if the
+    /// header does not match this codec — a tagging bug upstream, never a
+    /// recoverable condition on the hot path.
+    pub fn decode_into(&self, wire: &[f32], dst: &mut Vec<f32>) {
+        dst.clear();
+        match *self {
+            Codec::F32 => dst.extend_from_slice(wire),
+            Codec::F16 => {
+                let count = read_header(wire, self.id());
+                dst.reserve(count);
+                for i in 0..count {
+                    let word = wire[HDR_WORDS + i / 2].to_bits();
+                    let half = if i % 2 == 0 { word } else { word >> 16 } as u16;
+                    dst.push(f16_bits_to_f32(half));
+                }
+            }
+            Codec::Int8 { group } => {
+                let g = Self::int8_group(group);
+                let count = read_header(wire, self.id());
+                let nscales = count.div_ceil(g);
+                dst.reserve(count);
+                for i in 0..count {
+                    let scale = wire[HDR_WORDS + i / g];
+                    let word = wire[HDR_WORDS + nscales + i / 4].to_bits();
+                    let q = ((word >> (8 * (i % 4))) & 0xFF) as u8 as i8;
+                    dst.push(q as f32 * scale);
+                }
+            }
+        }
+    }
+}
+
+fn push_header(dst: &mut Vec<f32>, id: u16, count: usize) {
+    dst.push(f32::from_bits(MAGIC | id as u32));
+    dst.push(f32::from_bits(count as u32));
+}
+
+fn read_header(wire: &[f32], expect_id: u16) -> usize {
+    assert!(wire.len() >= HDR_WORDS, "encoded payload shorter than header");
+    let w0 = wire[0].to_bits();
+    assert_eq!(w0 & MAGIC_MASK, MAGIC, "payload is not codec-encoded");
+    assert_eq!(
+        (w0 & !MAGIC_MASK) as u16,
+        expect_id,
+        "payload encoded with a different codec"
+    );
+    wire[1].to_bits() as usize
+}
+
+/// Absmax-derived quantization scale of one group; 0 when the group is
+/// all-zero or contains nothing finite to calibrate against.
+fn int8_scale_of(grp: &[f32]) -> f32 {
+    let absmax = grp
+        .iter()
+        .map(|x| x.abs())
+        .filter(|x| x.is_finite())
+        .fold(0f32, f32::max);
+    if absmax > 0.0 {
+        absmax / 127.0
+    } else {
+        0.0
+    }
+}
+
+/// Quantize one element symmetrically; saturating, NaN-free.
+fn quantize_i8(x: f32, scale: f32) -> i8 {
+    if scale == 0.0 || x.is_nan() {
+        return 0;
+    }
+    // `as` saturates (+inf → 127); the max keeps -inf at the symmetric
+    // -127 instead of i8::MIN
+    ((x / scale).round() as i8).max(-127)
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even. Handles subnormals,
+/// overflow to ±inf, and NaN (preserved as a quiet NaN).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / NaN: keep NaN-ness with a quiet mantissa bit
+        return sign | 0x7C00 | if frac != 0 { 0x0200 } else { 0 };
+    }
+    // unbiased exponent, rebiased for f16 (bias 15)
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e <= 0 {
+        // subnormal (or underflow to zero): shift the implicit-1 mantissa
+        if e < -10 {
+            return sign; // rounds to ±0
+        }
+        let mant = frac | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32; // bits dropped below the f16 ulp
+        let half = mant >> shift;
+        // round to nearest, ties to even
+        let rem = mant & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = match rem.cmp(&halfway) {
+            std::cmp::Ordering::Greater => half + 1,
+            std::cmp::Ordering::Equal => half + (half & 1),
+            std::cmp::Ordering::Less => half,
+        };
+        return sign | rounded as u16;
+    }
+    // normal range: 23 → 10 mantissa bits with RNE (carry may bump the
+    // exponent, including into infinity — the +1 propagates correctly
+    // because the fields are adjacent)
+    let base = (sign as u32) << 16 | (e as u32) << 10 | (frac >> 13);
+    let rem = frac & 0x1FFF;
+    let rounded = match rem.cmp(&0x1000) {
+        std::cmp::Ordering::Greater => base + 1,
+        std::cmp::Ordering::Equal => base + (base & 1),
+        std::cmp::Ordering::Less => base,
+    };
+    (rounded & 0xFFFF) as u16 | sign
+}
+
+/// IEEE binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = (h as u32 & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let frac = (h & 0x03FF) as u32;
+    let bits = match exp {
+        0 => {
+            if frac == 0 {
+                sign // ±0
+            } else {
+                // subnormal: normalize into f32's much wider exponent
+                let mut e = 0i32;
+                let mut f = frac;
+                while f & 0x0400 == 0 {
+                    f <<= 1;
+                    e -= 1;
+                }
+                let exp32 = (127 - 15 + e + 1) as u32;
+                sign | (exp32 << 23) | ((f & 0x03FF) << 13)
+            }
+        }
+        0x1F => sign | 0x7F80_0000 | (frac << 13), // inf / NaN
+        _ => sign | ((exp as u32 + (127 - 15)) << 23) | (frac << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn roundtrip(codec: Codec, src: &[f32]) -> Vec<f32> {
+        let mut wire = Vec::new();
+        codec.encode_into(src, &mut wire);
+        assert_eq!(wire.len(), codec.wire_words(src.len()), "{codec:?}");
+        let mut out = Vec::new();
+        codec.decode_into(&wire, &mut out);
+        assert_eq!(out.len(), src.len(), "{codec:?}");
+        out
+    }
+
+    #[test]
+    fn f32_roundtrip_is_bit_identical_and_headerless() {
+        prop::check(|rng| {
+            let n = rng.gen_range(200);
+            let src: Vec<f32> = (0..n).map(|_| rng.gen_f32_range(-1e6, 1e6)).collect();
+            let mut wire = Vec::new();
+            Codec::F32.encode_into(&src, &mut wire);
+            assert_eq!(wire.len(), src.len(), "F32 must add zero overhead");
+            for (a, b) in wire.iter().zip(src.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let out = roundtrip(Codec::F32, &src);
+            for (a, b) in out.iter().zip(src.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn f16_roundtrip_bounded_relative_error() {
+        prop::check(|rng| {
+            let n = 1 + rng.gen_range(99);
+            let src: Vec<f32> = (0..n).map(|_| rng.gen_f32_range(-100.0, 100.0)).collect();
+            let out = roundtrip(Codec::F16, &src);
+            for (a, b) in out.iter().zip(src.iter()) {
+                // RNE in the normal range: error ≤ 2^-11 relative
+                let tol = b.abs() * 4.9e-4 + 6.0e-8; // + subnormal ulp
+                assert!((a - b).abs() <= tol, "{b} -> {a}");
+            }
+        });
+    }
+
+    #[test]
+    fn f16_adversarial_values() {
+        // subnormals (f16 subnormal range is ~6e-8 .. 6.1e-5), exact
+        // halves, the largest normal, overflow, signed zeros, NaN
+        let cases = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            65504.0,   // f16 max normal — exact
+            65505.0,   // rounds back to 65504
+            1e30,      // overflow → inf
+            -1e30,     // → -inf
+            6.1e-5,    // smallest f16 normal neighborhood
+            5.96e-8,   // smallest f16 subnormal neighborhood
+            1e-8,      // underflows to 0
+            -3.1e-5,   // negative subnormal range
+            f32::from_bits(1), // smallest f32 subnormal → 0
+        ];
+        let out = roundtrip(Codec::F16, &cases);
+        assert_eq!(out[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(out[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(out[2], 1.0);
+        assert_eq!(out[3], -1.0);
+        assert_eq!(out[4], 0.5);
+        assert_eq!(out[5], 65504.0);
+        assert_eq!(out[6], 65504.0, "RNE keeps 65505 at max normal");
+        assert_eq!(out[7], f32::INFINITY);
+        assert_eq!(out[8], f32::NEG_INFINITY);
+        for (i, (&src, &dec)) in cases.iter().zip(out.iter()).enumerate().skip(9) {
+            if i == 11 || i == 13 {
+                assert_eq!(dec, 0.0, "underflow must flush to zero");
+            } else {
+                let rel = (dec - src).abs() / src.abs();
+                // subnormal range: absolute error one f16-subnormal ulp
+                assert!(rel < 0.05 || (dec - src).abs() <= 6e-8, "{src} -> {dec}");
+            }
+        }
+        let nan = roundtrip(Codec::F16, &[f32::NAN]);
+        assert!(nan[0].is_nan(), "NaN must survive, not become a number");
+    }
+
+    #[test]
+    fn int8_roundtrip_bounded_by_group_absmax() {
+        prop::check(|rng| {
+            let n = 1 + rng.gen_range(300);
+            let group = 1 + rng.gen_range(40);
+            let codec = Codec::Int8 { group };
+            let src: Vec<f32> = (0..n).map(|_| rng.gen_f32_range(-8.0, 8.0)).collect();
+            let out = roundtrip(codec, &src);
+            for (g, (sg, og)) in src.chunks(group).zip(out.chunks(group)).enumerate() {
+                let absmax = sg.iter().fold(0f32, |m, x| m.max(x.abs()));
+                let step = absmax / 127.0;
+                for (a, b) in og.iter().zip(sg.iter()) {
+                    assert!(
+                        (a - b).abs() <= step * 0.5 + 1e-7,
+                        "group {g}: {b} -> {a} (step {step})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn int8_adversarial_groups_are_nan_free() {
+        // absmax = 0 group, a NaN/inf-contaminated group, and a subnormal
+        // group must all decode to finite values (zeros where calibration
+        // was impossible)
+        let codec = Codec::Int8 { group: 4 };
+        let src = [
+            0.0f32, 0.0, -0.0, 0.0, // absmax = 0 → scale 0 → exact zeros
+            f32::NAN, f32::INFINITY, -1.0, 2.0, // contaminated
+            1e-39, -1e-39, 0.0, 1e-40, // subnormal absmax
+        ];
+        let out = roundtrip(codec, &src);
+        assert!(out.iter().all(|x| !x.is_nan()), "decode must be NaN-free");
+        assert_eq!(&out[..4], &[0.0; 4]);
+        // finite lanes of the contaminated group still quantize against
+        // the finite absmax (2.0); inf saturates to ±absmax
+        assert_eq!(out[4], 0.0, "NaN lane quantizes to 0");
+        assert_eq!(out[5], 2.0, "+inf saturates to +absmax");
+        assert!((out[6] + 1.0).abs() <= 2.0 / 127.0 * 0.5 + 1e-7);
+        assert!((out[7] - 2.0).abs() <= 1e-6);
+        // subnormal group: scale is subnormal but finite; error bounded by
+        // half a step of its absmax
+        for (a, b) in out[8..].iter().zip(src[8..].iter()) {
+            assert!((a - b).abs() <= 1e-39 / 127.0 * 0.5 + 1e-42, "{b} -> {a}");
+        }
+    }
+
+    #[test]
+    fn wire_words_accounting_is_exact() {
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 255, 256, 257, 1000] {
+            let src: Vec<f32> = (0..len).map(|i| i as f32 * 0.25 - 3.0).collect();
+            for codec in [
+                Codec::F32,
+                Codec::F16,
+                Codec::int8(),
+                Codec::Int8 { group: 3 },
+            ] {
+                let mut wire = Vec::new();
+                codec.encode_into(&src, &mut wire);
+                assert_eq!(wire.len(), codec.wire_words(len), "{codec:?} len {len}");
+                assert_eq!(codec.wire_bytes(len), 4 * codec.wire_words(len) as u64);
+            }
+            // F16 halves, Int8 quarters (asymptotically)
+            if len >= 256 {
+                assert!(Codec::F16.wire_bytes(len) < 4 * len as u64 * 6 / 10);
+                assert!(Codec::int8().wire_bytes(len) < 4 * len as u64 * 4 / 10);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_foreign_payloads() {
+        let mut wire = Vec::new();
+        Codec::F16.encode_into(&[1.0, 2.0], &mut wire);
+        let mut out = Vec::new();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Codec::int8().decode_into(&wire, &mut out)
+        }));
+        assert!(err.is_err(), "int8 decode of an f16 payload must panic");
+        let raw = [1.0f32, 2.0, 3.0];
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Codec::F16.decode_into(&raw, &mut out)
+        }));
+        assert!(err.is_err(), "decode of an unencoded payload must panic");
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for c in [Codec::F32, Codec::F16, Codec::int8()] {
+            assert_eq!(Codec::parse(c.label()), Some(c));
+        }
+        assert_eq!(Codec::parse("HALF"), Some(Codec::F16));
+        assert_eq!(Codec::parse("bogus"), None);
+    }
+}

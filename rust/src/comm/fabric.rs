@@ -17,6 +17,7 @@
 //! every peer blocked in [`Endpoint::recv`] wakes up and unwinds instead of
 //! deadlocking on a message that will never arrive.
 
+use super::codec::Codec;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -86,9 +87,16 @@ pub struct Endpoint {
     /// Decaying watermark of recently recycled payload lengths — the
     /// capacity bound for the spare list.
     recent_payload: usize,
-    /// Counters: words sent, messages sent.
+    /// Counters: words sent (as they travel the wire — encoded payloads
+    /// count encoded words), messages sent.
     pub sent_words: u64,
     pub sent_msgs: u64,
+    /// Pre-encoding payload bytes of every send (element count × 4).
+    pub sent_raw_bytes: u64,
+    /// Bytes actually put on the wire (payload words × 4). Equal to
+    /// `sent_raw_bytes` under [`Codec::F32`]; smaller under lossy codecs —
+    /// the ratio is the live compression factor.
+    pub sent_wire_bytes: u64,
 }
 
 impl Endpoint {
@@ -108,8 +116,66 @@ impl Endpoint {
         chunk: u32,
         payload: Vec<f32>,
     ) {
+        let raw = 4 * payload.len() as u64;
+        self.send_wire(to, layer, phase, transfer, chunk, payload, raw);
+    }
+
+    /// Encode `raw` with `codec` and send the wire payload. The raw buffer
+    /// is recycled (it came from [`Endpoint::take_buf`] at the gather
+    /// site); [`Codec::F32`] skips the copy entirely and sends `raw`
+    /// itself — bit-identical to [`Endpoint::send_chunk`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_encoded(
+        &mut self,
+        to: u32,
+        layer: u32,
+        phase: Phase,
+        transfer: u32,
+        chunk: u32,
+        codec: Codec,
+        raw: Vec<f32>,
+    ) {
+        let raw_bytes = 4 * raw.len() as u64;
+        if codec == Codec::F32 {
+            self.send_wire(to, layer, phase, transfer, chunk, raw, raw_bytes);
+            return;
+        }
+        let mut wire = self.take_buf();
+        codec.encode_into(&raw, &mut wire);
+        self.recycle(raw);
+        self.send_wire(to, layer, phase, transfer, chunk, wire, raw_bytes);
+    }
+
+    /// Decode an arrived payload with the codec its sender used. Returns a
+    /// pool buffer holding the f32 values; the wire buffer is recycled.
+    /// [`Codec::F32`] hands the payload back untouched.
+    pub fn decode_payload(&mut self, codec: Codec, wire: Vec<f32>) -> Vec<f32> {
+        if codec == Codec::F32 {
+            return wire;
+        }
+        let mut out = self.take_buf();
+        codec.decode_into(&wire, &mut out);
+        self.recycle(wire);
+        out
+    }
+
+    /// Innermost send: counts the payload as it travels the wire plus the
+    /// raw (pre-encoding) bytes it represents, then pushes to the peer.
+    #[allow(clippy::too_many_arguments)]
+    fn send_wire(
+        &mut self,
+        to: u32,
+        layer: u32,
+        phase: Phase,
+        transfer: u32,
+        chunk: u32,
+        payload: Vec<f32>,
+        raw_bytes: u64,
+    ) {
         self.sent_words += payload.len() as u64;
         self.sent_msgs += 1;
+        self.sent_raw_bytes += raw_bytes;
+        self.sent_wire_bytes += 4 * payload.len() as u64;
         let msg = Msg {
             layer,
             phase,
@@ -335,6 +401,8 @@ pub fn fabric(n: usize) -> Vec<Endpoint> {
             recent_payload: 0,
             sent_words: 0,
             sent_msgs: 0,
+            sent_raw_bytes: 0,
+            sent_wire_bytes: 0,
         })
         .collect()
 }
@@ -638,6 +706,36 @@ mod tests {
             e.recycle(Vec::with_capacity(8));
         }
         assert!(e.spare.len() <= MAX_SPARE_BUFS);
+    }
+
+    #[test]
+    fn encoded_send_recv_roundtrip_and_byte_counters() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let vals: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.03).collect();
+        // F32: bit-identical wire payload, raw == wire bytes
+        e1.send_encoded(0, 0, Phase::Forward, 0, 0, Codec::F32, vals.clone());
+        assert_eq!(e1.sent_wire_bytes, 400);
+        assert_eq!(e1.sent_raw_bytes, 400);
+        let p = e0.recv(1, 0, Phase::Forward, 0);
+        let p = e0.decode_payload(Codec::F32, p);
+        assert_eq!(p, vals);
+        e0.recycle(p);
+        // F16: ~half the wire bytes, raw bytes still count the elements
+        e1.send_encoded(0, 1, Phase::Forward, 0, 0, Codec::F16, vals.clone());
+        assert_eq!(e1.sent_raw_bytes, 800);
+        assert_eq!(e1.sent_wire_bytes, 400 + Codec::F16.wire_bytes(100));
+        assert!(Codec::F16.wire_bytes(100) <= 220, "f16 must ~halve bytes");
+        let p = e0.recv(1, 1, Phase::Forward, 0);
+        assert_eq!(p.len(), Codec::F16.wire_words(100));
+        let p = e0.decode_payload(Codec::F16, p);
+        assert_eq!(p.len(), 100);
+        for (a, b) in p.iter().zip(vals.iter()) {
+            assert!((a - b).abs() <= b.abs() * 5e-4 + 1e-6);
+        }
+        e0.recycle(p);
+        assert!(e0.drained());
     }
 
     #[test]

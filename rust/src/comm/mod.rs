@@ -1,8 +1,11 @@
-//! Communication substrate: the simulated MPI fabric (live threaded runs)
-//! and the α-β network / compute-rate models (replay runs).
+//! Communication substrate: the simulated MPI fabric (live threaded runs),
+//! the wire codecs (f16/int8 compressed payloads), and the α-β network /
+//! compute-rate models (replay runs).
 
+pub mod codec;
 pub mod fabric;
 pub mod netmodel;
 
+pub use codec::Codec;
 pub use fabric::{fabric, Endpoint, Msg, Phase, Want};
 pub use netmodel::{ComputeModel, NetModel};

@@ -51,6 +51,21 @@ impl NetModel {
             + self.overhead * (msgs.max(rmsgs) as f64)
             + self.beta * ((words + rwords) as f64)
     }
+
+    /// [`NetModel::layer_cost`] with **byte** totals instead of f32 word
+    /// counts — the form the wire-codec layer feeds: each payload's
+    /// [`crate::comm::Codec::wire_bytes`] footprint rather than its raw
+    /// element count. `β` is per f32 word, so bytes cost `β/4` each;
+    /// under `Codec::F32` (bytes = 4 × words) this is exactly
+    /// `layer_cost`.
+    pub fn layer_cost_bytes(&self, msgs: u64, bytes: u64, rmsgs: u64, rbytes: u64) -> f64 {
+        if msgs == 0 && rmsgs == 0 {
+            return 0.0;
+        }
+        self.alpha
+            + self.overhead * (msgs.max(rmsgs) as f64)
+            + self.beta / 4.0 * ((bytes + rbytes) as f64)
+    }
 }
 
 /// Calibrated per-element compute rates of this host (seconds).
@@ -188,6 +203,28 @@ mod tests {
         assert!(net.layer_cost(1, 200, 1, 100) > base);
         assert!(net.layer_cost(1, 100, 5, 100) > base);
         assert_eq!(net.layer_cost(0, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn layer_cost_bytes_agrees_with_words_under_f32() {
+        use crate::comm::Codec;
+        let net = NetModel::infiniband();
+        for &(m, w, rm, rw) in &[(1u64, 100u64, 1u64, 100u64), (3, 7, 0, 0), (0, 0, 5, 999)] {
+            let words = net.layer_cost(m, w, rm, rw);
+            let bytes = net.layer_cost_bytes(
+                m,
+                Codec::F32.wire_bytes(w as usize),
+                rm,
+                Codec::F32.wire_bytes(rw as usize),
+            );
+            assert!((words - bytes).abs() < 1e-18, "{words} vs {bytes}");
+        }
+        // f16 payloads cost measurably less wire time at equal word count
+        let wb32 = Codec::F32.wire_bytes(4096);
+        let wb16 = Codec::F16.wire_bytes(4096);
+        let w32 = net.layer_cost_bytes(2, wb32, 2, wb32);
+        let w16 = net.layer_cost_bytes(2, wb16, 2, wb16);
+        assert!(w16 < w32);
     }
 
     #[test]

@@ -45,6 +45,7 @@ impl RankState {
         for k in 0..depth {
             let lp = &plan.layers[k];
             let me = self.rank as usize;
+            let cf = self.codecs[k].0;
             self.timer.time("comm", || {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
@@ -54,13 +55,14 @@ impl RankState {
                         let j = j as usize;
                         payload.extend_from_slice(&cur[j * b..(j + 1) * b]);
                     }
-                    ep.send(t.to, k as u32, Phase::Forward, tid, payload);
+                    ep.send_encoded(t.to, k as u32, Phase::Forward, tid, 0, cf, payload);
                 }
             });
             self.timer.time("wait", || {
                 for &tid in &lp.recv_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.from, k as u32, Phase::Forward, tid);
+                    let payload = ep.decode_payload(cf, payload);
                     for (i, &j) in t.indices.iter().enumerate() {
                         let j = j as usize;
                         cur[j * b..(j + 1) * b].copy_from_slice(&payload[i * b..(i + 1) * b]);
@@ -150,6 +152,7 @@ impl RankState {
         for k in (0..depth).rev() {
             let lp = &plan.layers[k];
             let me = self.rank as usize;
+            let cb = self.codecs[k].1;
             let mut s = vec![0f32; blocks[k].ncols];
             self.timer.time("spmv", || {
                 blocks[k].spmv_t_add(&delta, &mut s);
@@ -159,7 +162,7 @@ impl RankState {
                     let t = &lp.transfers[tid as usize];
                     let mut payload = ep.take_buf();
                     payload.extend(t.indices.iter().map(|&j| s[j as usize]));
-                    ep.send(t.from, k as u32, Phase::Backward, tid, payload);
+                    ep.send_encoded(t.from, k as u32, Phase::Backward, tid, 0, cb, payload);
                 }
             });
             self.timer.time("updt", || {
@@ -172,6 +175,7 @@ impl RankState {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.to, k as u32, Phase::Backward, tid);
+                    let payload = ep.decode_payload(cb, payload);
                     for (i, &j) in t.indices.iter().enumerate() {
                         s[j as usize] += payload[i];
                     }
@@ -212,10 +216,27 @@ pub fn train_distributed_minibatch(
     eta: f32,
     epochs: usize,
 ) -> super::sgd::TrainRun {
-    assert_eq!(inputs.len(), targets.len());
     let structure: Vec<_> = net.layers.clone();
     part.validate(&structure).expect("invalid partition");
     let plan = CommPlan::build(&structure, part);
+    train_minibatch_with_plan(net, part, &plan, inputs, targets, b, eta, epochs)
+}
+
+/// [`train_distributed_minibatch`] over a caller-provided plan — the
+/// codec-aware drivers build the plan once, set per-phase wire codecs on
+/// it, and train through here.
+#[allow(clippy::too_many_arguments)]
+pub fn train_minibatch_with_plan(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    b: usize,
+    eta: f32,
+    epochs: usize,
+) -> super::sgd::TrainRun {
+    assert_eq!(inputs.len(), targets.len());
     let nparts = part.nparts;
     let nbatches = inputs.len() / b;
     let steps = nbatches * epochs;
@@ -236,11 +257,11 @@ pub fn train_distributed_minibatch(
     let ybatches: Vec<Vec<f32>> = (0..nbatches).map(|i| pack(targets, nl, i * b)).collect();
 
     let run = parallel::run_ranks(nparts, |rank, ep| {
-        let mut state = RankState::build(net, part, &plan, rank as u32, ExecMode::Overlap);
+        let mut state = RankState::build(net, part, plan, rank as u32, ExecMode::Overlap);
         let mut losses = Vec::with_capacity(steps);
         for _ in 0..epochs {
             for (x, y) in xbatches.iter().zip(ybatches.iter()) {
-                losses.push(state.train_step_minibatch(ep, &plan, x, y, b, eta));
+                losses.push(state.train_step_minibatch(ep, plan, x, y, b, eta));
             }
         }
         (state, losses)

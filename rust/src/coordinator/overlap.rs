@@ -60,6 +60,7 @@ impl RankState {
         for (k, sl) in layers.iter().enumerate().take(depth) {
             let inw = sl.mat.local_gcols.len();
             let nloc = sl.mat.nrows;
+            let cf = self.codecs[k].0;
             // 1. sends, gathered from the compact activation vector
             {
                 let cur = &scratch.ping[..inw * b];
@@ -71,7 +72,7 @@ impl RankState {
                             let p = p as usize;
                             payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
                         }
-                        ep.send(s.to, k as u32, Phase::Forward, s.tid, payload);
+                        ep.send_encoded(s.to, k as u32, Phase::Forward, s.tid, 0, cf, payload);
                     }
                 });
             }
@@ -101,6 +102,7 @@ impl RankState {
                     if let Some(payload) =
                         ep.try_recv_chunk(src, k as u32, Phase::Forward, tid, chunk)
                     {
+                        let payload = ep.decode_payload(cf, payload);
                         let z = &mut scratch.pong[..nloc * b];
                         let seg = &sl.mat.remote[si].csr;
                         self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, z, b));
@@ -117,6 +119,7 @@ impl RankState {
                         self.timer
                             .time("wait", || ep.recv_any(k as u32, Phase::Forward, wants))
                     };
+                    let payload = ep.decode_payload(cf, payload);
                     let si = scratch.want_seg[i];
                     scratch.wants.swap_remove(i);
                     scratch.want_seg.swap_remove(i);
@@ -175,6 +178,7 @@ impl RankState {
             };
             for (k, sl) in layers.iter().enumerate().take(depth) {
                 let nloc = sl.mat.nrows;
+                let cf = self.codecs[k].0;
                 let mut z = vec![0f32; nloc * b];
                 let fuse_now = sl.mat.remote.is_empty();
                 {
@@ -187,7 +191,7 @@ impl RankState {
                                 let p = p as usize;
                                 payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
                             }
-                            ep.send(s.to, k as u32, Phase::Forward, s.tid, payload);
+                            ep.send_encoded(s.to, k as u32, Phase::Forward, s.tid, 0, cf, payload);
                         }
                     });
                     let bias = &self.biases[k];
@@ -211,6 +215,7 @@ impl RankState {
                         if let Some(payload) =
                             ep.try_recv_chunk(src, k as u32, Phase::Forward, tid, chunk)
                         {
+                            let payload = ep.decode_payload(cf, payload);
                             let seg = &sl.mat.remote[si].csr;
                             self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, &mut z, b));
                             lay_payloads[si] = payload;
@@ -223,6 +228,7 @@ impl RankState {
                         let (i, payload) = self
                             .timer
                             .time("wait", || ep.recv_any(k as u32, Phase::Forward, &wants));
+                        let payload = ep.decode_payload(cf, payload);
                         let si = want_seg[i];
                         wants.swap_remove(i);
                         want_seg.swap_remove(i);
@@ -271,6 +277,7 @@ impl RankState {
         for k in (0..depth).rev() {
             let sl = &mut layers[k];
             let inw = sl.mat.local_gcols.len();
+            let cb = self.codecs[k].1;
             // 1. per-segment partial gradients, sent the moment each is
             // ready (mirror of the forward receives)
             for seg in &sl.mat.remote {
@@ -278,7 +285,15 @@ impl RankState {
                 sseg.resize(seg.csr.ncols, 0.0);
                 self.timer.time("spmv", || seg.csr.spmv_t_add(&delta, &mut sseg));
                 self.timer.time("comm", || {
-                    ep.send_chunk(seg.src, k as u32, Phase::Backward, seg.tid, seg.chunk, sseg)
+                    ep.send_encoded(
+                        seg.src,
+                        k as u32,
+                        Phase::Backward,
+                        seg.tid,
+                        seg.chunk,
+                        cb,
+                        sseg,
+                    )
                 });
             }
             // 2. local transpose over owned slots
@@ -300,6 +315,7 @@ impl RankState {
                 while !wants.is_empty() {
                     let (i, payload) =
                         self.timer.time("wait", || ep.recv_any(k as u32, Phase::Backward, &wants));
+                    let payload = ep.decode_payload(cb, payload);
                     let sj = which[i];
                     wants.swap_remove(i);
                     which.swap_remove(i);

@@ -74,6 +74,10 @@ impl RankState {
             let inw = sl.mat.local_gcols.len();
             let nloc = sl.mat.nrows;
             let nb = pipe.boundary_end;
+            let cf = self.codecs[k].0;
+            // outbound chunks posted during this layer are tagged k+1 and
+            // decoded by the receiver with THAT layer's forward codec
+            let cf_next = self.codecs.get(k + 1).map_or(cf, |c| c.0);
             // 0. layer 0 only: the input vector is available the moment the
             // step starts — post its outbound chunks immediately. Deeper
             // layers' inputs were posted during the previous layer's step.
@@ -87,7 +91,7 @@ impl RankState {
                             let p = p as usize;
                             payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
                         }
-                        ep.send_chunk(s.to, 0, Phase::Forward, s.tid, s.chunk, payload);
+                        ep.send_encoded(s.to, 0, Phase::Forward, s.tid, s.chunk, cf, payload);
                     }
                 });
             }
@@ -137,12 +141,13 @@ impl RankState {
                                 let p = p as usize;
                                 payload.extend_from_slice(&z[p * b..(p + 1) * b]);
                             }
-                            ep.send_chunk(
+                            ep.send_encoded(
                                 s.to,
                                 (k + 1) as u32,
                                 Phase::Forward,
                                 s.tid,
                                 s.chunk,
+                                cf_next,
                                 payload,
                             );
                         }
@@ -160,6 +165,7 @@ impl RankState {
                     if let Some(payload) =
                         ep.try_recv_chunk(src, k as u32, Phase::Forward, tid, chunk)
                     {
+                        let payload = ep.decode_payload(cf, payload);
                         let si = scratch.want_seg[i];
                         scratch.wants.swap_remove(i);
                         scratch.want_seg.swap_remove(i);
@@ -198,6 +204,7 @@ impl RankState {
                     self.timer
                         .time("wait", || ep.recv_any(k as u32, Phase::Forward, wants))
                 };
+                let payload = ep.decode_payload(cf, payload);
                 let si = scratch.want_seg[i];
                 scratch.wants.swap_remove(i);
                 scratch.want_seg.swap_remove(i);
@@ -286,6 +293,8 @@ impl RankState {
                 let pipe = sl.pipe.as_ref().expect("pipelined layer schedule");
                 let nloc = sl.mat.nrows;
                 let nb = pipe.boundary_end;
+                let cf = self.codecs[k].0;
+                let cf_next = self.codecs.get(k + 1).map_or(cf, |c| c.0);
                 let mut z = vec![0f32; nloc * b];
                 if k == 0 {
                     let cur = &acts[0];
@@ -297,7 +306,7 @@ impl RankState {
                                 let p = p as usize;
                                 payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
                             }
-                            ep.send_chunk(s.to, 0, Phase::Forward, s.tid, s.chunk, payload);
+                            ep.send_encoded(s.to, 0, Phase::Forward, s.tid, s.chunk, cf, payload);
                         }
                     });
                 }
@@ -338,12 +347,13 @@ impl RankState {
                                     let p = p as usize;
                                     payload.extend_from_slice(&zr[p * b..(p + 1) * b]);
                                 }
-                                ep.send_chunk(
+                                ep.send_encoded(
                                     s.to,
                                     (k + 1) as u32,
                                     Phase::Forward,
                                     s.tid,
                                     s.chunk,
+                                    cf_next,
                                     payload,
                                 );
                             }
@@ -360,6 +370,7 @@ impl RankState {
                         if let Some(payload) =
                             ep.try_recv_chunk(src, k as u32, Phase::Forward, tid, chunk)
                         {
+                            let payload = ep.decode_payload(cf, payload);
                             let si = want_seg[i];
                             wants.swap_remove(i);
                             want_seg.swap_remove(i);
@@ -398,6 +409,7 @@ impl RankState {
                     let (i, payload) = self
                         .timer
                         .time("wait", || ep.recv_any(k as u32, Phase::Forward, &wants));
+                    let payload = ep.decode_payload(cf, payload);
                     let si = want_seg[i];
                     wants.swap_remove(i);
                     want_seg.swap_remove(i);
@@ -477,6 +489,7 @@ impl RankState {
                 let SplitLayer { mat, pipe, .. } = &mut layers[k];
                 let pipe = pipe.as_ref().expect("pipelined layer schedule");
                 let inw = mat.local_gcols.len();
+                let cb = self.codecs[k].1;
                 // 1. per-chunk partial gradients, sent the moment each is
                 // ready — before the local transpose and the update
                 for seg in &mat.remote {
@@ -484,7 +497,15 @@ impl RankState {
                     sseg.resize(seg.csr.ncols, 0.0);
                     self.timer.time("spmv", || seg.csr.spmv_t_add(&delta, &mut sseg));
                     self.timer.time("comm", || {
-                        ep.send_chunk(seg.src, k as u32, Phase::Backward, seg.tid, seg.chunk, sseg)
+                        ep.send_encoded(
+                            seg.src,
+                            k as u32,
+                            Phase::Backward,
+                            seg.tid,
+                            seg.chunk,
+                            cb,
+                            sseg,
+                        )
                     });
                 }
                 // 2. local transpose over the compact input slots
@@ -520,6 +541,7 @@ impl RankState {
                 &self.input_sends
             };
             if !in_sends.is_empty() {
+                let cb = self.codecs[k].1;
                 let mut wants: Vec<Want> =
                     in_sends.iter().map(|s| (s.to, s.tid, s.chunk)).collect();
                 let mut which: Vec<usize> = (0..in_sends.len()).collect();
@@ -527,6 +549,7 @@ impl RankState {
                     let (i, payload) = self
                         .timer
                         .time("wait", || ep.recv_any(k as u32, Phase::Backward, &wants));
+                    let payload = ep.decode_payload(cb, payload);
                     let sj = which[i];
                     wants.swap_remove(i);
                     which.swap_remove(i);

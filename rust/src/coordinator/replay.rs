@@ -64,13 +64,14 @@ impl ReplayResult {
     }
 }
 
-/// Per-rank comm load in one layer (messages/words, send and recv).
+/// Per-rank comm load in one layer: messages and **wire bytes** (the
+/// codec-encoded footprint of each payload), send and recv.
 #[derive(Debug, Clone, Copy, Default)]
 struct CommLoad {
     smsgs: u64,
-    swords: u64,
+    sbytes: u64,
     rmsgs: u64,
-    rwords: u64,
+    rbytes: u64,
 }
 
 /// Simulate one SGD iteration (or one inference batch if `train=false`).
@@ -85,24 +86,39 @@ pub fn replay(
     let b = cfg.batch as f64;
     let mut res = ReplayResult::default();
 
-    let mut comm_scratch = vec![CommLoad::default(); nparts];
+    let mut fwd_scratch = vec![CommLoad::default(); nparts];
+    let mut bwd_scratch = vec![CommLoad::default(); nparts];
     for (k, lp) in plan.layers.iter().enumerate() {
-        // per-rank comm loads of this layer
-        for c in comm_scratch.iter_mut() {
+        // per-rank comm loads of this layer, in wire bytes under the
+        // layer's codecs — forward and its SpBP mirror (send/recv swap)
+        // separately, because the backward gradients may run a different
+        // codec than the forward activations
+        for c in fwd_scratch.iter_mut() {
+            *c = CommLoad::default();
+        }
+        for c in bwd_scratch.iter_mut() {
             *c = CommLoad::default();
         }
         for t in &lp.transfers {
-            let words = t.indices.len() as u64 * cfg.batch as u64;
-            let f = &mut comm_scratch[t.from as usize];
+            let n = t.indices.len() * cfg.batch;
+            let fb = lp.codec_fwd.wire_bytes(n);
+            let bb = lp.codec_bwd.wire_bytes(n);
+            let f = &mut fwd_scratch[t.from as usize];
             f.smsgs += 1;
-            f.swords += words;
-            let r = &mut comm_scratch[t.to as usize];
+            f.sbytes += fb;
+            let r = &mut fwd_scratch[t.to as usize];
             r.rmsgs += 1;
-            r.rwords += words;
+            r.rbytes += fb;
+            let f = &mut bwd_scratch[t.to as usize];
+            f.smsgs += 1;
+            f.sbytes += bb;
+            let r = &mut bwd_scratch[t.from as usize];
+            r.rmsgs += 1;
+            r.rbytes += bb;
         }
-        let max_comm = comm_scratch
+        let max_comm = fwd_scratch
             .iter()
-            .map(|c| cfg.net.layer_cost(c.smsgs, c.swords, c.rmsgs, c.rwords))
+            .map(|c| cfg.net.layer_cost_bytes(c.smsgs, c.sbytes, c.rmsgs, c.rbytes))
             .fold(0.0, f64::max);
 
         // forward compute: SpMV/SpMM + activation
@@ -125,7 +141,12 @@ pub fn replay(
                 .fold(0.0, f64::max);
             res.spmv += max_bwd;
             res.updt += max_updt;
-            res.comm += max_comm; // SpBP mirrors SpFF exactly
+            // SpBP mirrors SpFF's message sets, under the backward codec
+            let max_comm_bwd = bwd_scratch
+                .iter()
+                .map(|c| cfg.net.layer_cost_bytes(c.smsgs, c.sbytes, c.rmsgs, c.rbytes))
+                .fold(0.0, f64::max);
+            res.comm += max_comm_bwd;
         }
     }
     res
@@ -232,6 +253,32 @@ mod tests {
         let t1 = throughput_edges_per_sec(&s, &p, &plan, comp, 1, 64);
         let t64 = throughput_edges_per_sec(&s, &p, &plan, comp, 64, 64);
         assert!(t64 > t1, "batch 64 {t64} <= batch 1 {t1}");
+    }
+
+    #[test]
+    fn codec_shrinks_predicted_comm_but_not_compute() {
+        use crate::comm::Codec;
+        let s = structure();
+        let p = random_partition(&s, 8, 1);
+        let plan32 = CommPlan::build(&s, &p);
+        let mut plan16 = plan32.clone();
+        plan16.set_codec(Codec::F16, Codec::F16);
+        let mut plan8 = plan32.clone();
+        plan8.set_codec(Codec::int8(), Codec::int8());
+        let c = cfg();
+        let r32 = replay(&s, &p, &plan32, &c);
+        let r16 = replay(&s, &p, &plan16, &c);
+        let r8 = replay(&s, &p, &plan8, &c);
+        assert!(r16.comm < r32.comm, "f16 {} !< f32 {}", r16.comm, r32.comm);
+        assert!(r8.comm < r16.comm, "int8 {} !< f16 {}", r8.comm, r16.comm);
+        assert_eq!(r16.spmv, r32.spmv, "codec must not change compute time");
+        assert_eq!(r16.updt, r32.updt);
+        // mixed phases: a lossy forward with a lossless backward sits
+        // between all-f32 and all-f16
+        let mut mixed = plan32.clone();
+        mixed.set_codec(Codec::F16, Codec::F32);
+        let rm = replay(&s, &p, &mixed, &c);
+        assert!(r16.comm < rm.comm && rm.comm < r32.comm);
     }
 
     #[test]

@@ -28,7 +28,7 @@
 //!   receiving while this rank is still working, instead of after the
 //!   whole layer finishes.
 
-use crate::comm::{Endpoint, Phase, Want};
+use crate::comm::{Codec, Endpoint, Phase, Want};
 use crate::dnn::{Activation, Loss, SparseNet};
 use crate::partition::{CommPlan, DnnPartition};
 use crate::sparse::{regroup_rows, Csr, RowRegroup, SplitCsr};
@@ -154,6 +154,9 @@ pub struct RankState {
     /// Layer-0 outbound chunks (pipelined mode): the input vector is
     /// available the moment the step starts, so these post immediately.
     pub(crate) input_sends: Vec<ChunkSend>,
+    /// Per-layer `(forward, backward)` wire codecs, copied out of the plan
+    /// at build time so the precompiled engines never re-consult it.
+    pub(crate) codecs: Vec<(Codec, Codec)>,
     /// Local bias entries per layer (aligned with `rows`).
     pub biases: Vec<Vec<f32>>,
     pub activation: Activation,
@@ -429,6 +432,11 @@ impl RankState {
                 Repr::Split { layers }
             }
         };
+        let codecs = plan
+            .layers
+            .iter()
+            .map(|l| (l.codec_fwd, l.codec_bwd))
+            .collect();
         Self {
             rank,
             nparts: part.nparts,
@@ -436,6 +444,7 @@ impl RankState {
             rows,
             repr,
             input_sends,
+            codecs,
             biases,
             activation: net.activation,
             loss: net.loss,
@@ -477,13 +486,14 @@ impl RankState {
         for k in 0..depth {
             let lp = &plan.layers[k];
             let me = self.rank as usize;
+            let cf = self.codecs[k].0;
             // non-blocking sends of owned x^{k} entries (Alg. 2 lines 3–5)
             self.timer.time("comm", || {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let mut payload = ep.take_buf();
                     payload.extend(t.indices.iter().map(|&j| xbuf[k][j as usize]));
-                    ep.send(t.to, k as u32, Phase::Forward, tid, payload);
+                    ep.send_encoded(t.to, k as u32, Phase::Forward, tid, 0, cf, payload);
                 }
             });
             // receives (Alg. 2 lines 7–8); blocking mode receives before
@@ -494,6 +504,7 @@ impl RankState {
                 for &tid in &lp.recv_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.from, k as u32, Phase::Forward, tid);
+                    let payload = ep.decode_payload(cf, payload);
                     for (i, &j) in t.indices.iter().enumerate() {
                         xk[j as usize] = payload[i];
                     }
@@ -569,6 +580,7 @@ impl RankState {
         for k in (0..depth).rev() {
             let lp = &plan.layers[k];
             let me = self.rank as usize;
+            let cb = self.codecs[k].1;
             // s = (W^k_m)ᵀ δ^k_m (Alg. 3 line 4)
             let mut s = vec![0f32; blocks[k].ncols];
             self.timer.time("spmv", || {
@@ -581,7 +593,7 @@ impl RankState {
                     let t = &lp.transfers[tid as usize];
                     let mut payload = ep.take_buf();
                     payload.extend(t.indices.iter().map(|&j| s[j as usize]));
-                    ep.send(t.from, k as u32, Phase::Backward, tid, payload);
+                    ep.send_encoded(t.from, k as u32, Phase::Backward, tid, 0, cb, payload);
                 }
             });
             // overlap window: weight + bias update (lines 8–9) uses x^{k-1}
@@ -597,6 +609,7 @@ impl RankState {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.to, k as u32, Phase::Backward, tid);
+                    let payload = ep.decode_payload(cb, payload);
                     for (i, &j) in t.indices.iter().enumerate() {
                         s[j as usize] += payload[i];
                     }
@@ -696,6 +709,7 @@ impl RankState {
         for k in 0..depth {
             let lp = &plan.layers[k];
             let me = self.rank as usize;
+            let cf = self.codecs[k].0;
             let cur = &mut scratch.ping;
             self.timer.time("comm", || {
                 for &tid in &lp.send_of[me] {
@@ -706,13 +720,14 @@ impl RankState {
                         let j = j as usize;
                         payload.extend_from_slice(&cur[j * b..(j + 1) * b]);
                     }
-                    ep.send(t.to, k as u32, Phase::Forward, tid, payload);
+                    ep.send_encoded(t.to, k as u32, Phase::Forward, tid, 0, cf, payload);
                 }
             });
             self.timer.time("wait", || {
                 for &tid in &lp.recv_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.from, k as u32, Phase::Forward, tid);
+                    let payload = ep.decode_payload(cf, payload);
                     for (i, &j) in t.indices.iter().enumerate() {
                         let j = j as usize;
                         cur[j * b..(j + 1) * b].copy_from_slice(&payload[i * b..(i + 1) * b]);

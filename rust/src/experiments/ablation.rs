@@ -12,11 +12,14 @@
 //! fixed vertices buy: inter-layer producer/consumer alignment.
 
 use super::{structure_for, Table};
+use crate::comm::Codec;
+use crate::coordinator::sgd::run_with_plan_mode;
+use crate::coordinator::ExecMode;
 use crate::hypergraph::PartitionConfig;
 use crate::partition::metrics::PartitionMetrics;
 use crate::partition::phases::{build_phase_hypergraph, hypergraph_partition, PhaseConfig};
 use crate::partition::random::random_partition;
-use crate::partition::DnnPartition;
+use crate::partition::{contiguous_partition, CommPlan, DnnPartition};
 
 /// One strategy's metrics.
 #[derive(Debug, Clone)]
@@ -85,6 +88,99 @@ pub fn render(neurons: usize, nparts: usize, rows: &[Row]) -> String {
     t.render()
 }
 
+/// One wire codec's accuracy-vs-volume row: the same digits SGD run under
+/// each codec, reporting the convergence delta the compression costs and
+/// the bytes it saves.
+#[derive(Debug, Clone)]
+pub struct CodecRow {
+    pub codec: Codec,
+    /// Mean loss over the final 10% of steps.
+    pub final_loss: f64,
+    /// Relative delta vs the `Codec::F32` run (0 for the F32 row itself).
+    pub loss_delta: f64,
+    /// Bytes actually shipped over the fabric during the run.
+    pub wire_bytes: u64,
+}
+
+/// Codec ablation: train the digits workload once per codec — same net,
+/// partition, plan, data, and schedule; only the wire format of the
+/// fabric payloads changes — and measure what quantized activations and
+/// gradients cost in SGD convergence vs what they save in bytes.
+pub fn codec_convergence(
+    neurons: usize,
+    layers: usize,
+    ranks: usize,
+    steps: usize,
+    eta: f32,
+    seed: u64,
+) -> Vec<CodecRow> {
+    use crate::radixnet::{generate, RadixNetConfig};
+    let side = (neurons as f64).sqrt() as usize;
+    assert_eq!(side * side, neurons, "digits input needs a square neuron count");
+    let cfg = RadixNetConfig::graph_challenge(neurons, layers)
+        .unwrap_or_else(|| panic!("unsupported neuron count {neurons}"));
+    let net = generate(&cfg);
+    let part = contiguous_partition(&net.layers, ranks);
+    let data = crate::data::synthetic_mnist(side, steps, seed);
+    let inputs: Vec<Vec<f32>> = data.samples.iter().map(|s| s.pixels.clone()).collect();
+    let targets: Vec<Vec<f32>> = (0..steps).map(|i| data.target(i, neurons)).collect();
+
+    let tail = (steps / 10).max(1);
+    let mut rows = Vec::new();
+    let mut f32_loss = 0f64;
+    for codec in [Codec::F32, Codec::F16, Codec::int8()] {
+        let plan = CommPlan::build_with_codec(&net.layers, &part, codec, codec);
+        let run = run_with_plan_mode(
+            &net,
+            &part,
+            &plan,
+            &inputs,
+            &targets,
+            eta,
+            1,
+            ExecMode::Overlap,
+        );
+        let final_loss = run.losses[run.losses.len() - tail..]
+            .iter()
+            .map(|&l| l as f64)
+            .sum::<f64>()
+            / tail as f64;
+        let wire_bytes = 4 * run.sent.iter().map(|&(w, _)| w).sum::<u64>();
+        if codec == Codec::F32 {
+            f32_loss = final_loss;
+        }
+        let loss_delta = if f32_loss > 0.0 {
+            (final_loss - f32_loss) / f32_loss
+        } else {
+            0.0
+        };
+        rows.push(CodecRow {
+            codec,
+            final_loss,
+            loss_delta,
+            wire_bytes,
+        });
+    }
+    rows
+}
+
+pub fn render_codec(neurons: usize, ranks: usize, rows: &[CodecRow]) -> String {
+    let mut t = Table::new(&["N", "P", "codec", "final loss", "Δ vs f32", "wire(KB)", "ratio"]);
+    let raw = rows.first().map_or(0, |r| r.wire_bytes);
+    for r in rows {
+        t.row(vec![
+            neurons.to_string(),
+            ranks.to_string(),
+            r.codec.label().to_string(),
+            format!("{:.5}", r.final_loss),
+            format!("{:+.3}%", r.loss_delta * 100.0),
+            format!("{:.1}", r.wire_bytes as f64 / 1e3),
+            format!("{:.2}x", raw as f64 / r.wire_bytes.max(1) as f64),
+        ]);
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,5 +194,33 @@ mod tests {
         assert!(chained.avg_vol_k <= independent.avg_vol_k);
         assert!(independent.avg_vol_k < random.avg_vol_k);
         assert!(render(256, 8, &rows).contains("chained"));
+    }
+
+    #[test]
+    fn codec_ablation_trades_bytes_for_bounded_loss_delta() {
+        let rows = codec_convergence(256, 3, 4, 30, 0.5, 9);
+        assert_eq!(rows.len(), 3);
+        let (f32r, f16r, i8r) = (&rows[0], &rows[1], &rows[2]);
+        assert_eq!(f32r.loss_delta, 0.0);
+        // compression is real even with per-payload headers on b=1
+        // training payloads: f16 ≤ 65%, int8 ≤ 50% of the raw bytes
+        assert!(
+            f16r.wire_bytes * 100 <= f32r.wire_bytes * 65,
+            "f16 {} vs f32 {}",
+            f16r.wire_bytes,
+            f32r.wire_bytes
+        );
+        assert!(
+            i8r.wire_bytes * 100 <= f32r.wire_bytes * 50,
+            "int8 {} vs f32 {}",
+            i8r.wire_bytes,
+            f32r.wire_bytes
+        );
+        // and the convergence hit is bounded (loose here; the bench section
+        // enforces the 1% f16 parity bar on the full digits run)
+        assert!(f16r.loss_delta.abs() < 0.05, "f16 Δ {}", f16r.loss_delta);
+        assert!(i8r.final_loss.is_finite() && i8r.final_loss > 0.0);
+        let s = render_codec(64, 4, &rows);
+        assert!(s.contains("f16") && s.contains("int8") && s.contains("ratio"));
     }
 }

@@ -82,6 +82,9 @@ pub struct LivePhases {
     pub comm: f64,
     /// Time actually blocked waiting for receives — what overlap hides.
     pub wait: f64,
+    /// Bytes the engine actually put on the wire across the whole run
+    /// (codec-encoded payload footprint, summed over ranks).
+    pub wire_bytes: u64,
 }
 
 impl LivePhases {
@@ -163,6 +166,7 @@ pub fn run_live(
             updt: run.timer.get_secs("updt"),
             comm: run.timer.get_secs("comm"),
             wait: run.timer.get_secs("wait"),
+            wire_bytes: 4 * run.sent.iter().map(|&(words, _)| words).sum::<u64>(),
         }
     };
     LiveOverlapBreakdown {
@@ -177,6 +181,7 @@ pub fn run_live(
 pub fn render_live(b: &LiveOverlapBreakdown) -> String {
     let mut t = Table::new(&[
         "N", "P", "engine", "SpMV(s)", "Updt(s)", "Comm(s)", "Wait(s)", "Total(s)", "Wait%",
+        "Wire(KB)",
     ]);
     for (label, p) in [
         ("blocking", &b.blocking),
@@ -193,6 +198,7 @@ pub fn render_live(b: &LiveOverlapBreakdown) -> String {
             format!("{:.3e}", p.wait),
             format!("{:.3e}", p.total()),
             format!("{:.0}%", b.residual_wait_fraction(p) * 100.0),
+            format!("{:.1}", p.wire_bytes as f64 / 1e3),
         ]);
     }
     format!(
@@ -238,9 +244,14 @@ mod tests {
         assert!(h.is_finite() && h <= 1.0, "hidden fraction {h}");
         let rp = b.residual_wait_fraction(&b.pipelined);
         assert!(rp.is_finite() && rp >= 0.0, "residual fraction {rp}");
+        assert!(
+            b.blocking.wire_bytes > 0 && b.blocking.wire_bytes == b.overlap.wire_bytes,
+            "same plan + F32 codec ⇒ identical bytes on the wire"
+        );
         let s = render_live(&b);
         assert!(s.contains("Wait(s)") && s.contains("overlap") && s.contains("blocking"));
         assert!(s.contains("pipelined") && s.contains("residual wait"));
         assert!(s.contains("comm-wait hidden by overlap"));
+        assert!(s.contains("Wire(KB)"));
     }
 }

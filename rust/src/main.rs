@@ -7,20 +7,25 @@
 //! spdnn throughput [--neurons 1024,4096] [--layers 24] [--ranks 128] [--batch 64] [--full]
 //! spdnn ptimes     [--neurons 1024] [--parts 32,64,128] [--layers 24] [--full]
 //! spdnn ablate     [--neurons 1024] [--parts 8,32] [--layers 24]
-//! spdnn train      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 100] [--eta 0.01] [--batch 1]
-//! spdnn infer      [--neurons 1024] [--layers 12] [--ranks 4] [--batch 64] [--method h|r]
+//! spdnn train      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 100] [--eta 0.01] [--batch 1] [--codec f32|f16|int8]
+//! spdnn infer      [--neurons 1024] [--layers 12] [--ranks 4] [--batch 64] [--method h|r] [--codec f32|f16|int8]
+//! spdnn codec      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 200] [--eta 0.1]
 //! spdnn partition  [--neurons 1024] [--layers 12] [--ranks 8]
 //! spdnn calibrate
 //! ```
 //!
-//! `--full` switches to the paper's full grid (slow on one core).
+//! `--full` switches to the paper's full grid (slow on one core). The
+//! wire codec also reads the `SPDNN_CODEC` env var when `--codec` is
+//! absent.
 
 use spdnn::comm::netmodel::ComputeModel;
-use spdnn::coordinator::minibatch::train_distributed_minibatch;
-use spdnn::coordinator::sgd::{infer_distributed, train_distributed};
+use spdnn::comm::Codec;
+use spdnn::coordinator::minibatch::train_minibatch_with_plan;
+use spdnn::coordinator::sgd::{infer_with_plan, run_with_plan};
 use spdnn::data::synthetic_mnist;
 use spdnn::experiments::{self, ablation, fig4_scaling, fig5_breakdown, table1, table2, table3, Method};
 use spdnn::partition::metrics::PartitionMetrics;
+use spdnn::partition::CommPlan;
 use spdnn::radixnet::{generate, RadixNetConfig};
 use spdnn::util::Args;
 
@@ -39,6 +44,7 @@ fn main() {
         "throughput" => cmd_throughput(&args),
         "ptimes" => cmd_ptimes(&args),
         "ablate" => cmd_ablate(&args),
+        "codec" => cmd_codec(&args),
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
         "partition" => cmd_partition(&args),
@@ -49,7 +55,7 @@ fn main() {
 
 fn help() {
     println!("spdnn — Partitioning Sparse DNNs (ICS'21) reproduction");
-    println!("experiments: table1 | scaling | breakdown | throughput | ptimes | ablate");
+    println!("experiments: table1 | scaling | breakdown | throughput | ptimes | ablate | codec");
     println!("workloads:   train | infer | partition | calibrate");
     println!("see `rust/src/main.rs` header or README.md for flags");
 }
@@ -164,6 +170,32 @@ fn cmd_ptimes(args: &Args) {
     }
 }
 
+/// The wire codec: `--codec f32|f16|int8`, falling back to the
+/// `SPDNN_CODEC` env var, defaulting to lossless f32.
+fn codec_of(args: &Args) -> Codec {
+    let spec = args
+        .get("codec")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("SPDNN_CODEC").ok())
+        .unwrap_or_else(|| "f32".to_string());
+    Codec::parse(&spec)
+        .unwrap_or_else(|| panic!("unknown codec '{spec}' (expected f32 | f16 | int8)"))
+}
+
+fn cmd_codec(args: &Args) {
+    let n = args.get_usize("neurons", 1024);
+    let layers = args.get_usize("layers", 12);
+    let ranks = args.get_usize("ranks", 4);
+    let steps = args.get_usize("steps", 200);
+    let eta = args.get_f32("eta", 0.1);
+    println!(
+        "# Codec ablation — digits SGD convergence vs bytes-on-wire \
+         (N={n} L={layers} P={ranks}, {steps} steps)"
+    );
+    let rows = ablation::codec_convergence(n, layers, ranks, steps, eta, args.get_u64("seed", 7));
+    println!("{}", ablation::render_codec(n, ranks, &rows));
+}
+
 fn cmd_ablate(args: &Args) {
     let ns = neurons_list(args, &[1024, 4096], &[1024]);
     let ps = parts_list(args, &[8, 32, 128], &[8, 32]);
@@ -208,11 +240,13 @@ fn cmd_train(args: &Args) {
     let inputs: Vec<Vec<f32>> = data.samples.iter().map(|s| s.pixels.clone()).collect();
     let targets: Vec<Vec<f32>> = (0..steps).map(|i| data.target(i, n)).collect();
     let batch = args.get_usize("batch", 1);
+    let codec = codec_of(args);
+    let plan = CommPlan::build_with_codec(&structure, &part, codec, codec);
     let run = if batch > 1 {
         // §5.1 minibatch SpMM variant
-        train_distributed_minibatch(&net, &part, &inputs, &targets, batch, eta, 1)
+        train_minibatch_with_plan(&net, &part, &plan, &inputs, &targets, batch, eta, 1)
     } else {
-        train_distributed(&net, &part, &inputs, &targets, eta, 1)
+        run_with_plan(&net, &part, &plan, &inputs, &targets, eta, 1)
     };
     for (i, l) in run.losses.iter().enumerate() {
         if i % 10 == 0 || i + 1 == run.losses.len() {
@@ -220,6 +254,11 @@ fn cmd_train(args: &Args) {
         }
     }
     println!("per-rank sent (words, msgs): {:?}", run.sent);
+    println!(
+        "codec {}: {:.1} KB on the wire",
+        codec.label(),
+        run.sent.iter().map(|&(w, _)| w).sum::<u64>() as f64 * 4.0 / 1e3
+    );
 }
 
 fn cmd_infer(args: &Args) {
@@ -230,10 +269,12 @@ fn cmd_infer(args: &Args) {
     let side = (n as f64).sqrt() as usize;
     let net = generate(&RadixNetConfig::graph_challenge(n, layers).expect("size"));
     let part = experiments::partition_with(&net.layers, Method::Hypergraph, ranks, 1);
+    let codec = codec_of(args);
+    let plan = CommPlan::build_with_codec(&net.layers, &part, codec, codec);
     let data = synthetic_mnist(side, b, 11);
     let (x0, b) = data.pack_batch(0, b);
     let sw = spdnn::util::Stopwatch::start();
-    let (out, sent) = infer_distributed(&net, &part, &x0, b);
+    let (out, sent) = infer_with_plan(&net, &part, &plan, &x0, b);
     let secs = sw.elapsed_secs();
     let edges = net.total_nnz() as f64 * b as f64;
     println!(
@@ -243,6 +284,12 @@ fn cmd_infer(args: &Args) {
         out.len()
     );
     println!("per-rank (words, msgs): {sent:?}");
+    println!(
+        "codec {}: {:.1} KB on the wire (plan predicts {:.1} KB)",
+        codec.label(),
+        sent.iter().map(|&(w, _)| w).sum::<u64>() as f64 * 4.0 / 1e3,
+        plan.fwd_wire_bytes(b, 0) as f64 / 1e3
+    );
 }
 
 fn cmd_partition(args: &Args) {

@@ -8,6 +8,7 @@
 //! partition and are never touched on the hot path (Section 6.4).
 
 use super::DnnPartition;
+use crate::comm::{Codec, Phase};
 use crate::sparse::Csr;
 
 /// One directed transfer: `indices` of the activation vector x^{k-1}
@@ -48,6 +49,12 @@ pub struct LayerPlan {
     pub send_of: Vec<Vec<u32>>,
     /// Indices into `transfers` of messages received by each rank (SpFF).
     pub recv_of: Vec<Vec<u32>>,
+    /// Wire codec for this layer's forward activation payloads.
+    pub codec_fwd: Codec,
+    /// Wire codec for this layer's backward partial-gradient payloads —
+    /// carried separately because gradients often need more precision
+    /// than activations (quantize forward harder than backward).
+    pub codec_bwd: Codec,
 }
 
 impl LayerPlan {
@@ -57,6 +64,35 @@ impl LayerPlan {
 
     pub fn message_count(&self) -> u64 {
         self.transfers.len() as u64
+    }
+
+    /// The wire codec of one communication phase.
+    pub fn codec(&self, phase: Phase) -> Codec {
+        match phase {
+            Phase::Forward => self.codec_fwd,
+            Phase::Backward => self.codec_bwd,
+        }
+    }
+
+    /// Messages this layer ships when every transfer is posted as chunked
+    /// sub-transfers of at most `chunk_acts` activation entries (0 =
+    /// unchunked). The pipelined engine's expected message count.
+    pub fn message_count_chunked(&self, chunk_acts: usize) -> u64 {
+        self.transfers
+            .iter()
+            .map(|t| t.chunks(chunk_acts).count() as u64)
+            .sum()
+    }
+
+    /// Exact forward bytes-on-wire of this layer for a batch of `b`
+    /// columns, under its codec and chunk schedule: each sub-transfer
+    /// chunk pays its own header.
+    pub fn fwd_wire_bytes(&self, b: usize, chunk_acts: usize) -> u64 {
+        self.transfers
+            .iter()
+            .flat_map(|t| t.chunks(chunk_acts))
+            .map(|(_, idx)| self.codec_fwd.wire_bytes(idx.len() * b))
+            .sum()
     }
 
     /// Inbound transfers of `rank` in receive order, as
@@ -167,6 +203,8 @@ impl CommPlan {
                 transfers: Vec::with_capacity(pairs.len()),
                 send_of: vec![Vec::new(); nparts],
                 recv_of: vec![Vec::new(); nparts],
+                codec_fwd: Codec::F32,
+                codec_bwd: Codec::F32,
             };
             for ((from, to), indices) in pairs {
                 let id = plan.transfers.len() as u32;
@@ -179,9 +217,38 @@ impl CommPlan {
         CommPlan { nparts, layers }
     }
 
+    /// Build the plan and set one wire codec pair on every layer.
+    pub fn build_with_codec(
+        structure: &[Csr],
+        part: &DnnPartition,
+        fwd: Codec,
+        bwd: Codec,
+    ) -> CommPlan {
+        let mut plan = Self::build(structure, part);
+        plan.set_codec(fwd, bwd);
+        plan
+    }
+
+    /// Set the forward/backward wire codecs on every layer. Layers can
+    /// also be tuned individually through `layers[k].codec_*`.
+    pub fn set_codec(&mut self, fwd: Codec, bwd: Codec) {
+        for l in &mut self.layers {
+            l.codec_fwd = fwd;
+            l.codec_bwd = bwd;
+        }
+    }
+
     /// Total one-way (SpFF) volume in words for one input vector.
     pub fn fwd_volume(&self) -> u64 {
         self.layers.iter().map(|l| l.volume()).sum()
+    }
+
+    /// Exact forward bytes-on-wire for one batch of `b` columns under the
+    /// per-layer codecs and the chunk schedule (`chunk_acts` = 0 for the
+    /// whole-transfer engines) — the number the live
+    /// [`crate::comm::Endpoint::sent_wire_bytes`] counters reproduce.
+    pub fn fwd_wire_bytes(&self, b: usize, chunk_acts: usize) -> u64 {
+        self.layers.iter().map(|l| l.fwd_wire_bytes(b, chunk_acts)).sum()
     }
 
     /// Total one-way (SpFF) message count for one input vector.
@@ -229,6 +296,32 @@ impl CommPlan {
         for l in &self.layers {
             for t in &l.transfers {
                 v[t.to as usize] += 1;
+            }
+        }
+        v
+    }
+
+    /// Per-rank SpFF message counts **under the chunked sub-transfer
+    /// schedule**: every transfer ships `ceil(len / chunk_acts)` messages
+    /// (1 when `chunk_acts` = 0). The pipelined engine's live counters
+    /// cross-check against these instead of the whole-transfer counts.
+    pub fn fwd_send_msgs_per_rank_chunked(&self, chunk_acts: usize) -> Vec<u64> {
+        let mut v = vec![0u64; self.nparts];
+        for l in &self.layers {
+            for t in &l.transfers {
+                v[t.from as usize] += t.chunks(chunk_acts).count() as u64;
+            }
+        }
+        v
+    }
+
+    /// Chunked mirror of [`CommPlan::fwd_recv_msgs_per_rank`] (== the
+    /// pipelined engine's per-rank SpBP send counts).
+    pub fn fwd_recv_msgs_per_rank_chunked(&self, chunk_acts: usize) -> Vec<u64> {
+        let mut v = vec![0u64; self.nparts];
+        for l in &self.layers {
+            for t in &l.transfers {
+                v[t.to as usize] += t.chunks(chunk_acts).count() as u64;
             }
         }
         v

@@ -9,7 +9,7 @@
 //! fused batch fails with the root-cause [`RankFailure`], and the poisoned
 //! generation is torn down and respawned — the pool stays serviceable.
 
-use crate::comm::{fabric, Endpoint};
+use crate::comm::{fabric, Codec, Endpoint};
 use crate::coordinator::sgd::assemble_outputs;
 use crate::coordinator::{ExecMode, RankScratch, RankState};
 use crate::dnn::SparseNet;
@@ -41,10 +41,16 @@ pub struct PoolConfig {
     /// inter-arrival gap exceeds `max_wait` (sparse traffic cannot fill a
     /// batch, so holding one open only adds latency).
     pub adaptive: bool,
-    /// Which per-rank engine the pool threads run: the overlapped
-    /// split-CSR path (default), the send-side pipelined schedule
-    /// (`ExecMode::pipelined()`), or the blocking baseline.
+    /// Which per-rank engine the pool threads run: the send-side pipelined
+    /// schedule (default, now that its bar has CI history), the overlapped
+    /// split-CSR path, or the blocking baseline.
     pub mode: ExecMode,
+    /// Wire codec for the fabric payloads between pool ranks (forward
+    /// activations only — serving never runs a backward phase).
+    /// [`Codec::F32`] is bit-exact; [`Codec::F16`]/[`Codec::Int8`] trade
+    /// bounded activation error for 2–4× fewer bytes on the wire (the
+    /// stats report the live compression ratio).
+    pub codec: Codec,
 }
 
 impl Default for PoolConfig {
@@ -54,7 +60,8 @@ impl Default for PoolConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             adaptive: true,
-            mode: ExecMode::Overlap,
+            mode: ExecMode::pipelined(),
+            codec: Codec::F32,
         }
     }
 }
@@ -76,9 +83,18 @@ enum RankCmd {
 /// Owned output rows of one rank for one job: (global row, `[b]` values).
 type RankRows = Vec<(u32, Vec<f32>)>;
 
+/// One rank's successful job result: owned output rows plus the raw/wire
+/// payload bytes this job moved through the rank's endpoint (the deltas
+/// of [`Endpoint::sent_raw_bytes`] / [`Endpoint::sent_wire_bytes`]).
+struct RankOut {
+    rows: RankRows,
+    raw_bytes: u64,
+    wire_bytes: u64,
+}
+
 /// Reply of one rank for one job (or the panic/leak message that killed
 /// it).
-type RankReply = (usize, Result<RankRows, String>);
+type RankReply = (usize, Result<RankOut, String>);
 
 /// One set of live rank threads over one fabric. Discarded and respawned
 /// whenever a request poisons the fabric.
@@ -140,13 +156,18 @@ fn rank_loop(
 ) {
     let mut state = RankState::build(net, &sp.part, &sp.plan, rank as u32, mode);
     let mut scratch = RankScratch::new();
+    let (mut prev_raw, mut prev_wire) = (0u64, 0u64);
     loop {
         let job = match cmds.recv() {
             Ok(RankCmd::Run(job)) => job,
             Ok(RankCmd::Shutdown) | Err(_) => {
                 // Final drain check: a clean generation leaves no messages.
                 let reply = if ep.drained() {
-                    Ok(Vec::new())
+                    Ok(RankOut {
+                        rows: Vec::new(),
+                        raw_bytes: 0,
+                        wire_bytes: 0,
+                    })
                 } else {
                     Err("unconsumed messages left in stash at shutdown".to_string())
                 };
@@ -163,7 +184,13 @@ fn rank_loop(
         match out {
             Ok(rows) => {
                 if ep.drained() {
-                    if res.send((rank, Ok(rows))).is_err() {
+                    let out = RankOut {
+                        rows,
+                        raw_bytes: ep.sent_raw_bytes - prev_raw,
+                        wire_bytes: ep.sent_wire_bytes - prev_wire,
+                    };
+                    (prev_raw, prev_wire) = (ep.sent_raw_bytes, ep.sent_wire_bytes);
+                    if res.send((rank, Ok(out))).is_err() {
                         return; // pool dropped mid-flight
                     }
                 } else {
@@ -230,9 +257,21 @@ impl RankPool {
     /// Spawn the pool over a caller-chosen partition/plan bundle (e.g. a
     /// hypergraph partition). `cfg.nranks` is ignored in favour of the
     /// plan's rank count.
-    pub fn start_with_plan(net: SparseNet, sp: ServingPlan, cfg: PoolConfig) -> Self {
+    pub fn start_with_plan(net: SparseNet, mut sp: ServingPlan, cfg: PoolConfig) -> Self {
         assert!(sp.nranks() > 0, "pool needs at least one rank");
         assert!(cfg.max_batch > 0, "max_batch must be positive");
+        // Apply the config codec (both phases — serving is forward-only,
+        // set for consistency), EXCEPT when the config carries the F32
+        // default and the caller already tuned codecs on the plan: a
+        // default config must not silently clobber per-layer choices.
+        let plan_tuned = sp
+            .plan
+            .layers
+            .iter()
+            .any(|l| l.codec_fwd != Codec::F32 || l.codec_bwd != Codec::F32);
+        if cfg.codec != Codec::F32 || !plan_tuned {
+            sp.plan.set_codec(cfg.codec, cfg.codec);
+        }
         let input_dim = net.input_dim();
         let output_dim = net.output_dim();
         let edges_per_col = net.total_nnz() as f64;
@@ -383,7 +422,7 @@ fn scheduler_loop(
         let total_cols: usize = batch.iter().map(|p| p.b).sum();
         let sw = Instant::now();
         match dispatch(&gen, &batch) {
-            Ok(rank_rows) => {
+            Ok((rank_rows, raw_bytes, wire_bytes)) => {
                 let service_secs = sw.elapsed().as_secs_f64();
                 let out = assemble_outputs(output_dim, total_cols, &rank_rows);
                 let done = Instant::now();
@@ -398,6 +437,7 @@ fn scheduler_loop(
                     edges_per_col * total_cols as f64,
                     service_secs,
                 );
+                stats.record_wire(raw_bytes, wire_bytes);
                 // de-interleave the fused columns back per request
                 let mut off = 0usize;
                 for p in &batch {
@@ -519,10 +559,14 @@ fn collect_batch(
 }
 
 /// Broadcast one fused job to every rank and collect their owned output
-/// rows in rank order. Any rank error fails the whole job with the most
+/// rows in rank order, plus the job's raw/wire payload byte totals over
+/// all ranks. Any rank error fails the whole job with the most
 /// informative failure — root causes preferred over secondary unwinds,
 /// exactly like the one-shot engine's triage.
-fn dispatch(gen: &Generation, batch: &[Pending]) -> Result<Vec<RankRows>, RankFailure> {
+fn dispatch(
+    gen: &Generation,
+    batch: &[Pending],
+) -> Result<(Vec<RankRows>, u64, u64), RankFailure> {
     let nranks = gen.cmd_tx.len();
     let total_cols: usize = batch.iter().map(|p| p.b).sum();
     let n0 = batch[0].x0.len() / batch[0].b;
@@ -551,10 +595,15 @@ fn dispatch(gen: &Generation, batch: &[Pending]) -> Result<Vec<RankRows>, RankFa
         }
     }
     let mut outputs: Vec<Option<RankRows>> = (0..nranks).map(|_| None).collect();
+    let (mut raw_bytes, mut wire_bytes) = (0u64, 0u64);
     let mut failure: Option<RankFailure> = None;
     for _ in 0..nranks {
         match gen.res_rx.recv() {
-            Ok((rank, Ok(rows))) => outputs[rank] = Some(rows),
+            Ok((rank, Ok(out))) => {
+                raw_bytes += out.raw_bytes;
+                wire_bytes += out.wire_bytes;
+                outputs[rank] = Some(out.rows);
+            }
             Ok((rank, Err(message))) => {
                 let candidate = RankFailure { rank, message };
                 let better = match &failure {
@@ -575,10 +624,14 @@ fn dispatch(gen: &Generation, batch: &[Pending]) -> Result<Vec<RankRows>, RankFa
     }
     match failure {
         Some(f) => Err(f),
-        None => Ok(outputs
-            .into_iter()
-            .map(|o| o.expect("every rank reported"))
-            .collect()),
+        None => Ok((
+            outputs
+                .into_iter()
+                .map(|o| o.expect("every rank reported"))
+                .collect(),
+            raw_bytes,
+            wire_bytes,
+        )),
     }
 }
 
@@ -610,6 +663,7 @@ mod tests {
                 max_wait: Duration::from_micros(200),
                 adaptive: true,
                 mode: ExecMode::Overlap,
+                codec: Codec::F32,
             },
         );
         let mut rng = Rng::new(11);
@@ -660,6 +714,7 @@ mod tests {
                 max_wait: Duration::ZERO,
                 adaptive: false,
                 mode: ExecMode::Blocking,
+                codec: Codec::F32,
             },
         );
         let mut rng = Rng::new(19);

@@ -90,6 +90,10 @@ struct StatsInner {
     columns: u64,
     edges: f64,
     busy_secs: f64,
+    /// Pre-encoding payload bytes moved between ranks (activation words × 4).
+    raw_bytes: u64,
+    /// Bytes actually shipped over the fabric after the wire codec ran.
+    wire_bytes: u64,
     latency: LatencyHistogram,
 }
 
@@ -145,6 +149,15 @@ impl ServingStats {
         self.inner.lock().unwrap().shed_requests += requests as u64;
     }
 
+    /// Payload bytes one fused batch moved between ranks: raw
+    /// (pre-encoding) vs. actually on the wire — their ratio is the live
+    /// codec compression factor.
+    pub(crate) fn record_wire(&self, raw_bytes: u64, wire_bytes: u64) {
+        let mut s = self.inner.lock().unwrap();
+        s.raw_bytes += raw_bytes;
+        s.wire_bytes += wire_bytes;
+    }
+
     pub fn snapshot(&self) -> StatsSnapshot {
         let s = self.inner.lock().unwrap();
         let wall = self.started.elapsed().as_secs_f64();
@@ -166,6 +179,8 @@ impl ServingStats {
             } else {
                 0.0
             },
+            raw_bytes: s.raw_bytes,
+            wire_bytes: s.wire_bytes,
             p50_secs: s.latency.quantile(0.50),
             p95_secs: s.latency.quantile(0.95),
             p99_secs: s.latency.quantile(0.99),
@@ -199,6 +214,12 @@ pub struct StatsSnapshot {
     pub edges_per_sec: f64,
     /// Edges/s over time the ranks were actually serving a batch.
     pub edges_per_sec_busy: f64,
+    /// Pre-encoding payload bytes moved between ranks over the pool's
+    /// lifetime (what an uncompressed fabric would have shipped).
+    pub raw_bytes: u64,
+    /// Bytes actually shipped after the wire codec — equal to `raw_bytes`
+    /// under `Codec::F32`.
+    pub wire_bytes: u64,
     pub p50_secs: f64,
     pub p95_secs: f64,
     pub p99_secs: f64,
@@ -207,12 +228,23 @@ pub struct StatsSnapshot {
 }
 
 impl StatsSnapshot {
+    /// Live compression factor: raw payload bytes per byte actually on
+    /// the wire. 1.0 under `Codec::F32` (and when nothing moved yet).
+    pub fn wire_compression(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.wire_bytes as f64
+        }
+    }
+
     /// Human summary for example/bench output.
     pub fn render(&self) -> String {
         format!(
             "{} requests in {} batches (mean {:.1} cols/batch), {:.2e} edges/s wall \
              ({:.2e} busy), latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms \
-             (mean {:.2} ms), {} failed, {} shed, {} rebuilds",
+             (mean {:.2} ms), wire {} B of {} B raw ({:.2}x), \
+             {} failed, {} shed, {} rebuilds",
             self.requests,
             self.batches,
             self.mean_batch,
@@ -222,6 +254,9 @@ impl StatsSnapshot {
             self.p95_secs * 1e3,
             self.p99_secs * 1e3,
             self.mean_latency_secs * 1e3,
+            self.wire_bytes,
+            self.raw_bytes,
+            self.wire_compression(),
             self.failed_requests,
             self.shed_requests,
             self.pool_rebuilds,
@@ -235,7 +270,9 @@ impl StatsSnapshot {
             "{{\"requests\":{},\"failed_requests\":{},\"shed_requests\":{},\
              \"batches\":{},\"pool_rebuilds\":{},\
              \"columns\":{},\"mean_batch\":{:.3},\"edges_per_sec\":{:.1},\
-             \"edges_per_sec_busy\":{:.1},\"p50_ms\":{:.4},\"p95_ms\":{:.4},\
+             \"edges_per_sec_busy\":{:.1},\
+             \"raw_bytes\":{},\"wire_bytes\":{},\"wire_compression\":{:.4},\
+             \"p50_ms\":{:.4},\"p95_ms\":{:.4},\
              \"p99_ms\":{:.4},\"mean_latency_ms\":{:.4},\"wall_secs\":{:.4}}}",
             self.requests,
             self.failed_requests,
@@ -246,6 +283,9 @@ impl StatsSnapshot {
             self.mean_batch,
             self.edges_per_sec,
             self.edges_per_sec_busy,
+            self.raw_bytes,
+            self.wire_bytes,
+            self.wire_compression(),
             self.p50_secs * 1e3,
             self.p95_secs * 1e3,
             self.p99_secs * 1e3,
@@ -308,7 +348,14 @@ mod tests {
         stats.record_latency(0.008);
         stats.record_failure(2);
         stats.record_shed(3);
+        stats.record_wire(4000, 1000);
+        stats.record_wire(4000, 3000);
         let s = stats.snapshot();
+        assert_eq!(s.raw_bytes, 8000);
+        assert_eq!(s.wire_bytes, 4000);
+        assert!((s.wire_compression() - 2.0).abs() < 1e-9);
+        assert!(s.to_json().contains("\"wire_compression\":2.0000"));
+        assert!(s.render().contains("(2.00x)"));
         assert_eq!(s.requests, 4);
         assert_eq!(s.failed_requests, 2);
         assert_eq!(s.shed_requests, 3);

@@ -1,0 +1,303 @@
+//! Integration: the wire-codec subsystem across every engine.
+//!
+//! - `Codec::F32` is a true passthrough: all four engines (serial,
+//!   blocking, overlap, pipelined) agree to 1e-5 across 1–8 ranks, and
+//!   the live word counters still equal the plan volumes exactly (zero
+//!   wire overhead).
+//! - `Codec::F16` / `Codec::Int8` keep every engine within the codec's
+//!   bounded error of the serial oracle while measurably shrinking the
+//!   bytes on the wire.
+//! - f16 digits SGD converges on par with f32 (the accuracy half of the
+//!   compression trade).
+//! - The pipelined engine's live message counters match the plan's
+//!   **chunk-aware** expected counts — the cross-check that gates the
+//!   pool's pipelined-by-default flip.
+
+use spdnn::comm::Codec;
+use spdnn::coordinator::sgd::{infer_with_plan_mode, run_with_plan_mode};
+use spdnn::coordinator::ExecMode;
+use spdnn::dnn::inference::infer_batch;
+use spdnn::dnn::{Activation, SparseNet};
+use spdnn::partition::plan::CommPlan;
+use spdnn::partition::random::random_partition;
+use spdnn::serving::{PoolConfig, RankPool};
+use spdnn::sparse::Coo;
+use spdnn::util::{prop, Rng};
+use std::time::Duration;
+
+/// Random sparse net with every neuron connected (so values flow).
+fn random_net(rng: &mut Rng, n: usize, layers: usize, p: f64) -> SparseNet {
+    let mut ws = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let mut any = false;
+            for c in 0..n {
+                if rng.gen_bool(p) {
+                    coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+                    any = true;
+                }
+            }
+            if !any {
+                coo.push(r, rng.gen_range(n), rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+        ws.push(coo.to_csr());
+    }
+    SparseNet::new(ws, Activation::Sigmoid)
+}
+
+/// THE acceptance property: with the codec explicitly pinned to F32 the
+/// wire is bit-identical to the pre-codec fabric — serial ≡ blocking ≡
+/// overlap ≡ pipelined to 1e-5 across 1–8 ranks, and the live word
+/// counters still equal the plan volumes exactly (no headers, no
+/// reshaping).
+#[test]
+fn f32_codec_is_passthrough_in_every_engine() {
+    prop::check_seeded(0xC0DE, 10, |rng| {
+        let n = 8 + rng.gen_range(16);
+        let layers = 2 + rng.gen_range(3);
+        let nparts = 1 + rng.gen_range(8);
+        let b = 1 + rng.gen_range(6);
+        let chunk_acts = 1 + rng.gen_range(4);
+        let net = random_net(rng, n, layers, 0.2);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let mut plan = CommPlan::build(&net.layers, &part);
+        plan.set_codec(Codec::F32, Codec::F32);
+        let x0: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+
+        let serial = infer_batch(&net, &x0, b);
+        for mode in [
+            ExecMode::Blocking,
+            ExecMode::Overlap,
+            ExecMode::Pipelined { chunk_acts },
+        ] {
+            let (out, sent) = infer_with_plan_mode(&net, &part, &plan, &x0, b, mode);
+            for (i, (o, s)) in out.iter().zip(serial.iter()).enumerate() {
+                assert!(
+                    (o - s).abs() < 1e-5,
+                    "P={nparts} b={b} {mode:?} entry {i}: {o} vs serial {s}"
+                );
+            }
+            // zero wire overhead: words sent == plan forward volume × b
+            let fwd = plan.fwd_send_volume_per_rank();
+            for (r, &(words, _)) in sent.iter().enumerate() {
+                assert_eq!(
+                    words,
+                    fwd[r] * b as u64,
+                    "P={nparts} {mode:?} rank {r}: F32 codec must add no wire words"
+                );
+            }
+        }
+    });
+}
+
+/// Lossy codecs keep every engine within a bounded distance of the serial
+/// oracle — forward paths only, all three engines, chunked and unchunked.
+#[test]
+fn lossy_codecs_bound_inference_error_in_every_engine() {
+    prop::check_seeded(0xF16, 8, |rng| {
+        let n = 8 + rng.gen_range(16);
+        let layers = 2 + rng.gen_range(2);
+        let nparts = 2 + rng.gen_range(6);
+        let b = 1 + rng.gen_range(5);
+        let chunk_acts = 1 + rng.gen_range(4);
+        let net = random_net(rng, n, layers, 0.25);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let x0: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+        let serial = infer_batch(&net, &x0, b);
+
+        // sigmoid keeps activations in [0,1]; with ≤ 4 layers the f16
+        // per-hop error (≤ 2^-11 rel) stays far below 1e-2, and the int8
+        // per-hop error (≤ absmax/254) below ~2e-1
+        for (codec, tol) in [(Codec::F16, 1e-2f32), (Codec::int8(), 0.2)] {
+            let plan = CommPlan::build_with_codec(&net.layers, &part, codec, codec);
+            for mode in [
+                ExecMode::Blocking,
+                ExecMode::Overlap,
+                ExecMode::Pipelined { chunk_acts },
+            ] {
+                let (out, _) = infer_with_plan_mode(&net, &part, &plan, &x0, b, mode);
+                for (i, (o, s)) in out.iter().zip(serial.iter()).enumerate() {
+                    assert!(
+                        (o - s).abs() < tol,
+                        "{codec:?} {mode:?} P={nparts} b={b} entry {i}: {o} vs {s}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// f16 payloads ship measurably fewer words than f32 on the same plan
+/// once transfers are wide enough to amortize the 2-word headers.
+#[test]
+fn f16_shrinks_live_wire_words() {
+    let mut rng = Rng::new(31);
+    let net = random_net(&mut rng, 48, 3, 0.4);
+    let part = random_partition(&net.layers, 4, 5);
+    let b = 16usize;
+    let x0: Vec<f32> = (0..48 * b).map(|_| rng.gen_f32()).collect();
+    let words_of = |codec: Codec| -> u64 {
+        let plan = CommPlan::build_with_codec(&net.layers, &part, codec, codec);
+        let (_, sent) = infer_with_plan_mode(&net, &part, &plan, &x0, b, ExecMode::Overlap);
+        sent.iter().map(|&(w, _)| w).sum()
+    };
+    let w32 = words_of(Codec::F32);
+    let w16 = words_of(Codec::F16);
+    let w8 = words_of(Codec::int8());
+    assert!(w32 > 0, "this partition must communicate");
+    assert!(
+        w16 * 10 <= w32 * 6,
+        "f16 {w16} words vs f32 {w32}: must be under 60%"
+    );
+    assert!(
+        w8 * 10 <= w32 * 4,
+        "int8 {w8} words vs f32 {w32}: must be under 40%"
+    );
+}
+
+/// SGD convergence parity at f16 on the digits workload: training the
+/// same net on the same data under f16 payloads must land within 1% of
+/// the f32 final loss (the paper-facing accuracy criterion), in both the
+/// overlap and pipelined engines, forward AND backward compressed.
+#[test]
+fn f16_digits_sgd_converges_on_par_with_f32() {
+    use spdnn::data::synthetic_mnist;
+    use spdnn::partition::contiguous_partition;
+    use spdnn::radixnet::{generate, RadixNetConfig};
+    let n = 64usize;
+    let net = generate(&RadixNetConfig::graph_challenge(n, 4).expect("cfg"));
+    let part = contiguous_partition(&net.layers, 4);
+    let steps = 60usize;
+    let data = synthetic_mnist(8, steps, 3);
+    let inputs: Vec<Vec<f32>> = data.samples.iter().map(|s| s.pixels.clone()).collect();
+    let targets: Vec<Vec<f32>> = (0..steps).map(|i| data.target(i, n)).collect();
+    let final_loss = |codec: Codec, mode: ExecMode| -> f64 {
+        let plan = CommPlan::build_with_codec(&net.layers, &part, codec, codec);
+        let run = run_with_plan_mode(&net, &part, &plan, &inputs, &targets, 0.3, 1, mode);
+        let tail = 6;
+        run.losses[steps - tail..]
+            .iter()
+            .map(|&l| l as f64)
+            .sum::<f64>()
+            / tail as f64
+    };
+    let base = final_loss(Codec::F32, ExecMode::Overlap);
+    assert!(base > 0.0 && base.is_finite());
+    for mode in [ExecMode::Overlap, ExecMode::Pipelined { chunk_acts: 8 }] {
+        let f16 = final_loss(Codec::F16, mode);
+        let delta = (f16 - base).abs() / base;
+        assert!(
+            delta < 0.01,
+            "{mode:?}: f16 final loss {f16} vs f32 {base} (Δ {:.3}%)",
+            delta * 100.0
+        );
+    }
+}
+
+/// The pipelined engine's live counters match the plan's **chunk-aware**
+/// expected message counts (and the unchanged word volumes) — the
+/// cross-check the ROADMAP required before flipping the pool default.
+#[test]
+fn pipelined_live_counters_match_chunked_plan() {
+    prop::check_seeded(0x51AC, 6, |rng| {
+        let n = 8 + rng.gen_range(12);
+        let layers = 2 + rng.gen_range(3);
+        let nparts = 2 + rng.gen_range(5);
+        let chunk_acts = 1 + rng.gen_range(5);
+        let net = random_net(rng, n, layers, 0.25);
+        let part = random_partition(&net.layers, nparts, rng.next_u64());
+        let plan = CommPlan::build(&net.layers, &part);
+        let samples = 2usize;
+        let inputs: Vec<Vec<f32>> = (0..samples)
+            .map(|_| (0..n).map(|_| rng.gen_f32()).collect())
+            .collect();
+        let targets: Vec<Vec<f32>> = (0..samples)
+            .map(|_| {
+                (0..n)
+                    .map(|_| if rng.gen_bool(0.2) { 1.0 } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        let run = run_with_plan_mode(
+            &net,
+            &part,
+            &plan,
+            &inputs,
+            &targets,
+            0.2,
+            1,
+            ExecMode::Pipelined { chunk_acts },
+        );
+        let fwd_words = plan.fwd_send_volume_per_rank();
+        let bwd_words = plan.fwd_recv_volume_per_rank();
+        let fwd_msgs = plan.fwd_send_msgs_per_rank_chunked(chunk_acts);
+        let bwd_msgs = plan.fwd_recv_msgs_per_rank_chunked(chunk_acts);
+        let steps = samples as u64;
+        for r in 0..nparts {
+            let expect_words = steps * (fwd_words[r] + bwd_words[r]);
+            let expect_msgs = steps * (fwd_msgs[r] + bwd_msgs[r]);
+            assert_eq!(
+                run.sent[r].0, expect_words,
+                "rank {r} words (chunk_acts {chunk_acts})"
+            );
+            assert_eq!(
+                run.sent[r].1, expect_msgs,
+                "rank {r} msgs (chunk_acts {chunk_acts})"
+            );
+        }
+        // chunked counts collapse to the whole-transfer counts at 0
+        assert_eq!(
+            plan.fwd_send_msgs_per_rank_chunked(0),
+            plan.fwd_send_msgs_per_rank()
+        );
+        assert_eq!(
+            plan.fwd_recv_msgs_per_rank_chunked(0),
+            plan.fwd_recv_msgs_per_rank()
+        );
+    });
+}
+
+/// The serving pool under an f16 codec: replies stay within the codec's
+/// error of the serial engine and the stats report a real compression
+/// ratio (raw bytes > wire bytes).
+#[test]
+fn pool_with_f16_codec_serves_and_reports_compression() {
+    use spdnn::radixnet::{generate, RadixNetConfig};
+    let net = generate(&RadixNetConfig::graph_challenge(64, 3).expect("cfg"));
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 4,
+            max_batch: 32,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+            mode: ExecMode::pipelined(),
+            codec: Codec::F16,
+        },
+    );
+    let mut rng = Rng::new(77);
+    for req in 0..4 {
+        let b = 8usize;
+        let x0: Vec<f32> = (0..64 * b)
+            .map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 })
+            .collect();
+        let out = pool.submit(x0.clone(), b).wait().expect("served");
+        let serial = infer_batch(&net, &x0, b);
+        for (a, s) in out.iter().zip(serial.iter()) {
+            assert!((a - s).abs() < 1e-2, "req {req}: {a} vs {s}");
+        }
+    }
+    let summary = pool.shutdown().expect("shutdown");
+    assert!(summary.leaked_ranks.is_empty());
+    let s = &summary.stats;
+    assert!(
+        s.raw_bytes > s.wire_bytes && s.wire_bytes > 0,
+        "raw {} wire {}: f16 must compress",
+        s.raw_bytes,
+        s.wire_bytes
+    );
+    assert!(s.wire_compression() > 1.2, "ratio {}", s.wire_compression());
+    assert!(s.to_json().contains("\"wire_compression\""));
+}

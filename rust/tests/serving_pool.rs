@@ -2,6 +2,7 @@
 //! against the serial reference, micro-batch coalescing, rank-failure
 //! recovery, and graceful shutdown with the no-message-leak invariant.
 
+use spdnn::comm::Codec;
 use spdnn::coordinator::ExecMode;
 use spdnn::dnn::inference::infer_batch;
 use spdnn::dnn::SparseNet;
@@ -43,6 +44,7 @@ fn stress_eight_clients_fifty_requests_match_serial() {
             max_wait: Duration::from_millis(1),
             adaptive: true,
             mode: ExecMode::Overlap,
+            codec: Codec::F32,
         },
     ));
     let clients = 8usize;
@@ -100,6 +102,7 @@ fn queued_singles_coalesce_into_batches() {
             max_wait: Duration::from_millis(200),
             adaptive: false,
             mode: ExecMode::Overlap,
+            codec: Codec::F32,
         },
     );
     let mut rng = Rng::new(7);
@@ -134,6 +137,7 @@ fn rank_panic_fails_one_request_then_pool_recovers() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
+            codec: Codec::F32,
         },
     );
     let mut rng = Rng::new(21);
@@ -188,6 +192,7 @@ fn shutdown_drains_queued_requests() {
             max_wait: Duration::from_millis(50),
             adaptive: false,
             mode: ExecMode::Overlap,
+            codec: Codec::F32,
         },
     );
     let mut rng = Rng::new(33);
@@ -215,6 +220,7 @@ fn oversized_request_served_alone() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
+            codec: Codec::F32,
         },
     );
     let mut rng = Rng::new(5);
@@ -241,6 +247,7 @@ fn deadline_blown_ticket_is_shed_not_served_late() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
+            codec: Codec::F32,
         },
     );
     let mut rng = Rng::new(77);
@@ -297,6 +304,7 @@ fn shutdown_drain_sheds_expired_tickets() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
+            codec: Codec::F32,
         },
     );
     let mut rng = Rng::new(41);
@@ -324,6 +332,7 @@ fn pipelined_mode_pool_matches_serial() {
             max_wait: Duration::from_micros(200),
             adaptive: true,
             mode: ExecMode::Pipelined { chunk_acts: 4 },
+            codec: Codec::F32,
         },
     );
     let mut rng = Rng::new(23);
