@@ -42,12 +42,8 @@ fn main() {
     let max_batch = args.get_usize("max-batch", 2 * batch);
     let max_wait_us = args.get_u64("max-wait-us", 500);
     let json_path = args.get_str("json", "BENCH_serving.json");
-    let mode = match args.get_str("mode", "pipelined").as_str() {
-        "overlap" => ExecMode::Overlap,
-        "blocking" => ExecMode::Blocking,
-        "pipelined" => ExecMode::pipelined(),
-        other => panic!("unknown mode '{other}' (expected pipelined | overlap | blocking)"),
-    };
+    let mode = ExecMode::from_name(&args.get_str("mode", "pipelined"))
+        .expect("unknown mode (expected pipelined | overlap | blocking)");
     let codec = Codec::parse(&args.get_str("codec", "f32"))
         .expect("unknown codec (expected f32 | f16 | int8)");
     // reply validation tolerance vs the serial engine, matched to the

@@ -7,13 +7,16 @@
 //! `cargo bench --bench table2_throughput` — `SPDNN_FULL=1` adds the
 //! deeper (480/1920-layer) configurations of the paper;
 //! `SPDNN_SECTION=overlap` runs only the overlap-vs-blocking section,
-//! `SPDNN_SECTION=pipeline` only the pipelined-vs-overlap section, and
-//! `SPDNN_SECTION=codec` only the wire-codec section (the CI bench-smoke
-//! paths); `SPDNN_ENFORCE=1` fails the run if the overlapped engine does
-//! not beat the blocking engine by ≥ 1.15× at 4 ranks, the pipelined
-//! engine loses to the overlap baseline, or the f16 wire codec loses
-//! throughput / fails to ~halve bytes-on-wire / shifts digits SGD loss by
-//! more than 1%.
+//! `SPDNN_SECTION=pipeline` only the pipelined-vs-overlap section,
+//! `SPDNN_SECTION=codec` only the wire-codec section, and
+//! `SPDNN_SECTION=graphchallenge` only the ≥1M-edge Graph Challenge
+//! edges/sec sweep (the CI bench-smoke paths); `SPDNN_ENFORCE=1` fails
+//! the run if the overlapped engine does not beat the blocking engine by
+//! ≥ 1.15× at 4 ranks, the pipelined engine loses to the overlap
+//! baseline, the f16 wire codec loses throughput / fails to ~halve
+//! bytes-on-wire / shifts digits SGD loss by more than 1%, or a Graph
+//! Challenge engine reports no throughput. Schemas of the emitted
+//! `BENCH_*.json` files are documented in `docs/BENCHMARKS.md`.
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::comm::Codec;
@@ -21,7 +24,7 @@ use spdnn::coordinator::sgd::infer_with_plan;
 use spdnn::coordinator::{ExecMode, RankScratch, RankState};
 use spdnn::data::synthetic_mnist;
 use spdnn::dnn::inference::infer_batch_parallel;
-use spdnn::experiments::{ablation, table2};
+use spdnn::experiments::{ablation, graphchallenge, table2};
 use spdnn::partition::{contiguous_partition, CommPlan};
 use spdnn::radixnet::{generate, RadixNetConfig};
 use spdnn::runtime::parallel::run_ranks;
@@ -282,6 +285,45 @@ fn codec_section(full: bool, enforce: bool) {
     }
 }
 
+/// Graph Challenge section: a ≥1M-edge RadixNet (N=1024, L=32, the
+/// challenge's constant 1/16 weights, −0.3 bias, clipped ReLU) streamed
+/// through all three engines plus the serving pool, on f32 and f16 wires
+/// — edges/sec per combo into `BENCH_graphchallenge.json`. Category sets
+/// are cross-checked against the serial reference inside the driver;
+/// `SPDNN_ENFORCE=1` additionally requires the network to clear the
+/// 1M-edge line and every combo to report nonzero throughput.
+fn graphchallenge_section(full: bool, enforce: bool) {
+    let cfg = graphchallenge::GcConfig {
+        inputs: if full { 2048 } else { 128 },
+        codecs: vec![Codec::F32, Codec::F16],
+        ..graphchallenge::GcConfig::default()
+    };
+    println!(
+        "# Graph Challenge edges/sec (RadixNet N={} L={}, {} ranks)",
+        cfg.neurons, cfg.layers, cfg.ranks[0]
+    );
+    let rep = graphchallenge::run(&cfg);
+    println!("{}", graphchallenge::render(&rep));
+    let json = graphchallenge::to_json(&rep);
+    std::fs::write("BENCH_graphchallenge.json", &json).expect("write BENCH_graphchallenge.json");
+    println!("wrote BENCH_graphchallenge.json: {json}");
+    if enforce {
+        assert!(
+            rep.edges >= 1_000_000,
+            "Graph Challenge net has {} edges, below the 1M line",
+            rep.edges
+        );
+        for r in &rep.rows {
+            assert!(
+                r.secs > 0.0 && r.edges_per_sec > 0.0,
+                "{} engine (codec {}) reported no throughput",
+                r.engine,
+                r.codec
+            );
+        }
+    }
+}
+
 /// Live threaded engine: edges/s of the batched fused-SpMM inference path
 /// at `ranks`, with partition + plan built once (the serving setup cost is
 /// off the clock, as in a real request loop).
@@ -322,6 +364,11 @@ fn main() {
         Ok("codec") => {
             // CI bench-smoke path: wire-codec throughput/bytes/accuracy bars
             codec_section(full, enforce);
+            return;
+        }
+        Ok("graphchallenge") => {
+            // CI bench-smoke path: ≥1M-edge RadixNet edges/sec sweep
+            graphchallenge_section(full, enforce);
             return;
         }
         _ => {}
@@ -438,4 +485,6 @@ fn main() {
     pipeline_section(full, enforce);
     println!();
     codec_section(full, enforce);
+    println!();
+    graphchallenge_section(full, enforce);
 }

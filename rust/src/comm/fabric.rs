@@ -337,9 +337,9 @@ impl Endpoint {
 
     /// Return a consumed payload's allocation for reuse by later sends.
     ///
-    /// The spare list is bounded in **count** ([`MAX_SPARE_BUFS`]) and in
+    /// The spare list is bounded in **count** (`MAX_SPARE_BUFS`) and in
     /// **capacity**: a decaying watermark tracks recent payload lengths,
-    /// and buffers whose capacity exceeds [`SPARE_CAP_MULTIPLE`] times
+    /// and buffers whose capacity exceeds `SPARE_CAP_MULTIPLE` times
     /// that watermark are dropped — so one spike of oversized batches
     /// through a long-lived pool endpoint cannot pin worst-case payload
     /// allocations forever. Because [`Endpoint::take_buf`] pops from the

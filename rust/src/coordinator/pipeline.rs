@@ -29,7 +29,7 @@
 //! very start of the step.
 //!
 //! Like the overlap twins, the inference step here and the retaining one
-//! in [`RankState::train_step_pipelined`] are intentional mirrors — a
+//! in `RankState::train_step_pipelined` are intentional mirrors — a
 //! change to the send/drain schedule in one must be mirrored in the other.
 
 use super::minibatch::row_means;

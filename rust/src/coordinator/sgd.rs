@@ -175,7 +175,7 @@ pub fn assemble_outputs(nl: usize, b: usize, rank_rows: &[Vec<(u32, Vec<f32>)>])
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dnn::{sgd_serial, Activation};
+    use crate::dnn::sgd_serial;
     use crate::partition::phases::{hypergraph_partition, PhaseConfig};
     use crate::partition::random::random_partition;
     use crate::radixnet::{generate, RadixNetConfig};
@@ -185,8 +185,7 @@ mod tests {
             radices: vec![4, 4],
             layers: 4,
             seed: 17,
-            permute: false,
-            activation: Activation::Sigmoid,
+            ..RadixNetConfig::default()
         };
         generate(&cfg)
     }

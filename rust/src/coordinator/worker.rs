@@ -71,6 +71,28 @@ impl ExecMode {
             chunk_acts: DEFAULT_CHUNK_ACTS,
         }
     }
+
+    /// Parse a CLI spelling (`blocking` | `overlap` | `pipelined`, the
+    /// latter also accepted as `pipeline`). The pipelined engine comes
+    /// back with the default chunk size ([`DEFAULT_CHUNK_ACTS`]).
+    pub fn from_name(name: &str) -> Option<ExecMode> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "blocking" | "block" => Some(ExecMode::Blocking),
+            "overlap" => Some(ExecMode::Overlap),
+            "pipelined" | "pipeline" => Some(ExecMode::pipelined()),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling of this mode, the inverse of
+    /// [`ExecMode::from_name`] (chunk size not included).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Blocking => "blocking",
+            ExecMode::Overlap => "overlap",
+            ExecMode::Pipelined { .. } => "pipelined",
+        }
+    }
 }
 
 /// One outbound transfer of a layer, precompiled for the overlapped

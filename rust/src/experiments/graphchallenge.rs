@@ -1,0 +1,313 @@
+//! Graph Challenge inference driver (arXiv 1909.05631): a RadixNet at
+//! challenge scale pushed through the three live engines and the serving
+//! pool, scored in **edges/sec** — `nnz(W) × inputs / seconds`, the
+//! challenge's throughput metric — per engine/codec/rank-count.
+//!
+//! Correctness ride-along: before timing, each engine/codec/rank combo
+//! classifies one batch and its category set (inputs with any active
+//! output neuron, see [`categories`]) is compared against the serial
+//! reference engine. Lossless f32 wires must agree exactly; lossy codecs
+//! report their own category count (quantization can legitimately flip a
+//! near-threshold input). Shared by `spdnn graphchallenge` and the
+//! `SPDNN_SECTION=graphchallenge` bench-smoke section.
+
+use super::{sci, Table};
+use crate::comm::Codec;
+use crate::coordinator::sgd::infer_with_plan_mode;
+use crate::coordinator::{ExecMode, RankScratch, RankState};
+use crate::dnn::inference::infer_batch;
+use crate::dnn::SparseNet;
+use crate::partition::{contiguous_partition, CommPlan};
+use crate::radixnet::{categories, gc_input_batch, generate, RadixNetConfig};
+use crate::runtime::parallel::run_ranks;
+use crate::serving::{PoolConfig, RankPool};
+use crate::util::Stopwatch;
+use std::time::Duration;
+
+/// Workload shape for one [`run`].
+#[derive(Debug, Clone)]
+pub struct GcConfig {
+    /// Neurons per layer (must be a supported RadixNet preset size).
+    pub neurons: usize,
+    /// Weight layer count.
+    pub layers: usize,
+    /// Rank counts to sweep (the engine grid runs once per entry).
+    pub ranks: Vec<usize>,
+    /// Inputs per dispatched batch (the SpMM width).
+    pub batch: usize,
+    /// Total inputs to stream per combo (rounded up to whole batches).
+    pub inputs: usize,
+    /// Engines to sweep.
+    pub modes: Vec<ExecMode>,
+    /// Wire codecs to sweep.
+    pub codecs: Vec<Codec>,
+    /// Also measure the persistent serving pool (pipelined, first codec,
+    /// last rank count).
+    pub pool: bool,
+    /// Input batch seed.
+    pub seed: u64,
+}
+
+impl Default for GcConfig {
+    fn default() -> Self {
+        Self {
+            neurons: 1024,
+            layers: 32, // 32 layers × 32K edges = 1,048,576 edges
+            ranks: vec![4],
+            batch: 64,
+            inputs: 256,
+            modes: vec![ExecMode::Blocking, ExecMode::Overlap, ExecMode::pipelined()],
+            codecs: vec![Codec::F32],
+            pool: true,
+            seed: 0x6C,
+        }
+    }
+}
+
+/// One engine/codec/rank measurement.
+#[derive(Debug, Clone)]
+pub struct GcRow {
+    /// Engine label (`blocking` | `overlap` | `pipelined` | `pool`).
+    pub engine: &'static str,
+    /// Wire codec label.
+    pub codec: &'static str,
+    /// Rank count.
+    pub ranks: usize,
+    /// Steady-state wall seconds for the streamed inputs (slowest rank).
+    pub secs: f64,
+    /// The Graph Challenge metric: `nnz(W) × inputs / secs`.
+    pub edges_per_sec: f64,
+    /// Categories found on the check batch (sanity signal for lossy
+    /// codecs; equals the serial count on f32 wires by assertion).
+    pub categories: usize,
+}
+
+/// A full sweep: the workload plus every measured row.
+#[derive(Debug, Clone)]
+pub struct GcReport {
+    /// Neurons per layer.
+    pub neurons: usize,
+    /// Weight layer count.
+    pub layers: usize,
+    /// Total edge count of the generated network.
+    pub edges: u64,
+    /// Inputs per batch.
+    pub batch: usize,
+    /// Inputs streamed per combo (whole batches).
+    pub inputs: usize,
+    /// Serial-reference category count on the check batch.
+    pub serial_categories: usize,
+    /// One row per engine/codec/rank combo.
+    pub rows: Vec<GcRow>,
+}
+
+/// Generate the network, cross-check every combo's categories against the
+/// serial engine, and measure steady-state edges/sec per combo.
+pub fn run(cfg: &GcConfig) -> GcReport {
+    let net_cfg = RadixNetConfig::graph_challenge_inference(cfg.neurons, cfg.layers)
+        .unwrap_or_else(|| panic!("unsupported neuron count {}", cfg.neurons));
+    let net = generate(&net_cfg);
+    let edges = net.total_nnz() as u64;
+    let nl = net.output_dim();
+    let nbatches = cfg.inputs.div_ceil(cfg.batch).max(1);
+    let batches: Vec<Vec<f32>> = (0..nbatches)
+        .map(|i| gc_input_batch(net.input_dim(), cfg.batch, cfg.seed.wrapping_add(i as u64)))
+        .collect();
+    let inputs = nbatches * cfg.batch;
+
+    // serial reference + its category set on the check batch (batch 0)
+    let reference = infer_batch(&net, &batches[0], cfg.batch);
+    let ref_cats = categories(&reference, nl, cfg.batch, 0.0);
+
+    let mut rows = Vec::new();
+    for &nranks in &cfg.ranks {
+        let part = contiguous_partition(&net.layers, nranks);
+        for &codec in &cfg.codecs {
+            let plan = CommPlan::build_with_codec(&net.layers, &part, codec, codec);
+            for &mode in &cfg.modes {
+                let (out, _) =
+                    infer_with_plan_mode(&net, &part, &plan, &batches[0], cfg.batch, mode);
+                let cats = categories(&out, nl, cfg.batch, 0.0);
+                if codec == Codec::F32 {
+                    assert_eq!(
+                        cats,
+                        ref_cats,
+                        "{} engine (codec {}, P={nranks}) disagrees with serial categories",
+                        mode.label(),
+                        codec.label()
+                    );
+                }
+                // steady-state loop: rank threads, states, and scratch
+                // built once; only the batch stream is on the clock
+                let timed = run_ranks(nranks, |rank, ep| {
+                    let mut state = RankState::build(&net, &part, &plan, rank as u32, mode);
+                    let mut scratch = RankScratch::new();
+                    let _ =
+                        state.infer_owned_outputs(ep, &plan, &batches[0], cfg.batch, &mut scratch);
+                    let sw = Stopwatch::start();
+                    for x0 in &batches {
+                        let _ = state.infer_owned_outputs(ep, &plan, x0, cfg.batch, &mut scratch);
+                    }
+                    sw.elapsed_secs()
+                })
+                .expect("graphchallenge engine run failed");
+                let secs = timed.outputs.into_iter().fold(0f64, f64::max);
+                rows.push(GcRow {
+                    engine: mode.label(),
+                    codec: codec.label(),
+                    ranks: nranks,
+                    secs,
+                    edges_per_sec: edges as f64 * inputs as f64 / secs,
+                    categories: cats.len(),
+                });
+            }
+        }
+    }
+    if cfg.pool {
+        rows.push(pool_row(&net, cfg, &batches, edges, nl, &ref_cats));
+    }
+    GcReport {
+        neurons: cfg.neurons,
+        layers: cfg.layers,
+        edges,
+        batch: cfg.batch,
+        inputs,
+        serial_categories: ref_cats.len(),
+        rows,
+    }
+}
+
+/// The serving-pool measurement: same batch stream submitted as tickets
+/// to a persistent [`RankPool`] in its default pipelined mode.
+fn pool_row(
+    net: &SparseNet,
+    cfg: &GcConfig,
+    batches: &[Vec<f32>],
+    edges: u64,
+    nl: usize,
+    ref_cats: &[u32],
+) -> GcRow {
+    let nranks = *cfg.ranks.last().expect("at least one rank count");
+    let codec = cfg.codecs[0];
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks,
+            max_batch: cfg.batch,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+            mode: ExecMode::pipelined(),
+            codec,
+        },
+    );
+    let out = pool
+        .submit(batches[0].clone(), cfg.batch)
+        .wait()
+        .expect("pool warm-up request failed");
+    let cats = categories(&out, nl, cfg.batch, 0.0);
+    if codec == Codec::F32 {
+        assert_eq!(cats, ref_cats, "pool (P={nranks}) disagrees with serial categories");
+    }
+    let sw = Stopwatch::start();
+    let tickets: Vec<_> = batches
+        .iter()
+        .map(|x0| pool.submit(x0.clone(), cfg.batch))
+        .collect();
+    for t in tickets {
+        let _ = t.wait().expect("pool request failed");
+    }
+    let secs = sw.elapsed_secs();
+    let _ = pool.shutdown();
+    GcRow {
+        engine: "pool",
+        codec: codec.label(),
+        ranks: nranks,
+        secs,
+        edges_per_sec: edges as f64 * (batches.len() * cfg.batch) as f64 / secs,
+        categories: cats.len(),
+    }
+}
+
+/// Fixed-width table for the CLI/bench output.
+pub fn render(rep: &GcReport) -> String {
+    let mut t = Table::new(&["engine", "codec", "P", "s", "edges/s", "cats"]);
+    for r in &rep.rows {
+        t.row(vec![
+            r.engine.to_string(),
+            r.codec.to_string(),
+            r.ranks.to_string(),
+            format!("{:.3}", r.secs),
+            sci(r.edges_per_sec),
+            r.categories.to_string(),
+        ]);
+    }
+    format!(
+        "RadixNet N={} L={} — {} edges, {} inputs × b={} (serial cats {})\n{}",
+        rep.neurons,
+        rep.layers,
+        rep.edges,
+        rep.inputs,
+        rep.batch,
+        rep.serial_categories,
+        t.render()
+    )
+}
+
+/// The `BENCH_graphchallenge.json` payload (schema documented in
+/// `docs/BENCHMARKS.md`).
+pub fn to_json(rep: &GcReport) -> String {
+    let rows: Vec<String> = rep
+        .rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"engine\":\"{}\",\"codec\":\"{}\",\"ranks\":{},\"secs\":{:.4},\
+                 \"edges_per_sec\":{:.1},\"categories\":{}}}",
+                r.engine, r.codec, r.ranks, r.secs, r.edges_per_sec, r.categories
+            )
+        })
+        .collect();
+    format!(
+        "{{\"neurons\":{},\"layers\":{},\"edges\":{},\"batch\":{},\"inputs\":{},\
+         \"serial_categories\":{},\"rows\":[{}]}}",
+        rep.neurons,
+        rep.layers,
+        rep.edges,
+        rep.batch,
+        rep.inputs,
+        rep.serial_categories,
+        rows.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_reports_every_combo() {
+        let cfg = GcConfig {
+            neurons: 64,
+            layers: 4,
+            ranks: vec![2],
+            batch: 8,
+            inputs: 16,
+            codecs: vec![Codec::F32],
+            pool: true,
+            ..GcConfig::default()
+        };
+        let rep = run(&cfg);
+        assert_eq!(rep.inputs, 16);
+        assert_eq!(rep.edges, 64 * 8 * 4);
+        // 3 engines × 1 codec × 1 rank count, plus the pool row
+        assert_eq!(rep.rows.len(), 4);
+        for r in &rep.rows {
+            assert!(r.secs > 0.0 && r.edges_per_sec > 0.0, "{} not timed", r.engine);
+            assert_eq!(r.categories, rep.serial_categories, "{} cats", r.engine);
+        }
+        let json = to_json(&rep);
+        assert!(json.contains("\"edges\":2048"));
+        assert!(json.contains("\"engine\":\"pool\""));
+        assert!(render(&rep).contains("pool"));
+    }
+}

@@ -5,6 +5,7 @@
 pub mod ablation;
 pub mod fig4_scaling;
 pub mod fig5_breakdown;
+pub mod graphchallenge;
 pub mod table1;
 pub mod table2;
 pub mod table3;

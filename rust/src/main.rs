@@ -8,22 +8,29 @@
 //! spdnn ptimes     [--neurons 1024] [--parts 32,64,128] [--layers 24] [--full]
 //! spdnn ablate     [--neurons 1024] [--parts 8,32] [--layers 24]
 //! spdnn train      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 100] [--eta 0.01] [--batch 1] [--codec f32|f16|int8]
-//! spdnn infer      [--neurons 1024] [--layers 12] [--ranks 4] [--batch 64] [--method h|r] [--codec f32|f16|int8]
+//! spdnn infer      [--neurons 1024] [--layers 12] [--ranks 4] [--batch 64] [--method h|r] [--mode overlap] [--codec f32|f16|int8]
 //! spdnn codec      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 200] [--eta 0.1]
 //! spdnn partition  [--neurons 1024] [--layers 12] [--ranks 8]
+//! spdnn graphchallenge [--neurons 1024] [--layers 32] [--ranks 4] [--batch 64] [--inputs 256]
+//!                  [--modes blocking,overlap,pipelined] [--codecs f32,f16] [--no-pool]
+//!                  [--out BENCH_graphchallenge.json] [--full]
 //! spdnn calibrate
 //! ```
 //!
-//! `--full` switches to the paper's full grid (slow on one core). The
-//! wire codec also reads the `SPDNN_CODEC` env var when `--codec` is
-//! absent.
+//! `--full` switches to the paper's full grid (slow on one core; for
+//! `graphchallenge` it streams the challenge's 60 000 inputs). The wire
+//! codec also reads the `SPDNN_CODEC` env var when `--codec` is absent.
+//! See the README's CLI reference section for the shared flags.
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::comm::Codec;
 use spdnn::coordinator::minibatch::train_minibatch_with_plan;
-use spdnn::coordinator::sgd::{infer_with_plan, run_with_plan};
+use spdnn::coordinator::sgd::{infer_with_plan_mode, run_with_plan};
+use spdnn::coordinator::ExecMode;
 use spdnn::data::synthetic_mnist;
-use spdnn::experiments::{self, ablation, fig4_scaling, fig5_breakdown, table1, table2, table3, Method};
+use spdnn::experiments::{
+    self, ablation, fig4_scaling, fig5_breakdown, graphchallenge, table1, table2, table3, Method,
+};
 use spdnn::partition::metrics::PartitionMetrics;
 use spdnn::partition::CommPlan;
 use spdnn::radixnet::{generate, RadixNetConfig};
@@ -48,6 +55,7 @@ fn main() {
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
         "partition" => cmd_partition(&args),
+        "graphchallenge" => cmd_graphchallenge(&args),
         "calibrate" => cmd_calibrate(),
         _ => help(),
     }
@@ -56,7 +64,7 @@ fn main() {
 fn help() {
     println!("spdnn — Partitioning Sparse DNNs (ICS'21) reproduction");
     println!("experiments: table1 | scaling | breakdown | throughput | ptimes | ablate | codec");
-    println!("workloads:   train | infer | partition | calibrate");
+    println!("workloads:   train | infer | partition | graphchallenge | calibrate");
     println!("see `rust/src/main.rs` header or README.md for flags");
 }
 
@@ -273,12 +281,14 @@ fn cmd_infer(args: &Args) {
     let plan = CommPlan::build_with_codec(&net.layers, &part, codec, codec);
     let data = synthetic_mnist(side, b, 11);
     let (x0, b) = data.pack_batch(0, b);
+    let mode = mode_of(args);
     let sw = spdnn::util::Stopwatch::start();
-    let (out, sent) = infer_with_plan(&net, &part, &plan, &x0, b);
+    let (out, sent) = infer_with_plan_mode(&net, &part, &plan, &x0, b, mode);
     let secs = sw.elapsed_secs();
     let edges = net.total_nnz() as f64 * b as f64;
     println!(
-        "batch {b}: {:.3}s live ({:.3e} edges/s 1-core), output dim {}",
+        "batch {b} ({} engine): {:.3}s live ({:.3e} edges/s 1-core), output dim {}",
+        mode.label(),
         secs,
         edges / secs,
         out.len()
@@ -290,6 +300,64 @@ fn cmd_infer(args: &Args) {
         sent.iter().map(|&(w, _)| w).sum::<u64>() as f64 * 4.0 / 1e3,
         plan.fwd_wire_bytes(b, 0) as f64 / 1e3
     );
+}
+
+/// The execution engine: `--mode blocking|overlap|pipelined`, defaulting
+/// to the one-shot drivers' overlap engine.
+fn mode_of(args: &Args) -> ExecMode {
+    let spec = args.get_str("mode", "overlap");
+    ExecMode::from_name(&spec).unwrap_or_else(|| {
+        panic!("unknown mode '{spec}' (expected blocking | overlap | pipelined)")
+    })
+}
+
+fn cmd_graphchallenge(args: &Args) {
+    let full = args.get_bool("full", false);
+    let mut cfg = graphchallenge::GcConfig {
+        neurons: args.get_usize("neurons", 1024),
+        layers: args.get_usize("layers", 32),
+        ranks: args.get_usize_list("ranks", &[4]),
+        batch: args.get_usize("batch", 64),
+        inputs: args.get_usize("inputs", if full { 60_000 } else { 256 }),
+        pool: !args.get_bool("no-pool", false),
+        seed: args.get_u64("seed", 0x6C),
+        ..graphchallenge::GcConfig::default()
+    };
+    if let Some(spec) = args.get("modes") {
+        cfg.modes = spec
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                ExecMode::from_name(s).unwrap_or_else(|| panic!("unknown mode '{s}' in --modes"))
+            })
+            .collect();
+    }
+    if let Some(spec) = args.get("codecs") {
+        cfg.codecs = spec
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| Codec::parse(s).unwrap_or_else(|| panic!("unknown codec '{s}' in --codecs")))
+            .collect();
+    } else if args.has("codec") || std::env::var("SPDNN_CODEC").is_ok() {
+        cfg.codecs = vec![codec_of(args)];
+    }
+    let net_cfg =
+        spdnn::radixnet::RadixNetConfig::graph_challenge_inference(cfg.neurons, cfg.layers)
+            .unwrap_or_else(|| panic!("unsupported neuron count {}", cfg.neurons));
+    println!(
+        "# Graph Challenge — RadixNet N={} L={} ({} edges), {} inputs × b={}",
+        cfg.neurons,
+        cfg.layers,
+        net_cfg.total_edges(),
+        cfg.inputs,
+        cfg.batch
+    );
+    let rep = graphchallenge::run(&cfg);
+    println!("{}", graphchallenge::render(&rep));
+    let json = graphchallenge::to_json(&rep);
+    let out = args.get_str("out", "BENCH_graphchallenge.json");
+    std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!("wrote {out}: {json}");
 }
 
 fn cmd_partition(args: &Args) {

@@ -1,0 +1,192 @@
+//! Streamed RadixNet generation.
+//!
+//! Each layer is assembled row-by-row directly into its final CSR arrays
+//! through [`CsrStream`], with the exact entry count reserved up front —
+//! generating a multi-million-edge Graph Challenge network never
+//! materializes a COO copy, so peak RSS is essentially the finished
+//! model. The output is bit-identical to the historical COO-based path:
+//! the RNG draw order (per-layer permutation first, then weights in
+//! row-major neighbor order) and the per-row column sort are unchanged
+//! (`tests/radixnet_generator.rs` pins this against an in-test COO
+//! rebuild).
+
+use super::topology::{stage_row_base, strides};
+use super::RadixNetConfig;
+use crate::dnn::SparseNet;
+use crate::sparse::{Csr, CsrStream};
+use crate::util::Rng;
+
+/// Generate the full sparse network: topology per the config's radices,
+/// weights per [`RadixNetConfig::weights`], every bias set to
+/// [`RadixNetConfig::bias`].
+pub fn generate(cfg: &RadixNetConfig) -> SparseNet {
+    let layers = generate_layers(cfg, true);
+    let biases: Vec<Vec<f32>> = layers.iter().map(|w| vec![cfg.bias; w.nrows]).collect();
+    SparseNet::new(layers, cfg.activation).with_biases(biases)
+}
+
+/// Generate only the layer sparsity patterns (all values 1.0, no weight
+/// draws) — cheaper when the caller needs structure only (partitioning
+/// experiments at large N).
+pub fn generate_structure(cfg: &RadixNetConfig) -> Vec<Csr> {
+    generate_layers(cfg, false)
+}
+
+fn generate_layers(cfg: &RadixNetConfig, with_weights: bool) -> Vec<Csr> {
+    let n = cfg.neurons();
+    let d = cfg.radices.len();
+    let st = strides(&cfg.radices);
+    let mut rng = Rng::new(cfg.seed);
+    let mut row: Vec<(u32, f32)> = Vec::new();
+    (0..cfg.layers)
+        .map(|k| {
+            let stage = k % d;
+            let (r, stride) = (cfg.radices[stage], st[stage]);
+            let perm = cfg.permute.then(|| rng.permutation(n));
+            let mut stream = CsrStream::with_nnz_capacity(n, n, n * r);
+            for j in 0..n {
+                let base = stage_row_base(r, stride, j);
+                row.clear();
+                for t in 0..r {
+                    let i = base + t * stride;
+                    let c = perm.as_ref().map_or(i as u32, |p| p[i]);
+                    let w = if with_weights {
+                        cfg.weights.draw(&mut rng)
+                    } else {
+                        1.0
+                    };
+                    row.push((c, w));
+                }
+                stream.push_row_unsorted(&mut row).expect("radixnet row");
+            }
+            stream.finish()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::WeightScheme;
+    use super::*;
+    use crate::dnn::Activation;
+
+    #[test]
+    fn regular_degree_per_layer() {
+        let cfg = RadixNetConfig {
+            radices: vec![4, 8],
+            layers: 4,
+            seed: 1,
+            ..RadixNetConfig::default()
+        };
+        let net = generate(&cfg);
+        assert_eq!(net.depth(), 4);
+        // stage 0 layers have degree 4, stage 1 layers degree 8
+        for (k, w) in net.layers.iter().enumerate() {
+            let expect = if k % 2 == 0 { 4 } else { 8 };
+            for r in 0..w.nrows {
+                assert_eq!(w.row_nnz(r), expect, "layer {k} row {r}");
+            }
+        }
+        assert!(net.validate().is_ok());
+    }
+
+    #[test]
+    fn full_connectivity_after_all_stages() {
+        // After d consecutive stages every input reaches every output:
+        // the product of the stage patterns is dense.
+        let cfg = RadixNetConfig {
+            radices: vec![3, 4],
+            layers: 2,
+            seed: 2,
+            activation: Activation::Identity,
+            ..RadixNetConfig::default()
+        };
+        let pats = generate_structure(&cfg);
+        let n = cfg.neurons();
+        // reach[j] = set of inputs reaching neuron j after both layers
+        let mut reach: Vec<std::collections::HashSet<u32>> =
+            (0..n).map(|i| [i as u32].into_iter().collect()).collect();
+        for w in &pats {
+            let mut next = vec![std::collections::HashSet::new(); n];
+            for j in 0..n {
+                let (cols, _) = w.row(j);
+                for &c in cols {
+                    let src = reach[c as usize].clone();
+                    next[j].extend(src);
+                }
+            }
+            reach = next;
+        }
+        for j in 0..n {
+            assert_eq!(reach[j].len(), n, "output {j} not fully connected");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = RadixNetConfig::graph_challenge(64, 6).unwrap();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        for (wa, wb) in a.layers.iter().zip(b.layers.iter()) {
+            assert_eq!(wa, wb);
+        }
+    }
+
+    #[test]
+    fn weights_in_unit_interval() {
+        let cfg = RadixNetConfig::graph_challenge(256, 3).unwrap();
+        let net = generate(&cfg);
+        for w in &net.layers {
+            assert!(w.vals.iter().all(|&v| (-1.0..1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn constant_weight_scheme_and_bias_applied() {
+        let cfg = RadixNetConfig {
+            radices: vec![4, 4],
+            layers: 3,
+            seed: 9,
+            weights: WeightScheme::Constant(0.25),
+            bias: -0.125,
+            activation: Activation::ReluClip,
+            ..RadixNetConfig::default()
+        };
+        let net = generate(&cfg);
+        for w in &net.layers {
+            assert!(w.vals.iter().all(|&v| v == 0.25));
+        }
+        for b in &net.biases {
+            assert!(b.iter().all(|&v| v == -0.125));
+        }
+    }
+
+    #[test]
+    fn permutation_preserves_degree_and_changes_pattern() {
+        let base = RadixNetConfig {
+            radices: vec![8, 8],
+            layers: 2,
+            seed: 3,
+            ..RadixNetConfig::default()
+        };
+        let mut permuted = base.clone();
+        permuted.permute = true;
+        let a = generate_structure(&base);
+        let b = generate_structure(&permuted);
+        assert_ne!(a[0].indices, b[0].indices);
+        for r in 0..64 {
+            assert_eq!(b[0].row_nnz(r), 8);
+        }
+    }
+
+    #[test]
+    fn structure_matches_generate() {
+        let cfg = RadixNetConfig::graph_challenge(64, 5).unwrap();
+        let net = generate(&cfg);
+        let pats = generate_structure(&cfg);
+        for (w, p) in net.layers.iter().zip(pats.iter()) {
+            assert_eq!(w.indptr, p.indptr);
+            assert_eq!(w.indices, p.indices);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Graph-Challenge-style batched inputs and category extraction.
+//!
+//! The challenge feeds tens of thousands of sparse binary feature rows
+//! (60 000 in the published runs) through the network and scores which
+//! inputs still have active neurons at the output — the "categories".
+//! Inputs here are synthetic but deterministic: every column of a batch
+//! draws its own fill density, so some inputs die inside the network and
+//! some survive the row-sum threshold. A single shared density would make
+//! categories all-or-nothing and the cross-engine category check vacuous.
+
+use crate::util::Rng;
+
+/// Deterministic sparse 0/1 feature batch in the crate's row-major
+/// activation layout: `[neurons × batch]`, column `c` holding input `c`.
+/// Each column's fill density is drawn uniformly from `[0.05, 0.5)`.
+pub fn gc_input_batch(neurons: usize, batch: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x6C19_0956_31);
+    let mut x = vec![0f32; neurons * batch];
+    for c in 0..batch {
+        let density = 0.05 + 0.45 * rng.gen_f64();
+        for r in 0..neurons {
+            if rng.gen_bool(density) {
+                x[r * batch + c] = 1.0;
+            }
+        }
+    }
+    x
+}
+
+/// Graph Challenge categories: the input columns whose final-layer
+/// activation sum exceeds `threshold`. The spec counts inputs with *any*
+/// nonzero output, which threshold `0.0` reproduces for the ReLU-family
+/// activations (all outputs nonnegative, so the sum is positive exactly
+/// when some neuron fired — summation order cannot flip that).
+///
+/// `out` is the row-major `[out_dim × batch]` final-layer activation
+/// block, as returned by the inference drivers.
+pub fn categories(out: &[f32], out_dim: usize, batch: usize, threshold: f32) -> Vec<u32> {
+    assert_eq!(out.len(), out_dim * batch, "output block shape mismatch");
+    let mut sums = vec![0f64; batch];
+    for r in 0..out_dim {
+        let row = &out[r * batch..(r + 1) * batch];
+        for (c, &v) in row.iter().enumerate() {
+            sums[c] += v as f64;
+        }
+    }
+    (0..batch)
+        .filter(|&c| sums[c] > threshold as f64)
+        .map(|c| c as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_batch_is_deterministic_and_binary() {
+        let a = gc_input_batch(64, 16, 7);
+        let b = gc_input_batch(64, 16, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| v == 0.0 || v == 1.0));
+        let ones = a.iter().filter(|&&v| v == 1.0).count();
+        assert!(ones > 0 && ones < a.len());
+    }
+
+    #[test]
+    fn column_densities_vary() {
+        let x = gc_input_batch(256, 8, 3);
+        let col_count = |c: usize| (0..256).filter(|&r| x[r * 8 + c] == 1.0).count();
+        let counts: Vec<usize> = (0..8).map(col_count).collect();
+        assert_ne!(counts.iter().min(), counts.iter().max());
+    }
+
+    #[test]
+    fn categories_threshold_on_column_sums() {
+        // out_dim 2, batch 3: column sums are 1.0, 0.0, 3.0
+        let out = vec![1.0, 0.0, 2.0, 0.0, 0.0, 1.0];
+        assert_eq!(categories(&out, 2, 3, 0.0), vec![0, 2]);
+        assert_eq!(categories(&out, 2, 3, 2.5), vec![2]);
+        assert!(categories(&out, 2, 3, 10.0).is_empty());
+    }
+}

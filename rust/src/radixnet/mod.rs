@@ -1,4 +1,5 @@
-//! RadiX-Net synthetic sparse DNN generator.
+//! RadiX-Net synthetic sparse DNN generator — the Graph Challenge
+//! workload subsystem.
 //!
 //! Reimplementation of the generator behind the Sparse Deep Neural Network
 //! Graph Challenge benchmark (Kepner & Robinett, "RadiX-Net: Structured
@@ -14,10 +15,75 @@
 //! structure is exactly the Kronecker/butterfly family RadiX-Net draws
 //! from. Optional seeded inter-layer permutations break alignment (off for
 //! the benchmark configs, available for robustness tests).
+//!
+//! Module layout:
+//! - [`topology`] — the pure butterfly math (strides, per-row neighbor
+//!   bases, stage degrees).
+//! - [`generator`] — streamed layer construction through
+//!   [`crate::sparse::CsrStream`]: rows go straight into the final CSR
+//!   arrays, no COO intermediate, exact capacity reserved up front.
+//! - [`inputs`] — Graph-Challenge-style sparse input batches and the
+//!   row-sum-threshold category extraction.
 
-use crate::dnn::{Activation, SparseNet};
-use crate::sparse::{Coo, Csr};
+pub mod generator;
+pub mod inputs;
+pub mod topology;
+
+pub use generator::{generate, generate_structure};
+pub use inputs::{categories, gc_input_batch};
+pub use topology::stage_degree;
+
+use crate::dnn::Activation;
 use crate::util::Rng;
+
+/// How the generator fills layer weights.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WeightScheme {
+    /// Seeded uniform weights in `[lo, hi)` — the paper's training setup
+    /// (§6.1 draws U\[-1, 1\]).
+    Uniform {
+        /// Inclusive lower bound of the draw.
+        lo: f32,
+        /// Exclusive upper bound of the draw.
+        hi: f32,
+    },
+    /// Every weight set to the same constant — the Graph Challenge
+    /// inference spec (1/16 for the published networks).
+    Constant(f32),
+}
+
+impl Default for WeightScheme {
+    fn default() -> Self {
+        WeightScheme::Uniform { lo: -1.0, hi: 1.0 }
+    }
+}
+
+impl WeightScheme {
+    /// Draw one weight (advances the RNG only for randomized schemes, so
+    /// constant-weight networks stay bit-compatible across scheme sets).
+    pub fn draw(&self, rng: &mut Rng) -> f32 {
+        match *self {
+            WeightScheme::Uniform { lo, hi } => rng.gen_f32_range(lo, hi),
+            WeightScheme::Constant(w) => w,
+        }
+    }
+}
+
+/// The published Graph Challenge bias for an `N`-neuron-per-layer network
+/// (−0.30, −0.35, −0.40, −0.45 for N = 1024, 4096, 16384, 65536),
+/// extended to the CI-scale sizes by the same −0.05-per-4× step.
+pub fn gc_bias(neurons: usize) -> f32 {
+    match neurons {
+        1024 => -0.30,
+        4096 => -0.35,
+        16384 => -0.40,
+        65536 => -0.45,
+        _ => {
+            let steps = ((neurons as f64 / 1024.0).ln() / 4f64.ln()).round();
+            (-0.30 - 0.05 * steps) as f32
+        }
+    }
+}
 
 /// Generator configuration.
 #[derive(Debug, Clone)]
@@ -30,12 +96,34 @@ pub struct RadixNetConfig {
     pub seed: u64,
     /// Apply a random inter-layer permutation per layer.
     pub permute: bool,
+    /// Activation applied after every layer's bias shift.
     pub activation: Activation,
+    /// Weight fill scheme (uniform draws by default).
+    pub weights: WeightScheme,
+    /// Constant bias applied to every neuron of every layer.
+    pub bias: f32,
+}
+
+impl Default for RadixNetConfig {
+    /// Empty-topology placeholder, mainly for `..Default::default()`
+    /// struct spreads in tests; set `radices`/`layers` before generating.
+    fn default() -> Self {
+        Self {
+            radices: Vec::new(),
+            layers: 0,
+            seed: 0x5EED,
+            permute: false,
+            activation: Activation::Sigmoid,
+            weights: WeightScheme::default(),
+            bias: 0.0,
+        }
+    }
 }
 
 impl RadixNetConfig {
     /// Benchmark presets matching the paper's four network sizes
-    /// (N = 1024, 4096, 16384, 65536 neurons/layer).
+    /// (N = 1024, 4096, 16384, 65536 neurons/layer): uniform U\[-1, 1\]
+    /// weights, zero bias, sigmoid — the training setup of §6.1.
     pub fn graph_challenge(neurons: usize, layers: usize) -> Option<Self> {
         let radices: Vec<usize> = match neurons {
             1024 => vec![32, 32],
@@ -50,93 +138,38 @@ impl RadixNetConfig {
         Some(Self {
             radices,
             layers,
-            seed: 0x5EED,
-            permute: false,
-            activation: Activation::Sigmoid,
+            ..Self::default()
         })
     }
 
+    /// Graph Challenge **inference** preset (arXiv 1909.05631): the same
+    /// butterfly topology as [`RadixNetConfig::graph_challenge`], but with
+    /// the challenge's constant weights (`2 / r_min`, which is the
+    /// published 1/16 at N = 1024), the published per-size bias
+    /// ([`gc_bias`]), and ReLU clipped to \[0, 32\]
+    /// ([`Activation::ReluClip`]).
+    pub fn graph_challenge_inference(neurons: usize, layers: usize) -> Option<Self> {
+        let mut cfg = Self::graph_challenge(neurons, layers)?;
+        let r_min = cfg.radices.iter().copied().min().unwrap_or(1);
+        cfg.weights = WeightScheme::Constant(2.0 / r_min as f32);
+        cfg.bias = gc_bias(neurons);
+        cfg.activation = Activation::ReluClip;
+        Some(cfg)
+    }
+
+    /// Neurons per layer (the product of the radices).
     pub fn neurons(&self) -> usize {
         self.radices.iter().product()
     }
-}
 
-/// Digit strides for the mixed-radix representation (little-endian: digit 0
-/// is the least significant).
-fn strides(radices: &[usize]) -> Vec<usize> {
-    let mut s = vec![1usize; radices.len()];
-    for i in 1..radices.len() {
-        s[i] = s[i - 1] * radices[i - 1];
+    /// Total edge (nonzero weight) count of the generated network:
+    /// `Σ_k N · r_{k mod d}`.
+    pub fn total_edges(&self) -> u64 {
+        let n = self.neurons() as u64;
+        (0..self.layers)
+            .map(|k| n * stage_degree(&self.radices, k) as u64)
+            .sum()
     }
-    s
-}
-
-/// Build the sparse connectivity matrix for butterfly stage `stage`
-/// (structure only; values filled by the caller).
-fn stage_pattern(radices: &[usize], stage: usize) -> Vec<(u32, u32)> {
-    let n: usize = radices.iter().product();
-    let st = strides(radices);
-    let r = radices[stage];
-    let stride = st[stage];
-    let mut pairs = Vec::with_capacity(n * r);
-    for j in 0..n {
-        let digit = (j / stride) % r;
-        let base = j - digit * stride;
-        for t in 0..r {
-            let i = base + t * stride;
-            pairs.push((j as u32, i as u32));
-        }
-    }
-    pairs
-}
-
-/// Generate the full sparse network: weights U[-1,1] (paper §6.1), zero
-/// biases, sigmoid activation by default.
-pub fn generate(cfg: &RadixNetConfig) -> SparseNet {
-    let n = cfg.neurons();
-    let d = cfg.radices.len();
-    let mut rng = Rng::new(cfg.seed);
-    let mut layers: Vec<Csr> = Vec::with_capacity(cfg.layers);
-    for k in 0..cfg.layers {
-        let stage = k % d;
-        let mut pairs = stage_pattern(&cfg.radices, stage);
-        if cfg.permute {
-            let perm = rng.permutation(n);
-            for (_, i) in pairs.iter_mut() {
-                *i = perm[*i as usize];
-            }
-        }
-        let mut coo = Coo::with_capacity(n, n, pairs.len());
-        for (j, i) in pairs {
-            coo.push(j as usize, i as usize, rng.gen_f32_range(-1.0, 1.0));
-        }
-        layers.push(coo.to_csr());
-    }
-    SparseNet::new(layers, cfg.activation)
-}
-
-/// Generate only the layer sparsity patterns (no weights) — cheaper when the
-/// caller needs structure only (partitioning experiments at large N).
-pub fn generate_structure(cfg: &RadixNetConfig) -> Vec<Csr> {
-    let n = cfg.neurons();
-    let d = cfg.radices.len();
-    let mut rng = Rng::new(cfg.seed);
-    (0..cfg.layers)
-        .map(|k| {
-            let mut pairs = stage_pattern(&cfg.radices, k % d);
-            if cfg.permute {
-                let perm = rng.permutation(n);
-                for (_, i) in pairs.iter_mut() {
-                    *i = perm[*i as usize];
-                }
-            }
-            let mut coo = Coo::with_capacity(n, n, pairs.len());
-            for (j, i) in pairs {
-                coo.push(j as usize, i as usize, 1.0);
-            }
-            coo.to_csr()
-        })
-        .collect()
 }
 
 #[cfg(test)]
@@ -154,104 +187,41 @@ mod tests {
     }
 
     #[test]
-    fn regular_degree_per_layer() {
-        let cfg = RadixNetConfig {
-            radices: vec![4, 8],
-            layers: 4,
-            seed: 1,
-            permute: false,
-            activation: Activation::Sigmoid,
-        };
-        let net = generate(&cfg);
-        assert_eq!(net.depth(), 4);
-        // stage 0 layers have degree 4, stage 1 layers degree 8
-        for (k, w) in net.layers.iter().enumerate() {
-            let expect = if k % 2 == 0 { 4 } else { 8 };
-            for r in 0..w.nrows {
-                assert_eq!(w.row_nnz(r), expect, "layer {k} row {r}");
-            }
-        }
-        assert!(net.validate().is_ok());
+    fn total_edges_counts_stage_degrees() {
+        // N=1024, [32,32]: every layer has 1024·32 = 32768 edges, so the
+        // 32-layer default CLI workload crosses the 1M-edge line exactly
+        let cfg = RadixNetConfig::graph_challenge(1024, 32).unwrap();
+        assert_eq!(cfg.total_edges(), 1_048_576);
+        // mixed radices cycle: [32,32,16] → 32K, 32K, 16K, 32K, ...
+        let cfg = RadixNetConfig::graph_challenge(16384, 4).unwrap();
+        let n = 16384u64;
+        assert_eq!(cfg.total_edges(), n * 32 + n * 32 + n * 16 + n * 32);
     }
 
     #[test]
-    fn full_connectivity_after_all_stages() {
-        // After d consecutive stages every input reaches every output:
-        // the product of the stage patterns is dense.
-        let cfg = RadixNetConfig {
-            radices: vec![3, 4],
-            layers: 2,
-            seed: 2,
-            permute: false,
-            activation: Activation::Identity,
-        };
-        let pats = generate_structure(&cfg);
-        let n = cfg.neurons();
-        // reach[j] = set of inputs reaching neuron j after both layers
-        let mut reach: Vec<std::collections::HashSet<u32>> =
-            (0..n).map(|i| [i as u32].into_iter().collect()).collect();
-        for w in &pats {
-            let mut next = vec![std::collections::HashSet::new(); n];
-            for j in 0..n {
-                let (cols, _) = w.row(j);
-                for &c in cols {
-                    let src = reach[c as usize].clone();
-                    next[j].extend(src);
-                }
-            }
-            reach = next;
-        }
-        for j in 0..n {
-            assert_eq!(reach[j].len(), n, "output {j} not fully connected");
-        }
+    fn inference_preset_matches_published_spec() {
+        let cfg = RadixNetConfig::graph_challenge_inference(1024, 120).unwrap();
+        assert_eq!(cfg.weights, WeightScheme::Constant(1.0 / 16.0));
+        assert_eq!(cfg.bias, -0.30);
+        assert_eq!(cfg.activation, Activation::ReluClip);
+        assert_eq!(
+            RadixNetConfig::graph_challenge_inference(4096, 1)
+                .unwrap()
+                .bias,
+            -0.35
+        );
+        assert_eq!(
+            RadixNetConfig::graph_challenge_inference(65536, 1)
+                .unwrap()
+                .bias,
+            -0.45
+        );
     }
 
     #[test]
-    fn deterministic_given_seed() {
-        let cfg = RadixNetConfig::graph_challenge(64, 6).unwrap();
-        let a = generate(&cfg);
-        let b = generate(&cfg);
-        for (wa, wb) in a.layers.iter().zip(b.layers.iter()) {
-            assert_eq!(wa, wb);
-        }
-    }
-
-    #[test]
-    fn weights_in_unit_interval() {
-        let cfg = RadixNetConfig::graph_challenge(256, 3).unwrap();
-        let net = generate(&cfg);
-        for w in &net.layers {
-            assert!(w.vals.iter().all(|&v| (-1.0..1.0).contains(&v)));
-        }
-    }
-
-    #[test]
-    fn permutation_preserves_degree_and_changes_pattern() {
-        let base = RadixNetConfig {
-            radices: vec![8, 8],
-            layers: 2,
-            seed: 3,
-            permute: false,
-            activation: Activation::Sigmoid,
-        };
-        let mut permuted = base.clone();
-        permuted.permute = true;
-        let a = generate_structure(&base);
-        let b = generate_structure(&permuted);
-        assert_ne!(a[0].indices, b[0].indices);
-        for r in 0..64 {
-            assert_eq!(b[0].row_nnz(r), 8);
-        }
-    }
-
-    #[test]
-    fn structure_matches_generate() {
-        let cfg = RadixNetConfig::graph_challenge(64, 5).unwrap();
-        let net = generate(&cfg);
-        let pats = generate_structure(&cfg);
-        for (w, p) in net.layers.iter().zip(pats.iter()) {
-            assert_eq!(w.indptr, p.indptr);
-            assert_eq!(w.indices, p.indices);
-        }
+    fn gc_bias_extends_published_step_to_ci_sizes() {
+        assert_eq!(gc_bias(16384), -0.40);
+        assert!((gc_bias(256) - -0.25).abs() < 1e-6);
+        assert!((gc_bias(64) - -0.20).abs() < 1e-6);
     }
 }

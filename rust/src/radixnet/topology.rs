@@ -1,0 +1,88 @@
+//! Mixed-radix butterfly topology underlying RadiX-Net.
+//!
+//! Given radices `[r_0 … r_{d-1}]` with `N = Π r_s`, a neuron index is a
+//! mixed-radix number; the layer at depth `k` applies butterfly stage
+//! `s = k mod d`, connecting output neuron `j` to the `r_s` input neurons
+//! that agree with `j` on every digit except digit `s`. Row (and column)
+//! degree of that layer is therefore exactly `r_s`, and every input
+//! reaches every output after `d` consecutive stages.
+
+/// Digit strides for the mixed-radix representation (little-endian: digit
+/// 0 is the least significant).
+pub fn strides(radices: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; radices.len()];
+    for i in 1..radices.len() {
+        s[i] = s[i - 1] * radices[i - 1];
+    }
+    s
+}
+
+/// Row degree (= column degree) of the layer at depth `k` — the radix of
+/// the butterfly stage that layer applies.
+pub fn stage_degree(radices: &[usize], k: usize) -> usize {
+    radices[k % radices.len()]
+}
+
+/// Base index of butterfly row `j` under a stage with radix `r` and digit
+/// stride `stride`: `j` with digit `s` zeroed. Row `j`'s neighbors are
+/// `base + t·stride` for `t in 0..r`, in ascending index order.
+#[inline]
+pub fn stage_row_base(r: usize, stride: usize, j: usize) -> usize {
+    j - ((j / stride) % r) * stride
+}
+
+/// Full `(row, col)` pattern of butterfly stage `stage`, in row-major
+/// emission order. Kept for structure-only consumers and tests; the
+/// generator streams row-by-row via [`stage_row_base`] instead of
+/// materializing the pair list.
+pub fn stage_pattern(radices: &[usize], stage: usize) -> Vec<(u32, u32)> {
+    let n: usize = radices.iter().product();
+    let st = strides(radices);
+    let r = radices[stage];
+    let stride = st[stage];
+    let mut pairs = Vec::with_capacity(n * r);
+    for j in 0..n {
+        let base = stage_row_base(r, stride, j);
+        for t in 0..r {
+            let i = base + t * stride;
+            pairs.push((j as u32, i as u32));
+        }
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_are_digit_place_values() {
+        assert_eq!(strides(&[4, 8, 2]), vec![1, 4, 32]);
+        assert_eq!(strides(&[32, 32]), vec![1, 32]);
+    }
+
+    #[test]
+    fn stage_degree_cycles_through_radices() {
+        let radices = [4usize, 8, 2];
+        for k in 0..9 {
+            assert_eq!(stage_degree(&radices, k), radices[k % 3]);
+        }
+    }
+
+    #[test]
+    fn stage_pattern_rows_match_base_and_stride() {
+        let radices = [3usize, 4];
+        for stage in 0..2 {
+            let pairs = stage_pattern(&radices, stage);
+            let st = strides(&radices);
+            let (r, stride) = (radices[stage], st[stage]);
+            assert_eq!(pairs.len(), 12 * r);
+            for (j, i) in pairs {
+                let base = stage_row_base(r, stride, j as usize);
+                let t = (i as usize - base) / stride;
+                assert!(t < r);
+                assert_eq!(base + t * stride, i as usize);
+            }
+        }
+    }
+}

@@ -32,6 +32,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
@@ -44,16 +45,19 @@ impl LatencyHistogram {
         (i.ceil() as usize).min(NBUCKETS - 1)
     }
 
+    /// Record one observation (seconds).
     pub fn record(&mut self, secs: f64) {
         self.counts[Self::bucket_of(secs)] += 1;
         self.total += 1;
         self.sum += secs.max(0.0);
     }
 
+    /// Observations recorded so far.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Mean of the recorded observations (exact, not bucketed).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -105,6 +109,7 @@ pub struct ServingStats {
 }
 
 impl ServingStats {
+    /// Fresh counters; the wall clock starts now.
     pub fn new() -> Self {
         Self {
             inner: Mutex::new(StatsInner::default()),
@@ -158,6 +163,8 @@ impl ServingStats {
         s.wire_bytes += wire_bytes;
     }
 
+    /// Consistent point-in-time copy of every counter plus the derived
+    /// rates (edges/s against wall and busy time).
     pub fn snapshot(&self) -> StatsSnapshot {
         let s = self.inner.lock().unwrap();
         let wall = self.started.elapsed().as_secs_f64();

@@ -14,6 +14,7 @@ pub struct Coo {
 }
 
 impl Coo {
+    /// Empty builder for an `nrows × ncols` matrix.
     pub fn new(nrows: usize, ncols: usize) -> Self {
         Self {
             nrows,
@@ -24,6 +25,7 @@ impl Coo {
         }
     }
 
+    /// Empty builder with the triplet arrays reserved for `nnz` entries.
     pub fn with_capacity(nrows: usize, ncols: usize, nnz: usize) -> Self {
         Self {
             nrows,
@@ -34,6 +36,7 @@ impl Coo {
         }
     }
 
+    /// Append one entry (any order; duplicates are summed at conversion).
     #[inline]
     pub fn push(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.nrows && c < self.ncols, "entry out of bounds");
@@ -42,6 +45,7 @@ impl Coo {
         self.vals.push(v);
     }
 
+    /// Entries pushed so far (duplicates still counted separately).
     pub fn nnz(&self) -> usize {
         self.vals.len()
     }

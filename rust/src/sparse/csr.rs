@@ -34,10 +34,12 @@ impl Csr {
         }
     }
 
+    /// Stored nonzero count.
     pub fn nnz(&self) -> usize {
         self.indices.len()
     }
 
+    /// Column indices and values of row `r`.
     #[inline]
     pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
         let lo = self.indptr[r] as usize;
@@ -45,6 +47,7 @@ impl Csr {
         (&self.indices[lo..hi], &self.vals[lo..hi])
     }
 
+    /// Column indices and mutable values of row `r`.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> (&[u32], &mut [f32]) {
         let lo = self.indptr[r] as usize;
@@ -52,6 +55,7 @@ impl Csr {
         (&self.indices[lo..hi], &mut self.vals[lo..hi])
     }
 
+    /// Nonzero count of row `r`.
     pub fn row_nnz(&self, r: usize) -> usize {
         (self.indptr[r + 1] - self.indptr[r]) as usize
     }

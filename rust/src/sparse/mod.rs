@@ -1,9 +1,12 @@
-//! Sparse matrix substrate: COO builder, CSR kernels, text I/O.
+//! Sparse matrix substrate: COO builder, streaming CSR builder, CSR
+//! kernels, text I/O.
 //!
 //! Everything the paper's SpMV-based SGD needs: `spmv` (Alg. 2 line 6),
 //! `spmv_add` (line 9), `spmv_t_add` (Alg. 3 line 4), `sgd_update`
 //! (Alg. 3 lines 8–9), `spmm_rowmajor` (§5.1 batched inference),
-//! row-block extraction (the rank-local view), transposition.
+//! row-block extraction (the rank-local view), transposition. Large
+//! matrices (Graph Challenge RadixNet layers) are assembled through
+//! [`CsrStream`] so no COO copy is ever materialized.
 
 pub mod coo;
 pub mod csr;
@@ -12,4 +15,5 @@ pub mod split;
 
 pub use coo::Coo;
 pub use csr::Csr;
+pub use io::CsrStream;
 pub use split::{regroup_rows, RowRegroup, SplitCsr, SplitSegment};

@@ -1,0 +1,170 @@
+//! RadixNet generator acceptance tests: seeded determinism, topology
+//! invariants against the radix spec, bit-identity of the streamed CSR
+//! build vs a COO-built reference (the historical path), and serial ≡
+//! distributed inference on a generated Graph Challenge network.
+
+use spdnn::coordinator::sgd::infer_with_plan_mode;
+use spdnn::coordinator::ExecMode;
+use spdnn::dnn::inference::infer_batch;
+use spdnn::partition::{contiguous_partition, CommPlan};
+use spdnn::radixnet::topology::{stage_degree, stage_pattern};
+use spdnn::radixnet::{
+    categories, gc_input_batch, generate, generate_structure, RadixNetConfig,
+};
+use spdnn::sparse::{Coo, Csr};
+use spdnn::util::Rng;
+
+/// The pre-streaming reference build: materialize each layer's (row, col)
+/// pairs, push them into a COO with the same RNG draw order the streamed
+/// generator uses, and counting-sort to CSR.
+fn coo_reference_layers(cfg: &RadixNetConfig) -> Vec<Csr> {
+    let n = cfg.neurons();
+    let d = cfg.radices.len();
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.layers)
+        .map(|k| {
+            let mut pairs = stage_pattern(&cfg.radices, k % d);
+            if cfg.permute {
+                let perm = rng.permutation(n);
+                for (_, i) in pairs.iter_mut() {
+                    *i = perm[*i as usize];
+                }
+            }
+            let mut coo = Coo::with_capacity(n, n, pairs.len());
+            for (j, i) in pairs {
+                coo.push(j as usize, i as usize, cfg.weights.draw(&mut rng));
+            }
+            coo.to_csr()
+        })
+        .collect()
+}
+
+#[test]
+fn same_seed_is_bit_identical() {
+    for cfg in [
+        RadixNetConfig::graph_challenge(256, 5).unwrap(),
+        RadixNetConfig::graph_challenge_inference(64, 8).unwrap(),
+        RadixNetConfig {
+            radices: vec![4, 8],
+            layers: 6,
+            seed: 99,
+            permute: true,
+            ..RadixNetConfig::default()
+        },
+    ] {
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (wa, wb) in a.layers.iter().zip(b.layers.iter()) {
+            assert_eq!(wa.indptr, wb.indptr);
+            assert_eq!(wa.indices, wb.indices);
+            assert_eq!(
+                wa.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                wb.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        assert_eq!(a.biases, b.biases);
+    }
+}
+
+#[test]
+fn streamed_build_matches_coo_reference() {
+    // the tentpole guarantee: the no-COO streaming path is bit-identical
+    // to the historical COO build, permuted or not
+    for permute in [false, true] {
+        let cfg = RadixNetConfig {
+            radices: vec![4, 4, 4],
+            layers: 7,
+            seed: 0x5EED,
+            permute,
+            ..RadixNetConfig::default()
+        };
+        let streamed = generate(&cfg);
+        let reference = coo_reference_layers(&cfg);
+        assert_eq!(streamed.layers.len(), reference.len());
+        for (k, (s, r)) in streamed.layers.iter().zip(reference.iter()).enumerate() {
+            assert_eq!(s.indptr, r.indptr, "layer {k} indptr (permute {permute})");
+            assert_eq!(s.indices, r.indices, "layer {k} indices (permute {permute})");
+            assert_eq!(
+                s.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                r.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "layer {k} values (permute {permute})"
+            );
+        }
+    }
+}
+
+#[test]
+fn column_degrees_match_radix_spec_and_no_empty_layers() {
+    let cfg = RadixNetConfig {
+        radices: vec![4, 8, 2],
+        layers: 7,
+        seed: 5,
+        ..RadixNetConfig::default()
+    };
+    for permute in [false, true] {
+        let mut c = cfg.clone();
+        c.permute = permute;
+        let pats = generate_structure(&c);
+        assert_eq!(pats.len(), c.layers);
+        let n = c.neurons();
+        for (k, w) in pats.iter().enumerate() {
+            let r = stage_degree(&c.radices, k);
+            assert!(w.nnz() > 0, "layer {k} empty");
+            let mut col_deg = vec![0usize; n];
+            for row in 0..n {
+                assert_eq!(w.row_nnz(row), r, "layer {k} row {row} degree");
+                let (cols, _) = w.row(row);
+                for &col in cols {
+                    col_deg[col as usize] += 1;
+                }
+            }
+            // the butterfly is degree-regular on both sides, and a
+            // permutation only relabels columns
+            assert!(
+                col_deg.iter().all(|&d| d == r),
+                "layer {k} column degrees != {r} (permute {permute})"
+            );
+            w.validate().unwrap();
+        }
+    }
+}
+
+#[test]
+fn serial_matches_every_engine_on_gc_network() {
+    let cfg = RadixNetConfig::graph_challenge_inference(64, 6).unwrap();
+    let net = generate(&cfg);
+    let b = 8;
+    let mut x0 = gc_input_batch(net.input_dim(), b, 3);
+    // pin the category outcome: an all-zero input must die (every neuron
+    // sits at the negative bias), an all-one input saturates and survives
+    for r in 0..net.input_dim() {
+        x0[r * b] = 0.0;
+        x0[r * b + 1] = 1.0;
+    }
+    let serial = infer_batch(&net, &x0, b);
+    let nl = net.output_dim();
+    let serial_cats = categories(&serial, nl, b, 0.0);
+    // non-trivial by construction, so the equivalence below has teeth
+    assert!(!serial_cats.contains(&0));
+    assert!(serial_cats.contains(&1));
+
+    let part = contiguous_partition(&net.layers, 4);
+    let plan = CommPlan::build(&net.layers, &part);
+    for mode in [ExecMode::Blocking, ExecMode::Overlap, ExecMode::pipelined()] {
+        let (out, _) = infer_with_plan_mode(&net, &part, &plan, &x0, b, mode);
+        assert_eq!(out.len(), serial.len());
+        let max_diff = out
+            .iter()
+            .zip(serial.iter())
+            .map(|(a, s)| (a - s).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 1e-5, "{} engine off by {max_diff}", mode.label());
+        assert_eq!(
+            categories(&out, nl, b, 0.0),
+            serial_cats,
+            "{} engine category set",
+            mode.label()
+        );
+    }
+}
