@@ -8,15 +8,18 @@
 //! deeper (480/1920-layer) configurations of the paper;
 //! `SPDNN_SECTION=overlap` runs only the overlap-vs-blocking section,
 //! `SPDNN_SECTION=pipeline` only the pipelined-vs-overlap section,
-//! `SPDNN_SECTION=codec` only the wire-codec section, and
+//! `SPDNN_SECTION=codec` only the wire-codec section,
 //! `SPDNN_SECTION=graphchallenge` only the ≥1M-edge Graph Challenge
-//! edges/sec sweep (the CI bench-smoke paths); `SPDNN_ENFORCE=1` fails
+//! edges/sec sweep, and `SPDNN_SECTION=obs` only the tracing-overhead
+//! section (the CI bench-smoke paths); `SPDNN_ENFORCE=1` fails
 //! the run if the overlapped engine does not beat the blocking engine by
 //! ≥ 1.15× at 4 ranks, the pipelined engine loses to the overlap
 //! baseline, the f16 wire codec loses throughput / fails to ~halve
-//! bytes-on-wire / shifts digits SGD loss by more than 1%, or a Graph
-//! Challenge engine reports no throughput. Schemas of the emitted
-//! `BENCH_*.json` files are documented in `docs/BENCHMARKS.md`.
+//! bytes-on-wire / shifts digits SGD loss by more than 1%, a Graph
+//! Challenge engine reports no throughput, or flight-recorder tracing
+//! costs more than 3% of throughput (off-mode vs the plain build path,
+//! and on-mode vs off-mode). Schemas of the emitted `BENCH_*.json` files
+//! are documented in `docs/BENCHMARKS.md`.
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::comm::Codec;
@@ -25,6 +28,7 @@ use spdnn::coordinator::{ExecMode, RankScratch, RankState};
 use spdnn::data::synthetic_mnist;
 use spdnn::dnn::inference::infer_batch_parallel;
 use spdnn::experiments::{ablation, graphchallenge, table2};
+use spdnn::obs::{TraceMode, DEFAULT_TRACE_CAPACITY};
 use spdnn::partition::{contiguous_partition, CommPlan};
 use spdnn::radixnet::{generate, RadixNetConfig};
 use spdnn::runtime::parallel::run_ranks;
@@ -285,6 +289,87 @@ fn codec_section(full: bool, enforce: bool) {
     }
 }
 
+/// Acceptance bar for the flight recorder (enforced only under
+/// `SPDNN_ENFORCE=1`): the disabled tracer must keep ≥ 97% of the plain
+/// build path's throughput, and tracing **on** must keep ≥ 97% of the
+/// off-mode throughput.
+const OBS_BAR: f64 = 0.97;
+
+/// Tracing-overhead section: the digits workload pushed through the
+/// overlapped engine three ways — the plain [`RankState::build`] path
+/// (tracing resolved from the unset `SPDNN_TRACE`, i.e. the pre-recorder
+/// hot path), an explicit [`TraceMode::Off`] build, and tracing on at the
+/// default ring capacity. Edges/s of the better of `reps` passes per
+/// variant. Writes `BENCH_obs.json`.
+fn obs_section(full: bool, enforce: bool) {
+    let (n, l, ranks) = (1024usize, 24usize, 4usize);
+    let b = 16usize;
+    let passes = if full { 128usize } else { 48 };
+    let reps = 3usize;
+    println!("# Flight-recorder overhead (off vs on, digits workload, {ranks} ranks)");
+    let net = generate(&RadixNetConfig::graph_challenge(n, l).expect("cfg"));
+    let side = (n as f64).sqrt() as usize;
+    let data = synthetic_mnist(side, b, 42);
+    let (x0, b) = data.pack_batch(0, b);
+    let part = contiguous_partition(&net.layers, ranks);
+    let plan = CommPlan::build(&net.layers, &part);
+
+    let eps_of = |trace: Option<TraceMode>| -> f64 {
+        let run = run_ranks(ranks, |rank, ep| {
+            let mode = ExecMode::Overlap;
+            let mut state = match trace {
+                Some(t) => RankState::build_traced(&net, &part, &plan, rank as u32, mode, t),
+                None => RankState::build(&net, &part, &plan, rank as u32, mode),
+            };
+            let mut scratch = RankScratch::new();
+            let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch); // warm-up
+            let sw = Stopwatch::start();
+            for _ in 0..passes {
+                let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch);
+            }
+            sw.elapsed_secs()
+        })
+        .expect("obs bench run failed");
+        let secs = run.outputs.into_iter().fold(0f64, f64::max);
+        net.total_nnz() as f64 * (passes * b) as f64 / secs
+    };
+    let mut eps_base = 0f64;
+    let mut eps_off = 0f64;
+    let mut eps_on = 0f64;
+    for _ in 0..reps {
+        eps_base = eps_base.max(eps_of(None));
+        eps_off = eps_off.max(eps_of(Some(TraceMode::Off)));
+        eps_on = eps_on.max(eps_of(Some(TraceMode::with_capacity(DEFAULT_TRACE_CAPACITY))));
+    }
+    let off_ratio = eps_off / eps_base;
+    let on_ratio = eps_on / eps_off;
+    println!(
+        "[bench] obs N={n} L={l} b={b} ranks={ranks}: plain {eps_base:.2E} edges/s, \
+         trace-off {eps_off:.2E} ({off_ratio:.3}x), trace-on {eps_on:.2E} \
+         ({on_ratio:.3}x of off, bar {OBS_BAR}x)"
+    );
+    let json = format!(
+        "{{\"neurons\":{n},\"layers\":{l},\"batch\":{b},\"ranks\":{ranks},\
+         \"passes\":{passes},\"plain_eps\":{eps_base:.1},\"trace_off_eps\":{eps_off:.1},\
+         \"trace_on_eps\":{eps_on:.1},\"off_ratio\":{off_ratio:.4},\
+         \"on_ratio\":{on_ratio:.4},\"bar\":{OBS_BAR}}}"
+    );
+    std::fs::write("BENCH_obs.json", &json).expect("write BENCH_obs.json");
+    println!("wrote BENCH_obs.json: {json}");
+    if enforce {
+        assert!(
+            off_ratio >= OBS_BAR,
+            "disabled tracer kept only {off_ratio:.3}x of plain-path throughput, \
+             below the {OBS_BAR}x bar"
+        );
+        assert!(
+            on_ratio >= OBS_BAR,
+            "enabled tracing kept only {on_ratio:.3}x of off-mode throughput, \
+             below the {OBS_BAR}x bar"
+        );
+    }
+}
+
 /// Graph Challenge section: a ≥1M-edge RadixNet (N=1024, L=32, the
 /// challenge's constant 1/16 weights, −0.3 bias, clipped ReLU) streamed
 /// through all three engines plus the serving pool, on f32 and f16 wires
@@ -369,6 +454,11 @@ fn main() {
         Ok("graphchallenge") => {
             // CI bench-smoke path: ≥1M-edge RadixNet edges/sec sweep
             graphchallenge_section(full, enforce);
+            return;
+        }
+        Ok("obs") => {
+            // CI bench-smoke path: flight-recorder overhead bars
+            obs_section(full, enforce);
             return;
         }
         _ => {}
@@ -487,4 +577,6 @@ fn main() {
     codec_section(full, enforce);
     println!();
     graphchallenge_section(full, enforce);
+    println!();
+    obs_section(full, enforce);
 }

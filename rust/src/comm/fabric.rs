@@ -67,6 +67,44 @@ const SPARE_CAP_MULTIPLE: usize = 8;
 /// don't make the spare list reject every normal buffer.
 const SPARE_CAP_FLOOR: usize = 64;
 
+/// Per-peer traffic counters kept by each [`Endpoint`] (one slot per
+/// rank of the fabric, self included and always zero). Bytes are wire
+/// bytes — what actually traveled, post-codec.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeerCounters {
+    /// Messages this endpoint sent to the peer.
+    pub sent_msgs: u64,
+    /// Wire bytes this endpoint sent to the peer.
+    pub sent_bytes: u64,
+    /// Messages received **and consumed** from the peer (see
+    /// [`Endpoint::stats`] for the consumption-time caveat).
+    pub recv_msgs: u64,
+    /// Wire bytes received and consumed from the peer.
+    pub recv_bytes: u64,
+}
+
+/// Point-in-time copy of one endpoint's traffic counters, aggregate and
+/// per-peer — the fabric's contribution to the
+/// [`crate::obs::MetricsRegistry`].
+#[derive(Debug, Clone, Default)]
+pub struct FabricStats {
+    /// Words sent as they traveled the wire (encoded payloads count
+    /// encoded words).
+    pub sent_words: u64,
+    /// Messages sent.
+    pub sent_msgs: u64,
+    /// Pre-encoding payload bytes of every send.
+    pub sent_raw_bytes: u64,
+    /// Bytes actually put on the wire.
+    pub sent_wire_bytes: u64,
+    /// Messages received and consumed.
+    pub recv_msgs: u64,
+    /// Wire bytes received and consumed.
+    pub recv_wire_bytes: u64,
+    /// Per-peer breakdown, indexed by peer rank.
+    pub peers: Vec<PeerCounters>,
+}
+
 /// Per-rank endpoint.
 pub struct Endpoint {
     pub rank: u32,
@@ -97,6 +135,12 @@ pub struct Endpoint {
     /// `sent_raw_bytes` under [`Codec::F32`]; smaller under lossy codecs —
     /// the ratio is the live compression factor.
     pub sent_wire_bytes: u64,
+    /// Messages received and consumed by this endpoint.
+    pub recv_msgs: u64,
+    /// Wire bytes received and consumed by this endpoint.
+    pub recv_wire_bytes: u64,
+    /// Per-peer send/recv breakdown, indexed by peer rank.
+    peers: Vec<PeerCounters>,
 }
 
 impl Endpoint {
@@ -172,10 +216,14 @@ impl Endpoint {
         payload: Vec<f32>,
         raw_bytes: u64,
     ) {
+        let wire_bytes = 4 * payload.len() as u64;
         self.sent_words += payload.len() as u64;
         self.sent_msgs += 1;
         self.sent_raw_bytes += raw_bytes;
-        self.sent_wire_bytes += 4 * payload.len() as u64;
+        self.sent_wire_bytes += wire_bytes;
+        let peer = &mut self.peers[to as usize];
+        peer.sent_msgs += 1;
+        peer.sent_bytes += wire_bytes;
         let msg = Msg {
             layer,
             phase,
@@ -197,6 +245,38 @@ impl Endpoint {
                 );
             }
             panic!("peer rank hung up");
+        }
+    }
+
+    /// Count one consumed incoming message. Receives are counted when a
+    /// recv call hands the payload to the engine, not when the message
+    /// lands in the stash — so the counters always describe work the
+    /// rank actually absorbed (stashed-but-never-consumed leaks show up
+    /// in [`Endpoint::drained`], not here).
+    #[inline]
+    fn note_recv(&mut self, from: u32, words: usize) {
+        let wire_bytes = 4 * words as u64;
+        self.recv_msgs += 1;
+        self.recv_wire_bytes += wire_bytes;
+        let peer = &mut self.peers[from as usize];
+        peer.recv_msgs += 1;
+        peer.recv_bytes += wire_bytes;
+    }
+
+    /// Point-in-time copy of the endpoint's traffic counters (aggregate
+    /// send/recv plus the per-peer breakdown). Receive-side numbers count
+    /// **consumed** messages: a payload stashed out-of-order is counted
+    /// when the engine finally receives it, and one that is never
+    /// consumed (a leak) is never counted.
+    pub fn stats(&self) -> FabricStats {
+        FabricStats {
+            sent_words: self.sent_words,
+            sent_msgs: self.sent_msgs,
+            sent_raw_bytes: self.sent_raw_bytes,
+            sent_wire_bytes: self.sent_wire_bytes,
+            recv_msgs: self.recv_msgs,
+            recv_wire_bytes: self.recv_wire_bytes,
+            peers: self.peers.clone(),
         }
     }
 
@@ -224,6 +304,7 @@ impl Endpoint {
     pub fn recv(&mut self, from: u32, layer: u32, phase: Phase, transfer: u32) -> Vec<f32> {
         let key: Key = (layer, phase, from, transfer, 0);
         if let Some(p) = self.stash_pop(&key) {
+            self.note_recv(from, p.len());
             return p;
         }
         loop {
@@ -231,6 +312,7 @@ impl Endpoint {
                 Ok(m) => {
                     let k: Key = (m.layer, m.phase, m.from, m.transfer, m.chunk);
                     if k == key {
+                        self.note_recv(from, m.payload.len());
                         return m.payload;
                     }
                     self.stash_push(k, m.payload);
@@ -275,11 +357,13 @@ impl Endpoint {
     ) -> Option<Vec<f32>> {
         let key: Key = (layer, phase, from, transfer, chunk);
         if let Some(p) = self.stash_pop(&key) {
+            self.note_recv(from, p.len());
             return Some(p);
         }
         while let Ok(m) = self.inbox.try_recv() {
             let k: Key = (m.layer, m.phase, m.from, m.transfer, m.chunk);
             if k == key {
+                self.note_recv(from, m.payload.len());
                 return Some(m.payload);
             }
             self.stash_push(k, m.payload);
@@ -298,6 +382,7 @@ impl Endpoint {
         for (i, &(from, transfer, chunk)) in wants.iter().enumerate() {
             let key: Key = (layer, phase, from, transfer, chunk);
             if let Some(p) = self.stash_pop(&key) {
+                self.note_recv(from, p.len());
                 return (i, p);
             }
         }
@@ -309,6 +394,7 @@ impl Endpoint {
                             .iter()
                             .position(|&(f, t, c)| f == m.from && t == m.transfer && c == m.chunk)
                         {
+                            self.note_recv(m.from, m.payload.len());
                             return (i, m.payload);
                         }
                     }
@@ -403,6 +489,9 @@ pub fn fabric(n: usize) -> Vec<Endpoint> {
             sent_msgs: 0,
             sent_raw_bytes: 0,
             sent_wire_bytes: 0,
+            recv_msgs: 0,
+            recv_wire_bytes: 0,
+            peers: vec![PeerCounters::default(); n],
         })
         .collect()
 }
@@ -735,6 +824,43 @@ mod tests {
             assert!((a - b).abs() <= b.abs() * 5e-4 + 1e-6);
         }
         e0.recycle(p);
+        assert!(e0.drained());
+    }
+
+    #[test]
+    fn per_peer_counters_track_consumed_traffic() {
+        let mut eps = fabric(3);
+        let mut e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, 0, Phase::Forward, 0, vec![1.0, 2.0]);
+        e1.send(0, 1, Phase::Forward, 0, vec![3.0]);
+        e2.send(0, 0, Phase::Forward, 1, vec![4.0, 5.0, 6.0]);
+        let s1 = e1.stats();
+        assert_eq!(s1.peers[0].sent_msgs, 2);
+        assert_eq!(s1.peers[0].sent_bytes, 12);
+        assert_eq!(s1.peers[2], PeerCounters::default());
+        assert_eq!(s1.sent_msgs, 2);
+        // nothing consumed yet: recv side still zero even though the
+        // messages are in flight
+        assert_eq!(e0.stats().recv_msgs, 0);
+        let _ = e0.recv(1, 0, Phase::Forward, 0);
+        let _ = e0.recv(2, 0, Phase::Forward, 1);
+        // the layer-1 message was drained into the stash by the receives
+        // above but not consumed — it must not be counted yet
+        let s0 = e0.stats();
+        assert_eq!(s0.recv_msgs, 2);
+        assert_eq!(s0.recv_wire_bytes, 8 + 12);
+        assert_eq!(s0.peers[1].recv_msgs, 1);
+        assert_eq!(s0.peers[1].recv_bytes, 8);
+        assert_eq!(s0.peers[2].recv_msgs, 1);
+        assert_eq!(s0.peers[2].recv_bytes, 12);
+        // consuming the stashed message counts it, from the stash path
+        let _ = e0.recv(1, 1, Phase::Forward, 0);
+        let s0 = e0.stats();
+        assert_eq!(s0.recv_msgs, 3);
+        assert_eq!(s0.peers[1].recv_msgs, 2);
+        assert_eq!(s0.peers[1].recv_bytes, 12);
         assert!(e0.drained());
     }
 

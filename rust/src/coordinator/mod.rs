@@ -23,5 +23,8 @@ pub mod sgd;
 pub mod worker;
 
 pub use replay::{replay, ReplayConfig, ReplayResult};
-pub use sgd::{infer_distributed, train_distributed, TrainRun};
+pub use sgd::{
+    infer_distributed, infer_with_plan_mode_traced, run_with_plan_mode_traced, train_distributed,
+    TrainRun,
+};
 pub use worker::{ExecMode, RankScratch, RankState, DEFAULT_CHUNK_ACTS};

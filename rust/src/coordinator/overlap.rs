@@ -22,6 +22,7 @@
 use super::minibatch::row_means;
 use super::worker::{RankScratch, RankState, Repr};
 use crate::comm::{Endpoint, Phase, Want};
+use crate::obs::NO_CHUNK;
 use crate::partition::CommPlan;
 
 impl RankState {
@@ -64,6 +65,8 @@ impl RankState {
             // 1. sends, gathered from the compact activation vector
             {
                 let cur = &scratch.ping[..inw * b];
+                let sp = self.tracer.start();
+                let mut moved = 0u64;
                 self.timer.time("comm", || {
                     for s in &sl.sends {
                         let mut payload = ep.take_buf();
@@ -72,9 +75,11 @@ impl RankState {
                             let p = p as usize;
                             payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
                         }
+                        moved += 4 * payload.len() as u64;
                         ep.send_encoded(s.to, k as u32, Phase::Forward, s.tid, 0, cf, payload);
                     }
                 });
+                self.tracer.end(sp, "send", "fwd", k as u32, NO_CHUNK, moved);
             }
             // 2. local segment, while remote activations are in flight.
             // With no remote segments the epilogue fuses into this pass.
@@ -84,6 +89,7 @@ impl RankState {
                 let z = &mut scratch.pong[..nloc * b];
                 let bias = &self.biases[k];
                 let act = self.activation;
+                let sp = self.tracer.start();
                 self.timer.time("spmv", || {
                     if fuse_now {
                         sl.mat
@@ -93,6 +99,7 @@ impl RankState {
                         sl.mat.local.spmm_fused_rowmajor(x, z, b, |_, _| {});
                     }
                 });
+                self.tracer.end(sp, "spmv.local", "fwd", k as u32, NO_CHUNK, 0);
             }
             if !fuse_now {
                 // 3a. apply everything that already landed, without blocking
@@ -105,7 +112,10 @@ impl RankState {
                         let payload = ep.decode_payload(cf, payload);
                         let z = &mut scratch.pong[..nloc * b];
                         let seg = &sl.mat.remote[si].csr;
+                        let sp = self.tracer.start();
                         self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, z, b));
+                        self.tracer
+                            .end(sp, "spmv.seg", "fwd", k as u32, chunk, 4 * payload.len() as u64);
                         ep.recycle(payload);
                     } else {
                         scratch.wants.push((src, tid, chunk));
@@ -114,30 +124,39 @@ impl RankState {
                 }
                 // 3b. the rest in arrival order; only this blocks
                 while !scratch.wants.is_empty() {
+                    let sp = self.tracer.start();
                     let (i, payload) = {
                         let wants = &scratch.wants;
                         self.timer
                             .time("wait", || ep.recv_any(k as u32, Phase::Forward, wants))
                     };
+                    self.tracer
+                        .end(sp, "wait", "fwd", k as u32, NO_CHUNK, 4 * payload.len() as u64);
                     let payload = ep.decode_payload(cf, payload);
                     let si = scratch.want_seg[i];
+                    let chunk = scratch.wants[i].2;
                     scratch.wants.swap_remove(i);
                     scratch.want_seg.swap_remove(i);
                     let z = &mut scratch.pong[..nloc * b];
                     let seg = &sl.mat.remote[si].csr;
+                    let sp = self.tracer.start();
                     self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, z, b));
+                    self.tracer
+                        .end(sp, "spmv.seg", "fwd", k as u32, chunk, 4 * payload.len() as u64);
                     ep.recycle(payload);
                 }
                 // 4. bias + activation once every contribution is in
                 let z = &mut scratch.pong[..nloc * b];
                 let bias = &self.biases[k];
                 let act = self.activation;
+                let sp = self.tracer.start();
                 self.timer.time("spmv", || {
                     let mut epi = act.fused_bias_epilogue(bias);
                     for i in 0..nloc {
                         epi(i, &mut z[i * b..(i + 1) * b]);
                     }
                 });
+                self.tracer.end(sp, "epilogue", "fwd", k as u32, NO_CHUNK, 0);
             }
             std::mem::swap(&mut scratch.ping, &mut scratch.pong);
         }
@@ -183,6 +202,8 @@ impl RankState {
                 let fuse_now = sl.mat.remote.is_empty();
                 {
                     let cur = &acts[k];
+                    let sp = self.tracer.start();
+                    let mut moved = 0u64;
                     self.timer.time("comm", || {
                         for s in &sl.sends {
                             let mut payload = ep.take_buf();
@@ -191,11 +212,14 @@ impl RankState {
                                 let p = p as usize;
                                 payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
                             }
+                            moved += 4 * payload.len() as u64;
                             ep.send_encoded(s.to, k as u32, Phase::Forward, s.tid, 0, cf, payload);
                         }
                     });
+                    self.tracer.end(sp, "send", "fwd", k as u32, NO_CHUNK, moved);
                     let bias = &self.biases[k];
                     let act = self.activation;
+                    let sp = self.tracer.start();
                     self.timer.time("spmv", || {
                         if fuse_now {
                             sl.mat
@@ -205,6 +229,7 @@ impl RankState {
                             sl.mat.local.spmm_fused_rowmajor(cur, &mut z, b, |_, _| {});
                         }
                     });
+                    self.tracer.end(sp, "spmv.local", "fwd", k as u32, NO_CHUNK, 0);
                 }
                 let nsegs = sl.mat.remote.len();
                 let mut lay_payloads: Vec<Vec<f32>> = vec![Vec::new(); nsegs];
@@ -217,7 +242,16 @@ impl RankState {
                         {
                             let payload = ep.decode_payload(cf, payload);
                             let seg = &sl.mat.remote[si].csr;
+                            let sp = self.tracer.start();
                             self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, &mut z, b));
+                            self.tracer.end(
+                                sp,
+                                "spmv.seg",
+                                "fwd",
+                                k as u32,
+                                chunk,
+                                4 * payload.len() as u64,
+                            );
                             lay_payloads[si] = payload;
                         } else {
                             wants.push((src, tid, chunk));
@@ -225,25 +259,40 @@ impl RankState {
                         }
                     }
                     while !wants.is_empty() {
+                        let sp = self.tracer.start();
                         let (i, payload) = self
                             .timer
                             .time("wait", || ep.recv_any(k as u32, Phase::Forward, &wants));
+                        self.tracer
+                            .end(sp, "wait", "fwd", k as u32, NO_CHUNK, 4 * payload.len() as u64);
                         let payload = ep.decode_payload(cf, payload);
                         let si = want_seg[i];
+                        let chunk = wants[i].2;
                         wants.swap_remove(i);
                         want_seg.swap_remove(i);
                         let seg = &sl.mat.remote[si].csr;
+                        let sp = self.tracer.start();
                         self.timer.time("spmv", || seg.spmm_add_rowmajor(&payload, &mut z, b));
+                        self.tracer.end(
+                            sp,
+                            "spmv.seg",
+                            "fwd",
+                            k as u32,
+                            chunk,
+                            4 * payload.len() as u64,
+                        );
                         lay_payloads[si] = payload;
                     }
                     let bias = &self.biases[k];
                     let act = self.activation;
+                    let sp = self.tracer.start();
                     self.timer.time("spmv", || {
                         let mut epi = act.fused_bias_epilogue(bias);
                         for i in 0..nloc {
                             epi(i, &mut z[i * b..(i + 1) * b]);
                         }
                     });
+                    self.tracer.end(sp, "epilogue", "fwd", k as u32, NO_CHUNK, 0);
                 }
                 acts.push(z);
                 payloads.push(lay_payloads);
@@ -283,7 +332,11 @@ impl RankState {
             for seg in &sl.mat.remote {
                 let mut sseg = ep.take_buf();
                 sseg.resize(seg.csr.ncols, 0.0);
+                let sp = self.tracer.start();
                 self.timer.time("spmv", || seg.csr.spmv_t_add(&delta, &mut sseg));
+                self.tracer.end(sp, "spmvt.seg", "bwd", k as u32, seg.chunk, 0);
+                let moved = 4 * sseg.len() as u64;
+                let sp = self.tracer.start();
                 self.timer.time("comm", || {
                     ep.send_encoded(
                         seg.src,
@@ -295,26 +348,34 @@ impl RankState {
                         sseg,
                     )
                 });
+                self.tracer.end(sp, "send", "bwd", k as u32, seg.chunk, moved);
             }
             // 2. local transpose over owned slots
             let mut s_local = vec![0f32; inw];
+            let sp = self.tracer.start();
             self.timer.time("spmv", || sl.mat.local.spmv_t_add(&delta, &mut s_local));
+            self.tracer.end(sp, "spmvt", "bwd", k as u32, NO_CHUNK, 0);
             // 3. weight + bias update in the overlap window, against the
             // batch-mean activations (local compact + per-segment payload)
             let mx_local = row_means(&acts[k], b);
             let mx_segs: Vec<Vec<f32>> = payloads[k].iter().map(|p| row_means(p, b)).collect();
+            let sp = self.tracer.start();
             self.timer.time("updt", || sl.mat.sgd_update(&delta, &mx_local, &mx_segs, eta));
             for (i, d) in delta.iter().enumerate() {
                 self.biases[k][i] -= eta * d;
             }
+            self.tracer.end(sp, "updt", "bwd", k as u32, NO_CHUNK, 0);
             // 4. mirrored receives in arrival order (behind the update)
             if !sl.sends.is_empty() {
                 let mut wants: Vec<Want> =
                     sl.sends.iter().map(|s| (s.to, s.tid, 0)).collect();
                 let mut which: Vec<usize> = (0..sl.sends.len()).collect();
                 while !wants.is_empty() {
+                    let sp = self.tracer.start();
                     let (i, payload) =
                         self.timer.time("wait", || ep.recv_any(k as u32, Phase::Backward, &wants));
+                    self.tracer
+                        .end(sp, "wait", "bwd", k as u32, NO_CHUNK, 4 * payload.len() as u64);
                     let payload = ep.decode_payload(cb, payload);
                     let sj = which[i];
                     wants.swap_remove(i);

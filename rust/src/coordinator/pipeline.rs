@@ -35,6 +35,7 @@
 use super::minibatch::row_means;
 use super::worker::{ChunkSend, RankScratch, RankState, Repr, SplitLayer};
 use crate::comm::{Endpoint, Phase, Want};
+use crate::obs::NO_CHUNK;
 use crate::partition::CommPlan;
 
 /// Interior rows computed per tile between receive polls: small enough to
@@ -83,6 +84,8 @@ impl RankState {
             // layers' inputs were posted during the previous layer's step.
             if k == 0 {
                 let cur = &scratch.ping[..inw * b];
+                let sp = self.tracer.start();
+                let mut moved = 0u64;
                 self.timer.time("comm", || {
                     for s in input_sends {
                         let mut payload = ep.take_buf();
@@ -91,17 +94,21 @@ impl RankState {
                             let p = p as usize;
                             payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
                         }
+                        moved += 4 * payload.len() as u64;
                         ep.send_encoded(s.to, 0, Phase::Forward, s.tid, s.chunk, cf, payload);
                     }
                 });
+                self.tracer.end(sp, "send", "fwd", 0, NO_CHUNK, moved);
             }
             // 1. local pass over the boundary rows only
             {
                 let x = &scratch.ping[..inw * b];
                 let z = &mut scratch.pong[..nloc * b];
+                let sp = self.tracer.start();
                 self.timer.time("spmv", || {
                     sl.mat.local.spmm_fused_range_rowmajor(x, z, b, 0, nb, |_, _| {});
                 });
+                self.tracer.end(sp, "spmv.boundary", "fwd", k as u32, NO_CHUNK, 0);
             }
             // 2. drain arrivals / interleave interior tiles / post outbound
             scratch.wants.clear();
@@ -125,14 +132,19 @@ impl RankState {
                         let bias = &self.biases[k];
                         let act = self.activation;
                         let perm = &pipe.perm;
+                        let sp = self.tracer.start();
                         self.timer.time("spmv", || {
                             let mut epi = act.fused_bias_epilogue(bias);
                             for r in 0..nb {
                                 epi(perm[r] as usize, &mut z[r * b..(r + 1) * b]);
                             }
                         });
+                        self.tracer
+                            .end(sp, "epilogue.boundary", "fwd", k as u32, NO_CHUNK, 0);
                     }
                     let z = &scratch.pong[..nloc * b];
+                    let sp = self.tracer.start();
+                    let mut moved = 0u64;
                     self.timer.time("comm", || {
                         for s in &pipe.out_sends {
                             let mut payload = ep.take_buf();
@@ -141,6 +153,7 @@ impl RankState {
                                 let p = p as usize;
                                 payload.extend_from_slice(&z[p * b..(p + 1) * b]);
                             }
+                            moved += 4 * payload.len() as u64;
                             ep.send_encoded(
                                 s.to,
                                 (k + 1) as u32,
@@ -152,6 +165,7 @@ impl RankState {
                             );
                         }
                     });
+                    self.tracer.end(sp, "post", "fwd", k as u32, NO_CHUNK, moved);
                     posted = true;
                 }
                 if scratch.wants.is_empty() {
@@ -171,8 +185,11 @@ impl RankState {
                         scratch.want_seg.swap_remove(i);
                         let z = &mut scratch.pong[..nloc * b];
                         let seg = &sl.mat.remote[si].csr;
+                        let sp = self.tracer.start();
                         self.timer
                             .time("spmv", || seg.spmm_add_range_rowmajor(&payload, z, b, 0, nb));
+                        self.tracer
+                            .end(sp, "spmv.seg", "fwd", k as u32, chunk, 4 * payload.len() as u64);
                         if pipe.seg_feeds_boundary[si] {
                             boundary_pending -= 1;
                         }
@@ -191,27 +208,37 @@ impl RankState {
                     let hi = (interior_done + INTERIOR_TILE_ROWS).min(nloc);
                     let x = &scratch.ping[..inw * b];
                     let z = &mut scratch.pong[..nloc * b];
+                    let sp = self.tracer.start();
                     self.timer.time("spmv", || {
                         sl.mat
                             .local
                             .spmm_fused_range_rowmajor(x, z, b, interior_done, hi, |_, _| {});
                     });
+                    self.tracer
+                        .end(sp, "spmv.interior", "fwd", k as u32, NO_CHUNK, 0);
                     interior_done = hi;
                     continue;
                 }
+                let sp = self.tracer.start();
                 let (i, payload) = {
                     let wants = &scratch.wants;
                     self.timer
                         .time("wait", || ep.recv_any(k as u32, Phase::Forward, wants))
                 };
+                self.tracer
+                    .end(sp, "wait", "fwd", k as u32, NO_CHUNK, 4 * payload.len() as u64);
                 let payload = ep.decode_payload(cf, payload);
                 let si = scratch.want_seg[i];
+                let chunk = scratch.wants[i].2;
                 scratch.wants.swap_remove(i);
                 scratch.want_seg.swap_remove(i);
                 let z = &mut scratch.pong[..nloc * b];
                 let seg = &sl.mat.remote[si].csr;
+                let sp = self.tracer.start();
                 self.timer
                     .time("spmv", || seg.spmm_add_range_rowmajor(&payload, z, b, 0, nb));
+                self.tracer
+                    .end(sp, "spmv.seg", "fwd", k as u32, chunk, 4 * payload.len() as u64);
                 if pipe.seg_feeds_boundary[si] {
                     boundary_pending -= 1;
                 }
@@ -222,18 +249,23 @@ impl RankState {
             if interior_done < nloc {
                 let x = &scratch.ping[..inw * b];
                 let z = &mut scratch.pong[..nloc * b];
+                let sp = self.tracer.start();
                 self.timer.time("spmv", || {
                     sl.mat
                         .local
                         .spmm_fused_range_rowmajor(x, z, b, interior_done, nloc, |_, _| {});
                 });
+                self.tracer
+                    .end(sp, "spmv.interior", "fwd", k as u32, NO_CHUNK, 0);
             }
             for (si, held) in scratch.held.iter_mut().enumerate() {
                 if let Some(payload) = held.take() {
                     let z = &mut scratch.pong[..nloc * b];
-                    let seg = &sl.mat.remote[si].csr;
+                    let seg = &sl.mat.remote[si];
+                    let sp = self.tracer.start();
                     self.timer
-                        .time("spmv", || seg.spmm_add_range_rowmajor(&payload, z, b, nb, nloc));
+                        .time("spmv", || seg.csr.spmm_add_range_rowmajor(&payload, z, b, nb, nloc));
+                    self.tracer.end(sp, "spmv.seg", "fwd", k as u32, seg.chunk, 0);
                     ep.recycle(payload);
                 }
             }
@@ -242,12 +274,15 @@ impl RankState {
                 let bias = &self.biases[k];
                 let act = self.activation;
                 let perm = &pipe.perm;
+                let sp = self.tracer.start();
                 self.timer.time("spmv", || {
                     let mut epi = act.fused_bias_epilogue(bias);
                     for r in nb..nloc {
                         epi(perm[r] as usize, &mut z[r * b..(r + 1) * b]);
                     }
                 });
+                self.tracer
+                    .end(sp, "epilogue.interior", "fwd", k as u32, NO_CHUNK, 0);
             }
             std::mem::swap(&mut scratch.ping, &mut scratch.pong);
         }
@@ -298,6 +333,8 @@ impl RankState {
                 let mut z = vec![0f32; nloc * b];
                 if k == 0 {
                     let cur = &acts[0];
+                    let sp = self.tracer.start();
+                    let mut moved = 0u64;
                     self.timer.time("comm", || {
                         for s in input_sends {
                             let mut payload = ep.take_buf();
@@ -306,15 +343,20 @@ impl RankState {
                                 let p = p as usize;
                                 payload.extend_from_slice(&cur[p * b..(p + 1) * b]);
                             }
+                            moved += 4 * payload.len() as u64;
                             ep.send_encoded(s.to, 0, Phase::Forward, s.tid, s.chunk, cf, payload);
                         }
                     });
+                    self.tracer.end(sp, "send", "fwd", 0, NO_CHUNK, moved);
                 }
                 {
                     let cur = &acts[k];
+                    let sp = self.tracer.start();
                     self.timer.time("spmv", || {
                         sl.mat.local.spmm_fused_range_rowmajor(cur, &mut z, b, 0, nb, |_, _| {});
                     });
+                    self.tracer
+                        .end(sp, "spmv.boundary", "fwd", k as u32, NO_CHUNK, 0);
                 }
                 let nsegs = sl.mat.remote.len();
                 let mut lay_payloads: Vec<Vec<f32>> = vec![Vec::new(); nsegs];
@@ -331,14 +373,19 @@ impl RankState {
                             let act = self.activation;
                             let perm = &pipe.perm;
                             let zb = &mut z;
+                            let sp = self.tracer.start();
                             self.timer.time("spmv", || {
                                 let mut epi = act.fused_bias_epilogue(bias);
                                 for r in 0..nb {
                                     epi(perm[r] as usize, &mut zb[r * b..(r + 1) * b]);
                                 }
                             });
+                            self.tracer
+                                .end(sp, "epilogue.boundary", "fwd", k as u32, NO_CHUNK, 0);
                         }
                         let zr = &z;
+                        let sp = self.tracer.start();
+                        let mut moved = 0u64;
                         self.timer.time("comm", || {
                             for s in &pipe.out_sends {
                                 let mut payload = ep.take_buf();
@@ -347,6 +394,7 @@ impl RankState {
                                     let p = p as usize;
                                     payload.extend_from_slice(&zr[p * b..(p + 1) * b]);
                                 }
+                                moved += 4 * payload.len() as u64;
                                 ep.send_encoded(
                                     s.to,
                                     (k + 1) as u32,
@@ -358,6 +406,7 @@ impl RankState {
                                 );
                             }
                         });
+                        self.tracer.end(sp, "post", "fwd", k as u32, NO_CHUNK, moved);
                         posted = true;
                     }
                     if wants.is_empty() {
@@ -375,9 +424,18 @@ impl RankState {
                             wants.swap_remove(i);
                             want_seg.swap_remove(i);
                             let seg = &sl.mat.remote[si].csr;
+                            let sp = self.tracer.start();
                             self.timer.time("spmv", || {
                                 seg.spmm_add_range_rowmajor(&payload, &mut z, b, 0, nb)
                             });
+                            self.tracer.end(
+                                sp,
+                                "spmv.seg",
+                                "fwd",
+                                k as u32,
+                                chunk,
+                                4 * payload.len() as u64,
+                            );
                             if pipe.seg_feeds_boundary[si] {
                                 boundary_pending -= 1;
                             }
@@ -393,6 +451,7 @@ impl RankState {
                     if interior_done < nloc {
                         let hi = (interior_done + INTERIOR_TILE_ROWS).min(nloc);
                         let cur = &acts[k];
+                        let sp = self.tracer.start();
                         self.timer.time("spmv", || {
                             sl.mat.local.spmm_fused_range_rowmajor(
                                 cur,
@@ -403,19 +462,28 @@ impl RankState {
                                 |_, _| {},
                             );
                         });
+                        self.tracer
+                            .end(sp, "spmv.interior", "fwd", k as u32, NO_CHUNK, 0);
                         interior_done = hi;
                         continue;
                     }
+                    let sp = self.tracer.start();
                     let (i, payload) = self
                         .timer
                         .time("wait", || ep.recv_any(k as u32, Phase::Forward, &wants));
+                    self.tracer
+                        .end(sp, "wait", "fwd", k as u32, NO_CHUNK, 4 * payload.len() as u64);
                     let payload = ep.decode_payload(cf, payload);
                     let si = want_seg[i];
+                    let chunk = wants[i].2;
                     wants.swap_remove(i);
                     want_seg.swap_remove(i);
                     let seg = &sl.mat.remote[si].csr;
+                    let sp = self.tracer.start();
                     self.timer
                         .time("spmv", || seg.spmm_add_range_rowmajor(&payload, &mut z, b, 0, nb));
+                    self.tracer
+                        .end(sp, "spmv.seg", "fwd", k as u32, chunk, 4 * payload.len() as u64);
                     if pipe.seg_feeds_boundary[si] {
                         boundary_pending -= 1;
                     }
@@ -423,6 +491,7 @@ impl RankState {
                 }
                 if interior_done < nloc {
                     let cur = &acts[k];
+                    let sp = self.tracer.start();
                     self.timer.time("spmv", || {
                         sl.mat.local.spmm_fused_range_rowmajor(
                             cur,
@@ -433,23 +502,30 @@ impl RankState {
                             |_, _| {},
                         );
                     });
+                    self.tracer
+                        .end(sp, "spmv.interior", "fwd", k as u32, NO_CHUNK, 0);
                 }
                 for (si, p) in lay_payloads.iter().enumerate() {
-                    let seg = &sl.mat.remote[si].csr;
+                    let seg = &sl.mat.remote[si];
+                    let sp = self.tracer.start();
                     self.timer
-                        .time("spmv", || seg.spmm_add_range_rowmajor(p, &mut z, b, nb, nloc));
+                        .time("spmv", || seg.csr.spmm_add_range_rowmajor(p, &mut z, b, nb, nloc));
+                    self.tracer.end(sp, "spmv.seg", "fwd", k as u32, seg.chunk, 0);
                 }
                 {
                     let bias = &self.biases[k];
                     let act = self.activation;
                     let perm = &pipe.perm;
                     let zb = &mut z;
+                    let sp = self.tracer.start();
                     self.timer.time("spmv", || {
                         let mut epi = act.fused_bias_epilogue(bias);
                         for r in nb..nloc {
                             epi(perm[r] as usize, &mut zb[r * b..(r + 1) * b]);
                         }
                     });
+                    self.tracer
+                        .end(sp, "epilogue.interior", "fwd", k as u32, NO_CHUNK, 0);
                 }
                 acts.push(z);
                 payloads.push(lay_payloads);
@@ -495,7 +571,11 @@ impl RankState {
                 for seg in &mat.remote {
                     let mut sseg = ep.take_buf();
                     sseg.resize(seg.csr.ncols, 0.0);
+                    let sp = self.tracer.start();
                     self.timer.time("spmv", || seg.csr.spmv_t_add(&delta, &mut sseg));
+                    self.tracer.end(sp, "spmvt.seg", "bwd", k as u32, seg.chunk, 0);
+                    let moved = 4 * sseg.len() as u64;
+                    let sp = self.tracer.start();
                     self.timer.time("comm", || {
                         ep.send_encoded(
                             seg.src,
@@ -507,21 +587,26 @@ impl RankState {
                             sseg,
                         )
                     });
+                    self.tracer.end(sp, "send", "bwd", k as u32, seg.chunk, moved);
                 }
                 // 2. local transpose over the compact input slots
                 let mut s_local = vec![0f32; inw];
+                let sp = self.tracer.start();
                 self.timer.time("spmv", || mat.local.spmv_t_add(&delta, &mut s_local));
+                self.tracer.end(sp, "spmvt", "bwd", k as u32, NO_CHUNK, 0);
                 // 3. weight + bias update in the overlap window, against
                 // the batch-mean activations (delta and the split rows
                 // share the permuted layout; biases are canonical, so the
                 // bias index goes through perm)
                 let mx_local = row_means(&acts[k], b);
                 let mx_segs: Vec<Vec<f32>> = payloads[k].iter().map(|p| row_means(p, b)).collect();
+                let sp = self.tracer.start();
                 self.timer
                     .time("updt", || mat.sgd_update(&delta, &mx_local, &mx_segs, eta));
                 for (r, d) in delta.iter().enumerate() {
                     self.biases[k][pipe.perm[r] as usize] -= eta * d;
                 }
+                self.tracer.end(sp, "updt", "bwd", k as u32, NO_CHUNK, 0);
                 (inw, mx_local, s_local)
             };
             // 4. mirrored receives in arrival order (behind the update):
@@ -546,9 +631,12 @@ impl RankState {
                     in_sends.iter().map(|s| (s.to, s.tid, s.chunk)).collect();
                 let mut which: Vec<usize> = (0..in_sends.len()).collect();
                 while !wants.is_empty() {
+                    let sp = self.tracer.start();
                     let (i, payload) = self
                         .timer
                         .time("wait", || ep.recv_any(k as u32, Phase::Backward, &wants));
+                    self.tracer
+                        .end(sp, "wait", "bwd", k as u32, NO_CHUNK, 4 * payload.len() as u64);
                     let payload = ep.decode_payload(cb, payload);
                     let sj = which[i];
                     wants.swap_remove(i);

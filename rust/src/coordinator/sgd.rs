@@ -9,6 +9,7 @@
 
 use super::worker::{ExecMode, RankState};
 use crate::dnn::SparseNet;
+use crate::obs::{TraceMode, Tracer};
 use crate::partition::{CommPlan, DnnPartition};
 use crate::runtime::parallel;
 use crate::util::PhaseTimer;
@@ -69,12 +70,42 @@ pub fn run_with_plan_mode(
     epochs: usize,
     mode: ExecMode,
 ) -> TrainRun {
+    run_with_plan_mode_traced(
+        net,
+        part,
+        plan,
+        inputs,
+        targets,
+        eta,
+        epochs,
+        mode,
+        TraceMode::from_env(),
+    )
+    .0
+}
+
+/// [`run_with_plan_mode`] with an explicit [`TraceMode`], returning the
+/// per-rank flight recorders alongside the run — the `spdnn trace` CLI
+/// and the trace tests drive this directly instead of going through the
+/// `SPDNN_TRACE` environment contract.
+#[allow(clippy::too_many_arguments)]
+pub fn run_with_plan_mode_traced(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    eta: f32,
+    epochs: usize,
+    mode: ExecMode,
+    trace: TraceMode,
+) -> (TrainRun, Vec<Tracer>) {
     assert_eq!(inputs.len(), targets.len());
     let nparts = part.nparts;
     let steps = inputs.len() * epochs;
 
     let run = parallel::run_ranks(nparts, |rank, ep| {
-        let mut state = RankState::build(net, part, plan, rank as u32, mode);
+        let mut state = RankState::build_traced(net, part, plan, rank as u32, mode, trace);
         let mut local_losses = Vec::with_capacity(steps);
         for _ in 0..epochs {
             for (x, y) in inputs.iter().zip(targets.iter()) {
@@ -90,18 +121,23 @@ pub fn run_with_plan_mode(
     let sent = run.sent;
     let mut out = net.clone();
     let mut losses = vec![0f32; steps];
-    for (state, local_losses) in run.outputs {
+    let mut tracers = Vec::with_capacity(nparts);
+    for (mut state, local_losses) in run.outputs {
+        tracers.push(std::mem::take(&mut state.tracer));
         state.merge_into(&mut out);
         for (i, l) in local_losses.into_iter().enumerate() {
             losses[i] += l;
         }
     }
-    TrainRun {
-        net: out,
-        losses,
-        sent,
-        timer,
-    }
+    (
+        TrainRun {
+            net: out,
+            losses,
+            sent,
+            timer,
+        },
+        tracers,
+    )
 }
 
 /// Distributed batched inference (H-SpFF with SpMM): returns the output
@@ -146,16 +182,41 @@ pub fn infer_with_plan_mode(
     b: usize,
     mode: ExecMode,
 ) -> (Vec<f32>, Vec<(u64, u64)>) {
+    let (out, sent, _) =
+        infer_with_plan_mode_traced(net, part, plan, x0, b, mode, TraceMode::from_env());
+    (out, sent)
+}
+
+/// [`infer_with_plan_mode`] with an explicit [`TraceMode`], returning the
+/// per-rank flight recorders alongside the output — each tracer's spans
+/// reconstruct that rank's send/compute/recv interleaving for the layer
+/// schedule that produced the result.
+pub fn infer_with_plan_mode_traced(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    x0: &[f32],
+    b: usize,
+    mode: ExecMode,
+    trace: TraceMode,
+) -> (Vec<f32>, Vec<(u64, u64)>, Vec<Tracer>) {
     let nparts = part.nparts;
     let run = parallel::run_ranks(nparts, |rank, ep| {
-        let mut state = RankState::build(net, part, plan, rank as u32, mode);
+        let mut state = RankState::build_traced(net, part, plan, rank as u32, mode, trace);
         let mut scratch = crate::coordinator::worker::RankScratch::new();
-        state.infer_owned_outputs(ep, plan, x0, b, &mut scratch)
+        let rows = state.infer_owned_outputs(ep, plan, x0, b, &mut scratch);
+        (rows, std::mem::take(&mut state.tracer))
     })
     .unwrap_or_else(|f| panic!("distributed inference failed: {f}"));
 
-    let output = assemble_outputs(net.output_dim(), b, &run.outputs);
-    (output, run.sent)
+    let mut rows = Vec::with_capacity(nparts);
+    let mut tracers = Vec::with_capacity(nparts);
+    for (r, t) in run.outputs {
+        rows.push(r);
+        tracers.push(t);
+    }
+    let output = assemble_outputs(net.output_dim(), b, &rows);
+    (output, run.sent, tracers)
 }
 
 /// Scatter per-rank owned output rows into the global `[nL × b]` row-major

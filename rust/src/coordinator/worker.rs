@@ -30,6 +30,7 @@
 
 use crate::comm::{Codec, Endpoint, Phase, Want};
 use crate::dnn::{Activation, Loss, SparseNet};
+use crate::obs::{TraceMode, Tracer, NO_CHUNK};
 use crate::partition::{CommPlan, DnnPartition};
 use crate::sparse::{regroup_rows, Csr, RowRegroup, SplitCsr};
 use crate::util::PhaseTimer;
@@ -192,6 +193,10 @@ pub struct RankState {
     /// "comm" is send-side work, "wait" is time actually blocked on
     /// receives — the component the overlapped engine hides.
     pub timer: PhaseTimer,
+    /// Flight recorder: per-layer/per-chunk spans when tracing is on
+    /// (see [`crate::obs`]); a zero-capacity no-op when built with
+    /// [`TraceMode::Off`].
+    pub tracer: Tracer,
 }
 
 /// Reusable per-rank inference buffers, sized lazily to the largest
@@ -246,12 +251,29 @@ impl RankState {
     /// Carve this rank's slice out of the full model, compiled for `mode`.
     /// The communication plan is part of the build because the overlapped
     /// engine's split matrices are derived from the inbound transfer lists.
+    /// Tracing follows the process-wide `SPDNN_TRACE` contract
+    /// ([`TraceMode::from_env`], off by default); use
+    /// [`RankState::build_traced`] for explicit control.
     pub fn build(
         net: &SparseNet,
         part: &DnnPartition,
         plan: &CommPlan,
         rank: u32,
         mode: ExecMode,
+    ) -> Self {
+        Self::build_traced(net, part, plan, rank, mode, TraceMode::from_env())
+    }
+
+    /// [`RankState::build`] with an explicit [`TraceMode`]. Pass the SAME
+    /// mode value to every rank — the `On` variant carries the shared
+    /// clock epoch that puts all ranks on one timeline.
+    pub fn build_traced(
+        net: &SparseNet,
+        part: &DnnPartition,
+        plan: &CommPlan,
+        rank: u32,
+        mode: ExecMode,
+        trace: TraceMode,
     ) -> Self {
         let mut rows = Vec::with_capacity(net.depth());
         let mut blocks = Vec::with_capacity(net.depth());
@@ -473,6 +495,7 @@ impl RankState {
             input_rows,
             dims,
             timer: PhaseTimer::new(),
+            tracer: Tracer::new(trace, rank),
         }
     }
 
@@ -510,36 +533,46 @@ impl RankState {
             let me = self.rank as usize;
             let cf = self.codecs[k].0;
             // non-blocking sends of owned x^{k} entries (Alg. 2 lines 3–5)
+            let sp = self.tracer.start();
+            let mut moved = 0u64;
             self.timer.time("comm", || {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let mut payload = ep.take_buf();
                     payload.extend(t.indices.iter().map(|&j| xbuf[k][j as usize]));
+                    moved += 4 * payload.len() as u64;
                     ep.send_encoded(t.to, k as u32, Phase::Forward, tid, 0, cf, payload);
                 }
             });
+            self.tracer.end(sp, "send", "fwd", k as u32, NO_CHUNK, moved);
             // receives (Alg. 2 lines 7–8); blocking mode receives before
             // the single fused SpMV — the stall the overlapped engine
             // hides.
             let mut xk = std::mem::take(&mut xbuf[k]);
+            let sp = self.tracer.start();
+            let mut moved = 0u64;
             self.timer.time("wait", || {
                 for &tid in &lp.recv_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.from, k as u32, Phase::Forward, tid);
                     let payload = ep.decode_payload(cf, payload);
+                    moved += 4 * payload.len() as u64;
                     for (i, &j) in t.indices.iter().enumerate() {
                         xk[j as usize] = payload[i];
                     }
                     ep.recycle(payload);
                 }
             });
+            self.tracer.end(sp, "wait", "fwd", k as u32, NO_CHUNK, moved);
             xbuf[k] = xk;
             // local SpMV + bias + activation (Alg. 2 lines 6, 10)
             let mut out = vec![0f32; self.dims[k + 1]];
             let mut z = vec![0f32; blocks[k].nrows];
+            let sp = self.tracer.start();
             self.timer.time("spmv", || {
                 blocks[k].spmv(&xbuf[k], &mut z);
             });
+            self.tracer.end(sp, "spmv", "fwd", k as u32, NO_CHUNK, 0);
             for (i, zi) in z.iter_mut().enumerate() {
                 *zi += self.biases[k][i];
             }
@@ -605,39 +638,51 @@ impl RankState {
             let cb = self.codecs[k].1;
             // s = (W^k_m)ᵀ δ^k_m (Alg. 3 line 4)
             let mut s = vec![0f32; blocks[k].ncols];
+            let sp = self.tracer.start();
             self.timer.time("spmv", || {
                 blocks[k].spmv_t_add(&delta, &mut s);
             });
+            self.tracer.end(sp, "spmvt", "bwd", k as u32, NO_CHUNK, 0);
             // non-blocking sends of partial gradients (lines 5–7):
             // mirror of forward receives.
+            let sp = self.tracer.start();
+            let mut moved = 0u64;
             self.timer.time("comm", || {
                 for &tid in &lp.recv_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let mut payload = ep.take_buf();
                     payload.extend(t.indices.iter().map(|&j| s[j as usize]));
+                    moved += 4 * payload.len() as u64;
                     ep.send_encoded(t.from, k as u32, Phase::Backward, tid, 0, cb, payload);
                 }
             });
+            self.tracer.end(sp, "send", "bwd", k as u32, NO_CHUNK, moved);
             // overlap window: weight + bias update (lines 8–9) uses x^{k-1}
             // including entries received during the forward phase.
+            let sp = self.tracer.start();
             self.timer.time("updt", || {
                 blocks[k].sgd_update(&delta, &xbuf[k], eta);
             });
+            self.tracer.end(sp, "updt", "bwd", k as u32, NO_CHUNK, 0);
             for (i, d) in delta.iter().enumerate() {
                 self.biases[k][i] -= eta * d;
             }
             // receive partial gradients (lines 10–12): mirror of fwd sends.
+            let sp = self.tracer.start();
+            let mut moved = 0u64;
             self.timer.time("wait", || {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.to, k as u32, Phase::Backward, tid);
                     let payload = ep.decode_payload(cb, payload);
+                    moved += 4 * payload.len() as u64;
                     for (i, &j) in t.indices.iter().enumerate() {
                         s[j as usize] += payload[i];
                     }
                     ep.recycle(payload);
                 }
             });
+            self.tracer.end(sp, "wait", "bwd", k as u32, NO_CHUNK, moved);
             // δ^{k-1} = s ⊙ f'(z^{k-1}) on owned rows of layer k-1 (line 13)
             if k > 0 {
                 let owned = &self.rows[k - 1];
@@ -733,6 +778,8 @@ impl RankState {
             let me = self.rank as usize;
             let cf = self.codecs[k].0;
             let cur = &mut scratch.ping;
+            let sp = self.tracer.start();
+            let mut moved = 0u64;
             self.timer.time("comm", || {
                 for &tid in &lp.send_of[me] {
                     let t = &lp.transfers[tid as usize];
@@ -742,14 +789,19 @@ impl RankState {
                         let j = j as usize;
                         payload.extend_from_slice(&cur[j * b..(j + 1) * b]);
                     }
+                    moved += 4 * payload.len() as u64;
                     ep.send_encoded(t.to, k as u32, Phase::Forward, tid, 0, cf, payload);
                 }
             });
+            self.tracer.end(sp, "send", "fwd", k as u32, NO_CHUNK, moved);
+            let sp = self.tracer.start();
+            let mut moved = 0u64;
             self.timer.time("wait", || {
                 for &tid in &lp.recv_of[me] {
                     let t = &lp.transfers[tid as usize];
                     let payload = ep.recv(t.from, k as u32, Phase::Forward, tid);
                     let payload = ep.decode_payload(cf, payload);
+                    moved += 4 * payload.len() as u64;
                     for (i, &j) in t.indices.iter().enumerate() {
                         let j = j as usize;
                         cur[j * b..(j + 1) * b].copy_from_slice(&payload[i * b..(i + 1) * b]);
@@ -757,6 +809,7 @@ impl RankState {
                     ep.recycle(payload);
                 }
             });
+            self.tracer.end(sp, "wait", "fwd", k as u32, NO_CHUNK, moved);
             // fused row-block SpMM: bias + activation applied per cache
             // tile inside the accumulation pass
             let blk = &blocks[k];
@@ -764,9 +817,11 @@ impl RankState {
             let act = self.activation;
             let xin = &scratch.ping[..blk.ncols * b];
             let z = &mut scratch.z[..blk.nrows * b];
+            let sp = self.tracer.start();
             self.timer.time("spmv", || {
                 blk.spmm_fused_rowmajor(xin, z, b, act.fused_bias_epilogue(bias));
             });
+            self.tracer.end(sp, "spmv", "fwd", k as u32, NO_CHUNK, 0);
             for (i, &r) in self.rows[k].iter().enumerate() {
                 let r = r as usize;
                 scratch.pong[r * b..(r + 1) * b].copy_from_slice(&scratch.z[i * b..(i + 1) * b]);

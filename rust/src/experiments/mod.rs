@@ -9,6 +9,7 @@ pub mod graphchallenge;
 pub mod table1;
 pub mod table2;
 pub mod table3;
+pub mod trace;
 
 use crate::partition::phases::{hypergraph_partition, PhaseConfig};
 use crate::partition::random::random_partition;

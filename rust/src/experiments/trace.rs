@@ -1,0 +1,283 @@
+//! `spdnn trace` — flight-recorder capture driver: run a digits inference
+//! workload with per-rank tracing forced on, export the spans as Chrome
+//! trace-event JSON (Perfetto-loadable), and report span coverage plus a
+//! replay-vs-measured drift check.
+//!
+//! The driver wraps every inference pass in a rank-level `pass` span, so
+//! the union of each rank's spans covers the whole serving window — the
+//! CI trace-smoke step asserts coverage ≥ 0.90 on the emitted JSON. The
+//! drift report compares the α-β replay model's predicted compute/comm
+//! seconds ([`crate::coordinator::replay`]) against the live per-phase
+//! timers the same run measured, closing the loop between the simulated
+//! results (Fig. 4/5, Table 2) and real span timings.
+
+use crate::comm::netmodel::ComputeModel;
+use crate::comm::Codec;
+use crate::coordinator::{replay, ExecMode, RankScratch, RankState, ReplayConfig};
+use crate::data::synthetic_mnist;
+use crate::obs::{chrome_trace_json, span_coverage, TraceMode, NO_CHUNK, NO_LAYER};
+use crate::partition::{contiguous_partition, CommPlan};
+use crate::radixnet::{generate, RadixNetConfig};
+use crate::runtime::parallel::run_ranks;
+use crate::util::{PhaseTimer, Stopwatch};
+
+/// Workload shape for one trace capture.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    pub neurons: usize,
+    pub layers: usize,
+    pub ranks: usize,
+    /// Columns per inference batch.
+    pub batch: usize,
+    /// Batched passes traced back-to-back.
+    pub passes: usize,
+    pub mode: ExecMode,
+    pub codec: Codec,
+    /// Ring capacity per rank (spans); the oldest spans drop on overflow.
+    pub capacity: usize,
+    /// Measure real per-nnz rates for the drift report (the CLI default);
+    /// `false` uses the Haswell defaults — cheap enough for tests.
+    pub calibrate: bool,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            neurons: 1024,
+            layers: 24,
+            ranks: 4,
+            batch: 16,
+            passes: 8,
+            mode: ExecMode::pipelined(),
+            codec: Codec::F32,
+            capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
+            calibrate: true,
+        }
+    }
+}
+
+/// Replay-model prediction vs measured per-phase seconds for the traced
+/// run. "Measured" takes the per-phase **maximum over ranks** (the
+/// critical-path proxy the replay's per-layer barrier models); ratios
+/// above 1.0 mean the live run was slower than the α-β model predicts.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceDrift {
+    pub measured_spmv_secs: f64,
+    pub modeled_spmv_secs: f64,
+    pub measured_comm_secs: f64,
+    pub modeled_comm_secs: f64,
+}
+
+impl TraceDrift {
+    pub fn spmv_ratio(&self) -> f64 {
+        self.measured_spmv_secs / self.modeled_spmv_secs.max(1e-12)
+    }
+
+    pub fn comm_ratio(&self) -> f64 {
+        self.measured_comm_secs / self.modeled_comm_secs.max(1e-12)
+    }
+}
+
+/// Everything one capture produced: the Chrome trace JSON plus the
+/// numbers the CLI prints and CI gates on.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub mode: &'static str,
+    pub ranks: usize,
+    pub batch: usize,
+    pub passes: usize,
+    pub wall_secs: f64,
+    /// Per-rank span coverage of `[first span, last span]` (union-merged).
+    pub coverage: Vec<f64>,
+    /// Total spans recorded across ranks (post-wrap survivors).
+    pub spans: usize,
+    /// Spans overwritten by ring wraps, summed over ranks.
+    pub dropped: u64,
+    pub drift: TraceDrift,
+    /// Chrome trace-event JSON with an `"spdnn"` metadata key.
+    pub json: String,
+}
+
+impl TraceReport {
+    /// The smallest per-rank coverage — the number CI gates on.
+    pub fn min_coverage(&self) -> f64 {
+        self.coverage.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Capture one trace: generate the RadixNet, partition contiguously, run
+/// `passes` batched inference passes with tracing forced on (independent
+/// of `SPDNN_TRACE`), and assemble the report.
+pub fn run(cfg: &TraceConfig) -> TraceReport {
+    let net = generate(
+        &RadixNetConfig::graph_challenge(cfg.neurons, cfg.layers)
+            .unwrap_or_else(|| panic!("unsupported neuron count {}", cfg.neurons)),
+    );
+    let side = (cfg.neurons as f64).sqrt() as usize;
+    assert_eq!(side * side, cfg.neurons, "neurons must be a square");
+    let data = synthetic_mnist(side, cfg.batch, 42);
+    let (x0, b) = data.pack_batch(0, cfg.batch);
+    let part = contiguous_partition(&net.layers, cfg.ranks);
+    let mut plan = CommPlan::build(&net.layers, &part);
+    plan.set_codec(cfg.codec, cfg.codec);
+
+    // one mode value for every rank: the shared epoch puts all rank
+    // tracks on a single timeline in the exported JSON
+    let trace = TraceMode::with_capacity(cfg.capacity);
+    let mode = cfg.mode;
+    let passes = cfg.passes;
+    let sw = Stopwatch::start();
+    let run = run_ranks(cfg.ranks, |rank, ep| {
+        let mut state = RankState::build_traced(&net, &part, &plan, rank as u32, mode, trace);
+        let mut scratch = RankScratch::new();
+        for _ in 0..passes {
+            let sp = state.tracer.start();
+            let _ = state.infer_owned_outputs(ep, &plan, &x0, b, &mut scratch);
+            state.tracer.end(sp, "pass", "drv", NO_LAYER, NO_CHUNK, 0);
+        }
+        state
+    })
+    .unwrap_or_else(|f| panic!("trace run failed: {f}"));
+    let wall_secs = sw.elapsed_secs();
+
+    // drift: replay the same plan through the α-β + calibrated-rate model
+    let comp = if cfg.calibrate {
+        ComputeModel::calibrate()
+    } else {
+        ComputeModel::haswell_defaults()
+    };
+    let modeled = replay(&net.layers, &part, &plan, &ReplayConfig::inference(comp, b));
+    let mut maxed = PhaseTimer::new();
+    for state in &run.outputs {
+        maxed.merge_max(&state.timer);
+    }
+    let drift = TraceDrift {
+        measured_spmv_secs: maxed.get_secs("spmv"),
+        modeled_spmv_secs: modeled.spmv * passes as f64,
+        measured_comm_secs: maxed.get_secs("comm") + maxed.get_secs("wait"),
+        modeled_comm_secs: modeled.comm * passes as f64,
+    };
+
+    let tracks: Vec<(String, Vec<crate::obs::Span>)> = run
+        .outputs
+        .iter()
+        .map(|state| (format!("rank {}", state.tracer.rank()), state.tracer.spans()))
+        .collect();
+    let coverage: Vec<f64> = tracks.iter().map(|(_, s)| span_coverage(s)).collect();
+    let spans: usize = tracks.iter().map(|(_, s)| s.len()).sum();
+    let dropped: u64 = run.outputs.iter().map(|state| state.tracer.dropped()).sum();
+
+    let chrome = chrome_trace_json(&tracks);
+    let min_cov = coverage.iter().copied().fold(f64::INFINITY, f64::min);
+    let cov_list: Vec<String> = coverage.iter().map(|c| format!("{c:.4}")).collect();
+    let meta = format!(
+        "\"spdnn\":{{\"mode\":\"{}\",\"neurons\":{},\"layers\":{},\"ranks\":{},\"batch\":{},\
+         \"passes\":{},\"wall_secs\":{:.6},\"spans\":{},\"dropped\":{},\"coverage\":{:.4},\
+         \"coverage_per_rank\":[{}],\"drift\":{{\"measured_spmv_secs\":{:.6},\
+         \"modeled_spmv_secs\":{:.6},\"spmv_ratio\":{:.3},\"measured_comm_secs\":{:.6},\
+         \"modeled_comm_secs\":{:.6},\"comm_ratio\":{:.3}}}}}",
+        cfg.mode.label(),
+        cfg.neurons,
+        cfg.layers,
+        cfg.ranks,
+        b,
+        passes,
+        wall_secs,
+        spans,
+        dropped,
+        min_cov,
+        cov_list.join(","),
+        drift.measured_spmv_secs,
+        drift.modeled_spmv_secs,
+        drift.spmv_ratio(),
+        drift.measured_comm_secs,
+        drift.modeled_comm_secs,
+        drift.comm_ratio(),
+    );
+    // splice the metadata key into the Chrome JSON object
+    let json = format!("{{{meta},{}", &chrome[1..]);
+
+    TraceReport {
+        mode: cfg.mode.label(),
+        ranks: cfg.ranks,
+        batch: b,
+        passes,
+        wall_secs,
+        coverage,
+        spans,
+        dropped,
+        drift,
+        json,
+    }
+}
+
+/// Human summary for the CLI.
+pub fn render(rep: &TraceReport) -> String {
+    format!(
+        "{} engine, {} ranks × {} passes (b={}): {:.3}s wall\n\
+         spans: {} recorded, {} dropped | min rank coverage {:.1}%\n\
+         drift vs replay model: spmv {:.3}s measured / {:.3}s modeled ({:.2}x), \
+         comm {:.3}s / {:.3}s ({:.2}x)",
+        rep.mode,
+        rep.ranks,
+        rep.passes,
+        rep.batch,
+        rep.wall_secs,
+        rep.spans,
+        rep.dropped,
+        rep.min_coverage() * 100.0,
+        rep.drift.measured_spmv_secs,
+        rep.drift.modeled_spmv_secs,
+        rep.drift.spmv_ratio(),
+        rep.drift.measured_comm_secs,
+        rep.drift.modeled_comm_secs,
+        rep.drift.comm_ratio(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TraceConfig {
+        TraceConfig {
+            neurons: 64,
+            layers: 3,
+            ranks: 2,
+            batch: 4,
+            passes: 2,
+            mode: ExecMode::Overlap,
+            codec: Codec::F32,
+            capacity: 4096,
+            calibrate: false,
+        }
+    }
+
+    #[test]
+    fn capture_produces_covered_chrome_json() {
+        let rep = run(&tiny());
+        assert!(rep.spans > 0, "no spans recorded");
+        assert_eq!(rep.coverage.len(), 2);
+        // the per-pass driver spans alone cover the whole window
+        assert!(rep.min_coverage() > 0.9, "coverage {}", rep.min_coverage());
+        assert!(rep.json.contains("\"traceEvents\""));
+        assert!(rep.json.contains("\"spdnn\""));
+        assert!(rep.json.contains("\"coverage\""));
+        assert!(rep.json.contains("\"name\":\"pass\""));
+        assert!(rep.drift.modeled_spmv_secs > 0.0);
+    }
+
+    #[test]
+    fn pipelined_capture_reconstructs_schedule() {
+        let mut cfg = tiny();
+        cfg.mode = ExecMode::pipelined();
+        let rep = run(&cfg);
+        // the pipelined engine's signature spans are all present
+        for name in ["spmv.boundary", "post", "epilogue.interior"] {
+            assert!(
+                rep.json.contains(&format!("\"name\":\"{name}\"")),
+                "missing span {name}"
+            );
+        }
+    }
+}

@@ -31,6 +31,7 @@ pub mod hypergraph;
 pub mod partition;
 pub mod dnn;
 pub mod experiments;
+pub mod obs;
 pub mod radixnet;
 pub mod runtime;
 pub mod serving;

@@ -14,13 +14,18 @@
 //! spdnn graphchallenge [--neurons 1024] [--layers 32] [--ranks 4] [--batch 64] [--inputs 256]
 //!                  [--modes blocking,overlap,pipelined] [--codecs f32,f16] [--no-pool]
 //!                  [--out BENCH_graphchallenge.json] [--full]
+//! spdnn trace      [--neurons 1024] [--layers 24] [--ranks 4] [--batch 16] [--passes 8]
+//!                  [--mode pipelined] [--codec f32] [--capacity 65536] [--out TRACE_<mode>.json]
 //! spdnn calibrate
 //! ```
 //!
 //! `--full` switches to the paper's full grid (slow on one core; for
 //! `graphchallenge` it streams the challenge's 60 000 inputs). The wire
 //! codec also reads the `SPDNN_CODEC` env var when `--codec` is absent.
-//! See the README's CLI reference section for the shared flags.
+//! `trace` writes Chrome trace-event JSON (open in Perfetto or
+//! `chrome://tracing`) with span coverage and a replay-drift report under
+//! the `"spdnn"` key. See the README's CLI reference section for the
+//! shared flags, and `docs/OBSERVABILITY.md` for `SPDNN_TRACE`/`SPDNN_LOG`.
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::comm::Codec;
@@ -29,7 +34,8 @@ use spdnn::coordinator::sgd::{infer_with_plan_mode, run_with_plan};
 use spdnn::coordinator::ExecMode;
 use spdnn::data::synthetic_mnist;
 use spdnn::experiments::{
-    self, ablation, fig4_scaling, fig5_breakdown, graphchallenge, table1, table2, table3, Method,
+    self, ablation, fig4_scaling, fig5_breakdown, graphchallenge, table1, table2, table3, trace,
+    Method,
 };
 use spdnn::partition::metrics::PartitionMetrics;
 use spdnn::partition::CommPlan;
@@ -56,6 +62,7 @@ fn main() {
         "infer" => cmd_infer(&args),
         "partition" => cmd_partition(&args),
         "graphchallenge" => cmd_graphchallenge(&args),
+        "trace" => cmd_trace(&args),
         "calibrate" => cmd_calibrate(),
         _ => help(),
     }
@@ -64,7 +71,7 @@ fn main() {
 fn help() {
     println!("spdnn — Partitioning Sparse DNNs (ICS'21) reproduction");
     println!("experiments: table1 | scaling | breakdown | throughput | ptimes | ablate | codec");
-    println!("workloads:   train | infer | partition | graphchallenge | calibrate");
+    println!("workloads:   train | infer | partition | graphchallenge | trace | calibrate");
     println!("see `rust/src/main.rs` header or README.md for flags");
 }
 
@@ -232,13 +239,15 @@ fn cmd_train(args: &Args) {
         "r" | "random" => Method::Random,
         _ => Method::Hypergraph,
     };
-    eprintln!(
+    spdnn::log!(
+        Info,
         "partitioning N={n} L={layers} into {ranks} ranks ({})...",
         method.label()
     );
     let part = experiments::partition_with(&structure, method, ranks, 1);
     let m = PartitionMetrics::compute(&structure, &part);
-    eprintln!(
+    spdnn::log!(
+        Info,
         "partition: avg vol {:.1} Kwords/iter, imb {:.3}",
         m.avg_volume() / 1e3,
         m.comp_imbalance()
@@ -358,6 +367,32 @@ fn cmd_graphchallenge(args: &Args) {
     let out = args.get_str("out", "BENCH_graphchallenge.json");
     std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
     println!("wrote {out}: {json}");
+}
+
+fn cmd_trace(args: &Args) {
+    let mode_spec = args.get_str("mode", "pipelined");
+    let mode = ExecMode::from_name(&mode_spec).unwrap_or_else(|| {
+        panic!("unknown mode '{mode_spec}' (expected blocking | overlap | pipelined)")
+    });
+    let cfg = trace::TraceConfig {
+        neurons: args.get_usize("neurons", 1024),
+        layers: args.get_usize("layers", 24),
+        ranks: args.get_usize("ranks", 4),
+        batch: args.get_usize("batch", 16),
+        passes: args.get_usize("passes", 8),
+        mode,
+        codec: codec_of(args),
+        capacity: args.get_usize("capacity", spdnn::obs::DEFAULT_TRACE_CAPACITY),
+        calibrate: !args.get_bool("no-calibrate", false),
+    };
+    let rep = trace::run(&cfg);
+    println!("{}", trace::render(&rep));
+    let out = args.get_str("out", &format!("TRACE_{}.json", rep.mode));
+    std::fs::write(&out, &rep.json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!(
+        "wrote {out} ({} spans) — open in Perfetto or chrome://tracing",
+        rep.spans
+    );
 }
 
 fn cmd_partition(args: &Args) {

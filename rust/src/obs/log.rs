@@ -1,0 +1,109 @@
+//! Leveled, structured diagnostics gated by `SPDNN_LOG`.
+//!
+//! The [`crate::log!`] macro (re-exported as `obs::log!`) replaces the
+//! scattered `eprintln!` diagnostics: every line is prefixed with
+//! `[spdnn:<level>]` and the whole channel can be silenced with
+//! `SPDNN_LOG=off` (useful in tests) or widened with `SPDNN_LOG=debug`.
+//! The default level is `info`, matching the output the crate printed
+//! before the macro existed.
+
+/// Severity of a [`crate::log!`] line, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    /// Unrecoverable or data-losing conditions.
+    Error,
+    /// Degraded but self-healing conditions (e.g. generation respawn).
+    Warn,
+    /// Progress notes previously printed unconditionally.
+    Info,
+    /// High-volume detail (phase profiles), off by default.
+    Debug,
+}
+
+impl LogLevel {
+    /// Short lowercase label used in the line prefix.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+
+    fn rank(&self) -> u8 {
+        match self {
+            LogLevel::Error => 1,
+            LogLevel::Warn => 2,
+            LogLevel::Info => 3,
+            LogLevel::Debug => 4,
+        }
+    }
+}
+
+/// Maximum enabled severity rank, parsed once from `SPDNN_LOG`:
+/// `off`/`none`/`silent` → 0 (everything suppressed), `error`/`warn`/
+/// `info`/`debug` → that level and above; unset or unrecognized → `info`.
+fn max_rank() -> u8 {
+    use std::sync::OnceLock;
+    static MAX: OnceLock<u8> = OnceLock::new();
+    *MAX.get_or_init(
+        || match std::env::var("SPDNN_LOG").ok().as_deref().map(str::trim) {
+            Some("off") | Some("none") | Some("silent") | Some("0") => 0,
+            Some("error") => LogLevel::Error.rank(),
+            Some("warn") => LogLevel::Warn.rank(),
+            Some("debug") => LogLevel::Debug.rank(),
+            _ => LogLevel::Info.rank(),
+        },
+    )
+}
+
+/// True when a line at `lvl` should be emitted under the current
+/// `SPDNN_LOG` setting. Used by [`crate::log!`]; callers can also guard
+/// expensive formatting with it directly.
+pub fn log_enabled(lvl: LogLevel) -> bool {
+    lvl.rank() <= max_rank()
+}
+
+/// Leveled diagnostic line to stderr: `log!(Warn, "respawn: {e}")`
+/// emits `[spdnn:warn] respawn: ...` unless `SPDNN_LOG` filters it out.
+/// Levels are the [`crate::obs::LogLevel`] variant names.
+#[macro_export]
+macro_rules! log {
+    ($lvl:ident, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::LogLevel::$lvl) {
+            eprintln!(
+                "[spdnn:{}] {}",
+                $crate::obs::LogLevel::$lvl.label(),
+                format_args!($($arg)*)
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_order_is_severity_first() {
+        assert!(LogLevel::Error < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(LogLevel::Error.label(), "error");
+        assert_eq!(LogLevel::Debug.label(), "debug");
+    }
+
+    #[test]
+    fn macro_compiles_at_every_level() {
+        // Output (if any) goes to stderr; the point is the expansion.
+        crate::log!(Error, "e {}", 1);
+        crate::log!(Warn, "w {}", 2);
+        crate::log!(Info, "i {}", 3);
+        crate::log!(Debug, "d {}", 4);
+    }
+}

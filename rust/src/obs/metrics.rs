@@ -1,0 +1,323 @@
+//! Unified metrics registry: one snapshotable interface over the
+//! counters that previously lived scattered across the crate — fabric
+//! endpoint byte/message counters ([`crate::comm::FabricStats`]),
+//! per-rank [`crate::util::PhaseTimer`] phase sums, and the serving
+//! pool's [`crate::serving::StatsSnapshot`] — rendered as
+//! Prometheus-style text exposition.
+
+use crate::comm::FabricStats;
+use crate::serving::StatsSnapshot;
+use crate::util::PhaseTimer;
+
+/// One metric family: a name, help line, kind (`counter`/`gauge`), and
+/// samples keyed by their rendered label set.
+#[derive(Debug)]
+struct Family {
+    name: String,
+    help: &'static str,
+    kind: &'static str,
+    samples: Vec<(String, f64)>,
+}
+
+/// Collects metric samples from the crate's subsystems and renders them
+/// in the Prometheus text exposition format. Build one, feed it the
+/// snapshots you have (phases, fabric stats, serving stats, ad-hoc
+/// counters), then call [`MetricsRegistry::render`].
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    families: Vec<Family>,
+}
+
+/// Render a label set as `{k="v",...}`, or the empty string for no
+/// labels.
+fn label_str(labels: &[(&str, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(
+        &mut self,
+        kind: &'static str,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, String)],
+        value: f64,
+    ) {
+        let sample = (label_str(labels), value);
+        if let Some(f) = self.families.iter_mut().find(|f| f.name == name) {
+            f.samples.push(sample);
+            return;
+        }
+        self.families.push(Family {
+            name: name.to_string(),
+            help,
+            kind,
+            samples: vec![sample],
+        });
+    }
+
+    /// Add one counter sample (monotonic total).
+    pub fn counter(&mut self, name: &str, help: &'static str, labels: &[(&str, String)], v: f64) {
+        self.push("counter", name, help, labels, v);
+    }
+
+    /// Add one gauge sample (point-in-time value).
+    pub fn gauge(&mut self, name: &str, help: &'static str, labels: &[(&str, String)], v: f64) {
+        self.push("gauge", name, help, labels, v);
+    }
+
+    /// Record every phase sum of one rank's [`PhaseTimer`] as
+    /// `spdnn_phase_seconds_total{rank,phase}`.
+    pub fn record_phases(&mut self, rank: u32, timer: &PhaseTimer) {
+        for (phase, d) in timer.phases() {
+            self.counter(
+                "spdnn_phase_seconds_total",
+                "Seconds spent per engine phase (spmv/updt/comm/wait), per rank.",
+                &[("rank", rank.to_string()), ("phase", phase.to_string())],
+                d.as_secs_f64(),
+            );
+        }
+    }
+
+    /// Record one rank endpoint's aggregate and per-peer traffic
+    /// counters. Peer rows with no traffic are skipped to keep the
+    /// exposition proportional to the communication pattern, not the
+    /// fabric size.
+    pub fn record_fabric(&mut self, rank: u32, st: &FabricStats) {
+        let r = [("rank", rank.to_string())];
+        self.counter(
+            "spdnn_fabric_sent_words_total",
+            "Words sent as they traveled the wire (encoded words for lossy codecs).",
+            &r,
+            st.sent_words as f64,
+        );
+        self.counter(
+            "spdnn_fabric_raw_bytes_total",
+            "Pre-encoding payload bytes of every send.",
+            &r,
+            st.sent_raw_bytes as f64,
+        );
+        for (dir, msgs, bytes) in [
+            ("send", st.sent_msgs, st.sent_wire_bytes),
+            ("recv", st.recv_msgs, st.recv_wire_bytes),
+        ] {
+            let rd = [("rank", rank.to_string()), ("dir", dir.to_string())];
+            self.counter(
+                "spdnn_fabric_msgs_total",
+                "Messages sent / received-and-consumed per rank endpoint.",
+                &rd,
+                msgs as f64,
+            );
+            self.counter(
+                "spdnn_fabric_wire_bytes_total",
+                "Bytes on the wire (post-codec) per rank endpoint and direction.",
+                &rd,
+                bytes as f64,
+            );
+        }
+        for (peer, pc) in st.peers.iter().enumerate() {
+            for (dir, msgs, bytes) in [
+                ("send", pc.sent_msgs, pc.sent_bytes),
+                ("recv", pc.recv_msgs, pc.recv_bytes),
+            ] {
+                if msgs == 0 && bytes == 0 {
+                    continue;
+                }
+                let l = [
+                    ("rank", rank.to_string()),
+                    ("peer", peer.to_string()),
+                    ("dir", dir.to_string()),
+                ];
+                self.counter(
+                    "spdnn_fabric_peer_msgs_total",
+                    "Messages per (rank, peer, direction).",
+                    &l,
+                    msgs as f64,
+                );
+                self.counter(
+                    "spdnn_fabric_peer_bytes_total",
+                    "Wire bytes per (rank, peer, direction).",
+                    &l,
+                    bytes as f64,
+                );
+            }
+        }
+    }
+
+    /// Record a serving-pool snapshot: request/batch/shed/rebuild
+    /// counters, byte totals, and the latency distribution (bucketed
+    /// quantiles plus the exact min/max and overflow count the histogram
+    /// now tracks).
+    pub fn record_serving(&mut self, s: &StatsSnapshot) {
+        let no: [(&str, String); 0] = [];
+        for (name, help, v) in [
+            (
+                "spdnn_pool_requests_total",
+                "Requests answered successfully.",
+                s.requests as f64,
+            ),
+            (
+                "spdnn_pool_failed_requests_total",
+                "Requests failed by a rank failure.",
+                s.failed_requests as f64,
+            ),
+            (
+                "spdnn_pool_shed_requests_total",
+                "Requests shed for blowing their queue-wait SLO.",
+                s.shed_requests as f64,
+            ),
+            (
+                "spdnn_pool_batches_total",
+                "Fused batches dispatched.",
+                s.batches as f64,
+            ),
+            (
+                "spdnn_pool_rebuilds_total",
+                "Generation rebuilds forced by rank failures.",
+                s.pool_rebuilds as f64,
+            ),
+            (
+                "spdnn_pool_columns_total",
+                "SpMM columns served.",
+                s.columns as f64,
+            ),
+            (
+                "spdnn_pool_raw_bytes_total",
+                "Pre-encoding payload bytes moved between ranks.",
+                s.raw_bytes as f64,
+            ),
+            (
+                "spdnn_pool_wire_bytes_total",
+                "Bytes actually shipped after the wire codec.",
+                s.wire_bytes as f64,
+            ),
+            (
+                "spdnn_pool_latency_overflow_total",
+                "Latency samples above the histogram's last bucket.",
+                s.overflow_latencies as f64,
+            ),
+        ] {
+            self.counter(name, help, &no, v);
+        }
+        for (q, v) in [
+            ("0.5", s.p50_secs),
+            ("0.95", s.p95_secs),
+            ("0.99", s.p99_secs),
+        ] {
+            self.gauge(
+                "spdnn_pool_latency_seconds",
+                "Request latency quantiles (bucketed, ±25 %).",
+                &[("quantile", q.to_string())],
+                v,
+            );
+        }
+        for (name, help, v) in [
+            (
+                "spdnn_pool_latency_mean_seconds",
+                "Mean request latency (exact).",
+                s.mean_latency_secs,
+            ),
+            (
+                "spdnn_pool_latency_min_seconds",
+                "Exact smallest request latency observed.",
+                s.min_latency_secs,
+            ),
+            (
+                "spdnn_pool_latency_max_seconds",
+                "Exact largest request latency observed.",
+                s.max_latency_secs,
+            ),
+            (
+                "spdnn_pool_edges_per_second",
+                "Aggregate edges/s over wall-clock since pool start.",
+                s.edges_per_sec,
+            ),
+            (
+                "spdnn_pool_wall_seconds",
+                "Wall-clock seconds since pool start.",
+                s.wall_secs,
+            ),
+        ] {
+            self.gauge(name, help, &no, v);
+        }
+    }
+
+    /// Prometheus text exposition: `# HELP` / `# TYPE` once per family,
+    /// then one `name{labels} value` line per sample.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.families {
+            out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+            out.push_str(&format!("# TYPE {} {}\n", f.name, f.kind));
+            for (labels, v) in &f.samples {
+                out.push_str(&format!("{}{} {}\n", f.name, labels, v));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn render_groups_families_and_labels() {
+        let mut reg = MetricsRegistry::new();
+        let mut t = PhaseTimer::new();
+        t.add("spmv", Duration::from_millis(250));
+        t.add("wait", Duration::from_millis(750));
+        reg.record_phases(0, &t);
+        reg.record_phases(1, &t);
+        let text = reg.render();
+        // HELP/TYPE exactly once per family, one line per sample
+        assert_eq!(text.matches("# HELP spdnn_phase_seconds_total").count(), 1);
+        assert_eq!(text.matches("# TYPE spdnn_phase_seconds_total counter").count(), 1);
+        assert!(text.contains("spdnn_phase_seconds_total{rank=\"0\",phase=\"spmv\"} 0.25"));
+        assert!(text.contains("spdnn_phase_seconds_total{rank=\"1\",phase=\"wait\"} 0.75"));
+    }
+
+    #[test]
+    fn fabric_stats_expose_per_peer_rows() {
+        use crate::comm::fabric::PeerCounters;
+        let st = FabricStats {
+            sent_words: 10,
+            sent_msgs: 2,
+            sent_raw_bytes: 40,
+            sent_wire_bytes: 40,
+            recv_msgs: 1,
+            recv_wire_bytes: 20,
+            peers: vec![
+                PeerCounters::default(),
+                PeerCounters {
+                    sent_msgs: 2,
+                    sent_bytes: 40,
+                    recv_msgs: 1,
+                    recv_bytes: 20,
+                },
+            ],
+        };
+        let mut reg = MetricsRegistry::new();
+        reg.record_fabric(0, &st);
+        let text = reg.render();
+        assert!(text.contains("spdnn_fabric_msgs_total{rank=\"0\",dir=\"send\"} 2"));
+        assert!(text.contains("spdnn_fabric_wire_bytes_total{rank=\"0\",dir=\"recv\"} 20"));
+        assert!(text
+            .contains("spdnn_fabric_peer_bytes_total{rank=\"0\",peer=\"1\",dir=\"send\"} 40"));
+        // the silent peer 0 produced no rows
+        assert!(!text.contains("peer=\"0\""));
+    }
+}

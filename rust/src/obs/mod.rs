@@ -1,0 +1,34 @@
+//! Observability layer: flight-recorder tracing, a unified metrics
+//! registry, and leveled logging.
+//!
+//! Three pieces, all zero-dependency and cheap enough for the hot path:
+//!
+//! - **[`Tracer`]** — a per-rank, fixed-capacity ring buffer of timed
+//!   [`Span`]s (rank/layer/phase/chunk/bytes). Whether a rank records is
+//!   decided by a [`TraceMode`] baked into the
+//!   [`crate::coordinator::RankState`] at build: `Off` costs two branches
+//!   per span site and never allocates, `On` overwrites the oldest span
+//!   once the ring fills. [`chrome_trace_json`] renders rank tracks as
+//!   Chrome trace-event JSON loadable in Perfetto/`chrome://tracing`.
+//! - **[`MetricsRegistry`]** — one snapshotable interface over the
+//!   crate's scattered counters (fabric endpoint traffic, engine
+//!   [`crate::util::PhaseTimer`] phases, serving-pool stats), rendered
+//!   as Prometheus text exposition
+//!   ([`crate::serving::RankPool::prometheus`] serves it live).
+//! - **[`crate::log!`]** — leveled stderr diagnostics gated by
+//!   `SPDNN_LOG` (default `info`; `off` silences tests).
+//!
+//! Environment contract (see `docs/OBSERVABILITY.md`): `SPDNN_TRACE`
+//! turns env-driven tracing on (`1`/`on`, or a number = ring capacity);
+//! `SPDNN_LOG` picks the log level. Both are parsed once per process.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use self::log::{log_enabled, LogLevel};
+pub use metrics::MetricsRegistry;
+pub use trace::{
+    chrome_trace_json, span_coverage, Span, TraceMode, Tracer, DEFAULT_TRACE_CAPACITY, NO_CHUNK,
+    NO_LAYER,
+};

@@ -1,0 +1,383 @@
+//! Flight-recorder trace spans: a per-rank, fixed-capacity ring buffer
+//! of timed spans plus a Chrome trace-event JSON exporter.
+//!
+//! The recorder is built for the hot path: when tracing is off the
+//! [`Tracer`] holds a zero-capacity buffer, [`Tracer::start`] returns
+//! `None` without reading the clock, and [`Tracer::end`] early-returns
+//! before touching memory — the instrumented engines pay two branch
+//! instructions per span site. When tracing is on, each span records a
+//! name, category, layer, chunk, payload bytes, and `Instant`-based
+//! start/duration in nanoseconds relative to a shared epoch, so spans
+//! from different ranks land on one timeline.
+
+use std::time::Instant;
+
+/// Default ring capacity (spans per rank) when `SPDNN_TRACE=1`.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// Sentinel for spans not associated with a layer.
+pub const NO_LAYER: u32 = u32::MAX;
+
+/// Sentinel for spans not associated with a chunk.
+pub const NO_CHUNK: u32 = u32::MAX;
+
+/// Whether (and how) a rank records trace spans. The `On` variant
+/// carries the shared epoch `Instant` so that every rank built from the
+/// same mode value measures span timestamps against one clock origin —
+/// copy a single `TraceMode` to all ranks rather than constructing one
+/// per rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceMode {
+    /// No recording; span sites cost two branches and never allocate.
+    Off,
+    /// Record into a ring of `capacity` spans, timestamped against `epoch`.
+    On {
+        /// Ring capacity in spans; the oldest span is overwritten on wrap.
+        capacity: usize,
+        /// Shared clock origin for `start_ns` timestamps.
+        epoch: Instant,
+    },
+}
+
+impl TraceMode {
+    /// Tracing on with [`DEFAULT_TRACE_CAPACITY`] and a fresh epoch.
+    pub fn on() -> Self {
+        Self::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// Tracing on with an explicit ring capacity and a fresh epoch.
+    pub fn with_capacity(capacity: usize) -> Self {
+        TraceMode::On {
+            capacity: capacity.max(1),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// The process-wide mode from the `SPDNN_TRACE` environment variable,
+    /// parsed once: unset/`0`/`off` → `Off`; `1`/`on` → default capacity;
+    /// any other integer → that many spans per rank. All callers share
+    /// one epoch, so env-driven ranks align on a single timeline.
+    pub fn from_env() -> Self {
+        use std::sync::OnceLock;
+        static MODE: OnceLock<TraceMode> = OnceLock::new();
+        *MODE.get_or_init(|| match std::env::var("SPDNN_TRACE").ok().as_deref() {
+            None | Some("") | Some("0") | Some("off") => TraceMode::Off,
+            Some("1") | Some("on") => TraceMode::on(),
+            Some(s) => match s.parse::<usize>() {
+                Ok(cap) => TraceMode::with_capacity(cap),
+                Err(_) => TraceMode::Off,
+            },
+        })
+    }
+
+    /// True when this mode records spans.
+    pub fn is_on(&self) -> bool {
+        matches!(self, TraceMode::On { .. })
+    }
+}
+
+/// One recorded interval. `start_ns`/`dur_ns` are nanoseconds relative
+/// to the tracer's epoch; `layer`/`chunk` use [`NO_LAYER`]/[`NO_CHUNK`]
+/// when not applicable; `bytes` is the raw payload size for send/post
+/// spans and 0 elsewhere.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Span name, e.g. `"spmv.boundary"` or `"wait"`.
+    pub name: &'static str,
+    /// Category: `"fwd"`, `"bwd"`, or `"pool"`.
+    pub cat: &'static str,
+    /// Layer index, or [`NO_LAYER`].
+    pub layer: u32,
+    /// Chunk index, or [`NO_CHUNK`].
+    pub chunk: u32,
+    /// Raw payload bytes moved inside the span (0 for compute spans).
+    pub bytes: u64,
+    /// Start offset from the epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Duration, nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// Per-rank flight recorder: a fixed-capacity ring of [`Span`]s. Built
+/// from a [`TraceMode`] at `RankState` construction; disabled tracers
+/// never allocate and never read the clock.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    epoch: Instant,
+    cap: usize,
+    spans: Vec<Span>,
+    head: usize,
+    dropped: u64,
+    rank: u32,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(TraceMode::Off, 0)
+    }
+}
+
+impl Tracer {
+    /// A tracer for `rank` in the given mode. `Off` yields a recorder
+    /// with a zero-capacity buffer that never allocates.
+    pub fn new(mode: TraceMode, rank: u32) -> Self {
+        match mode {
+            TraceMode::Off => Tracer {
+                enabled: false,
+                epoch: Instant::now(),
+                cap: 0,
+                spans: Vec::new(),
+                head: 0,
+                dropped: 0,
+                rank,
+            },
+            TraceMode::On { capacity, epoch } => Tracer {
+                enabled: true,
+                epoch,
+                cap: capacity.max(1),
+                spans: Vec::with_capacity(capacity.max(1)),
+                head: 0,
+                dropped: 0,
+                rank,
+            },
+        }
+    }
+
+    /// True when this tracer records spans.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The rank this tracer was built for.
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// Spans overwritten after the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Allocated ring capacity in spans (0 when disabled — the
+    /// zero-allocation guarantee the tests pin down).
+    pub fn buffer_capacity(&self) -> usize {
+        self.spans.capacity()
+    }
+
+    /// Open a span: returns the start instant, or `None` (without
+    /// reading the clock) when disabled. Pass the result to
+    /// [`Tracer::end`].
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened by [`Tracer::start`] and record it. A `None`
+    /// start (disabled tracer) is a no-op.
+    #[inline]
+    pub fn end(
+        &mut self,
+        t0: Option<Instant>,
+        name: &'static str,
+        cat: &'static str,
+        layer: u32,
+        chunk: u32,
+        bytes: u64,
+    ) {
+        let Some(t0) = t0 else { return };
+        let span = Span {
+            name,
+            cat,
+            layer,
+            chunk,
+            bytes,
+            start_ns: t0.duration_since(self.epoch).as_nanos() as u64,
+            dur_ns: t0.elapsed().as_nanos() as u64,
+        };
+        if self.spans.len() < self.cap {
+            self.spans.push(span);
+        } else {
+            self.spans[self.head] = span;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Chronological snapshot of the ring's current contents. When the
+    /// ring has wrapped, the oldest surviving span comes first.
+    pub fn spans(&self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.spans.len());
+        out.extend_from_slice(&self.spans[self.head..]);
+        out.extend_from_slice(&self.spans[..self.head]);
+        out
+    }
+}
+
+/// Render named span tracks as Chrome trace-event JSON (the format
+/// `chrome://tracing` and Perfetto load): one process, one `tid` per
+/// track, `"M"` thread-name metadata plus `"X"` complete events with
+/// microsecond `ts`/`dur` and `layer`/`chunk`/`bytes` args (sentinel
+/// values omitted).
+pub fn chrome_trace_json(tracks: &[(String, Vec<Span>)]) -> String {
+    let mut ev = Vec::new();
+    for (tid, (name, _)) in tracks.iter().enumerate() {
+        ev.push(format!(
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        ));
+    }
+    for (tid, (_, spans)) in tracks.iter().enumerate() {
+        for s in spans {
+            let mut args = String::new();
+            if s.layer != NO_LAYER {
+                args.push_str(&format!("\"layer\":{},", s.layer));
+            }
+            if s.chunk != NO_CHUNK {
+                args.push_str(&format!("\"chunk\":{},", s.chunk));
+            }
+            args.push_str(&format!("\"bytes\":{}", s.bytes));
+            ev.push(format!(
+                "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"name\":\"{}\",\
+                 \"cat\":\"{}\",\"ts\":{:.3},\"dur\":{:.3},\"args\":{{{args}}}}}",
+                s.name,
+                s.cat,
+                s.start_ns as f64 / 1e3,
+                s.dur_ns as f64 / 1e3,
+            ));
+        }
+    }
+    format!(
+        "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{}]}}",
+        ev.join(",")
+    )
+}
+
+/// Fraction of the interval `[first span start, last span end]` covered
+/// by the union of the given spans (0.0 for fewer than one span or a
+/// zero-length window). Overlapping spans are merged first so nested
+/// instrumentation does not double-count.
+pub fn span_coverage(spans: &[Span]) -> f64 {
+    if spans.is_empty() {
+        return 0.0;
+    }
+    let mut iv: Vec<(u64, u64)> = spans
+        .iter()
+        .map(|s| (s.start_ns, s.start_ns + s.dur_ns))
+        .collect();
+    iv.sort_unstable();
+    let lo = iv[0].0;
+    let mut hi = 0u64;
+    let mut covered = 0u64;
+    let (mut cs, mut ce) = iv[0];
+    for &(s, e) in &iv[1..] {
+        if s <= ce {
+            ce = ce.max(e);
+        } else {
+            covered += ce - cs;
+            cs = s;
+            ce = e;
+        }
+    }
+    covered += ce - cs;
+    for &(_, e) in &iv {
+        hi = hi.max(e);
+    }
+    if hi <= lo {
+        return 0.0;
+    }
+    covered as f64 / (hi - lo) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push(tr: &mut Tracer, i: u32) {
+        let t0 = tr.start();
+        tr.end(t0, "t", "fwd", i, NO_CHUNK, 0);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut tr = Tracer::new(TraceMode::with_capacity(4), 0);
+        for i in 0..10 {
+            push(&mut tr, i);
+        }
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(tr.dropped(), 6);
+        // Oldest surviving span first, strictly chronological.
+        let layers: Vec<u32> = spans.iter().map(|s| s.layer).collect();
+        assert_eq!(layers, vec![6, 7, 8, 9]);
+        for w in spans.windows(2) {
+            assert!(w[0].start_ns <= w[1].start_ns);
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_never_allocates() {
+        let mut tr = Tracer::new(TraceMode::Off, 3);
+        assert!(!tr.enabled());
+        for i in 0..1000 {
+            let t0 = tr.start();
+            assert!(t0.is_none());
+            tr.end(t0, "t", "fwd", i, NO_CHUNK, 64);
+        }
+        assert_eq!(tr.buffer_capacity(), 0);
+        assert!(tr.spans().is_empty());
+        assert_eq!(tr.dropped(), 0);
+    }
+
+    #[test]
+    fn shared_epoch_aligns_ranks() {
+        let mode = TraceMode::with_capacity(8);
+        let mut a = Tracer::new(mode, 0);
+        let mut b = Tracer::new(mode, 1);
+        push(&mut a, 0);
+        push(&mut b, 0);
+        let (sa, sb) = (a.spans()[0], b.spans()[0]);
+        // Both measured against the same epoch: rank 1's span, opened
+        // after rank 0's, cannot start earlier.
+        assert!(sb.start_ns >= sa.start_ns);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let mut tr = Tracer::new(TraceMode::with_capacity(8), 0);
+        let t0 = tr.start();
+        tr.end(t0, "spmv.boundary", "fwd", 3, 1, 512);
+        let json = chrome_trace_json(&[("rank 0".to_string(), tr.spans())]);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"ph\":\"M\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"name\":\"spmv.boundary\""));
+        assert!(json.contains("\"layer\":3"));
+        assert!(json.contains("\"chunk\":1"));
+        assert!(json.contains("\"bytes\":512"));
+    }
+
+    #[test]
+    fn coverage_merges_overlaps() {
+        let s = |start: u64, dur: u64| Span {
+            name: "t",
+            cat: "fwd",
+            layer: NO_LAYER,
+            chunk: NO_CHUNK,
+            bytes: 0,
+            start_ns: start,
+            dur_ns: dur,
+        };
+        assert_eq!(span_coverage(&[]), 0.0);
+        // [0,10) and [5,15) overlap: union 15 over window 15 → 1.0.
+        let full = span_coverage(&[s(0, 10), s(5, 10)]);
+        assert!((full - 1.0).abs() < 1e-12);
+        // [0,10) and [20,30): union 20 over window 30.
+        let gap = span_coverage(&[s(0, 10), s(20, 10)]);
+        assert!((gap - 20.0 / 30.0).abs() < 1e-12);
+    }
+}

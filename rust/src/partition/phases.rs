@@ -106,7 +106,8 @@ pub fn hypergraph_partition(structure: &[Csr], cfg: &PhaseConfig) -> DnnPartitio
     }
     if profile {
         let (tc, tr, te) = crate::hypergraph::partitioner::profile_snapshot();
-        eprintln!(
+        crate::log!(
+            Info,
             "[profile] phase-hg build {t_build:.3}s, partition {t_part:.3}s              (coarsen {tc:.3}s, uncoarsen-refine {tr:.3}s, extract {te:.3}s)"
         );
     }

@@ -13,7 +13,7 @@
 //! - collects per-rank fabric counters and aggregates per-rank
 //!   [`PhaseTimer`]s for live breakdown reporting.
 
-use crate::comm::{fabric, Endpoint};
+use crate::comm::{fabric, Endpoint, FabricStats};
 use crate::util::PhaseTimer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
@@ -36,6 +36,10 @@ pub struct ParallelRun<T> {
     pub outputs: Vec<T>,
     /// Per-rank (words, messages) sent over the fabric.
     pub sent: Vec<(u64, u64)>,
+    /// Full per-rank endpoint counters (aggregate send/recv plus the
+    /// per-peer breakdown) — feed these to
+    /// [`crate::obs::MetricsRegistry::record_fabric`].
+    pub fabric: Vec<FabricStats>,
 }
 
 impl<T> ParallelRun<T> {
@@ -64,7 +68,7 @@ where
     assert!(nparts > 0, "need at least one rank");
     let endpoints = fabric(nparts);
 
-    let results: Vec<Result<(T, u64, u64), String>> = std::thread::scope(|scope| {
+    let results: Vec<Result<(T, FabricStats), String>> = std::thread::scope(|scope| {
         let worker = &worker;
         let handles: Vec<_> = endpoints
             .into_iter()
@@ -75,7 +79,7 @@ where
                     match out {
                         Ok(value) => {
                             if ep.drained() {
-                                Ok((value, ep.sent_words, ep.sent_msgs))
+                                Ok((value, ep.stats()))
                             } else {
                                 ep.poison();
                                 Err("unconsumed messages left in stash".to_string())
@@ -97,12 +101,14 @@ where
 
     let mut outputs = Vec::with_capacity(nparts);
     let mut sent = Vec::with_capacity(nparts);
+    let mut stats = Vec::with_capacity(nparts);
     let mut failure: Option<RankFailure> = None;
     for (rank, result) in results.into_iter().enumerate() {
         match result {
-            Ok((value, words, msgs)) => {
+            Ok((value, st)) => {
                 outputs.push(value);
-                sent.push((words, msgs));
+                sent.push((st.sent_words, st.sent_msgs));
+                stats.push(st);
             }
             Err(message) => {
                 // Prefer the root cause over the secondary unwinds of
@@ -123,7 +129,11 @@ where
     }
     match failure {
         Some(f) => Err(f),
-        None => Ok(ParallelRun { outputs, sent }),
+        None => Ok(ParallelRun {
+            outputs,
+            sent,
+            fabric: stats,
+        }),
     }
 }
 
@@ -173,6 +183,13 @@ mod tests {
         for &(words, msgs) in &run.sent {
             assert_eq!(words, (n - 1) as u64);
             assert_eq!(msgs, (n - 1) as u64);
+        }
+        for st in &run.fabric {
+            assert_eq!(st.sent_msgs, (n - 1) as u64);
+            assert_eq!(st.recv_msgs, (n - 1) as u64);
+            assert_eq!(st.peers.len(), n);
+            let peer_sent: u64 = st.peers.iter().map(|p| p.sent_msgs).sum();
+            assert_eq!(peer_sent, st.sent_msgs);
         }
     }
 

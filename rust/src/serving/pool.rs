@@ -13,6 +13,7 @@ use crate::comm::{fabric, Codec, Endpoint};
 use crate::coordinator::sgd::assemble_outputs;
 use crate::coordinator::{ExecMode, RankScratch, RankState};
 use crate::dnn::SparseNet;
+use crate::obs::{MetricsRegistry, Span, TraceMode, Tracer, NO_CHUNK, NO_LAYER};
 use crate::partition::ServingPlan;
 use crate::runtime::parallel::{is_secondary, panic_message};
 use crate::runtime::RankFailure;
@@ -222,6 +223,9 @@ fn teardown(gen: Generation) {
 
 struct SchedulerReport {
     leaked_ranks: Vec<usize>,
+    /// Scheduler-side flight-recorder spans (queue wait, coalesce,
+    /// dispatch, generation respawn) — recorded when `SPDNN_TRACE` is set.
+    trace: Vec<Span>,
 }
 
 /// Persistent serving pool over the row-wise partitioned SpMM engine.
@@ -371,6 +375,15 @@ impl RankPool {
         self.stats.snapshot()
     }
 
+    /// Render the pool's live counters as Prometheus text exposition —
+    /// the serving half of the unified [`MetricsRegistry`] interface
+    /// (scrape-ready: every counter/gauge carries `# HELP`/`# TYPE`).
+    pub fn prometheus(&self) -> String {
+        let mut reg = MetricsRegistry::new();
+        reg.record_serving(&self.stats.snapshot());
+        reg.render()
+    }
+
     /// Graceful shutdown: every already-queued request is still served,
     /// then the rank threads exit after a final message-leak check.
     /// Idempotent — returns `None` on the second call (also invoked by
@@ -386,6 +399,7 @@ impl RankPool {
         Some(PoolSummary {
             stats: self.stats.snapshot(),
             leaked_ranks: report.leaked_ranks,
+            trace: report.trace,
         })
     }
 }
@@ -405,6 +419,10 @@ pub struct PoolSummary {
     /// Ranks whose endpoints still held unconsumed messages at shutdown —
     /// empty for a healthy pool (the stress tests assert this).
     pub leaked_ranks: Vec<usize>,
+    /// The scheduler's flight-recorder spans (category `pool`): queue
+    /// wait, batch coalescing, dispatch, and generation respawns. Empty
+    /// unless `SPDNN_TRACE` enabled tracing for this process.
+    pub trace: Vec<Span>,
 }
 
 fn scheduler_loop(
@@ -416,14 +434,19 @@ fn scheduler_loop(
     output_dim: usize,
     edges_per_col: f64,
 ) -> SchedulerReport {
+    // The scheduler gets its own flight-recorder track (`u32::MAX` marks
+    // "not a rank"); span sites cost two branches each when tracing is off.
+    let mut tracer = Tracer::new(TraceMode::from_env(), u32::MAX);
     let mut gen = spawn_generation(&net, &sp, cfg.mode);
-    while let Some(batch) = collect_batch(&shared, &cfg, &stats) {
+    while let Some(batch) = collect_batch(&shared, &cfg, &stats, &mut tracer) {
         let nreq = batch.len();
         let total_cols: usize = batch.iter().map(|p| p.b).sum();
+        let sp_dispatch = tracer.start();
         let sw = Instant::now();
         match dispatch(&gen, &batch) {
             Ok((rank_rows, raw_bytes, wire_bytes)) => {
                 let service_secs = sw.elapsed().as_secs_f64();
+                tracer.end(sp_dispatch, "dispatch", "pool", NO_LAYER, NO_CHUNK, wire_bytes);
                 let out = assemble_outputs(output_dim, total_cols, &rank_rows);
                 let done = Instant::now();
                 // record before replying: a stats() read racing a just-woken
@@ -452,14 +475,23 @@ fn scheduler_loop(
                 }
             }
             Err(failure) => {
+                tracer.end(sp_dispatch, "dispatch", "pool", NO_LAYER, NO_CHUNK, 0);
                 stats.record_failure(nreq);
+                crate::log!(
+                    Warn,
+                    "pool generation poisoned by rank {} ({}); respawning",
+                    failure.rank,
+                    failure.message
+                );
                 let err = ServeError::from(failure);
                 for p in &batch {
                     let _ = p.tx.send(Err(err.clone()));
                 }
                 // the fabric is poisoned — respawn the whole generation
+                let sp_respawn = tracer.start();
                 teardown(gen);
                 gen = spawn_generation(&net, &sp, cfg.mode);
+                tracer.end(sp_respawn, "respawn", "pool", NO_LAYER, NO_CHUNK, 0);
             }
         }
     }
@@ -480,7 +512,10 @@ fn scheduler_loop(
         let _ = h.join();
     }
     leaked_ranks.sort_unstable();
-    SchedulerReport { leaked_ranks }
+    SchedulerReport {
+        leaked_ranks,
+        trace: tracer.spans(),
+    }
 }
 
 /// Fail a request whose queue wait blew its SLO (load shedding) and count
@@ -506,7 +541,9 @@ fn collect_batch(
     shared: &SharedQueue,
     cfg: &PoolConfig,
     stats: &ServingStats,
+    tracer: &mut Tracer,
 ) -> Option<Vec<Pending>> {
+    let sp_wait = tracer.start();
     let mut st = shared.state.lock().unwrap();
     let first = loop {
         if let Some(p) = st.queue.pop_front() {
@@ -521,6 +558,7 @@ fn collect_batch(
         }
         st = shared.cv.wait(st).unwrap();
     };
+    tracer.end(sp_wait, "queue.wait", "pool", NO_LAYER, NO_CHUNK, 0);
     let wait = if cfg.adaptive {
         effective_wait(cfg.max_wait, st.ewma_gap)
     } else {
@@ -529,6 +567,7 @@ fn collect_batch(
     let deadline = first.submitted + wait;
     let mut cols = first.b;
     let mut batch = vec![first];
+    let sp_coalesce = tracer.start();
     while cols < cfg.max_batch {
         if let Some(front) = st.queue.front() {
             if expired(front).is_some() {
@@ -555,6 +594,7 @@ fn collect_batch(
         let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
         st = guard;
     }
+    tracer.end(sp_coalesce, "coalesce", "pool", NO_LAYER, NO_CHUNK, cols as u64);
     Some(batch)
 }
 

@@ -19,6 +19,14 @@ pub struct LatencyHistogram {
     counts: Vec<u64>,
     total: u64,
     sum: f64,
+    /// Exact smallest sanitized observation (valid when `total > 0`).
+    min: f64,
+    /// Exact largest sanitized observation.
+    max: f64,
+    /// Observations above the last bucket's upper edge (~27 min); they
+    /// still land in the last bucket for quantiles, but are counted here
+    /// instead of being silently clamped.
+    overflow: u64,
 }
 
 impl Default for LatencyHistogram {
@@ -27,6 +35,9 @@ impl Default for LatencyHistogram {
             counts: vec![0; NBUCKETS],
             total: 0,
             sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            overflow: 0,
         }
     }
 }
@@ -45,16 +56,47 @@ impl LatencyHistogram {
         (i.ceil() as usize).min(NBUCKETS - 1)
     }
 
-    /// Record one observation (seconds).
+    /// Record one observation (seconds). NaN and negative inputs are
+    /// sanitized to 0.0 before bucketing and min/max tracking.
     pub fn record(&mut self, secs: f64) {
-        self.counts[Self::bucket_of(secs)] += 1;
+        let s = if secs.is_nan() { 0.0 } else { secs.max(0.0) };
+        if self.total == 0 || s < self.min {
+            self.min = s;
+        }
+        if s > self.max {
+            self.max = s;
+        }
+        if s > BUCKET0 * GROWTH.powi(NBUCKETS as i32 - 1) {
+            self.overflow += 1;
+        }
+        self.counts[Self::bucket_of(s)] += 1;
         self.total += 1;
-        self.sum += secs.max(0.0);
+        self.sum += s;
     }
 
     /// Observations recorded so far.
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Exact smallest recorded observation, 0.0 when empty.
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest recorded observation, 0.0 when empty — not capped
+    /// at bucket resolution, so a p99 outlier's true value survives.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Observations that fell above the last bucket's upper edge.
+    pub fn overflow(&self) -> u64 {
+        self.overflow
     }
 
     /// Mean of the recorded observations (exact, not bucketed).
@@ -192,6 +234,9 @@ impl ServingStats {
             p95_secs: s.latency.quantile(0.95),
             p99_secs: s.latency.quantile(0.99),
             mean_latency_secs: s.latency.mean(),
+            min_latency_secs: s.latency.min(),
+            max_latency_secs: s.latency.max(),
+            overflow_latencies: s.latency.overflow(),
             wall_secs: wall,
         }
     }
@@ -231,6 +276,12 @@ pub struct StatsSnapshot {
     pub p95_secs: f64,
     pub p99_secs: f64,
     pub mean_latency_secs: f64,
+    /// Exact smallest request latency observed (not bucket-rounded).
+    pub min_latency_secs: f64,
+    /// Exact largest request latency observed (not bucket-rounded).
+    pub max_latency_secs: f64,
+    /// Latency samples above the histogram's last bucket (~27 min).
+    pub overflow_latencies: u64,
     pub wall_secs: f64,
 }
 
@@ -250,7 +301,8 @@ impl StatsSnapshot {
         format!(
             "{} requests in {} batches (mean {:.1} cols/batch), {:.2e} edges/s wall \
              ({:.2e} busy), latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms \
-             (mean {:.2} ms), wire {} B of {} B raw ({:.2}x), \
+             (mean {:.2} ms, min {:.2} ms, max {:.2} ms), \
+             wire {} B of {} B raw ({:.2}x), \
              {} failed, {} shed, {} rebuilds",
             self.requests,
             self.batches,
@@ -261,6 +313,8 @@ impl StatsSnapshot {
             self.p95_secs * 1e3,
             self.p99_secs * 1e3,
             self.mean_latency_secs * 1e3,
+            self.min_latency_secs * 1e3,
+            self.max_latency_secs * 1e3,
             self.wire_bytes,
             self.raw_bytes,
             self.wire_compression(),
@@ -280,7 +334,9 @@ impl StatsSnapshot {
              \"edges_per_sec_busy\":{:.1},\
              \"raw_bytes\":{},\"wire_bytes\":{},\"wire_compression\":{:.4},\
              \"p50_ms\":{:.4},\"p95_ms\":{:.4},\
-             \"p99_ms\":{:.4},\"mean_latency_ms\":{:.4},\"wall_secs\":{:.4}}}",
+             \"p99_ms\":{:.4},\"mean_latency_ms\":{:.4},\
+             \"min_ms\":{:.4},\"max_ms\":{:.4},\"overflow_latencies\":{},\
+             \"wall_secs\":{:.4}}}",
             self.requests,
             self.failed_requests,
             self.shed_requests,
@@ -297,6 +353,9 @@ impl StatsSnapshot {
             self.p95_secs * 1e3,
             self.p99_secs * 1e3,
             self.mean_latency_secs * 1e3,
+            self.min_latency_secs * 1e3,
+            self.max_latency_secs * 1e3,
+            self.overflow_latencies,
             self.wall_secs,
         )
     }
@@ -342,6 +401,67 @@ mod tests {
         h.record(1e9);
         assert_eq!(h.count(), 3);
         assert!(h.quantile(1.0) > 0.0);
+        // negatives sanitize to 0.0; the exact extremes survive bucketing
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e9);
+        assert_eq!(h.overflow(), 1);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.overflow(), 0);
+    }
+
+    #[test]
+    fn single_sample_pins_every_statistic() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0042);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 0.0042);
+        assert_eq!(h.max(), 0.0042);
+        assert_eq!(h.overflow(), 0);
+        assert!((h.mean() - 0.0042).abs() < 1e-12);
+        // every quantile reads the one occupied bucket, whose upper edge
+        // brackets the sample within one geometric step
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= 0.0042 / 1.25 && v <= 0.0042 * 1.25, "q{q} -> {v}");
+        }
+    }
+
+    #[test]
+    fn bucket_boundary_values_stay_in_their_bucket() {
+        // exactly BUCKET0 lands in bucket 0
+        let mut h = LatencyHistogram::new();
+        h.record(1e-6);
+        assert!((h.quantile(1.0) - 1e-6).abs() < 1e-15);
+        // a value on the next bucket edge reads back within one growth
+        // factor of itself (never below its own bucket's lower edge)
+        let v = 1e-6 * 1.25;
+        let mut h = LatencyHistogram::new();
+        h.record(v);
+        let q = h.quantile(1.0);
+        assert!(q >= v / 1.25 - 1e-15 && q <= v * 1.25 + 1e-15, "edge -> {q}");
+    }
+
+    #[test]
+    fn overflow_counted_not_clamped_silently() {
+        let mut h = LatencyHistogram::new();
+        h.record(1.0);
+        h.record(5e3); // above the ~27 min last-bucket edge
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.max(), 5e3);
+        // the overflow sample still participates in quantiles (last bucket)
+        assert!(h.quantile(1.0) >= 1e3);
     }
 
     #[test]

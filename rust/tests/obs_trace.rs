@@ -1,0 +1,261 @@
+//! Flight-recorder integration tests: tracing must never change results
+//! (serial ≡ blocking ≡ overlap ≡ pipelined with tracing off AND on),
+//! recorded spans must stay within the documented taxonomy, the Chrome
+//! export must be well-formed, and the pipelined engine's spans must
+//! reconstruct its boundary-first schedule — every outbound `post` lands
+//! before the same layer's interior epilogue.
+
+use spdnn::coordinator::{infer_with_plan_mode_traced, run_with_plan_mode_traced, ExecMode};
+use spdnn::dnn::inference::infer_batch;
+use spdnn::dnn::{sgd_serial, Activation, SparseNet};
+use spdnn::obs::{chrome_trace_json, Span, TraceMode};
+use spdnn::partition::plan::CommPlan;
+use spdnn::partition::random::random_partition;
+use spdnn::sparse::Coo;
+use spdnn::util::Rng;
+
+/// Random sparse net with every neuron connected (so values flow).
+fn random_net(rng: &mut Rng, n: usize, layers: usize, p: f64) -> SparseNet {
+    let mut ws = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let mut any = false;
+            for c in 0..n {
+                if rng.gen_bool(p) {
+                    coo.push(r, c, rng.gen_f32_range(-1.0, 1.0));
+                    any = true;
+                }
+            }
+            if !any {
+                coo.push(r, rng.gen_range(n), rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+        ws.push(coo.to_csr());
+    }
+    SparseNet::new(ws, Activation::Sigmoid)
+}
+
+/// Every span name any engine may record, per `docs/OBSERVABILITY.md`.
+fn taxonomy() -> &'static [&'static str] {
+    &[
+        "send",
+        "wait",
+        "spmv",
+        "spmv.local",
+        "spmv.seg",
+        "spmv.boundary",
+        "spmv.interior",
+        "post",
+        "epilogue",
+        "epilogue.boundary",
+        "epilogue.interior",
+        "spmvt",
+        "spmvt.seg",
+        "updt",
+        "pass",
+    ]
+}
+
+fn assert_taxonomy(spans: &[Span], cats: &[&str], ctx: &str) {
+    for sp in spans {
+        assert!(
+            taxonomy().contains(&sp.name),
+            "{ctx}: span name '{}' not in the documented taxonomy",
+            sp.name
+        );
+        assert!(
+            cats.contains(&sp.cat),
+            "{ctx}: span '{}' has unexpected category '{}'",
+            sp.name,
+            sp.cat
+        );
+    }
+}
+
+/// THE acceptance property: all three engines match the serial oracle
+/// with tracing off AND on, and the traced runs actually record spans
+/// while the off runs record none (and allocate nothing).
+#[test]
+fn engines_match_serial_with_tracing_off_and_on() {
+    let mut rng = Rng::new(0x0B5);
+    let n = 24usize;
+    let b = 5usize;
+    let net = random_net(&mut rng, n, 4, 0.2);
+    let part = random_partition(&net.layers, 4, rng.next_u64());
+    let plan = CommPlan::build(&net.layers, &part);
+    let x0: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+    let serial = infer_batch(&net, &x0, b);
+
+    let modes = [
+        ExecMode::Blocking,
+        ExecMode::Overlap,
+        ExecMode::Pipelined { chunk_acts: 2 },
+    ];
+    for mode in modes {
+        for trace in [TraceMode::Off, TraceMode::with_capacity(8192)] {
+            let (out, _, tracers) =
+                infer_with_plan_mode_traced(&net, &part, &plan, &x0, b, mode, trace);
+            assert_eq!(out.len(), serial.len(), "{mode:?}: shape");
+            for (i, (o, s)) in out.iter().zip(serial.iter()).enumerate() {
+                assert!(
+                    (o - s).abs() < 1e-5,
+                    "{mode:?} trace={:?} entry {i}: {o} vs serial {s}",
+                    trace.is_on()
+                );
+            }
+            assert_eq!(tracers.len(), 4);
+            for t in &tracers {
+                if trace.is_on() {
+                    assert!(t.enabled(), "{mode:?}: tracer should be on");
+                    assert!(!t.spans().is_empty(), "{mode:?}: no spans recorded");
+                    assert_taxonomy(&t.spans(), &["fwd"], &format!("{mode:?} rank {}", t.rank()));
+                } else {
+                    assert!(!t.enabled(), "{mode:?}: tracer should be off");
+                    assert!(t.spans().is_empty(), "{mode:?}: off-mode spans");
+                    assert_eq!(t.buffer_capacity(), 0, "{mode:?}: off-mode ring allocated");
+                }
+            }
+        }
+    }
+}
+
+/// Traced training matches the serial oracle in every mode and records
+/// backward-pass spans alongside the forward ones.
+#[test]
+fn traced_training_matches_serial_and_records_bwd_spans() {
+    let mut rng = Rng::new(0x7E57);
+    let n = 16usize;
+    let net = random_net(&mut rng, n, 3, 0.25);
+    let part = random_partition(&net.layers, 3, rng.next_u64());
+    let plan = CommPlan::build(&net.layers, &part);
+    let inputs: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..n).map(|_| rng.gen_f32()).collect())
+        .collect();
+    let targets: Vec<Vec<f32>> = (0..3)
+        .map(|_| {
+            (0..n)
+                .map(|_| if rng.gen_bool(0.2) { 1.0 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let mut serial = net.clone();
+    let sl = sgd_serial::train(&mut serial, &inputs, &targets, 0.4, 2);
+
+    let modes = [
+        ExecMode::Blocking,
+        ExecMode::Overlap,
+        ExecMode::Pipelined { chunk_acts: 2 },
+    ];
+    for mode in modes {
+        let (run, tracers) = run_with_plan_mode_traced(
+            &net,
+            &part,
+            &plan,
+            &inputs,
+            &targets,
+            0.4,
+            2,
+            mode,
+            TraceMode::with_capacity(16384),
+        );
+        for (i, (a, s)) in run.losses.iter().zip(sl.iter()).enumerate() {
+            assert!((a - s).abs() < 1e-4, "{mode:?} step {i}: loss {a} vs {s}");
+        }
+        for k in 0..net.depth() {
+            for (a, s) in run.net.layers[k].vals.iter().zip(serial.layers[k].vals.iter()) {
+                assert!((a - s).abs() < 1e-4, "{mode:?} layer {k}: {a} vs {s}");
+            }
+        }
+        let mut saw_bwd = false;
+        for t in &tracers {
+            let spans = t.spans();
+            assert_taxonomy(&spans, &["fwd", "bwd"], &format!("{mode:?} rank {}", t.rank()));
+            saw_bwd |= spans.iter().any(|sp| sp.cat == "bwd");
+        }
+        assert!(saw_bwd, "{mode:?}: no backward-pass spans recorded");
+    }
+}
+
+/// The Chrome exporter emits one track per rank and only well-formed
+/// complete ("X") events, on a shared timeline.
+#[test]
+fn chrome_export_is_well_formed() {
+    let mut rng = Rng::new(0xC42);
+    let n = 20usize;
+    let b = 4usize;
+    let net = random_net(&mut rng, n, 3, 0.2);
+    let part = random_partition(&net.layers, 3, rng.next_u64());
+    let plan = CommPlan::build(&net.layers, &part);
+    let x0: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+    let (_, _, tracers) = infer_with_plan_mode_traced(
+        &net,
+        &part,
+        &plan,
+        &x0,
+        b,
+        ExecMode::Overlap,
+        TraceMode::with_capacity(8192),
+    );
+    let tracks: Vec<(String, Vec<Span>)> = tracers
+        .iter()
+        .map(|t| (format!("rank {}", t.rank()), t.spans()))
+        .collect();
+    let json = chrome_trace_json(&tracks);
+    assert!(json.starts_with('{') && json.ends_with('}'));
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"ph\":\"X\""));
+    assert!(json.contains("\"ph\":\"M\""), "missing thread_name metadata");
+    for (name, _) in &tracks {
+        assert!(json.contains(name.as_str()), "missing track '{name}'");
+    }
+}
+
+/// The pipelined schedule is visible in the trace: on every rank and
+/// layer that posted outbound payloads, the first `post` span starts
+/// before that layer's interior epilogue — boundary-first rows really
+/// went on the wire ahead of the interior compute finishing.
+#[test]
+fn pipelined_trace_shows_posts_before_interior_epilogue() {
+    let mut rng = Rng::new(0x91E);
+    let n = 28usize;
+    let b = 6usize;
+    let net = random_net(&mut rng, n, 4, 0.3);
+    let part = random_partition(&net.layers, 4, rng.next_u64());
+    let plan = CommPlan::build(&net.layers, &part);
+    let x0: Vec<f32> = (0..n * b).map(|_| rng.gen_f32()).collect();
+    let (_, _, tracers) = infer_with_plan_mode_traced(
+        &net,
+        &part,
+        &plan,
+        &x0,
+        b,
+        ExecMode::Pipelined { chunk_acts: 2 },
+        TraceMode::with_capacity(16384),
+    );
+    let mut checked = 0usize;
+    for t in &tracers {
+        let spans = t.spans();
+        for k in 0..net.depth() as u32 {
+            let first_post = spans
+                .iter()
+                .filter(|sp| sp.name == "post" && sp.layer == k)
+                .map(|sp| sp.start_ns)
+                .min();
+            let interior = spans
+                .iter()
+                .filter(|sp| sp.name == "epilogue.interior" && sp.layer == k)
+                .map(|sp| sp.start_ns)
+                .min();
+            if let (Some(post), Some(epi)) = (first_post, interior) {
+                assert!(
+                    post <= epi,
+                    "rank {} layer {k}: post at {post}ns after interior epilogue at {epi}ns",
+                    t.rank()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 0, "no (post, interior-epilogue) pairs to check");
+}
