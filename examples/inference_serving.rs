@@ -82,6 +82,7 @@ fn main() {
             adaptive: true,
             mode,
             codec,
+            ..PoolConfig::default()
         },
     ));
 

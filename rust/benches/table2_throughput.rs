@@ -538,7 +538,7 @@ fn main() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
-            codec: Codec::F32,
+            ..PoolConfig::default()
         },
     );
     let _ = pool.submit(x0.clone(), pb).wait().expect("warm-up"); // warm-up

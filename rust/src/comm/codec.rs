@@ -23,7 +23,7 @@
 //! channel plumbing stay untouched). Lossy codecs are self-describing:
 //!
 //! ```text
-//! word 0   MAGIC (upper 16 bits) | codec id (lower 16 bits)
+//! word 0   MAGIC (upper 16 bits) | checked flag (bit 15) | codec id
 //! word 1   element count
 //! words 2… Int8 only: one f32 scale per group
 //! rest     packed elements (2 halves / 4 int8 lanes per word)
@@ -33,12 +33,23 @@
 //! footprint for any payload length — the same arithmetic the α-β network
 //! model ([`crate::comm::netmodel`]) and the live byte counters use, so
 //! predicted and measured volumes agree.
+//!
+//! **Checked envelope.** Chaos builds (an armed `SPDNN_FAULT` plan)
+//! transport every payload through [`Codec::encode_into_checked`]: the
+//! standard encoding with the header's checked flag set — [`Codec::F32`],
+//! normally headerless, gains header framing — plus one trailing FNV-1a
+//! checksum word, so a corrupted payload is detected at decode instead of
+//! silently producing wrong activations. The unchecked hot path is
+//! byte-identical to before and pays no checksum arithmetic.
 
 /// Bit pattern marking an encoded payload's header word.
 const MAGIC: u32 = 0xC0DE_0000;
 const MAGIC_MASK: u32 = 0xFFFF_0000;
 /// Header words before the (per-codec) scale block.
 const HDR_WORDS: usize = 2;
+/// Checked-envelope flag, set in the id halfword of header word 0 (codec
+/// ids occupy the low bits; bit 15 is free).
+const CHECKED_FLAG: u32 = 0x8000;
 
 /// Elements per Int8 scale group when none is given (`group == 0`).
 pub const DEFAULT_INT8_GROUP: usize = 256;
@@ -121,6 +132,16 @@ impl Codec {
         4 * self.wire_words(len) as u64
     }
 
+    /// Exact wire footprint, in f32 words, of a `len`-element payload in
+    /// the checked envelope: the standard encoding plus the trailing
+    /// checksum word ([`Codec::F32`] additionally gains header framing).
+    pub fn checked_wire_words(&self, len: usize) -> usize {
+        match *self {
+            Codec::F32 => HDR_WORDS + len + 1,
+            _ => self.wire_words(len) + 1,
+        }
+    }
+
     /// Encode `src` into `dst` (cleared first). On return `dst.len()`
     /// equals [`Codec::wire_words`]`(src.len())`.
     pub fn encode_into(&self, src: &[f32], dst: &mut Vec<f32>) {
@@ -192,6 +213,70 @@ impl Codec {
             }
         }
     }
+
+    /// Encode `src` into the *checked* wire envelope (cleared first):
+    /// the standard encoding with the header's checked flag set, plus a
+    /// trailing FNV-1a checksum word over every preceding wire word. On
+    /// return `dst.len()` equals
+    /// [`Codec::checked_wire_words`]`(src.len())`.
+    pub fn encode_into_checked(&self, src: &[f32], dst: &mut Vec<f32>) {
+        match *self {
+            Codec::F32 => {
+                dst.clear();
+                dst.reserve(self.checked_wire_words(src.len()));
+                push_header(dst, self.id(), src.len());
+                dst.extend_from_slice(src);
+            }
+            _ => self.encode_into(src, dst),
+        }
+        dst[0] = f32::from_bits(dst[0].to_bits() | CHECKED_FLAG);
+        let h = fnv1a(dst);
+        dst.push(f32::from_bits(h));
+    }
+
+    /// Decode a checked-envelope payload (see
+    /// [`Codec::encode_into_checked`]) into `dst` (cleared first). The
+    /// caller must have validated integrity with
+    /// [`Codec::verify_checksum`] first — this routine only unwraps the
+    /// framing (the element count is header-driven, so the trailing
+    /// checksum word is naturally ignored).
+    pub fn decode_checked_into(&self, wire: &[f32], dst: &mut Vec<f32>) {
+        match *self {
+            Codec::F32 => {
+                let count = read_header(wire, self.id());
+                dst.clear();
+                dst.extend_from_slice(&wire[HDR_WORDS..HDR_WORDS + count]);
+            }
+            _ => self.decode_into(wire, dst),
+        }
+    }
+
+    /// True when a wire payload carries the checked-envelope flag.
+    pub fn payload_checked(wire: &[f32]) -> bool {
+        wire.first().is_some_and(|w| {
+            let bits = w.to_bits();
+            bits & MAGIC_MASK == MAGIC && bits & CHECKED_FLAG != 0
+        })
+    }
+
+    /// Recompute the FNV-1a checksum of a checked-envelope payload and
+    /// compare it against the trailing word: false on any corruption
+    /// (including payloads too short to carry an envelope at all).
+    pub fn verify_checksum(wire: &[f32]) -> bool {
+        wire.len() > HDR_WORDS && fnv1a(&wire[..wire.len() - 1]) == wire[wire.len() - 1].to_bits()
+    }
+}
+
+/// FNV-1a (32-bit) over the little-endian bytes of each wire word.
+fn fnv1a(words: &[f32]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for w in words {
+        for b in w.to_bits().to_le_bytes() {
+            h ^= b as u32;
+            h = h.wrapping_mul(16_777_619);
+        }
+    }
+    h
 }
 
 fn push_header(dst: &mut Vec<f32>, id: u16, count: usize) {
@@ -204,7 +289,7 @@ fn read_header(wire: &[f32], expect_id: u16) -> usize {
     let w0 = wire[0].to_bits();
     assert_eq!(w0 & MAGIC_MASK, MAGIC, "payload is not codec-encoded");
     assert_eq!(
-        (w0 & !MAGIC_MASK) as u16,
+        (w0 & !MAGIC_MASK & !CHECKED_FLAG) as u16,
         expect_id,
         "payload encoded with a different codec"
     );
@@ -494,5 +579,73 @@ mod tests {
         }
         assert_eq!(Codec::parse("HALF"), Some(Codec::F16));
         assert_eq!(Codec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn checked_roundtrip_all_codecs() {
+        for codec in [
+            Codec::F32,
+            Codec::F16,
+            Codec::int8(),
+            Codec::Int8 { group: 3 },
+        ] {
+            for len in [0usize, 1, 2, 5, 101] {
+                let src: Vec<f32> = (0..len).map(|i| (i as f32 - 50.0) * 0.17).collect();
+                let mut wire = Vec::new();
+                codec.encode_into_checked(&src, &mut wire);
+                assert_eq!(wire.len(), codec.checked_wire_words(len), "{codec:?} len {len}");
+                assert!(Codec::payload_checked(&wire));
+                assert!(Codec::verify_checksum(&wire), "{codec:?} len {len}");
+                let mut out = Vec::new();
+                codec.decode_checked_into(&wire, &mut out);
+                assert_eq!(out.len(), len, "{codec:?}");
+                if codec == Codec::F32 {
+                    for (a, b) in out.iter().zip(src.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "checked F32 must be lossless");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checksum_rejects_any_single_bit_flip() {
+        let src: Vec<f32> = (0..40).map(|i| i as f32 * 0.5 - 7.0).collect();
+        for codec in [Codec::F32, Codec::F16, Codec::int8()] {
+            let mut wire = Vec::new();
+            codec.encode_into_checked(&src, &mut wire);
+            for word in 0..wire.len() {
+                for bit in [0u32, 13, 15, 31] {
+                    let mut bad = wire.clone();
+                    bad[word] = f32::from_bits(bad[word].to_bits() ^ (1 << bit));
+                    assert!(
+                        !Codec::verify_checksum(&bad),
+                        "{codec:?} word {word} bit {bit} undetected"
+                    );
+                }
+            }
+            assert!(Codec::verify_checksum(&wire), "unflipped wire stays valid");
+        }
+    }
+
+    #[test]
+    fn checked_flag_does_not_confuse_plain_decode_or_detection() {
+        // a checked f16 payload still decodes through the plain
+        // count-driven path (flag masked in the header, trailing checksum
+        // word ignored)
+        let src = [1.0f32, -2.0, 3.5];
+        let mut wire = Vec::new();
+        Codec::F16.encode_into_checked(&src, &mut wire);
+        let mut out = Vec::new();
+        Codec::F16.decode_into(&wire, &mut out);
+        assert_eq!(out.len(), src.len());
+        // unchecked payloads carry no flag and fail verification
+        let mut plain = Vec::new();
+        Codec::F16.encode_into(&src, &mut plain);
+        assert!(!Codec::payload_checked(&plain));
+        assert!(!Codec::verify_checksum(&plain));
+        // a raw headerless F32 payload is never mistaken for an envelope
+        assert!(!Codec::payload_checked(&[1.0, 2.0, 3.0]));
+        assert!(!Codec::verify_checksum(&[]));
     }
 }

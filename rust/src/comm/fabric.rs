@@ -16,13 +16,26 @@
 //! the parallel engine ([`crate::runtime::parallel`]) poisons the fabric and
 //! every peer blocked in [`Endpoint::recv`] wakes up and unwinds instead of
 //! deadlocking on a message that will never arrive.
+//!
+//! **Chaos.** A fabric built while a fault plan is installed
+//! (`SPDNN_FAULT`, or an explicit plan via [`fabric_with`]) arms three
+//! defenses-under-test: every endpoint carries a deterministic
+//! [`FaultInjector`] with failpoints on the send path (delay,
+//! drop-then-poison) and the payload envelope (bit-flip); payloads travel
+//! the *checked* codec envelope so corruption is caught at decode and
+//! poisons the generation with a typed `Corrupt` cause; and blocking
+//! receives honor a **stall watchdog** deadline that converts a silent
+//! hang into a typed `Stall` poisoning instead of blocking forever. A
+//! plain fabric pays one `Option` branch per failpoint site — no clock
+//! reads, no checksum arithmetic.
 
 use super::codec::Codec;
+use crate::runtime::fault::{self, FaultCause, FaultInjector, FaultPlan};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Communication phase tag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -52,6 +65,16 @@ pub type Want = (u32, u32, u32);
 
 /// How long a blocked receive sleeps between checks of the fault flag.
 const FAULT_POLL: Duration = Duration::from_millis(50);
+
+/// Leading `try_recv` attempts of a blocking receive that spin with a CPU
+/// hint — on the hot path the wanted message is usually already in
+/// flight, and a spin beats parking the thread.
+const SPIN_TRIES: usize = 16;
+
+/// Further `try_recv` attempts that yield the core before the receive
+/// falls back to a blocking timed wait, so a watchdog-length stall never
+/// busy-burns a CPU.
+const YIELD_TRIES: usize = 48;
 
 /// Cap on recycled payload buffers kept per endpoint (bounds memory while
 /// still covering every in-flight transfer of a layer step).
@@ -117,6 +140,16 @@ pub struct Endpoint {
     /// is queued first.
     stash: HashMap<Key, VecDeque<Vec<f32>>>,
     fault: Arc<AtomicBool>,
+    /// Chaos failpoints ([`crate::runtime::fault`]); `None` (the plain
+    /// build) costs one branch per failpoint site.
+    faults: Option<FaultInjector>,
+    /// Stall-watchdog deadline for blocking receives; `None` waits
+    /// forever and never reads the clock.
+    watchdog: Option<Duration>,
+    /// True when payloads travel the checked (checksummed) codec
+    /// envelope. Armed iff the fabric was built with a fault plan, and
+    /// symmetric across endpoints so decoders know what to expect.
+    wire_checked: bool,
     /// Recycled payload buffers: consumed receives return their allocation
     /// here and send sites reuse it, so a steady-state layer loop (and a
     /// pool rank serving a stream of requests) stops touching the
@@ -168,6 +201,10 @@ impl Endpoint {
     /// is recycled (it came from [`Endpoint::take_buf`] at the gather
     /// site); [`Codec::F32`] skips the copy entirely and sends `raw`
     /// itself — bit-identical to [`Endpoint::send_chunk`].
+    ///
+    /// On a chaos fabric every payload — F32 included — instead travels
+    /// the checked codec envelope (checksummed, detectable at decode),
+    /// and may be hit by the bit-flip failpoint on the way out.
     #[allow(clippy::too_many_arguments)]
     pub fn send_encoded(
         &mut self,
@@ -180,27 +217,142 @@ impl Endpoint {
         raw: Vec<f32>,
     ) {
         let raw_bytes = 4 * raw.len() as u64;
-        if codec == Codec::F32 {
-            self.send_wire(to, layer, phase, transfer, chunk, raw, raw_bytes);
+        if !self.wire_checked {
+            if codec == Codec::F32 {
+                self.send_wire(to, layer, phase, transfer, chunk, raw, raw_bytes);
+                return;
+            }
+            let mut wire = self.take_buf();
+            codec.encode_into(&raw, &mut wire);
+            self.recycle(raw);
+            self.send_wire(to, layer, phase, transfer, chunk, wire, raw_bytes);
             return;
         }
         let mut wire = self.take_buf();
-        codec.encode_into(&raw, &mut wire);
+        codec.encode_into_checked(&raw, &mut wire);
         self.recycle(raw);
+        self.flip_failpoint(&mut wire);
         self.send_wire(to, layer, phase, transfer, chunk, wire, raw_bytes);
     }
 
     /// Decode an arrived payload with the codec its sender used. Returns a
     /// pool buffer holding the f32 values; the wire buffer is recycled.
     /// [`Codec::F32`] hands the payload back untouched.
+    ///
+    /// On a chaos fabric the payload arrives in the checked envelope: its
+    /// checksum is verified before any decode, and a mismatch poisons the
+    /// fabric with a typed `Corrupt` root cause instead of silently
+    /// producing wrong activations.
     pub fn decode_payload(&mut self, codec: Codec, wire: Vec<f32>) -> Vec<f32> {
-        if codec == Codec::F32 {
-            return wire;
+        if !self.wire_checked {
+            if codec == Codec::F32 {
+                return wire;
+            }
+            let mut out = self.take_buf();
+            codec.decode_into(&wire, &mut out);
+            self.recycle(wire);
+            return out;
+        }
+        if !Codec::verify_checksum(&wire) {
+            let cause = FaultCause::Corrupt {
+                rank: self.rank,
+                codec: codec.label().into(),
+                words: wire.len(),
+            };
+            self.poison();
+            panic!("{cause}");
         }
         let mut out = self.take_buf();
-        codec.decode_into(&wire, &mut out);
+        codec.decode_checked_into(&wire, &mut out);
         self.recycle(wire);
         out
+    }
+
+    /// The payload bit-flip failpoint: on a budgeted hit, XOR one random
+    /// bit of one random non-header wire word, so the corruption is
+    /// always detectable (the checked flag in word 0 survives).
+    fn flip_failpoint(&mut self, wire: &mut [f32]) {
+        let Some(inj) = self.faults.as_mut() else {
+            return;
+        };
+        let spec = *inj.spec();
+        if wire.len() > 1 && inj.roll_fault(spec.flip_p) {
+            let word = 1 + inj.gen_range(wire.len() - 1);
+            let bit = inj.gen_range(32);
+            wire[word] = f32::from_bits(wire[word].to_bits() ^ (1u32 << bit));
+        }
+    }
+
+    /// The send-path failpoints: an injected delay (free) and an injected
+    /// drop (budgeted — the message never leaves, and the sender poisons
+    /// the fabric with a typed `DroppedSend` cause so peers wake up).
+    fn send_failpoints(&mut self, to: u32, layer: u32, phase: Phase) {
+        let Some(inj) = self.faults.as_mut() else {
+            return;
+        };
+        let spec = *inj.spec();
+        if inj.roll_free(spec.delay_p) {
+            std::thread::sleep(Duration::from_micros(spec.delay_us));
+        }
+        if inj.roll_fault(spec.drop_p) {
+            let cause = FaultCause::DroppedSend {
+                rank: self.rank,
+                to: to as usize,
+                wanted: format!("layer {layer} {phase:?}"),
+            };
+            self.poison();
+            panic!("{cause}");
+        }
+    }
+
+    /// The receive-path delay failpoint (free roll, shared `delay_p`).
+    fn recv_delay_failpoint(&mut self) {
+        let Some(inj) = self.faults.as_mut() else {
+            return;
+        };
+        let spec = *inj.spec();
+        if inj.roll_free(spec.delay_p) {
+            std::thread::sleep(Duration::from_micros(spec.delay_us));
+        }
+    }
+
+    /// The rank compute-loop failpoints, rolled once per job by the pool
+    /// rank loop: an injected stall (sleep past the peers' watchdog) and
+    /// an injected panic with a typed `ComputePanic` cause. Both are
+    /// budgeted; inert without an armed plan.
+    pub fn compute_failpoint(&mut self) {
+        let Some(inj) = self.faults.as_mut() else {
+            return;
+        };
+        let spec = *inj.spec();
+        let stall = inj.roll_fault(spec.stall_p);
+        let panic_now = inj.roll_fault(spec.panic_p);
+        if stall {
+            std::thread::sleep(Duration::from_millis(spec.stall_ms));
+        }
+        if panic_now {
+            let cause = FaultCause::ComputePanic { rank: self.rank };
+            self.poison();
+            panic!("{cause}");
+        }
+    }
+
+    /// The pool scheduler's dispatch-delay failpoint (free roll, shared
+    /// `delay_p`, sleeping `dispatch_delay_us`); inert without a plan.
+    pub fn dispatch_delay_failpoint(&mut self) {
+        let Some(inj) = self.faults.as_mut() else {
+            return;
+        };
+        let spec = *inj.spec();
+        if inj.roll_free(spec.delay_p) {
+            std::thread::sleep(Duration::from_micros(spec.dispatch_delay_us));
+        }
+    }
+
+    /// Arm (or disarm, with `None`) the stall watchdog for this
+    /// endpoint's blocking receives.
+    pub fn set_watchdog(&mut self, deadline: Option<Duration>) {
+        self.watchdog = deadline;
     }
 
     /// Innermost send: counts the payload as it travels the wire plus the
@@ -216,6 +368,9 @@ impl Endpoint {
         payload: Vec<f32>,
         raw_bytes: u64,
     ) {
+        if self.faults.is_some() {
+            self.send_failpoints(to, layer, phase);
+        }
         let wire_bytes = 4 * payload.len() as u64;
         self.sent_words += payload.len() as u64;
         self.sent_msgs += 1;
@@ -255,6 +410,9 @@ impl Endpoint {
     /// in [`Endpoint::drained`], not here).
     #[inline]
     fn note_recv(&mut self, from: u32, words: usize) {
+        if self.faults.is_some() {
+            self.recv_delay_failpoint();
+        }
         let wire_bytes = 4 * words as u64;
         self.recv_msgs += 1;
         self.recv_wire_bytes += wire_bytes;
@@ -297,18 +455,66 @@ impl Endpoint {
         self.stash.entry(key).or_default().push_back(payload);
     }
 
+    /// One bounded wait for the next inbox message: a short
+    /// spin-then-yield burst over `try_recv` (cheap when the message is
+    /// already in flight, core-friendly when it isn't), then a blocking
+    /// timed wait of one fault-poll slice.
+    fn next_msg(&mut self) -> Result<Msg, RecvTimeoutError> {
+        for spin in 0..SPIN_TRIES + YIELD_TRIES {
+            match self.inbox.try_recv() {
+                Ok(m) => return Ok(m),
+                Err(TryRecvError::Disconnected) => return Err(RecvTimeoutError::Disconnected),
+                Err(TryRecvError::Empty) => {
+                    if spin < SPIN_TRIES {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+        self.inbox.recv_timeout(FAULT_POLL)
+    }
+
+    /// Handle one timed-out wait slice of a blocking receive: unwind as a
+    /// *secondary* failure if a peer already poisoned the fabric (checked
+    /// first, so triage keeps preferring the root cause), then trip the
+    /// stall watchdog — poison plus a typed `Stall` root cause — once the
+    /// deadline set at call entry has passed.
+    fn wait_tick(&mut self, deadline: &Option<(Instant, Duration)>, wanted: impl Fn() -> String) {
+        if self.poisoned() {
+            panic!(
+                "fabric poisoned: a peer rank failed while rank {} waited",
+                self.rank
+            );
+        }
+        if let Some((start, limit)) = deadline {
+            let waited = start.elapsed();
+            if waited >= *limit {
+                let cause = FaultCause::Stall {
+                    rank: self.rank,
+                    waited_ms: waited.as_millis() as u64,
+                    wanted: wanted(),
+                };
+                self.poison();
+                panic!("{cause}");
+            }
+        }
+    }
+
     /// Blocking receive of the tagged message (oldest first if the tag is
     /// in flight more than once); out-of-order arrivals for other tags are
     /// stashed. Panics if the fabric is poisoned while waiting (a peer
-    /// rank failed).
+    /// rank failed) or, with a watchdog armed, once the deadline expires.
     pub fn recv(&mut self, from: u32, layer: u32, phase: Phase, transfer: u32) -> Vec<f32> {
         let key: Key = (layer, phase, from, transfer, 0);
         if let Some(p) = self.stash_pop(&key) {
             self.note_recv(from, p.len());
             return p;
         }
+        let deadline = self.watchdog.map(|limit| (Instant::now(), limit));
         loop {
-            match self.inbox.recv_timeout(FAULT_POLL) {
+            match self.next_msg() {
                 Ok(m) => {
                     let k: Key = (m.layer, m.phase, m.from, m.transfer, m.chunk);
                     if k == key {
@@ -318,12 +524,9 @@ impl Endpoint {
                     self.stash_push(k, m.payload);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    if self.poisoned() {
-                        panic!(
-                            "fabric poisoned: a peer rank failed while rank {} waited",
-                            self.rank
-                        );
-                    }
+                    self.wait_tick(&deadline, || {
+                        format!("layer {layer} {phase:?} transfer {transfer} (from rank {from})")
+                    });
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     panic!("fabric closed while receiving");
@@ -376,7 +579,8 @@ impl Endpoint {
     /// payload. Arrival order, not plan order — the overlapped engine
     /// applies each remote segment (and the pipelined engine each partial
     /// chunk payload) the moment its activations land.
-    /// Panics if the fabric is poisoned while waiting.
+    /// Panics if the fabric is poisoned while waiting or, with a watchdog
+    /// armed, once the deadline expires with none of the wants arrived.
     pub fn recv_any(&mut self, layer: u32, phase: Phase, wants: &[Want]) -> (usize, Vec<f32>) {
         assert!(!wants.is_empty(), "recv_any needs at least one want");
         for (i, &(from, transfer, chunk)) in wants.iter().enumerate() {
@@ -386,8 +590,9 @@ impl Endpoint {
                 return (i, p);
             }
         }
+        let deadline = self.watchdog.map(|limit| (Instant::now(), limit));
         loop {
-            match self.inbox.recv_timeout(FAULT_POLL) {
+            match self.next_msg() {
                 Ok(m) => {
                     if m.layer == layer && m.phase == phase {
                         if let Some(i) = wants
@@ -401,12 +606,9 @@ impl Endpoint {
                     self.stash_push((m.layer, m.phase, m.from, m.transfer, m.chunk), m.payload);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    if self.poisoned() {
-                        panic!(
-                            "fabric poisoned: a peer rank failed while rank {} waited",
-                            self.rank
-                        );
-                    }
+                    self.wait_tick(&deadline, || {
+                        format!("layer {layer} {phase:?} (any of {wants:?})")
+                    });
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     panic!("fabric closed while receiving");
@@ -464,8 +666,25 @@ impl Endpoint {
     }
 }
 
-/// Build a fully-connected fabric of `n` endpoints sharing one fault flag.
+/// Build a fully-connected fabric of `n` endpoints sharing one fault
+/// flag, armed with the process-wide `SPDNN_FAULT` chaos plan (if any)
+/// and that plan's watchdog deadline.
 pub fn fabric(n: usize) -> Vec<Endpoint> {
+    let plan = fault::from_env();
+    let watchdog = plan.as_ref().and_then(|p| p.spec().watchdog());
+    fabric_with(n, plan, watchdog)
+}
+
+/// [`fabric`] with an explicit chaos plan and stall-watchdog deadline.
+/// Each endpoint derives its own deterministic injector stream from its
+/// rank, and the checked wire envelope is armed iff a plan is installed
+/// (symmetric across all endpoints), so a chaos-free fabric pays no
+/// integrity cost.
+pub fn fabric_with(
+    n: usize,
+    plan: Option<Arc<FaultPlan>>,
+    watchdog: Option<Duration>,
+) -> Vec<Endpoint> {
     let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(n);
     let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n);
     for _ in 0..n {
@@ -483,6 +702,11 @@ pub fn fabric(n: usize) -> Vec<Endpoint> {
             inbox,
             stash: HashMap::new(),
             fault: fault.clone(),
+            faults: plan
+                .as_ref()
+                .map(|p| FaultInjector::new(Arc::clone(p), rank as u64)),
+            watchdog,
+            wire_checked: plan.is_some(),
             spare: Vec::new(),
             recent_payload: 0,
             sent_words: 0,
@@ -862,6 +1086,148 @@ mod tests {
         assert_eq!(s0.peers[1].recv_msgs, 2);
         assert_eq!(s0.peers[1].recv_bytes, 12);
         assert!(e0.drained());
+    }
+
+    #[test]
+    fn watchdog_converts_silent_stall_to_typed_poison() {
+        // no plan, just a watchdog: a receive nobody will answer must trip
+        // within the deadline, poison the fabric, and name what it waited
+        // for — instead of hanging forever.
+        let mut eps = fabric_with(2, None, Some(Duration::from_millis(60)));
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let start = std::time::Instant::now();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e0.recv(1, 3, Phase::Forward, 2)
+        }))
+        .expect_err("unanswered recv must trip the watchdog");
+        assert!(start.elapsed() < Duration::from_secs(5), "trip must be prompt");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("stall watchdog"), "{msg}");
+        assert!(msg.contains("layer 3"), "{msg}");
+        assert!(e0.poisoned(), "the trip must poison the fabric");
+        // recv_any trips too, listing its wants
+        let mut eps = fabric_with(2, None, Some(Duration::from_millis(60)));
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e0.recv_any(1, Phase::Backward, &[(1, 0, 0)])
+        }))
+        .expect_err("unanswered recv_any must trip the watchdog");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("stall watchdog"), "{msg}");
+    }
+
+    #[test]
+    fn poisoning_beats_the_watchdog() {
+        // a rank observing a peer's poison while its own watchdog is armed
+        // must unwind as a *secondary* failure, preserving triage order
+        let mut eps = fabric_with(2, None, Some(Duration::from_secs(30)));
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.poison();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e0.recv(1, 0, Phase::Forward, 0)
+        }))
+        .expect_err("poisoned wait must unwind");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("fabric poisoned"), "{msg}");
+    }
+
+    #[test]
+    fn checked_envelope_roundtrips_all_codecs() {
+        use crate::runtime::fault::{FaultPlan, FaultSpec};
+        // an inert plan (all probabilities zero) still arms the checked
+        // envelope; payloads must roundtrip losslessly through it
+        let vals: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.03).collect();
+        for codec in [Codec::F32, Codec::F16, Codec::int8()] {
+            let plan = FaultPlan::new(FaultSpec::default());
+            let mut eps = fabric_with(2, Some(plan), None);
+            let mut e1 = eps.pop().unwrap();
+            let mut e0 = eps.pop().unwrap();
+            e1.send_encoded(0, 0, Phase::Forward, 0, 0, codec, vals.clone());
+            // F32 loses zero-copy under chaos: header + body + checksum
+            assert_eq!(
+                e1.sent_wire_bytes,
+                4 * codec.checked_wire_words(vals.len()) as u64
+            );
+            assert_eq!(e1.sent_raw_bytes, 400);
+            let p = e0.recv(1, 0, Phase::Forward, 0);
+            assert!(Codec::payload_checked(&p));
+            let p = e0.decode_payload(codec, p);
+            assert_eq!(p.len(), vals.len());
+            if codec == Codec::F32 {
+                assert_eq!(p, vals, "checked F32 must stay lossless");
+            }
+            e0.recycle(p);
+            assert!(e0.drained());
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_is_detected_at_decode() {
+        use crate::runtime::fault::{FaultPlan, FaultSpec};
+        let plan = FaultPlan::new(FaultSpec::default());
+        let mut eps = fabric_with(2, Some(plan), None);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let vals: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+        e1.send_encoded(0, 0, Phase::Forward, 0, 0, Codec::F16, vals);
+        let mut p = e0.recv(1, 0, Phase::Forward, 0);
+        p[3] = f32::from_bits(p[3].to_bits() ^ (1 << 9)); // in-flight bit-flip
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e0.decode_payload(Codec::F16, p)
+        }))
+        .expect_err("corrupt payload must not decode");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        assert!(e0.poisoned(), "corruption must poison the generation");
+    }
+
+    #[test]
+    fn flip_failpoint_produces_detectable_corruption() {
+        use crate::runtime::fault::{FaultPlan, FaultSpec};
+        // a certain flip with budget 1: the first encoded send is
+        // corrupted (detectably), the second is clean
+        let plan = FaultPlan::new(FaultSpec {
+            flip_p: 1.0,
+            budget: 1,
+            ..FaultSpec::default()
+        });
+        let mut eps = fabric_with(2, Some(Arc::clone(&plan)), None);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let vals: Vec<f32> = (0..32).map(|i| i as f32 * 0.25).collect();
+        e1.send_encoded(0, 0, Phase::Forward, 0, 0, Codec::F32, vals.clone());
+        e1.send_encoded(0, 1, Phase::Forward, 0, 0, Codec::F32, vals.clone());
+        assert_eq!(plan.injected(), 1);
+        let p = e0.recv(1, 0, Phase::Forward, 0);
+        assert!(!Codec::verify_checksum(&p), "flip must break the checksum");
+        assert!(Codec::payload_checked(&p), "header flag must survive the flip");
+        let clean = e0.recv(1, 1, Phase::Forward, 0);
+        let clean = e0.decode_payload(Codec::F32, clean);
+        assert_eq!(clean, vals, "budget-exhausted sends are untouched");
+    }
+
+    #[test]
+    fn drop_failpoint_poisons_with_root_cause() {
+        use crate::runtime::fault::{FaultPlan, FaultSpec};
+        let plan = FaultPlan::new(FaultSpec {
+            drop_p: 1.0,
+            budget: 1,
+            ..FaultSpec::default()
+        });
+        let mut eps = fabric_with(2, Some(plan), None);
+        let mut e1 = eps.pop().unwrap();
+        let _e0 = eps.pop().unwrap();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e1.send(0, 2, Phase::Forward, 0, vec![1.0])
+        }))
+        .expect_err("a dropped send must panic the sender");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("dropped send"), "{msg}");
+        assert!(msg.contains("layer 2"), "{msg}");
+        assert!(e1.poisoned(), "the drop must poison the fabric");
     }
 
     #[test]

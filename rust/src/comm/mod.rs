@@ -7,5 +7,5 @@ pub mod fabric;
 pub mod netmodel;
 
 pub use codec::Codec;
-pub use fabric::{fabric, Endpoint, FabricStats, Msg, PeerCounters, Phase, Want};
+pub use fabric::{fabric, fabric_with, Endpoint, FabricStats, Msg, PeerCounters, Phase, Want};
 pub use netmodel::{ComputeModel, NetModel};

@@ -1,0 +1,360 @@
+//! `spdnn chaos` — chaos-engineering smoke driver: run the serving pool
+//! under a seeded fault stream (injected panics, stalls, dropped sends,
+//! payload bit-flips) and report how the recovery pipeline held up. The
+//! CI bench-smoke step runs this with `SPDNN_ENFORCE=1`, which turns the
+//! acceptance bars into hard failures ([`enforce`]):
+//!
+//! - every submitted ticket resolves (100 % resolution, zero unresolved —
+//!   faults must never deadlock the pool);
+//! - every `Ok` reply is bit-identical-tolerance equal to the serial
+//!   engine (faults never corrupt a served answer — corruption is
+//!   detected and retried, or failed with a typed error);
+//! - generation respawns never exceed the injected-fault budget (no
+//!   respawn storms);
+//! - after the stream is disarmed, a clean tail of requests all succeed
+//!   (the pool heals completely).
+//!
+//! The report is written as `BENCH_chaos.json` (see `docs/BENCHMARKS.md`
+//! for the schema and `docs/ROBUSTNESS.md` for the fault taxonomy).
+
+use crate::coordinator::ExecMode;
+use crate::dnn::inference::infer_batch;
+use crate::radixnet::{generate, RadixNetConfig};
+use crate::runtime::fault::{FaultPlan, FaultSpec};
+use crate::serving::{PoolConfig, RankPool, RecoveryConfig, ServeError, Ticket};
+use crate::util::{Rng, Stopwatch};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Workload shape and fault rates for one chaos run.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    pub neurons: usize,
+    pub layers: usize,
+    pub ranks: usize,
+    /// Requests submitted while the fault stream is armed.
+    pub requests: usize,
+    pub mode: ExecMode,
+    /// The seeded fault plan driving the failpoints.
+    pub spec: FaultSpec,
+    /// Requeue attempts granted to each ticket
+    /// ([`RecoveryConfig::retry_budget`]).
+    pub retry_budget: u32,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            neurons: 64,
+            layers: 3,
+            ranks: 4,
+            requests: 200,
+            mode: ExecMode::pipelined(),
+            spec: FaultSpec {
+                seed: 42,
+                delay_p: 0.02,
+                delay_us: 100,
+                panic_p: 0.01,
+                stall_p: 0.005,
+                stall_ms: 400,
+                flip_p: 0.01,
+                drop_p: 0.005,
+                watchdog_ms: 150,
+                budget: 12,
+                ..FaultSpec::default()
+            },
+            retry_budget: 3,
+        }
+    }
+}
+
+/// Outcome counts and recovery counters of one chaos run.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub requests: u64,
+    /// Tickets served correctly (verified against the serial engine).
+    pub ok: u64,
+    /// Tickets resolved to a typed `RankFailure` (retry budget exhausted).
+    pub failed_rank: u64,
+    /// Tickets fast-failed by an open circuit breaker.
+    pub failed_unavailable: u64,
+    /// Tickets that never resolved within the driver deadline — any value
+    /// above zero means the pool deadlocked under chaos.
+    pub unresolved: u64,
+    /// Faults actually consumed from the plan's budget.
+    pub injected: u64,
+    /// Generation respawns completed.
+    pub respawns: u64,
+    /// Ticket requeues absorbed by the retry budget.
+    pub retries: u64,
+    pub watchdog_trips: u64,
+    pub checksum_failures: u64,
+    /// Resolved tickets / submitted tickets — the headline bar (1.0).
+    pub resolution_rate: f64,
+    /// p95 submit→resolve latency over the chaos stream (ms) — includes
+    /// requeue + respawn + backoff time for retried tickets.
+    pub recovery_p95_ms: f64,
+    /// All 10 post-disarm requests served correctly.
+    pub clean_tail_ok: bool,
+    pub wall_secs: f64,
+}
+
+fn random_input(rng: &mut Rng, n: usize, b: usize) -> Vec<f32> {
+    (0..n * b)
+        .map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 })
+        .collect()
+}
+
+fn matches_serial(out: &[f32], serial: &[f32]) -> bool {
+    out.len() == serial.len()
+        && out
+            .iter()
+            .zip(serial.iter())
+            .all(|(a, s)| (a - s).abs() < 1e-5)
+}
+
+/// Poll one ticket to resolution with a hard deadline; `None` = the
+/// ticket never resolved (the pool is stuck).
+fn resolve(t: &Ticket, deadline: Duration) -> Option<Result<Vec<f32>, ServeError>> {
+    let start = Instant::now();
+    loop {
+        if let Some(reply) = t.poll() {
+            return Some(reply);
+        }
+        if start.elapsed() >= deadline {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Run one chaos stream: submit `cfg.requests` under the armed fault
+/// plan, resolve every ticket, disarm, serve a clean tail, and collect
+/// the recovery counters.
+pub fn run(cfg: &ChaosConfig) -> ChaosReport {
+    let net = generate(
+        &RadixNetConfig::graph_challenge(cfg.neurons, cfg.layers)
+            .unwrap_or_else(|| panic!("unsupported neuron count {}", cfg.neurons)),
+    );
+    let plan = FaultPlan::new(cfg.spec);
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: cfg.ranks,
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            adaptive: true,
+            mode: cfg.mode,
+            faults: Some(Arc::clone(&plan)),
+            recovery: RecoveryConfig {
+                retry_budget: cfg.retry_budget,
+                backoff_base: Duration::from_millis(2),
+                backoff_cap: Duration::from_millis(20),
+                // the smoke measures requeue/respawn behaviour; a breaker
+                // that never opens keeps the bars deterministic
+                breaker_threshold: 64,
+                breaker_cooldown: Duration::from_millis(100),
+            },
+            ..PoolConfig::default()
+        },
+    );
+    let sw = Stopwatch::start();
+    let mut rng = Rng::new(cfg.spec.seed ^ 0xC4A0_5EED);
+    let mut inflight: Vec<(Vec<f32>, usize, Instant, Ticket)> =
+        Vec::with_capacity(cfg.requests);
+    for r in 0..cfg.requests {
+        let b = 1 + (r % 4);
+        let x0 = random_input(&mut rng, cfg.neurons, b);
+        let t = pool.submit(x0.clone(), b);
+        inflight.push((x0, b, Instant::now(), t));
+    }
+
+    let deadline = Duration::from_secs(60);
+    let (mut ok, mut failed_rank, mut failed_unavailable, mut unresolved) = (0u64, 0u64, 0u64, 0u64);
+    let mut latencies: Vec<f64> = Vec::with_capacity(cfg.requests);
+    for (r, (x0, b, submitted, t)) in inflight.iter().enumerate() {
+        if unresolved > 0 {
+            // the pool already deadlocked; count the rest without waiting
+            unresolved += 1;
+            continue;
+        }
+        match resolve(t, deadline) {
+            Some(Ok(out)) => {
+                let serial = infer_batch(&net, x0, *b);
+                assert!(
+                    matches_serial(&out, &serial),
+                    "chaos req {r}: served output diverged from the serial engine"
+                );
+                ok += 1;
+                latencies.push(submitted.elapsed().as_secs_f64());
+            }
+            Some(Err(e)) => {
+                if e.is_unavailable() {
+                    failed_unavailable += 1;
+                } else {
+                    failed_rank += 1;
+                }
+                latencies.push(submitted.elapsed().as_secs_f64());
+            }
+            None => unresolved += 1,
+        }
+    }
+
+    // the fault stream stops: the pool must heal completely
+    plan.disarm();
+    let mut clean_tail_ok = unresolved == 0;
+    if unresolved == 0 {
+        for r in 0..10 {
+            let b = 1 + (r % 3);
+            let x0 = random_input(&mut rng, cfg.neurons, b);
+            let t = pool.submit(x0.clone(), b);
+            match resolve(&t, deadline) {
+                Some(Ok(out)) => {
+                    if !matches_serial(&out, &infer_batch(&net, &x0, b)) {
+                        clean_tail_ok = false;
+                    }
+                }
+                _ => clean_tail_ok = false,
+            }
+        }
+    }
+    let wall_secs = sw.elapsed_secs();
+
+    let stats = if unresolved == 0 {
+        pool.shutdown().expect("first shutdown").stats
+    } else {
+        // a stuck scheduler cannot be joined; snapshot and leak the pool
+        // so the report (and the enforced failure) still comes out
+        let s = pool.stats();
+        std::mem::forget(pool);
+        s
+    };
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let recovery_p95_ms = if latencies.is_empty() {
+        0.0
+    } else {
+        let idx = ((0.95 * latencies.len() as f64).ceil() as usize).clamp(1, latencies.len());
+        latencies[idx - 1] * 1e3
+    };
+    let resolved = ok + failed_rank + failed_unavailable;
+    ChaosReport {
+        requests: cfg.requests as u64,
+        ok,
+        failed_rank,
+        failed_unavailable,
+        unresolved,
+        injected: plan.injected(),
+        respawns: stats.generations_respawned,
+        retries: stats.requests_retried,
+        watchdog_trips: stats.watchdog_trips,
+        checksum_failures: stats.checksum_failures,
+        resolution_rate: if cfg.requests == 0 {
+            1.0
+        } else {
+            resolved as f64 / cfg.requests as f64
+        },
+        recovery_p95_ms,
+        clean_tail_ok,
+        wall_secs,
+    }
+}
+
+/// The enforced CI bars (`SPDNN_ENFORCE=1`).
+pub fn enforce(rep: &ChaosReport) {
+    assert_eq!(rep.unresolved, 0, "chaos bar: {} tickets never resolved", rep.unresolved);
+    assert!(
+        (rep.resolution_rate - 1.0).abs() < 1e-12,
+        "chaos bar: resolution rate {} < 1.0",
+        rep.resolution_rate
+    );
+    assert!(
+        rep.respawns <= rep.injected,
+        "chaos bar: {} respawns exceed {} injected faults",
+        rep.respawns,
+        rep.injected
+    );
+    assert!(rep.clean_tail_ok, "chaos bar: pool did not heal after disarm");
+}
+
+/// Human summary for the CLI.
+pub fn render(rep: &ChaosReport) -> String {
+    format!(
+        "{} requests under chaos in {:.2}s: {} ok, {} failed (rank), {} failed \
+         (breaker), {} unresolved — resolution {:.1}%\n\
+         faults: {} injected | {} retries absorbed | {} respawns | \
+         {} watchdog trips | {} checksum failures\n\
+         p95 submit->resolve {:.2} ms | clean tail after disarm: {}",
+        rep.requests,
+        rep.wall_secs,
+        rep.ok,
+        rep.failed_rank,
+        rep.failed_unavailable,
+        rep.unresolved,
+        rep.resolution_rate * 100.0,
+        rep.injected,
+        rep.retries,
+        rep.respawns,
+        rep.watchdog_trips,
+        rep.checksum_failures,
+        rep.recovery_p95_ms,
+        if rep.clean_tail_ok { "ok" } else { "FAILED" },
+    )
+}
+
+/// Machine-readable JSON (the CI smoke job writes `BENCH_chaos.json`).
+pub fn to_json(rep: &ChaosReport) -> String {
+    format!(
+        "{{\"requests\":{},\"ok\":{},\"failed_rank\":{},\"failed_unavailable\":{},\
+         \"unresolved\":{},\"resolution_rate\":{:.6},\"injected\":{},\"respawns\":{},\
+         \"retries\":{},\"watchdog_trips\":{},\"checksum_failures\":{},\
+         \"recovery_p95_ms\":{:.4},\"clean_tail_ok\":{},\"wall_secs\":{:.4}}}",
+        rep.requests,
+        rep.ok,
+        rep.failed_rank,
+        rep.failed_unavailable,
+        rep.unresolved,
+        rep.resolution_rate,
+        rep.injected,
+        rep.respawns,
+        rep.retries,
+        rep.watchdog_trips,
+        rep.checksum_failures,
+        rep.recovery_p95_ms,
+        rep.clean_tail_ok,
+        rep.wall_secs,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_chaos_run_clears_the_bars() {
+        let cfg = ChaosConfig {
+            requests: 30,
+            ranks: 2,
+            spec: FaultSpec {
+                seed: 7,
+                panic_p: 0.05,
+                stall_p: 0.01,
+                stall_ms: 250,
+                flip_p: 0.02,
+                drop_p: 0.02,
+                watchdog_ms: 100,
+                budget: 3,
+                ..FaultSpec::default()
+            },
+            ..ChaosConfig::default()
+        };
+        let rep = run(&cfg);
+        enforce(&rep);
+        assert_eq!(rep.requests, 30);
+        assert_eq!(rep.ok + rep.failed_rank + rep.failed_unavailable, 30);
+        assert!(rep.injected <= 3, "budget bound: {}", rep.injected);
+        let json = to_json(&rep);
+        assert!(json.contains("\"resolution_rate\":1.000000"));
+        assert!(json.contains("\"clean_tail_ok\":true"));
+        assert!(render(&rep).contains("resolution 100.0%"));
+    }
+}

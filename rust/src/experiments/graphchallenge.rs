@@ -198,6 +198,7 @@ fn pool_row(
             adaptive: false,
             mode: ExecMode::pipelined(),
             codec,
+            ..PoolConfig::default()
         },
     );
     let out = pool

@@ -3,6 +3,7 @@
 //! harnesses (`cargo bench`).
 
 pub mod ablation;
+pub mod chaos;
 pub mod fig4_scaling;
 pub mod fig5_breakdown;
 pub mod graphchallenge;

@@ -16,6 +16,8 @@
 //!                  [--out BENCH_graphchallenge.json] [--full]
 //! spdnn trace      [--neurons 1024] [--layers 24] [--ranks 4] [--batch 16] [--passes 8]
 //!                  [--mode pipelined] [--codec f32] [--capacity 65536] [--out TRACE_<mode>.json]
+//! spdnn chaos      [--seed 42] [--requests 200] [--ranks 4] [--neurons 64] [--layers 3]
+//!                  [--budget 12] [--retries 3] [--mode pipelined] [--out BENCH_chaos.json]
 //! spdnn calibrate
 //! ```
 //!
@@ -34,8 +36,8 @@ use spdnn::coordinator::sgd::{infer_with_plan_mode, run_with_plan};
 use spdnn::coordinator::ExecMode;
 use spdnn::data::synthetic_mnist;
 use spdnn::experiments::{
-    self, ablation, fig4_scaling, fig5_breakdown, graphchallenge, table1, table2, table3, trace,
-    Method,
+    self, ablation, chaos, fig4_scaling, fig5_breakdown, graphchallenge, table1, table2, table3,
+    trace, Method,
 };
 use spdnn::partition::metrics::PartitionMetrics;
 use spdnn::partition::CommPlan;
@@ -63,6 +65,7 @@ fn main() {
         "partition" => cmd_partition(&args),
         "graphchallenge" => cmd_graphchallenge(&args),
         "trace" => cmd_trace(&args),
+        "chaos" => cmd_chaos(&args),
         "calibrate" => cmd_calibrate(),
         _ => help(),
     }
@@ -71,7 +74,7 @@ fn main() {
 fn help() {
     println!("spdnn — Partitioning Sparse DNNs (ICS'21) reproduction");
     println!("experiments: table1 | scaling | breakdown | throughput | ptimes | ablate | codec");
-    println!("workloads:   train | infer | partition | graphchallenge | trace | calibrate");
+    println!("workloads:   train | infer | partition | graphchallenge | trace | chaos | calibrate");
     println!("see `rust/src/main.rs` header or README.md for flags");
 }
 
@@ -393,6 +396,45 @@ fn cmd_trace(args: &Args) {
         "wrote {out} ({} spans) — open in Perfetto or chrome://tracing",
         rep.spans
     );
+}
+
+fn cmd_chaos(args: &Args) {
+    let mut cfg = chaos::ChaosConfig {
+        neurons: args.get_usize("neurons", 64),
+        layers: args.get_usize("layers", 3),
+        ranks: args.get_usize("ranks", 4),
+        requests: args.get_usize("requests", 200),
+        mode: ExecMode::from_name(&args.get_str("mode", "pipelined"))
+            .unwrap_or_else(|| panic!("unknown mode (expected blocking | overlap | pipelined)")),
+        retry_budget: args.get_usize("retries", 3) as u32,
+        ..chaos::ChaosConfig::default()
+    };
+    cfg.spec.seed = args.get_u64("seed", cfg.spec.seed);
+    cfg.spec.budget = args.get_u64("budget", cfg.spec.budget);
+    println!(
+        "# Chaos smoke — N={} L={} on a {}-rank pool: {} requests, fault seed {}, \
+         budget {} (panic {:.1}% / stall {:.1}% / flip {:.1}% / drop {:.1}%)",
+        cfg.neurons,
+        cfg.layers,
+        cfg.ranks,
+        cfg.requests,
+        cfg.spec.seed,
+        cfg.spec.budget,
+        cfg.spec.panic_p * 100.0,
+        cfg.spec.stall_p * 100.0,
+        cfg.spec.flip_p * 100.0,
+        cfg.spec.drop_p * 100.0
+    );
+    let rep = chaos::run(&cfg);
+    println!("{}", chaos::render(&rep));
+    let json = chaos::to_json(&rep);
+    let out = args.get_str("out", "BENCH_chaos.json");
+    std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!("wrote {out}: {json}");
+    if std::env::var("SPDNN_ENFORCE").is_ok() {
+        chaos::enforce(&rep);
+        println!("enforced bars passed: full resolution, bounded respawns, clean tail");
+    }
 }
 
 fn cmd_partition(args: &Args) {

@@ -157,9 +157,10 @@ impl MetricsRegistry {
     }
 
     /// Record a serving-pool snapshot: request/batch/shed/rebuild
-    /// counters, byte totals, and the latency distribution (bucketed
-    /// quantiles plus the exact min/max and overflow count the histogram
-    /// now tracks).
+    /// counters, byte totals, the recovery counters (retries, respawns,
+    /// watchdog trips, checksum failures, breaker state), and the latency
+    /// distribution (bucketed quantiles plus the exact min/max and
+    /// overflow count the histogram now tracks).
     pub fn record_serving(&mut self, s: &StatsSnapshot) {
         let no: [(&str, String); 0] = [];
         for (name, help, v) in [
@@ -208,6 +209,31 @@ impl MetricsRegistry {
                 "Latency samples above the histogram's last bucket.",
                 s.overflow_latencies as f64,
             ),
+            (
+                "spdnn_pool_requests_retried_total",
+                "Requests requeued onto a respawned generation after theirs failed.",
+                s.requests_retried as f64,
+            ),
+            (
+                "spdnn_pool_generations_respawned_total",
+                "Generation respawns completed after failures.",
+                s.generations_respawned as f64,
+            ),
+            (
+                "spdnn_pool_watchdog_trips_total",
+                "Generation failures rooted in a stall-watchdog trip.",
+                s.watchdog_trips as f64,
+            ),
+            (
+                "spdnn_pool_checksum_failures_total",
+                "Generation failures rooted in a payload checksum mismatch.",
+                s.checksum_failures as f64,
+            ),
+            (
+                "spdnn_pool_unavailable_requests_total",
+                "Requests fast-failed by an open circuit breaker.",
+                s.unavailable_requests as f64,
+            ),
         ] {
             self.counter(name, help, &no, v);
         }
@@ -248,6 +274,11 @@ impl MetricsRegistry {
                 "spdnn_pool_wall_seconds",
                 "Wall-clock seconds since pool start.",
                 s.wall_secs,
+            ),
+            (
+                "spdnn_pool_breaker_state",
+                "Circuit-breaker state: 0 closed, 1 half-open, 2 open.",
+                s.breaker_state as f64,
             ),
         ] {
             self.gauge(name, help, &no, v);

@@ -1,0 +1,479 @@
+//! Deterministic, seeded fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] is the process-wide schedule: which failpoints fire
+//! (probabilities), how hard (delay/stall durations), and how often (a
+//! shared budget of *injected failures*). One plan is shared by every
+//! endpoint of a fabric; each endpoint derives a [`FaultInjector`] whose
+//! PRNG stream is keyed by its rank, so a given `(seed, nranks)` pair
+//! replays the same fault schedule run after run regardless of thread
+//! interleaving.
+//!
+//! The subsystem mirrors the `SPDNN_TRACE` contract from the flight
+//! recorder: [`from_env`] parses `SPDNN_FAULT` exactly once into a
+//! process-wide plan ([`None`] when unset), and a dormant plan costs the
+//! hot path one `Option` branch per failpoint site — no clock reads, no
+//! PRNG draws, no checksum arithmetic.
+//!
+//! Failure semantics are split between *free* rolls (delays, which
+//! perturb timing but cannot fail a request and are excluded from the
+//! budget) and *fault* rolls (drop / bit-flip / panic / stall, each of
+//! which consumes one unit of budget before firing). The budget is what
+//! lets the chaos CLI assert `respawns <= injected`: every generation
+//! loss traces back to exactly one consumed fault.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Stream-mixing constant (golden ratio) for deriving per-rank seeds.
+const STREAM_MIX: u64 = 0x9E3779B97F4A7C15;
+
+/// The fault schedule: per-failpoint probabilities, durations, and the
+/// shared failure budget. All-zero probabilities (the [`Default`]) make
+/// every failpoint inert even when a plan is installed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Base seed; each injector stream mixes in its rank.
+    pub seed: u64,
+    /// Per-message probability of an injected send/recv delay (free).
+    pub delay_p: f64,
+    /// Duration of one injected message delay, microseconds.
+    pub delay_us: u64,
+    /// Per-message probability of dropping a send and poisoning (fault).
+    pub drop_p: f64,
+    /// Per-payload probability of a wire bit-flip (fault).
+    pub flip_p: f64,
+    /// Per-job probability of a rank compute panic (fault).
+    pub panic_p: f64,
+    /// Per-job probability of a rank compute stall (fault).
+    pub stall_p: f64,
+    /// Duration of one injected stall, milliseconds.
+    pub stall_ms: u64,
+    /// Duration of one injected scheduler dispatch delay, microseconds
+    /// (rolled with `delay_p`; free).
+    pub dispatch_delay_us: u64,
+    /// Fabric stall-watchdog deadline, milliseconds; 0 = no watchdog.
+    pub watchdog_ms: u64,
+    /// Maximum number of budgeted faults the plan may inject.
+    pub budget: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 42,
+            delay_p: 0.0,
+            delay_us: 200,
+            drop_p: 0.0,
+            flip_p: 0.0,
+            panic_p: 0.0,
+            stall_p: 0.0,
+            stall_ms: 400,
+            dispatch_delay_us: 100,
+            watchdog_ms: 0,
+            budget: u64::MAX,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// The `SPDNN_FAULT=1` preset: a little of everything, a watchdog
+    /// short enough to beat the injected stalls, and a small budget.
+    pub fn chaos() -> Self {
+        FaultSpec {
+            delay_p: 0.02,
+            drop_p: 0.005,
+            flip_p: 0.005,
+            panic_p: 0.005,
+            stall_p: 0.002,
+            watchdog_ms: 150,
+            budget: 8,
+            ..FaultSpec::default()
+        }
+    }
+
+    /// Parse the `SPDNN_FAULT` key=value grammar (comma- or
+    /// space-separated): `seed`, `delay`, `delay_us`, `drop`, `flip`,
+    /// `panic`, `stall`, `stall_ms`, `dispatch_delay_us`, `watchdog_ms`,
+    /// `budget`. Probability keys take floats in `[0, 1]`; the rest take
+    /// unsigned integers. Unknown keys or unparsable values reject the
+    /// whole string ([`None`]), matching `SPDNN_TRACE`'s parse-or-off
+    /// stance.
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut spec = FaultSpec::default();
+        for pair in s.split([',', ' ']).filter(|p| !p.is_empty()) {
+            let (key, value) = pair.split_once('=')?;
+            match key {
+                "seed" => spec.seed = value.parse().ok()?,
+                "delay" => spec.delay_p = parse_p(value)?,
+                "delay_us" => spec.delay_us = value.parse().ok()?,
+                "drop" => spec.drop_p = parse_p(value)?,
+                "flip" => spec.flip_p = parse_p(value)?,
+                "panic" => spec.panic_p = parse_p(value)?,
+                "stall" => spec.stall_p = parse_p(value)?,
+                "stall_ms" => spec.stall_ms = value.parse().ok()?,
+                "dispatch_delay_us" => spec.dispatch_delay_us = value.parse().ok()?,
+                "watchdog_ms" => spec.watchdog_ms = value.parse().ok()?,
+                "budget" => spec.budget = value.parse().ok()?,
+                _ => return None,
+            }
+        }
+        Some(spec)
+    }
+
+    /// The stall-watchdog deadline, or [`None`] when disabled.
+    pub fn watchdog(&self) -> Option<Duration> {
+        (self.watchdog_ms > 0).then(|| Duration::from_millis(self.watchdog_ms))
+    }
+}
+
+fn parse_p(value: &str) -> Option<f64> {
+    let p: f64 = value.parse().ok()?;
+    (0.0..=1.0).contains(&p).then_some(p)
+}
+
+/// A shared, armed fault schedule: the [`FaultSpec`] plus the live
+/// budget counter. Share one plan (via `Arc`) across every endpoint of
+/// a fabric and its pool scheduler.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    injected: AtomicU64,
+    armed: AtomicBool,
+}
+
+impl FaultPlan {
+    /// An armed plan for `spec`.
+    pub fn new(spec: FaultSpec) -> Arc<Self> {
+        Arc::new(FaultPlan {
+            spec,
+            injected: AtomicU64::new(0),
+            armed: AtomicBool::new(true),
+        })
+    }
+
+    /// The schedule this plan runs.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Budgeted faults injected so far (drops, flips, panics, stalls —
+    /// not delays).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// True while failpoints may fire.
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// Stop all failpoints (the "faults stop" phase of a chaos run).
+    /// Delays stop too; the injected counter is preserved.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+
+    /// Re-enable failpoints after [`FaultPlan::disarm`].
+    pub fn rearm(&self) {
+        self.armed.store(true, Ordering::Relaxed);
+    }
+
+    /// Consume one unit of budget; false once the budget is spent.
+    fn consume(&self) -> bool {
+        let budget = self.spec.budget;
+        self.injected
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                (n < budget).then_some(n + 1)
+            })
+            .is_ok()
+    }
+}
+
+/// The process-wide plan from the `SPDNN_FAULT` environment variable,
+/// parsed once: unset/`0`/`off` → [`None`]; `1`/`on` →
+/// [`FaultSpec::chaos`]; anything else is the key=value grammar of
+/// [`FaultSpec::parse`] (parse failure → [`None`]).
+pub fn from_env() -> Option<Arc<FaultPlan>> {
+    static PLAN: OnceLock<Option<Arc<FaultPlan>>> = OnceLock::new();
+    PLAN.get_or_init(|| match std::env::var("SPDNN_FAULT").ok().as_deref() {
+        None | Some("") | Some("0") | Some("off") => None,
+        Some("1") | Some("on") => Some(FaultPlan::new(FaultSpec::chaos())),
+        Some(s) => FaultSpec::parse(s).map(FaultPlan::new),
+    })
+    .clone()
+}
+
+/// One endpoint's deterministic view of a [`FaultPlan`]: a private PRNG
+/// stream keyed by the endpoint's rank, so each rank draws an
+/// independent, replayable sequence no matter how threads interleave.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: Arc<FaultPlan>,
+    rng: Rng,
+}
+
+impl FaultInjector {
+    /// An injector for stream `stream` (rank index; the pool scheduler
+    /// uses `nranks`, its observer slot).
+    pub fn new(plan: Arc<FaultPlan>, stream: u64) -> Self {
+        let seed = plan.spec.seed ^ stream.wrapping_mul(STREAM_MIX);
+        FaultInjector {
+            plan,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The schedule behind this injector.
+    pub fn spec(&self) -> &FaultSpec {
+        self.plan.spec()
+    }
+
+    /// The shared plan behind this injector.
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+
+    /// Bernoulli(`p`) draw for a *free* failpoint (delays): no budget.
+    /// `p <= 0` skips the draw so inert failpoints don't advance the
+    /// stream.
+    pub fn roll_free(&mut self, p: f64) -> bool {
+        p > 0.0 && self.plan.armed() && self.rng.gen_bool(p)
+    }
+
+    /// Bernoulli(`p`) draw for a *budgeted* fault (drop / flip / panic /
+    /// stall): fires only while budget remains, and consumes one unit
+    /// when it does.
+    pub fn roll_fault(&mut self, p: f64) -> bool {
+        self.roll_free(p) && self.plan.consume()
+    }
+
+    /// Uniform in `[0, n)` from this injector's stream (bit/word picks
+    /// for the flip failpoint).
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        self.rng.gen_range(n)
+    }
+}
+
+/// Typed root causes raised by the recovery layers. Each renders to a
+/// distinct panic message that the pool's failure triage treats as a
+/// *root cause* (none of them match the secondary-failure patterns
+/// `"fabric poisoned"` / `"peer rank hung up"`), and that the
+/// [`is_stall`]/[`is_corrupt`] classifiers recover on the far side of a
+/// `catch_unwind`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultCause {
+    /// A watchdog deadline expired while waiting for a peer payload.
+    Stall {
+        /// Rank whose wait timed out.
+        rank: u32,
+        /// How long it waited, milliseconds.
+        waited_ms: u64,
+        /// What it was waiting for (layer/phase/peers).
+        wanted: String,
+    },
+    /// A wire payload failed its checksum at decode.
+    Corrupt {
+        /// Rank that detected the mismatch.
+        rank: u32,
+        /// Codec label of the corrupted payload.
+        codec: String,
+        /// Wire length of the corrupted payload, words.
+        words: usize,
+    },
+    /// An injected compute panic.
+    ComputePanic {
+        /// Rank that panicked.
+        rank: u32,
+    },
+    /// An injected message drop (the sender poisons after dropping).
+    DroppedSend {
+        /// Rank that dropped the message.
+        rank: u32,
+        /// Destination rank.
+        to: usize,
+        /// What was dropped (layer/phase).
+        wanted: String,
+    },
+}
+
+impl fmt::Display for FaultCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultCause::Stall {
+                rank,
+                waited_ms,
+                wanted,
+            } => write!(
+                f,
+                "stall watchdog: rank {rank} waited {waited_ms} ms for {wanted}"
+            ),
+            FaultCause::Corrupt { rank, codec, words } => write!(
+                f,
+                "payload corrupt: checksum mismatch on rank {rank} decoding {codec} wire \
+                 ({words} words)"
+            ),
+            FaultCause::ComputePanic { rank } => {
+                write!(f, "fault injected: compute panic on rank {rank}")
+            }
+            FaultCause::DroppedSend { rank, to, wanted } => write!(
+                f,
+                "fault injected: rank {rank} dropped send to rank {to} ({wanted})"
+            ),
+        }
+    }
+}
+
+/// True when a failure message is a stall-watchdog trip.
+pub fn is_stall(message: &str) -> bool {
+    message.contains("stall watchdog")
+}
+
+/// True when a failure message is a payload-integrity failure.
+pub fn is_corrupt(message: &str) -> bool {
+    message.contains("checksum mismatch")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::parallel::is_secondary;
+
+    #[test]
+    fn parse_full_grammar() {
+        let spec = FaultSpec::parse(
+            "seed=7,delay=0.1,delay_us=50,drop=0.2,flip=0.3,panic=0.4,stall=0.5,\
+             stall_ms=250,dispatch_delay_us=10,watchdog_ms=100,budget=3",
+        )
+        .expect("full grammar parses");
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.delay_p, 0.1);
+        assert_eq!(spec.delay_us, 50);
+        assert_eq!(spec.drop_p, 0.2);
+        assert_eq!(spec.flip_p, 0.3);
+        assert_eq!(spec.panic_p, 0.4);
+        assert_eq!(spec.stall_p, 0.5);
+        assert_eq!(spec.stall_ms, 250);
+        assert_eq!(spec.dispatch_delay_us, 10);
+        assert_eq!(spec.watchdog_ms, 100);
+        assert_eq!(spec.budget, 3);
+        assert_eq!(spec.watchdog(), Some(Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn parse_accepts_spaces_and_partial_keys() {
+        let spec = FaultSpec::parse("panic=0.5 budget=1").expect("parses");
+        assert_eq!(spec.panic_p, 0.5);
+        assert_eq!(spec.budget, 1);
+        assert_eq!(spec.drop_p, 0.0, "unset keys keep defaults");
+        assert_eq!(spec.watchdog(), None);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert_eq!(FaultSpec::parse("bogus=1"), None);
+        assert_eq!(FaultSpec::parse("panic"), None);
+        assert_eq!(FaultSpec::parse("panic=nope"), None);
+        assert_eq!(FaultSpec::parse("panic=1.5"), None, "p out of [0,1]");
+        assert_eq!(FaultSpec::parse("seed=-1"), None);
+    }
+
+    #[test]
+    fn default_spec_is_inert() {
+        let plan = FaultPlan::new(FaultSpec::default());
+        let mut inj = FaultInjector::new(Arc::clone(&plan), 0);
+        for _ in 0..1000 {
+            assert!(!inj.roll_fault(inj.spec().panic_p));
+            assert!(!inj.roll_free(inj.spec().delay_p));
+        }
+        assert_eq!(plan.injected(), 0);
+    }
+
+    #[test]
+    fn budget_bounds_injected_faults() {
+        let plan = FaultPlan::new(FaultSpec {
+            budget: 3,
+            ..FaultSpec::default()
+        });
+        let mut inj = FaultInjector::new(Arc::clone(&plan), 1);
+        let fired: usize = (0..100).filter(|_| inj.roll_fault(1.0)).count();
+        assert_eq!(fired, 3, "exactly the budget fires");
+        assert_eq!(plan.injected(), 3);
+    }
+
+    #[test]
+    fn delays_do_not_consume_budget() {
+        let plan = FaultPlan::new(FaultSpec {
+            budget: 1,
+            ..FaultSpec::default()
+        });
+        let mut inj = FaultInjector::new(Arc::clone(&plan), 2);
+        let delays: usize = (0..50).filter(|_| inj.roll_free(1.0)).count();
+        assert_eq!(delays, 50);
+        assert_eq!(plan.injected(), 0);
+        assert!(inj.roll_fault(1.0), "budget still available for a fault");
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_distinct() {
+        let spec = FaultSpec {
+            seed: 99,
+            ..FaultSpec::default()
+        };
+        let draws = |stream: u64| -> Vec<bool> {
+            let mut inj = FaultInjector::new(FaultPlan::new(spec), stream);
+            (0..64).map(|_| inj.roll_free(0.5)).collect()
+        };
+        assert_eq!(draws(0), draws(0), "same stream replays identically");
+        assert_ne!(draws(0), draws(1), "streams are independent");
+    }
+
+    #[test]
+    fn disarm_stops_failpoints() {
+        let plan = FaultPlan::new(FaultSpec::default());
+        let mut inj = FaultInjector::new(Arc::clone(&plan), 0);
+        plan.disarm();
+        assert!(!inj.roll_fault(1.0));
+        assert!(!inj.roll_free(1.0));
+        plan.rearm();
+        assert!(inj.roll_fault(1.0));
+    }
+
+    #[test]
+    fn causes_render_as_root_causes() {
+        let causes = [
+            FaultCause::Stall {
+                rank: 2,
+                waited_ms: 150,
+                wanted: "layer 3 Fwd (from [0, 1])".into(),
+            },
+            FaultCause::Corrupt {
+                rank: 1,
+                codec: "f16".into(),
+                words: 52,
+            },
+            FaultCause::ComputePanic { rank: 0 },
+            FaultCause::DroppedSend {
+                rank: 3,
+                to: 0,
+                wanted: "layer 1 Fwd".into(),
+            },
+        ];
+        for cause in &causes {
+            let msg = cause.to_string();
+            assert!(
+                !is_secondary(&msg),
+                "cause must triage as a root cause: {msg}"
+            );
+        }
+        assert!(is_stall(&causes[0].to_string()));
+        assert!(!is_corrupt(&causes[0].to_string()));
+        assert!(is_corrupt(&causes[1].to_string()));
+        assert!(!is_stall(&causes[1].to_string()));
+        assert!(!is_stall(&causes[2].to_string()));
+        assert!(!is_corrupt(&causes[3].to_string()));
+    }
+}

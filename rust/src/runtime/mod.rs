@@ -3,11 +3,16 @@
 //! - [`parallel`]: the shared-memory rank-parallel engine — one OS thread
 //!   per rank over the simulated fabric, with panic-to-error rank
 //!   lifecycle management and per-rank timer aggregation. Always built.
+//! - [`fault`]: the deterministic chaos engine — a seeded, budgeted
+//!   fault schedule (`SPDNN_FAULT`) whose failpoints are threaded
+//!   through the fabric, the rank compute loop, and the pool scheduler.
+//!   Always built; dormant failpoints cost one branch each.
 //! - `engine`/`pjrt` (feature `pjrt`): load the AOT artifacts (HLO text,
 //!   produced once by `python/compile/aot.py`) and execute them on the XLA
 //!   CPU client, with Python never on the request path. Gated because the
 //!   external `xla` crate needs a vendored checkout.
 
+pub mod fault;
 pub mod parallel;
 
 #[cfg(feature = "pjrt")]
@@ -20,6 +25,7 @@ pub use engine::PjrtLayerEngine;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;
 
+pub use fault::{FaultCause, FaultInjector, FaultPlan, FaultSpec};
 pub use parallel::{run_ranks, ParallelRun, RankFailure};
 
 use std::path::PathBuf;

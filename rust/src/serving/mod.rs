@@ -21,16 +21,26 @@
 //!   into one fused SpMM batch up to [`PoolConfig::max_batch`] columns or
 //!   [`PoolConfig::max_wait`], and the wait window is skipped entirely
 //!   while the observed inter-arrival gap says it cannot fill a batch;
+//! - a failure-recovery pipeline ([`RecoveryConfig`]) — innocent requests
+//!   from a poisoned fused batch are requeued with a bounded per-ticket
+//!   retry budget, generations are respawned under seeded exponential
+//!   [`Backoff`] with equal jitter, and a [`Breaker`] fast-fails requests
+//!   ([`ServeError::Unavailable`]) while the pool is in a crash loop,
+//!   half-opening a trial after its cooldown;
 //! - [`ServingStats`] — throughput counters plus a latency histogram with
-//!   p50/p95/p99 ([`StatsSnapshot`]).
+//!   p50/p95/p99 ([`StatsSnapshot`]), including the recovery counters
+//!   (retries, respawns, watchdog trips, checksum failures, breaker state).
 //!
-//! See `examples/inference_serving.rs` for the end-to-end request loop and
-//! `benches/table2_throughput.rs` for pool-vs-one-shot throughput.
+//! See `examples/inference_serving.rs` for the end-to-end request loop,
+//! `benches/table2_throughput.rs` for pool-vs-one-shot throughput, and
+//! `docs/ROBUSTNESS.md` for the chaos/fault-injection contract.
 
 mod pool;
 mod queue;
+mod recovery;
 mod stats;
 
 pub use pool::{PoolConfig, PoolSummary, RankPool};
 pub use queue::{ServeError, Ticket};
+pub use recovery::{Backoff, Breaker, BreakerState, RecoveryConfig};
 pub use stats::{LatencyHistogram, ServingStats, StatsSnapshot};

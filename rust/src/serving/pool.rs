@@ -4,22 +4,32 @@
 //! build, and thread spawn across every request, where the one-shot
 //! engine ([`crate::runtime::parallel`]) pays them per call.
 //!
-//! Failure semantics mirror the one-shot engine: a rank panic poisons the
-//! fabric so blocked peers unwind instead of deadlocking, the in-flight
-//! fused batch fails with the root-cause [`RankFailure`], and the poisoned
-//! generation is torn down and respawned — the pool stays serviceable.
+//! Failure semantics extend the one-shot engine's: a rank panic (or an
+//! injected fault, stall-watchdog trip, or payload checksum mismatch —
+//! see [`crate::runtime::fault`]) poisons the fabric so blocked peers
+//! unwind instead of deadlocking, and the poisoned generation is torn
+//! down. Recovery then kicks in ([`RecoveryConfig`]): innocent requests
+//! from the poisoned fused batch are **requeued** onto the respawned
+//! generation until their per-ticket retry budget runs out, respawns are
+//! spaced by seeded exponential [`Backoff`] with jitter, and after
+//! `breaker_threshold` consecutive generation failures a circuit
+//! [`Breaker`] fast-fails requests ([`ServeError::Unavailable`]) until a
+//! half-open trial succeeds — the pool stays serviceable without queueing
+//! traffic behind a crash loop.
 
-use crate::comm::{fabric, Codec, Endpoint};
+use crate::comm::{fabric_with, Codec, Endpoint};
 use crate::coordinator::sgd::assemble_outputs;
 use crate::coordinator::{ExecMode, RankScratch, RankState};
 use crate::dnn::SparseNet;
 use crate::obs::{MetricsRegistry, Span, TraceMode, Tracer, NO_CHUNK, NO_LAYER};
 use crate::partition::ServingPlan;
+use crate::runtime::fault::{self, FaultPlan};
 use crate::runtime::parallel::{is_secondary, panic_message};
 use crate::runtime::RankFailure;
 use crate::serving::queue::{
     effective_wait, Pending, ServeError, SharedQueue, Ticket, GAP_CLAMP_MULT,
 };
+use crate::serving::recovery::{Backoff, Breaker, BreakerState, RecoveryConfig};
 use crate::serving::stats::{ServingStats, StatsSnapshot};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -52,6 +62,20 @@ pub struct PoolConfig {
     /// bounded activation error for 2–4× fewer bytes on the wire (the
     /// stats report the live compression ratio).
     pub codec: Codec,
+    /// Explicit fault-injection plan for the pool's fabrics. `None`
+    /// (default) falls back to the process-wide `SPDNN_FAULT` plan
+    /// ([`crate::runtime::fault::from_env`]); the chaos tests pass one
+    /// directly so runs stay deterministic regardless of the environment.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Stall-watchdog deadline for every fabric `recv` in the pool's rank
+    /// threads: a receive that blocks longer than this poisons the fabric
+    /// with a typed stall failure instead of hanging the generation.
+    /// `None` defers to the fault plan's `watchdog_ms` (no watchdog when
+    /// that is zero too).
+    pub watchdog: Option<Duration>,
+    /// Failure-recovery knobs: per-ticket retry budget, respawn backoff
+    /// schedule, circuit-breaker threshold and cooldown.
+    pub recovery: RecoveryConfig,
 }
 
 impl Default for PoolConfig {
@@ -63,6 +87,9 @@ impl Default for PoolConfig {
             adaptive: true,
             mode: ExecMode::pipelined(),
             codec: Codec::F32,
+            faults: None,
+            watchdog: None,
+            recovery: RecoveryConfig::default(),
         }
     }
 }
@@ -72,8 +99,6 @@ struct Job {
     /// `[n0 × b]` row-major fused inputs.
     x0: Vec<f32>,
     b: usize,
-    /// Failure-injection: rank index that must panic serving this job.
-    sabotage: Option<usize>,
 }
 
 enum RankCmd {
@@ -113,9 +138,15 @@ struct Generation {
     handles: Vec<JoinHandle<()>>,
 }
 
-fn spawn_generation(net: &Arc<SparseNet>, sp: &Arc<ServingPlan>, mode: ExecMode) -> Generation {
+fn spawn_generation(
+    net: &Arc<SparseNet>,
+    sp: &Arc<ServingPlan>,
+    mode: ExecMode,
+    plan: &Option<Arc<FaultPlan>>,
+    watchdog: Option<Duration>,
+) -> Generation {
     let nranks = sp.nranks();
-    let mut endpoints = fabric(nranks + 1);
+    let mut endpoints = fabric_with(nranks + 1, plan.clone(), watchdog);
     let observer = endpoints.pop().expect("fabric is non-empty");
     let (res_tx, res_rx) = channel();
     let mut cmd_tx = Vec::with_capacity(nranks);
@@ -177,9 +208,9 @@ fn rank_loop(
             }
         };
         let out = catch_unwind(AssertUnwindSafe(|| {
-            if job.sabotage == Some(rank) {
-                panic!("injected failure on rank {rank}");
-            }
+            // chaos failpoint: an armed fault plan may panic or stall here,
+            // exactly where a real compute fault would surface
+            ep.compute_failpoint();
             state.infer_owned_outputs(&mut ep, &sp.plan, &job.x0, job.b, &mut scratch)
         }));
         match out {
@@ -247,6 +278,9 @@ pub struct RankPool {
     stats: Arc<ServingStats>,
     scheduler: Mutex<Option<JoinHandle<SchedulerReport>>>,
     input_dim: usize,
+    /// Requeue attempts granted to each submitted ticket
+    /// ([`RecoveryConfig::retry_budget`]).
+    retry_budget: u32,
 }
 
 impl RankPool {
@@ -287,6 +321,7 @@ impl RankPool {
         // the adaptive scheduler in skip-the-wait mode after load returns.
         shared.state.lock().unwrap().gap_clamp = Some(cfg.max_wait * GAP_CLAMP_MULT);
         let stats = Arc::new(ServingStats::new());
+        let retry_budget = cfg.recovery.retry_budget;
         let sched_shared = Arc::clone(&shared);
         let sched_stats = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
@@ -308,13 +343,14 @@ impl RankPool {
             stats,
             scheduler: Mutex::new(Some(handle)),
             input_dim,
+            retry_budget,
         }
     }
 
     /// Submit one `[n0 × b]` row-major batch (column j = input j). Returns
     /// immediately; block on or poll the ticket for the `[nL × b]` output.
     pub fn submit(&self, x0: Vec<f32>, b: usize) -> Ticket {
-        self.submit_inner(x0, b, None, None)
+        self.submit_inner(x0, b, None)
     }
 
     /// [`RankPool::submit`] with a queue-wait SLO: if the scheduler
@@ -324,23 +360,10 @@ impl RankPool {
     /// under overload the pool sheds stale work rather than letting every
     /// queued request's latency grow without bound.
     pub fn submit_with_deadline(&self, x0: Vec<f32>, b: usize, slo: Duration) -> Ticket {
-        self.submit_inner(x0, b, Some(slo), None)
+        self.submit_inner(x0, b, Some(slo))
     }
 
-    /// Failure-injection hook for tests: `panic_rank` panics while serving
-    /// the fused batch this request lands in.
-    #[doc(hidden)]
-    pub fn submit_sabotaged(&self, x0: Vec<f32>, b: usize, panic_rank: usize) -> Ticket {
-        self.submit_inner(x0, b, None, Some(panic_rank))
-    }
-
-    fn submit_inner(
-        &self,
-        x0: Vec<f32>,
-        b: usize,
-        deadline: Option<Duration>,
-        sabotage: Option<usize>,
-    ) -> Ticket {
+    fn submit_inner(&self, x0: Vec<f32>, b: usize, deadline: Option<Duration>) -> Ticket {
         assert!(b > 0, "batch must be non-empty");
         assert_eq!(
             x0.len(),
@@ -362,7 +385,7 @@ impl RankPool {
                 tx,
                 submitted: now,
                 deadline,
-                sabotage,
+                retries_left: self.retry_budget,
             });
         }
         self.shared.cv.notify_all();
@@ -437,16 +460,42 @@ fn scheduler_loop(
     // The scheduler gets its own flight-recorder track (`u32::MAX` marks
     // "not a rank"); span sites cost two branches each when tracing is off.
     let mut tracer = Tracer::new(TraceMode::from_env(), u32::MAX);
-    let mut gen = spawn_generation(&net, &sp, cfg.mode);
-    while let Some(batch) = collect_batch(&shared, &cfg, &stats, &mut tracer) {
+    // Resolve the fault plan once: an explicit config plan wins, else the
+    // process-wide SPDNN_FAULT plan, else no chaos at all. The watchdog
+    // deadline follows the same precedence.
+    let plan = cfg.faults.clone().or_else(fault::from_env);
+    let watchdog = cfg
+        .watchdog
+        .or_else(|| plan.as_ref().and_then(|p| p.spec().watchdog()));
+    let rec = cfg.recovery;
+    let mut breaker = Breaker::new(rec.breaker_threshold, rec.breaker_cooldown);
+    // Deterministic backoff jitter: keyed off the fault plan's seed so
+    // chaos runs replay exactly; the constant fallback is arbitrary.
+    let backoff_seed = plan.as_ref().map_or(0x00C0_FFEE, |p| p.spec().seed);
+    let mut backoff = Backoff::new(rec.backoff_base, rec.backoff_cap, backoff_seed);
+    let mut gen = spawn_generation(&net, &sp, cfg.mode, &plan, watchdog);
+    loop {
+        if !fail_fast_while_open(&shared, &stats, &mut breaker) {
+            break; // shutdown arrived while the breaker was open
+        }
+        let Some(batch) = collect_batch(&shared, &cfg, &stats, &mut tracer) else {
+            break;
+        };
         let nreq = batch.len();
         let total_cols: usize = batch.iter().map(|p| p.b).sum();
+        // chaos failpoint: scheduler-side dispatch delay (free roll)
+        gen.observer.dispatch_delay_failpoint();
         let sp_dispatch = tracer.start();
         let sw = Instant::now();
         match dispatch(&gen, &batch) {
             Ok((rank_rows, raw_bytes, wire_bytes)) => {
                 let service_secs = sw.elapsed().as_secs_f64();
                 tracer.end(sp_dispatch, "dispatch", "pool", NO_LAYER, NO_CHUNK, wire_bytes);
+                if breaker.state() != BreakerState::Closed || breaker.consecutive() > 0 {
+                    stats.set_breaker_state(BreakerState::Closed.code());
+                }
+                breaker.on_success();
+                backoff.reset();
                 let out = assemble_outputs(output_dim, total_cols, &rank_rows);
                 let done = Instant::now();
                 // record before replying: a stats() read racing a just-woken
@@ -476,21 +525,47 @@ fn scheduler_loop(
             }
             Err(failure) => {
                 tracer.end(sp_dispatch, "dispatch", "pool", NO_LAYER, NO_CHUNK, 0);
-                stats.record_failure(nreq);
+                // classify the root cause for the recovery counters
+                if fault::is_stall(&failure.message) {
+                    stats.record_watchdog_trip();
+                } else if fault::is_corrupt(&failure.message) {
+                    stats.record_checksum_failure();
+                }
+                breaker.on_failure(Instant::now());
+                stats.set_breaker_state(breaker.state().code());
                 crate::log!(
                     Warn,
                     "pool generation poisoned by rank {} ({}); respawning",
                     failure.rank,
                     failure.message
                 );
+                // Triage the poisoned batch: every member is innocent (the
+                // fault was environmental), so requeue those with retry
+                // budget left — at the FRONT, preserving FIFO order — and
+                // fail the rest with the typed root cause.
                 let err = ServeError::from(failure);
-                for p in &batch {
-                    let _ = p.tx.send(Err(err.clone()));
+                let (mut failed, mut retried) = (0usize, 0usize);
+                {
+                    let mut st = shared.state.lock().unwrap();
+                    for mut p in batch.into_iter().rev() {
+                        if p.retries_left > 0 {
+                            p.retries_left -= 1;
+                            st.queue.push_front(p);
+                            retried += 1;
+                        } else {
+                            failed += 1;
+                            let _ = p.tx.send(Err(err.clone()));
+                        }
+                    }
                 }
-                // the fabric is poisoned — respawn the whole generation
+                stats.record_dispatch_failure(failed, retried);
+                // the fabric is poisoned — respawn the whole generation,
+                // spacing consecutive respawns by the backoff schedule
                 let sp_respawn = tracer.start();
                 teardown(gen);
-                gen = spawn_generation(&net, &sp, cfg.mode);
+                std::thread::sleep(backoff.next_delay());
+                gen = spawn_generation(&net, &sp, cfg.mode, &plan, watchdog);
+                stats.record_respawn();
                 tracer.end(sp_respawn, "respawn", "pool", NO_LAYER, NO_CHUNK, 0);
             }
         }
@@ -515,6 +590,50 @@ fn scheduler_loop(
     SchedulerReport {
         leaked_ranks,
         trace: tracer.spans(),
+    }
+}
+
+/// Circuit-breaker front gate of the scheduler loop. While the breaker is
+/// open, every queued request is fast-failed with
+/// [`ServeError::Unavailable`] — replied immediately, never dispatched
+/// into the crash loop — and the scheduler sleeps in short condvar slices
+/// until the cooldown elapses (the breaker half-opens and one trial batch
+/// is admitted) or shutdown arrives. Returns `false` on shutdown; any
+/// requests still queued then resolve to [`ServeError::Shutdown`] when
+/// their reply channels drop.
+fn fail_fast_while_open(
+    shared: &SharedQueue,
+    stats: &ServingStats,
+    breaker: &mut Breaker,
+) -> bool {
+    if breaker.state() != BreakerState::Open {
+        return true;
+    }
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        // poll BEFORE draining: a trial request submitted just after the
+        // cooldown elapsed must reach the half-open dispatch, not be
+        // swept up with the fast-fails
+        let now = Instant::now();
+        if breaker.poll(now) != BreakerState::Open {
+            stats.set_breaker_state(breaker.state().code());
+            return true;
+        }
+        while let Some(p) = st.queue.pop_front() {
+            stats.record_unavailable(1);
+            let _ = p.tx.send(Err(ServeError::Unavailable {
+                failures: breaker.consecutive(),
+            }));
+        }
+        if st.shutdown {
+            return false;
+        }
+        // short slices keep both the cooldown and shutdown responsive
+        let slice = breaker
+            .remaining_cooldown(now)
+            .min(Duration::from_millis(50));
+        let (guard, _) = shared.cv.wait_timeout(st, slice).unwrap();
+        st = guard;
     }
 }
 
@@ -620,12 +739,7 @@ fn dispatch(
             off += p.b;
         }
     }
-    let sabotage = batch.iter().find_map(|p| p.sabotage);
-    let job = Arc::new(Job {
-        x0,
-        b: total_cols,
-        sabotage,
-    });
+    let job = Arc::new(Job { x0, b: total_cols });
     for tx in &gen.cmd_tx {
         if tx.send(RankCmd::Run(Arc::clone(&job))).is_err() {
             return Err(RankFailure {
@@ -703,7 +817,7 @@ mod tests {
                 max_wait: Duration::from_micros(200),
                 adaptive: true,
                 mode: ExecMode::Overlap,
-                codec: Codec::F32,
+                ..PoolConfig::default()
             },
         );
         let mut rng = Rng::new(11);
@@ -754,7 +868,7 @@ mod tests {
                 max_wait: Duration::ZERO,
                 adaptive: false,
                 mode: ExecMode::Blocking,
-                codec: Codec::F32,
+                ..PoolConfig::default()
             },
         );
         let mut rng = Rng::new(19);

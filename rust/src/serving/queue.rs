@@ -27,6 +27,15 @@ pub enum ServeError {
     },
     /// The pool shut down before the request completed.
     Shutdown,
+    /// Fast-fail: the pool's circuit breaker is open after repeated
+    /// consecutive generation failures, so the scheduler rejects requests
+    /// immediately instead of queueing them behind a crash loop. The
+    /// breaker re-probes with a half-open trial generation after its
+    /// cooldown.
+    Unavailable {
+        /// Consecutive generation failures that tripped the breaker.
+        failures: u32,
+    },
 }
 
 impl ServeError {
@@ -41,6 +50,11 @@ impl ServeError {
     /// True for deadline-shed requests.
     pub fn is_deadline(&self) -> bool {
         matches!(self, ServeError::DeadlineExceeded { .. })
+    }
+
+    /// True for requests fast-failed by an open circuit breaker.
+    pub fn is_unavailable(&self) -> bool {
+        matches!(self, ServeError::Unavailable { .. })
     }
 }
 
@@ -57,6 +71,11 @@ impl std::fmt::Display for ServeError {
             ServeError::Shutdown => {
                 write!(f, "pool shut down before the request completed")
             }
+            ServeError::Unavailable { failures } => write!(
+                f,
+                "pool unavailable: circuit breaker open after {failures} consecutive \
+                 generation failures"
+            ),
         }
     }
 }
@@ -82,9 +101,11 @@ pub(crate) struct Pending {
     /// Queue-wait SLO: the scheduler sheds this request instead of serving
     /// it once `submitted.elapsed()` exceeds it. `None` = serve whenever.
     pub deadline: Option<Duration>,
-    /// Failure-injection hook: rank index that must panic while serving
-    /// the batch this request lands in (tests only).
-    pub sabotage: Option<usize>,
+    /// Remaining requeue attempts if a generation fails under this
+    /// request: innocent members of a poisoned fused batch go back to the
+    /// front of the queue until this budget runs out, after which the
+    /// ticket resolves to the typed [`ServeError::Rank`] error.
+    pub retries_left: u32,
 }
 
 /// Handle to one submitted request. Block with [`Ticket::wait`] or poll
@@ -283,5 +304,10 @@ mod tests {
         };
         assert!(d.is_deadline());
         assert!(d.to_string().contains("deadline exceeded"), "{d}");
+        let u = ServeError::Unavailable { failures: 5 };
+        assert!(u.is_unavailable());
+        assert!(!e.is_unavailable() && !d.is_unavailable());
+        assert!(u.rank_failure().is_none() && !u.is_deadline());
+        assert!(u.to_string().contains("circuit breaker open after 5"), "{u}");
     }
 }

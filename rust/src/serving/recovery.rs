@@ -1,0 +1,314 @@
+//! Recovery policies of the serving pool: the respawn backoff schedule
+//! and the availability circuit breaker.
+//!
+//! Both are plain, clock-parameterized state machines — the scheduler
+//! thread passes `Instant`s in, nothing here reads the wall clock — so
+//! the unit suites drive them with synthetic timestamps and stay fully
+//! deterministic.
+//!
+//! **Backoff.** Consecutive generation respawns are spaced by truncated
+//! exponential backoff with equal jitter: attempt *k* sleeps a uniform
+//! draw from `[d/2, d]` where `d = min(base · 2ᵏ, cap)`. The jitter
+//! breaks respawn synchronization; the deterministic seed keeps chaos
+//! runs replayable. One successful dispatch resets the schedule.
+//!
+//! **Breaker.** After `threshold` consecutive generation failures the
+//! breaker opens and the pool fast-fails requests with
+//! [`crate::serving::ServeError::Unavailable`] instead of queueing them
+//! behind a crash loop. After `cooldown` it half-opens: exactly one
+//! trial batch is admitted — success closes the breaker, failure
+//! reopens it for another cooldown.
+//!
+//! ```text
+//!                 failure (consecutive == threshold)
+//!      ┌────────┐ ───────────────────────────────────▶ ┌────────┐
+//!      │ Closed │                                      │  Open  │
+//!      └────────┘ ◀──────────┐              cooldown   └────────┘
+//!        ▲    │ failure      │              elapsed        │
+//!        │    ▼ (< threshold)│ success                     ▼
+//!        │   stay Closed     │                         ┌──────────┐
+//!        └───────────────────┴──────────────────────── │ HalfOpen │
+//!                                      failure: reopen └──────────┘
+//! ```
+
+use crate::util::Rng;
+use std::time::{Duration, Instant};
+
+/// Knobs of the pool's failure-recovery pipeline, carried in
+/// [`crate::serving::PoolConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryConfig {
+    /// Requeue attempts granted to each ticket: how many times an
+    /// innocent request from a poisoned fused batch is retried on the
+    /// respawned generation before it resolves to the typed error.
+    pub retry_budget: u32,
+    /// First respawn delay of the backoff schedule.
+    pub backoff_base: Duration,
+    /// Ceiling of the backoff schedule.
+    pub backoff_cap: Duration,
+    /// Consecutive generation failures that trip the circuit breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker fast-fails before half-opening a trial.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            retry_budget: 2,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Truncated exponential backoff with equal jitter, seeded for
+/// deterministic replay.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// A fresh schedule starting at `base`, capped at `cap`.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Backoff {
+            base,
+            cap,
+            attempt: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The next delay: uniform in `[d/2, d]` for
+    /// `d = min(base · 2^attempt, cap)`, then advance the attempt
+    /// counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = (self.base.as_secs_f64() * 2f64.powi(self.attempt.min(62) as i32))
+            .min(self.cap.as_secs_f64());
+        self.attempt = self.attempt.saturating_add(1);
+        Duration::from_secs_f64(exp / 2.0 + self.rng.gen_f64() * exp / 2.0)
+    }
+
+    /// Restart the schedule after a successful dispatch.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Consecutive delays handed out since the last reset.
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+}
+
+/// Circuit-breaker states, in escalation order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal service.
+    Closed,
+    /// Cooldown elapsed; one trial generation is admitted.
+    HalfOpen,
+    /// Fast-failing: requests resolve to `Unavailable` immediately.
+    Open,
+}
+
+impl BreakerState {
+    /// Numeric gauge encoding for metrics: 0 closed, 1 half-open, 2 open.
+    pub fn code(&self) -> u8 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+}
+
+/// The availability circuit breaker (see the module docs for the state
+/// diagram). All transitions take the caller's `now`, so the machine is
+/// testable with synthetic clocks.
+#[derive(Debug)]
+pub struct Breaker {
+    threshold: u32,
+    cooldown: Duration,
+    consecutive: u32,
+    state: BreakerState,
+    opened_at: Option<Instant>,
+}
+
+impl Breaker {
+    /// A closed breaker tripping after `threshold` consecutive failures
+    /// (clamped to at least 1) and cooling down for `cooldown`.
+    pub fn new(threshold: u32, cooldown: Duration) -> Self {
+        Breaker {
+            threshold: threshold.max(1),
+            cooldown,
+            consecutive: 0,
+            state: BreakerState::Closed,
+            opened_at: None,
+        }
+    }
+
+    /// Current state (without advancing the cooldown — see
+    /// [`Breaker::poll`]).
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Consecutive generation failures observed since the last success.
+    pub fn consecutive(&self) -> u32 {
+        self.consecutive
+    }
+
+    /// A dispatch succeeded: close and forget the failure streak.
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+        self.state = BreakerState::Closed;
+        self.opened_at = None;
+    }
+
+    /// A generation failed at `now`. A half-open trial failure reopens
+    /// immediately; a closed breaker opens once the streak reaches the
+    /// threshold.
+    pub fn on_failure(&mut self, now: Instant) {
+        self.consecutive = self.consecutive.saturating_add(1);
+        match self.state {
+            BreakerState::HalfOpen => {
+                self.state = BreakerState::Open;
+                self.opened_at = Some(now);
+            }
+            BreakerState::Closed if self.consecutive >= self.threshold => {
+                self.state = BreakerState::Open;
+                self.opened_at = Some(now);
+            }
+            _ => {}
+        }
+    }
+
+    /// Advance the cooldown: an open breaker whose cooldown has elapsed
+    /// at `now` half-opens. Returns the (possibly updated) state.
+    pub fn poll(&mut self, now: Instant) -> BreakerState {
+        if self.state == BreakerState::Open {
+            if let Some(opened) = self.opened_at {
+                if now.duration_since(opened) >= self.cooldown {
+                    self.state = BreakerState::HalfOpen;
+                }
+            }
+        }
+        self.state
+    }
+
+    /// Time left before an open breaker half-opens; zero otherwise.
+    pub fn remaining_cooldown(&self, now: Instant) -> Duration {
+        match (self.state, self.opened_at) {
+            (BreakerState::Open, Some(opened)) => {
+                self.cooldown.saturating_sub(now.duration_since(opened))
+            }
+            _ => Duration::ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_doubles_with_equal_jitter_then_caps() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(500);
+        let mut bo = Backoff::new(base, cap, 42);
+        let mut expected = 0.010f64;
+        for attempt in 0..12 {
+            let d = bo.next_delay().as_secs_f64();
+            let e = expected.min(0.5);
+            assert!(
+                d >= e / 2.0 - 1e-9 && d <= e + 1e-9,
+                "attempt {attempt}: delay {d} outside [{}, {e}]",
+                e / 2.0
+            );
+            expected *= 2.0;
+        }
+        assert_eq!(bo.attempt(), 12);
+        bo.reset();
+        assert_eq!(bo.attempt(), 0);
+        let d = bo.next_delay().as_secs_f64();
+        assert!(d <= 0.010 + 1e-9, "reset must restart at the base delay");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let mk = |seed| {
+            let mut bo = Backoff::new(Duration::from_millis(5), Duration::from_millis(80), seed);
+            (0..8).map(|_| bo.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(7), mk(7));
+        assert_ne!(mk(7), mk(8));
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_consecutive_failures() {
+        let t0 = Instant::now();
+        let mut br = Breaker::new(3, Duration::from_secs(1));
+        assert_eq!(br.state(), BreakerState::Closed);
+        br.on_failure(t0);
+        br.on_failure(t0);
+        assert_eq!(br.state(), BreakerState::Closed, "below threshold stays closed");
+        assert_eq!(br.consecutive(), 2);
+        br.on_failure(t0);
+        assert_eq!(br.state(), BreakerState::Open);
+        assert_eq!(br.state().code(), 2);
+        assert_eq!(br.remaining_cooldown(t0), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn success_resets_the_streak() {
+        let t0 = Instant::now();
+        let mut br = Breaker::new(3, Duration::from_secs(1));
+        br.on_failure(t0);
+        br.on_failure(t0);
+        br.on_success();
+        assert_eq!(br.consecutive(), 0);
+        br.on_failure(t0);
+        br.on_failure(t0);
+        assert_eq!(br.state(), BreakerState::Closed, "streak must restart after success");
+    }
+
+    #[test]
+    fn open_half_opens_after_cooldown_and_trial_outcome_decides() {
+        let t0 = Instant::now();
+        let cooldown = Duration::from_secs(1);
+        let mut br = Breaker::new(1, cooldown);
+        br.on_failure(t0);
+        assert_eq!(br.state(), BreakerState::Open);
+        assert_eq!(br.poll(t0 + Duration::from_millis(500)), BreakerState::Open);
+        assert_eq!(
+            br.remaining_cooldown(t0 + Duration::from_millis(400)),
+            Duration::from_millis(600)
+        );
+        assert_eq!(br.poll(t0 + cooldown), BreakerState::HalfOpen);
+        assert_eq!(br.state().code(), 1);
+        // trial failure reopens for a fresh cooldown
+        br.on_failure(t0 + cooldown);
+        assert_eq!(br.state(), BreakerState::Open);
+        assert_eq!(br.remaining_cooldown(t0 + cooldown), cooldown);
+        // next trial succeeds: closed, streak forgotten
+        assert_eq!(br.poll(t0 + cooldown + cooldown), BreakerState::HalfOpen);
+        br.on_success();
+        assert_eq!(br.state(), BreakerState::Closed);
+        assert_eq!(br.consecutive(), 0);
+        assert_eq!(br.remaining_cooldown(t0), Duration::ZERO);
+    }
+
+    #[test]
+    fn zero_threshold_clamps_to_one() {
+        let t0 = Instant::now();
+        let mut br = Breaker::new(0, Duration::from_secs(1));
+        br.on_failure(t0);
+        assert_eq!(br.state(), BreakerState::Open);
+    }
+}

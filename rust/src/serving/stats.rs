@@ -140,6 +140,18 @@ struct StatsInner {
     raw_bytes: u64,
     /// Bytes actually shipped over the fabric after the wire codec ran.
     wire_bytes: u64,
+    /// Requests requeued onto a respawned generation after theirs failed.
+    requests_retried: u64,
+    /// Generation respawns actually completed (rank threads re-spawned).
+    generations_respawned: u64,
+    /// Generation failures rooted in a stall-watchdog trip.
+    watchdog_trips: u64,
+    /// Generation failures rooted in a payload checksum mismatch.
+    checksum_failures: u64,
+    /// Requests fast-failed by an open circuit breaker.
+    unavailable_requests: u64,
+    /// Circuit-breaker state gauge: 0 closed, 1 half-open, 2 open.
+    breaker_state: u8,
     latency: LatencyHistogram,
 }
 
@@ -182,12 +194,41 @@ impl ServingStats {
         self.inner.lock().unwrap().latency.record(secs);
     }
 
-    /// One failed fused batch (`requests` tickets got a `RankFailure`) and
-    /// the generation rebuild it forced.
-    pub(crate) fn record_failure(&self, requests: usize) {
+    /// One poisoned fused batch and the generation rebuild it forced:
+    /// `failed` tickets resolved to a `RankFailure` (retry budget spent),
+    /// `retried` were requeued onto the next generation.
+    pub(crate) fn record_dispatch_failure(&self, failed: usize, retried: usize) {
         let mut s = self.inner.lock().unwrap();
-        s.failed_requests += requests as u64;
+        s.failed_requests += failed as u64;
+        s.requests_retried += retried as u64;
         s.pool_rebuilds += 1;
+    }
+
+    /// One completed generation respawn (rank threads are live again).
+    pub(crate) fn record_respawn(&self) {
+        self.inner.lock().unwrap().generations_respawned += 1;
+    }
+
+    /// One generation failure rooted in a stall-watchdog trip.
+    pub(crate) fn record_watchdog_trip(&self) {
+        self.inner.lock().unwrap().watchdog_trips += 1;
+    }
+
+    /// One generation failure rooted in a payload checksum mismatch.
+    pub(crate) fn record_checksum_failure(&self) {
+        self.inner.lock().unwrap().checksum_failures += 1;
+    }
+
+    /// Requests fast-failed (`ServeError::Unavailable`) by an open
+    /// circuit breaker — no dispatch, no rebuild.
+    pub(crate) fn record_unavailable(&self, requests: usize) {
+        self.inner.lock().unwrap().unavailable_requests += requests as u64;
+    }
+
+    /// Publish the circuit breaker's state gauge (0 closed, 1 half-open,
+    /// 2 open).
+    pub(crate) fn set_breaker_state(&self, code: u8) {
+        self.inner.lock().unwrap().breaker_state = code;
     }
 
     /// Requests shed for blowing their queue-wait SLO (deadline load
@@ -230,6 +271,12 @@ impl ServingStats {
             },
             raw_bytes: s.raw_bytes,
             wire_bytes: s.wire_bytes,
+            requests_retried: s.requests_retried,
+            generations_respawned: s.generations_respawned,
+            watchdog_trips: s.watchdog_trips,
+            checksum_failures: s.checksum_failures,
+            unavailable_requests: s.unavailable_requests,
+            breaker_state: s.breaker_state,
             p50_secs: s.latency.quantile(0.50),
             p95_secs: s.latency.quantile(0.95),
             p99_secs: s.latency.quantile(0.99),
@@ -272,6 +319,19 @@ pub struct StatsSnapshot {
     /// Bytes actually shipped after the wire codec — equal to `raw_bytes`
     /// under `Codec::F32`.
     pub wire_bytes: u64,
+    /// Requests requeued onto a respawned generation after theirs was
+    /// poisoned (each requeue of each ticket counts once).
+    pub requests_retried: u64,
+    /// Generation respawns completed after failures.
+    pub generations_respawned: u64,
+    /// Generation failures rooted in a stall-watchdog trip.
+    pub watchdog_trips: u64,
+    /// Generation failures rooted in a payload checksum mismatch.
+    pub checksum_failures: u64,
+    /// Requests fast-failed (`Unavailable`) by an open circuit breaker.
+    pub unavailable_requests: u64,
+    /// Circuit-breaker state gauge: 0 closed, 1 half-open, 2 open.
+    pub breaker_state: u8,
     pub p50_secs: f64,
     pub p95_secs: f64,
     pub p99_secs: f64,
@@ -296,6 +356,15 @@ impl StatsSnapshot {
         }
     }
 
+    /// Human label for the breaker gauge.
+    pub fn breaker_label(&self) -> &'static str {
+        match self.breaker_state {
+            0 => "closed",
+            1 => "half-open",
+            _ => "open",
+        }
+    }
+
     /// Human summary for example/bench output.
     pub fn render(&self) -> String {
         format!(
@@ -303,7 +372,9 @@ impl StatsSnapshot {
              ({:.2e} busy), latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms \
              (mean {:.2} ms, min {:.2} ms, max {:.2} ms), \
              wire {} B of {} B raw ({:.2}x), \
-             {} failed, {} shed, {} rebuilds",
+             {} failed, {} shed, {} rebuilds \
+             ({} retried, {} respawned, {} watchdog trips, {} checksum failures, \
+             {} unavailable, breaker {})",
             self.requests,
             self.batches,
             self.mean_batch,
@@ -321,6 +392,12 @@ impl StatsSnapshot {
             self.failed_requests,
             self.shed_requests,
             self.pool_rebuilds,
+            self.requests_retried,
+            self.generations_respawned,
+            self.watchdog_trips,
+            self.checksum_failures,
+            self.unavailable_requests,
+            self.breaker_label(),
         )
     }
 
@@ -330,6 +407,9 @@ impl StatsSnapshot {
         format!(
             "{{\"requests\":{},\"failed_requests\":{},\"shed_requests\":{},\
              \"batches\":{},\"pool_rebuilds\":{},\
+             \"requests_retried\":{},\"generations_respawned\":{},\
+             \"watchdog_trips\":{},\"checksum_failures\":{},\
+             \"unavailable_requests\":{},\"breaker_state\":{},\
              \"columns\":{},\"mean_batch\":{:.3},\"edges_per_sec\":{:.1},\
              \"edges_per_sec_busy\":{:.1},\
              \"raw_bytes\":{},\"wire_bytes\":{},\"wire_compression\":{:.4},\
@@ -342,6 +422,12 @@ impl StatsSnapshot {
             self.shed_requests,
             self.batches,
             self.pool_rebuilds,
+            self.requests_retried,
+            self.generations_respawned,
+            self.watchdog_trips,
+            self.checksum_failures,
+            self.unavailable_requests,
+            self.breaker_state,
             self.columns,
             self.mean_batch,
             self.edges_per_sec,
@@ -473,7 +559,12 @@ mod tests {
         stats.record_latency(0.004);
         stats.record_latency(0.006);
         stats.record_latency(0.008);
-        stats.record_failure(2);
+        stats.record_dispatch_failure(2, 3);
+        stats.record_respawn();
+        stats.record_watchdog_trip();
+        stats.record_checksum_failure();
+        stats.record_unavailable(4);
+        stats.set_breaker_state(2);
         stats.record_shed(3);
         stats.record_wire(4000, 1000);
         stats.record_wire(4000, 3000);
@@ -490,6 +581,13 @@ mod tests {
         assert!(s.render().contains("3 shed"));
         assert_eq!(s.batches, 2);
         assert_eq!(s.pool_rebuilds, 1);
+        assert_eq!(s.requests_retried, 3);
+        assert_eq!(s.generations_respawned, 1);
+        assert_eq!(s.watchdog_trips, 1);
+        assert_eq!(s.checksum_failures, 1);
+        assert_eq!(s.unavailable_requests, 4);
+        assert_eq!(s.breaker_state, 2);
+        assert_eq!(s.breaker_label(), "open");
         assert_eq!(s.columns, 16);
         assert!((s.mean_batch - 8.0).abs() < 1e-9);
         assert!((s.edges_per_sec_busy - 1600.0 / 0.020).abs() < 1e-6);
@@ -498,5 +596,12 @@ mod tests {
         assert!(json.starts_with('{') && json.ends_with('}'));
         assert!(json.contains("\"requests\":4"));
         assert!(json.contains("\"p99_ms\":"));
+        assert!(json.contains("\"requests_retried\":3"));
+        assert!(json.contains("\"generations_respawned\":1"));
+        assert!(json.contains("\"watchdog_trips\":1"));
+        assert!(json.contains("\"checksum_failures\":1"));
+        assert!(json.contains("\"unavailable_requests\":4"));
+        assert!(json.contains("\"breaker_state\":2"));
+        assert!(s.render().contains("breaker open"));
     }
 }

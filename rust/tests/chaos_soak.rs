@@ -1,0 +1,160 @@
+//! Chaos soak: the serving pool under a sustained seeded fault stream —
+//! injected panics, stalls, dropped sends, and payload bit-flips — across
+//! several rank counts. The assertions are structural, not fault-exact
+//! (which faults land depends on scheduling): the pool must never
+//! deadlock, every ticket must resolve to `Ok` or a typed error, every
+//! `Ok` must match the serial engine, respawns must stay bounded by the
+//! injected-fault budget, and once the stream is disarmed the pool must
+//! serve cleanly again.
+
+use spdnn::coordinator::ExecMode;
+use spdnn::dnn::inference::infer_batch;
+use spdnn::dnn::SparseNet;
+use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::runtime::{FaultPlan, FaultSpec};
+use spdnn::serving::{PoolConfig, RankPool, RecoveryConfig, ServeError, Ticket};
+use spdnn::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Poll a ticket to resolution with a hard deadline: a ticket that never
+/// resolves means the pool deadlocked — exactly the failure mode the
+/// watchdog/poisoning machinery exists to prevent.
+fn resolve(t: &Ticket, deadline: Duration, ctx: &str) -> Result<Vec<f32>, ServeError> {
+    let start = Instant::now();
+    loop {
+        if let Some(reply) = t.poll() {
+            return reply;
+        }
+        assert!(
+            start.elapsed() < deadline,
+            "{ctx}: ticket unresolved after {deadline:?} — the pool deadlocked"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn random_input(rng: &mut Rng, n: usize, b: usize) -> Vec<f32> {
+    (0..n * b)
+        .map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 })
+        .collect()
+}
+
+fn soak(nranks: usize, requests: usize, seed: u64) {
+    let net: SparseNet = generate(&RadixNetConfig::graph_challenge(64, 3).expect("cfg"));
+    let plan = FaultPlan::new(FaultSpec {
+        seed,
+        delay_p: 0.05,
+        delay_us: 100,
+        panic_p: 0.02,
+        stall_p: 0.01,
+        stall_ms: 300,
+        flip_p: 0.01,
+        drop_p: 0.01,
+        watchdog_ms: 120,
+        budget: 6,
+        ..FaultSpec::default()
+    });
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks,
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            adaptive: true,
+            mode: ExecMode::pipelined(),
+            faults: Some(Arc::clone(&plan)),
+            recovery: RecoveryConfig {
+                retry_budget: 3,
+                backoff_base: Duration::from_millis(2),
+                backoff_cap: Duration::from_millis(20),
+                // the soak exercises requeue/respawn, not the breaker
+                // (tested in serving_pool.rs): keep it from opening
+                breaker_threshold: 64,
+                breaker_cooldown: Duration::from_millis(100),
+            },
+            ..PoolConfig::default()
+        },
+    );
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let mut inflight: Vec<(Vec<f32>, usize, Ticket)> = Vec::with_capacity(requests);
+    for r in 0..requests {
+        let b = 1 + (r % 4);
+        let x0 = random_input(&mut rng, 64, b);
+        let t = pool.submit(x0.clone(), b);
+        inflight.push((x0, b, t));
+    }
+    let deadline = Duration::from_secs(60);
+    let (mut ok, mut failed) = (0u64, 0u64);
+    for (r, (x0, b, t)) in inflight.iter().enumerate() {
+        let ctx = format!("soak r{nranks} req {r}");
+        match resolve(t, deadline, &ctx) {
+            Ok(out) => {
+                ok += 1;
+                let serial = infer_batch(&net, x0, *b);
+                assert_eq!(out.len(), serial.len(), "{ctx}: shape");
+                for (a, s) in out.iter().zip(serial.iter()) {
+                    assert!((a - s).abs() < 1e-5, "{ctx}: {a} vs serial {s}");
+                }
+            }
+            Err(e) => {
+                failed += 1;
+                assert!(
+                    e.rank_failure().is_some() || e.is_unavailable(),
+                    "{ctx}: unexpected error class: {e}"
+                );
+            }
+        }
+    }
+    assert_eq!(ok + failed, requests as u64, "every ticket resolved");
+
+    // the fault stream stops: the pool must serve cleanly again
+    plan.disarm();
+    for r in 0..10 {
+        let b = 1 + (r % 3);
+        let x0 = random_input(&mut rng, 64, b);
+        let t = pool.submit(x0.clone(), b);
+        let out = resolve(&t, deadline, &format!("clean tail req {r}"))
+            .unwrap_or_else(|e| panic!("clean tail req {r} failed after disarm: {e}"));
+        let serial = infer_batch(&net, &x0, b);
+        for (a, s) in out.iter().zip(serial.iter()) {
+            assert!((a - s).abs() < 1e-5, "clean tail req {r}");
+        }
+    }
+
+    let summary = pool.shutdown().expect("shutdown");
+    let s = &summary.stats;
+    assert!(
+        summary.leaked_ranks.is_empty(),
+        "messages leaked after chaos: ranks {:?}",
+        summary.leaked_ranks
+    );
+    assert_eq!(s.requests, ok + 10, "stats agree with observed outcomes");
+    assert_eq!(s.failed_requests, failed);
+    assert!(
+        s.generations_respawned <= plan.injected(),
+        "every respawn must trace back to a budgeted fault: {} respawns, {} injected",
+        s.generations_respawned,
+        plan.injected()
+    );
+    assert!(
+        plan.injected() <= 6,
+        "the fault budget is a hard bound: {}",
+        plan.injected()
+    );
+}
+
+#[test]
+fn chaos_soak_two_ranks() {
+    soak(2, 70, 1001);
+}
+
+#[test]
+fn chaos_soak_four_ranks() {
+    soak(4, 70, 2002);
+}
+
+#[test]
+fn chaos_soak_eight_ranks() {
+    soak(8, 70, 3003);
+}

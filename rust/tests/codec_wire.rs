@@ -275,6 +275,7 @@ fn pool_with_f16_codec_serves_and_reports_compression() {
             adaptive: false,
             mode: ExecMode::pipelined(),
             codec: Codec::F16,
+            ..PoolConfig::default()
         },
     );
     let mut rng = Rng::new(77);

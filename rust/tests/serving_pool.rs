@@ -1,13 +1,14 @@
 //! Integration: the persistent serving pool — multi-threaded stress
-//! against the serial reference, micro-batch coalescing, rank-failure
-//! recovery, and graceful shutdown with the no-message-leak invariant.
+//! against the serial reference, micro-batch coalescing, fault-injected
+//! failure recovery (requeue, watchdog, circuit breaker), and graceful
+//! shutdown with the no-message-leak invariant.
 
-use spdnn::comm::Codec;
 use spdnn::coordinator::ExecMode;
 use spdnn::dnn::inference::infer_batch;
 use spdnn::dnn::SparseNet;
 use spdnn::radixnet::{generate, RadixNetConfig};
-use spdnn::serving::{PoolConfig, RankPool, ServeError};
+use spdnn::runtime::{FaultPlan, FaultSpec};
+use spdnn::serving::{PoolConfig, RankPool, RecoveryConfig, ServeError};
 use spdnn::util::Rng;
 use std::sync::Arc;
 use std::time::Duration;
@@ -30,6 +31,16 @@ fn assert_matches_serial(net: &SparseNet, x0: &[f32], b: usize, out: &[f32], ctx
     }
 }
 
+/// Fast backoff so recovery tests don't sit in respawn sleeps.
+fn quick_recovery(retry_budget: u32) -> RecoveryConfig {
+    RecoveryConfig {
+        retry_budget,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(10),
+        ..RecoveryConfig::default()
+    }
+}
+
 /// THE scheduler stress test: 8 client threads × 50 requests each with
 /// mixed batch sizes; every ticket must match the serial engine within
 /// 1e-5 and the pool must shut down without leaking a single message.
@@ -44,7 +55,7 @@ fn stress_eight_clients_fifty_requests_match_serial() {
             max_wait: Duration::from_millis(1),
             adaptive: true,
             mode: ExecMode::Overlap,
-            codec: Codec::F32,
+            ..PoolConfig::default()
         },
     ));
     let clients = 8usize;
@@ -102,7 +113,7 @@ fn queued_singles_coalesce_into_batches() {
             max_wait: Duration::from_millis(200),
             adaptive: false,
             mode: ExecMode::Overlap,
-            codec: Codec::F32,
+            ..PoolConfig::default()
         },
     );
     let mut rng = Rng::new(7);
@@ -123,12 +134,22 @@ fn queued_singles_coalesce_into_batches() {
     assert!(summary.stats.mean_batch >= 4.0);
 }
 
-/// Satellite regression: a rank panic mid-request fails only that
-/// request's ticket with a root-cause `RankFailure`, and the pool rebuilds
-/// its generation and keeps serving correctly afterwards.
+/// Satellite regression (ported from the old `submit_sabotaged` hook to
+/// the seeded failpoint engine): an injected rank panic mid-request fails
+/// only that request's ticket with the root-cause `RankFailure` — never a
+/// masked secondary unwind — and the pool rebuilds its generation and
+/// keeps serving correctly afterwards.
 #[test]
 fn rank_panic_fails_one_request_then_pool_recovers() {
     let net = net64();
+    // panic_p = 1.0 with a budget of exactly one fault: the first fused
+    // dispatch panics on whichever rank wins the budget race, everything
+    // after is fault-free. retry_budget 0 makes the failure observable.
+    let plan = FaultPlan::new(FaultSpec {
+        panic_p: 1.0,
+        budget: 1,
+        ..FaultSpec::default()
+    });
     let pool = RankPool::start(
         net.clone(),
         PoolConfig {
@@ -137,32 +158,30 @@ fn rank_panic_fails_one_request_then_pool_recovers() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
-            codec: Codec::F32,
+            faults: Some(Arc::clone(&plan)),
+            recovery: quick_recovery(0),
+            ..PoolConfig::default()
         },
     );
     let mut rng = Rng::new(21);
 
-    // healthy request before the fault
-    let x0 = random_input(&mut rng, 64, 3);
-    let out = pool.submit(x0.clone(), 3).wait().expect("pre-fault request");
-    assert_matches_serial(&net, &x0, 3, &out, "pre-fault");
-
-    // injected fault: rank 2 panics mid-request
+    // injected fault: one rank panics serving the first request
     let x0 = random_input(&mut rng, 64, 2);
     let err = pool
-        .submit_sabotaged(x0, 2, 2)
+        .submit(x0, 2)
         .wait()
-        .expect_err("sabotaged request must fail");
+        .expect_err("faulted request must fail");
     let rf = err.rank_failure().expect("expected a rank failure");
-    assert_eq!(rf.rank, 2, "root cause must not be masked: {}", rf.message);
+    assert!(rf.rank < 4, "failure carries a real rank: {}", rf.rank);
     assert!(
-        rf.message.contains("injected failure"),
-        "unexpected failure message: {}",
+        rf.message.contains("fault injected: compute panic"),
+        "root cause must not be masked by a secondary unwind: {}",
         rf.message
     );
+    assert_eq!(plan.injected(), 1, "exactly one fault fired");
 
     // the pool must still be fully serviceable afterwards
-    for r in 0..5 {
+    for r in 0..6 {
         let b = 1 + (r % 3);
         let x0 = random_input(&mut rng, 64, b);
         let out = pool
@@ -176,7 +195,164 @@ fn rank_panic_fails_one_request_then_pool_recovers() {
     assert!(summary.leaked_ranks.is_empty(), "post-recovery leak");
     assert_eq!(summary.stats.failed_requests, 1);
     assert_eq!(summary.stats.pool_rebuilds, 1);
+    assert_eq!(summary.stats.generations_respawned, 1);
     assert_eq!(summary.stats.requests, 6, "only successful requests count");
+}
+
+/// Tentpole: with a retry budget, the innocent request from a poisoned
+/// batch is requeued onto the respawned generation and still served
+/// correctly — the caller sees plain `Ok`, never the fault.
+#[test]
+fn retry_budget_masks_one_injected_fault() {
+    let net = net64();
+    let plan = FaultPlan::new(FaultSpec {
+        panic_p: 1.0,
+        budget: 1,
+        ..FaultSpec::default()
+    });
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 3,
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+            mode: ExecMode::Overlap,
+            faults: Some(Arc::clone(&plan)),
+            recovery: quick_recovery(2),
+            ..PoolConfig::default()
+        },
+    );
+    let mut rng = Rng::new(55);
+    let x0 = random_input(&mut rng, 64, 3);
+    let out = pool
+        .submit(x0.clone(), 3)
+        .wait()
+        .expect("retried request must succeed");
+    assert_matches_serial(&net, &x0, 3, &out, "retried");
+    assert_eq!(plan.injected(), 1);
+
+    let summary = pool.shutdown().expect("shutdown");
+    assert!(summary.leaked_ranks.is_empty());
+    assert_eq!(summary.stats.requests, 1);
+    assert_eq!(summary.stats.failed_requests, 0, "the retry absorbed the fault");
+    assert_eq!(summary.stats.requests_retried, 1);
+    assert_eq!(summary.stats.pool_rebuilds, 1);
+    assert_eq!(summary.stats.generations_respawned, 1);
+}
+
+/// Tentpole: a stall longer than the watchdog deadline is converted into
+/// a typed watchdog trip (not a hang), the innocent request is retried,
+/// and the trip is counted.
+#[test]
+fn stall_watchdog_trips_and_request_is_retried() {
+    let net = net64();
+    let plan = FaultPlan::new(FaultSpec {
+        stall_p: 1.0,
+        stall_ms: 400,
+        watchdog_ms: 100,
+        budget: 1,
+        ..FaultSpec::default()
+    });
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 2,
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+            mode: ExecMode::Overlap,
+            faults: Some(Arc::clone(&plan)),
+            recovery: quick_recovery(2),
+            ..PoolConfig::default()
+        },
+    );
+    let mut rng = Rng::new(91);
+    let x0 = random_input(&mut rng, 64, 2);
+    let out = pool
+        .submit(x0.clone(), 2)
+        .wait()
+        .expect("stalled request must recover via retry");
+    assert_matches_serial(&net, &x0, 2, &out, "post-stall");
+    assert_eq!(plan.injected(), 1);
+
+    let summary = pool.shutdown().expect("shutdown");
+    assert!(summary.leaked_ranks.is_empty());
+    assert_eq!(summary.stats.failed_requests, 0);
+    assert_eq!(summary.stats.watchdog_trips, 1, "the stall surfaced as a watchdog trip");
+    assert_eq!(summary.stats.requests_retried, 1);
+    assert_eq!(summary.stats.pool_rebuilds, 1);
+}
+
+/// Tentpole: repeated generation failures trip the circuit breaker — the
+/// pool fast-fails with `Unavailable` instead of queueing behind the
+/// crash loop — and a half-open trial after the cooldown closes it again.
+#[test]
+fn breaker_opens_after_streak_and_half_open_trial_closes_it() {
+    let net = net64();
+    let plan = FaultPlan::new(FaultSpec {
+        panic_p: 1.0,
+        budget: 3,
+        ..FaultSpec::default()
+    });
+    let cooldown = Duration::from_millis(250);
+    let pool = RankPool::start(
+        net.clone(),
+        PoolConfig {
+            nranks: 1,
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            adaptive: false,
+            mode: ExecMode::Overlap,
+            faults: Some(Arc::clone(&plan)),
+            recovery: RecoveryConfig {
+                retry_budget: 0,
+                backoff_base: Duration::from_millis(1),
+                backoff_cap: Duration::from_millis(5),
+                breaker_threshold: 3,
+                breaker_cooldown: cooldown,
+            },
+            ..PoolConfig::default()
+        },
+    );
+    let mut rng = Rng::new(13);
+
+    // three consecutive injected failures trip the breaker
+    for r in 0..3 {
+        let x0 = random_input(&mut rng, 64, 1);
+        let err = pool.submit(x0, 1).wait().expect_err("injected failure");
+        assert!(err.rank_failure().is_some(), "req {r}: {err}");
+    }
+    assert_eq!(plan.injected(), 3);
+    assert_eq!(pool.stats().breaker_state, 2, "breaker must be open");
+
+    // while open: fast-fail, no dispatch, no extra rebuild
+    let x0 = random_input(&mut rng, 64, 1);
+    let err = pool.submit(x0, 1).wait().expect_err("breaker fast-fail");
+    match err {
+        ServeError::Unavailable { failures } => assert_eq!(failures, 3),
+        other => panic!("expected Unavailable, got {other}"),
+    }
+    assert!(err.is_unavailable());
+
+    // after the cooldown the half-open trial succeeds (fault budget is
+    // spent) and the breaker closes
+    std::thread::sleep(cooldown + Duration::from_millis(150));
+    let x0 = random_input(&mut rng, 64, 1);
+    let out = pool
+        .submit(x0.clone(), 1)
+        .wait()
+        .expect("half-open trial must be served");
+    assert_matches_serial(&net, &x0, 1, &out, "half-open trial");
+    assert_eq!(pool.stats().breaker_state, 0, "trial success closes the breaker");
+
+    let summary = pool.shutdown().expect("shutdown");
+    assert!(summary.leaked_ranks.is_empty());
+    assert_eq!(summary.stats.requests, 1);
+    assert_eq!(summary.stats.failed_requests, 3);
+    assert_eq!(summary.stats.unavailable_requests, 1);
+    assert_eq!(summary.stats.pool_rebuilds, 3);
+    assert!(summary.stats.generations_respawned <= summary.stats.pool_rebuilds + 1);
 }
 
 /// Graceful shutdown: requests already queued when shutdown is requested
@@ -192,7 +368,7 @@ fn shutdown_drains_queued_requests() {
             max_wait: Duration::from_millis(50),
             adaptive: false,
             mode: ExecMode::Overlap,
-            codec: Codec::F32,
+            ..PoolConfig::default()
         },
     );
     let mut rng = Rng::new(33);
@@ -220,7 +396,7 @@ fn oversized_request_served_alone() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
-            codec: Codec::F32,
+            ..PoolConfig::default()
         },
     );
     let mut rng = Rng::new(5);
@@ -247,7 +423,7 @@ fn deadline_blown_ticket_is_shed_not_served_late() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
-            codec: Codec::F32,
+            ..PoolConfig::default()
         },
     );
     let mut rng = Rng::new(77);
@@ -304,7 +480,7 @@ fn shutdown_drain_sheds_expired_tickets() {
             max_wait: Duration::ZERO,
             adaptive: false,
             mode: ExecMode::Overlap,
-            codec: Codec::F32,
+            ..PoolConfig::default()
         },
     );
     let mut rng = Rng::new(41);
@@ -332,7 +508,7 @@ fn pipelined_mode_pool_matches_serial() {
             max_wait: Duration::from_micros(200),
             adaptive: true,
             mode: ExecMode::Pipelined { chunk_acts: 4 },
-            codec: Codec::F32,
+            ..PoolConfig::default()
         },
     );
     let mut rng = Rng::new(23);
