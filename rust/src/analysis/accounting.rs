@@ -1,0 +1,229 @@
+//! Accounting cross-checks (`A...` diagnostics): the plan's static byte
+//! claims, the codec contracts, and the rank-state codec tables must all
+//! tell one story.
+//!
+//! Three parties account for bytes-on-wire: the plan
+//! ([`crate::partition::CommPlan::fwd_wire_bytes`]), the replay /
+//! α-β network model ([`crate::comm::NetModel`], charged per whole
+//! transfer), and the live fabric counters (which count
+//! `4 × encode_into(..).len()` per send). They agree only if the codec's
+//! `wire_words` arithmetic matches the documented wire format AND
+//! `encode_into` actually produces `wire_words(len)` words. These checks
+//! pin every link of that chain statically.
+
+use super::{Code, Violation};
+use crate::comm::codec::DEFAULT_INT8_GROUP;
+use crate::comm::{Codec, NetModel};
+use crate::coordinator::worker::RankState;
+use crate::coordinator::ExecMode;
+use crate::partition::CommPlan;
+use std::collections::BTreeSet;
+
+/// Wire footprint in f32 words recomputed from the **documented** wire
+/// format (header words + scale block + packed lanes, see the
+/// `comm::codec` module doc) — deliberately independent of
+/// [`Codec::wire_words`], so drift between the doc and the
+/// implementation surfaces as `A001` instead of silently propagating
+/// into every counter.
+fn spec_wire_words(codec: Codec, len: usize) -> usize {
+    match codec {
+        Codec::F32 => len,
+        Codec::F16 => 2 + len.div_ceil(2),
+        Codec::Int8 { group } => {
+            let g = if group == 0 { DEFAULT_INT8_GROUP } else { group };
+            2 + len.div_ceil(g) + len.div_ceil(4)
+        }
+    }
+}
+
+fn chunking(mode: ExecMode) -> usize {
+    match mode {
+        ExecMode::Pipelined { chunk_acts } => chunk_acts,
+        _ => 0,
+    }
+}
+
+/// `A001`/`A002`: per layer, the plan's chunked `fwd_wire_bytes` must
+/// equal the spec recomputation, and the whole-transfer charge basis the
+/// replay/netmodel uses must equal the plan's unchunked form. For F32
+/// the α-β model's byte form must also price the layer identically to
+/// its word form (bytes = 4 × words exactly).
+pub fn check_wire_accounting(
+    plan: &CommPlan,
+    mode: ExecMode,
+    batch: usize,
+    out: &mut Vec<Violation>,
+) {
+    let ca = chunking(mode);
+    let nm = NetModel::infiniband();
+    for (k, lp) in plan.layers.iter().enumerate() {
+        let spec: u64 = lp
+            .transfers
+            .iter()
+            .flat_map(|t| t.chunks(ca))
+            .map(|(_, idx)| 4 * spec_wire_words(lp.codec_fwd, idx.len() * batch) as u64)
+            .sum();
+        let claimed = lp.fwd_wire_bytes(batch, ca);
+        if spec != claimed {
+            out.push(
+                Violation::new(
+                    Code::WireBytesMismatch,
+                    format!(
+                        "chunked {} wire bytes: plan claims {claimed}, wire format \
+                         yields {spec}",
+                        lp.codec_fwd.label()
+                    ),
+                )
+                .at(k),
+            );
+        }
+        let replay: u64 = lp
+            .transfers
+            .iter()
+            .map(|t| lp.codec_fwd.wire_bytes(t.indices.len() * batch))
+            .sum();
+        if replay != lp.fwd_wire_bytes(batch, 0) {
+            out.push(
+                Violation::new(
+                    Code::ReplayChargeMismatch,
+                    format!(
+                        "whole-transfer charge {replay} != unchunked plan bytes {}",
+                        lp.fwd_wire_bytes(batch, 0)
+                    ),
+                )
+                .at(k),
+            );
+        }
+        if lp.codec_fwd == Codec::F32 {
+            let msgs = lp.message_count_chunked(ca);
+            let words = lp.volume() * batch as u64;
+            let by_words = nm.layer_cost(msgs, words, msgs, words);
+            let by_bytes = nm.layer_cost_bytes(msgs, claimed, msgs, claimed);
+            if by_words != by_bytes {
+                out.push(
+                    Violation::new(
+                        Code::ReplayChargeMismatch,
+                        format!(
+                            "netmodel f32 layer cost differs by form: {by_words} (words) \
+                             vs {by_bytes} (bytes)"
+                        ),
+                    )
+                    .at(k),
+                );
+            }
+        }
+    }
+}
+
+/// `A003`: for every distinct `(codec, payload length)` pair this plan
+/// can put on the wire, `wire_bytes` must be `4 × wire_words`, and both
+/// `encode_into` and `encode_into_checked` must produce exactly their
+/// declared word counts — the fabric's counter contract (counters charge
+/// `4 × encoded length`).
+pub fn check_codec_contract(
+    plan: &CommPlan,
+    mode: ExecMode,
+    batch: usize,
+    out: &mut Vec<Violation>,
+) {
+    let ca = chunking(mode);
+    // (codec id, int8 group, payload length), deduped across the plan
+    let mut lens: BTreeSet<(u16, usize, usize)> = BTreeSet::new();
+    for lp in &plan.layers {
+        for codec in [lp.codec_fwd, lp.codec_bwd] {
+            let group = match codec {
+                Codec::Int8 { group } => group,
+                _ => 0,
+            };
+            for t in &lp.transfers {
+                for (_, idx) in t.chunks(ca) {
+                    lens.insert((codec.id(), group, idx.len() * batch));
+                }
+            }
+        }
+    }
+    let mut wire = Vec::new();
+    for &(id, group, len) in &lens {
+        let codec = match id {
+            0 => Codec::F32,
+            1 => Codec::F16,
+            _ => Codec::Int8 { group },
+        };
+        if codec.wire_bytes(len) != 4 * codec.wire_words(len) as u64 {
+            out.push(Violation::new(
+                Code::CodecContractBroken,
+                format!(
+                    "{} len {len}: wire_bytes {} != 4 × wire_words {}",
+                    codec.label(),
+                    codec.wire_bytes(len),
+                    codec.wire_words(len)
+                ),
+            ));
+        }
+        let src = vec![0.37f32; len];
+        codec.encode_into(&src, &mut wire);
+        if wire.len() != codec.wire_words(len) {
+            out.push(Violation::new(
+                Code::CodecContractBroken,
+                format!(
+                    "{} len {len}: encode_into produced {} words, wire_words says {}",
+                    codec.label(),
+                    wire.len(),
+                    codec.wire_words(len)
+                ),
+            ));
+        }
+        codec.encode_into_checked(&src, &mut wire);
+        if wire.len() != codec.checked_wire_words(len) {
+            out.push(Violation::new(
+                Code::CodecContractBroken,
+                format!(
+                    "{} len {len}: checked encode produced {} words, contract says {}",
+                    codec.label(),
+                    wire.len(),
+                    codec.checked_wire_words(len)
+                ),
+            ));
+        }
+    }
+}
+
+/// `A004`: the codec table a built [`RankState`] baked in must match the
+/// plan it will execute against — a mismatch means sender and receiver
+/// could frame one payload with two different codecs.
+pub fn check_state_codecs(state: &RankState, plan: &CommPlan) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if state.codecs.len() != plan.layers.len() {
+        out.push(
+            Violation::new(
+                Code::StateCodecMismatch,
+                format!(
+                    "state carries {} codec pairs, plan has {} layers",
+                    state.codecs.len(),
+                    plan.layers.len()
+                ),
+            )
+            .on(state.rank),
+        );
+        return out;
+    }
+    for (k, (lp, &(cf, cb))) in plan.layers.iter().zip(state.codecs.iter()).enumerate() {
+        if cf != lp.codec_fwd || cb != lp.codec_bwd {
+            out.push(
+                Violation::new(
+                    Code::StateCodecMismatch,
+                    format!(
+                        "state encodes {}/{}, plan says {}/{}",
+                        cf.label(),
+                        cb.label(),
+                        lp.codec_fwd.label(),
+                        lp.codec_bwd.label()
+                    ),
+                )
+                .at(k)
+                .on(state.rank),
+            );
+        }
+    }
+    out
+}

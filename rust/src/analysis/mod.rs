@@ -1,0 +1,458 @@
+//! Static plan verification — the `spdnn check` pass.
+//!
+//! The row-wise partitioning of the paper (Section 4) turns every SGD
+//! step into a P×P message schedule, and the engines execute that
+//! schedule chunked ([`crate::coordinator::ExecMode::Pipelined`]),
+//! codec-compressed ([`crate::comm::Codec`]) and permuted boundary-first
+//! ([`crate::sparse::regroup_rows`]). This module proves a
+//! (structure, partition, plan) triple safe **without spawning a single
+//! rank thread**, so a bad plan is rejected before any engine can
+//! deadlock on it:
+//!
+//! 1. **Partition soundness** ([`partition`]): every activation owned
+//!    exactly once per layer, transfer indices in-bounds and owned by
+//!    their sender, every needed column owned-or-delivered exactly once,
+//!    and the pipelined row regroup a true permutation with a consistent
+//!    boundary prefix.
+//! 2. **Schedule matching** ([`schedule`]): the full send/recv tag
+//!    multiset of each engine mode is enumerated symbolically (per
+//!    transfer, per chunk, forward and backward) and proved a perfect
+//!    bipartite matching — no orphan sends, no starved receives, no tag
+//!    collisions. Because the simulated fabric buffers sends and matches
+//!    receives purely on tags, a perfect matching is deadlock-freedom by
+//!    construction.
+//! 3. **Accounting cross-checks** ([`accounting`], [`taxonomy`]): the
+//!    plan's static `wire_bytes` equal an independent recomputation from
+//!    the documented wire format and the replay/netmodel charge basis,
+//!    codecs honor their `encode_into`/`wire_words` contract, and every
+//!    trace-span name an engine emits is in the documented taxonomy of
+//!    `docs/OBSERVABILITY.md`.
+//!
+//! Violations carry stable diagnostic codes (`P...` partition, `S...`
+//! schedule, `A...` accounting, `T...` taxonomy — see [`Code`] and
+//! `docs/ANALYSIS.md`). The CLI entry point is `spdnn check`; debug
+//! builds additionally run [`check_plan`] inside
+//! [`crate::coordinator::RankState::build`] so every test that builds a
+//! rank state verifies its plan for free.
+
+pub mod accounting;
+pub mod partition;
+pub mod schedule;
+pub mod taxonomy;
+
+pub use accounting::check_state_codecs;
+
+use crate::coordinator::ExecMode;
+use crate::partition::{CommPlan, DnnPartition, ServingPlan};
+use crate::sparse::Csr;
+
+/// Stable diagnostic code of one violation class. The string form
+/// (`P020`, `S001`, ...) is the contract tests and tooling match on;
+/// the variant name is for Rust callers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Code {
+    /// P001 — structure / partition / plan shapes disagree.
+    ShapeMismatch,
+    /// P002 — a layer's row assignment has the wrong length.
+    RowCountMismatch,
+    /// P003 — a rank id is outside `0..nparts`.
+    RankOutOfRange,
+    /// P004 — the input assignment has the wrong length.
+    InputMismatch,
+    /// P010 — a pipelined row regroup's perm/inv are not mutual inverses.
+    RegroupNotInverse,
+    /// P011 — the boundary prefix bookkeeping is inconsistent.
+    BoundaryPrefixBroken,
+    /// P012 — an outbound chunk's rows fall outside its ready prefix.
+    ChunkOutsideReady,
+    /// P020 — a transfer carries an activation its sender does not own.
+    ForeignSend,
+    /// P021 — one activation reaches one rank twice (owned + delivered,
+    /// or delivered by two transfers).
+    DoubleDelivery,
+    /// P022 — a transfer index is out of the layer's column range.
+    IndexOutOfBounds,
+    /// P023 — a transfer's index list is not strictly ascending.
+    UnsortedTransfer,
+    /// P024 — a transfer carries no indices.
+    EmptyTransfer,
+    /// P025 — a rank needs a column it neither owns nor receives.
+    UncoveredColumn,
+    /// S001 — a posted send no receiver ever waits for.
+    OrphanSend,
+    /// S002 — a receive no sender ever posts (deadlock).
+    StarvedReceive,
+    /// S003 — two sends share one tag (cross-generation collision).
+    DuplicateSendTag,
+    /// S004 — two receives share one tag.
+    DuplicateRecvTag,
+    /// S005 — a transfer from a rank to itself.
+    SelfMessage,
+    /// S006 — a transfer's chunk schedule is broken (ids not dense,
+    /// oversized chunks, or reassembly mismatch).
+    ChunkScheduleBroken,
+    /// S007 — send/recv views disagree with the transfer list.
+    ViewMismatch,
+    /// A001 — static chunked wire bytes differ from the wire format.
+    WireBytesMismatch,
+    /// A002 — the replay/netmodel charge basis differs from the plan.
+    ReplayChargeMismatch,
+    /// A003 — a codec violates its own encode/size contract.
+    CodecContractBroken,
+    /// A004 — a rank state's codec table disagrees with the plan.
+    StateCodecMismatch,
+    /// T001 — an engine emitted a span name outside the taxonomy.
+    UnknownSpanName,
+    /// T002 — an engine emitted a span category outside the taxonomy.
+    UnknownSpanCat,
+    /// T003 — a taxonomy entry is missing from `docs/OBSERVABILITY.md`.
+    UndocumentedTaxonomy,
+}
+
+impl Code {
+    /// The stable wire/report spelling (`P020`, `S001`, ...).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::ShapeMismatch => "P001",
+            Code::RowCountMismatch => "P002",
+            Code::RankOutOfRange => "P003",
+            Code::InputMismatch => "P004",
+            Code::RegroupNotInverse => "P010",
+            Code::BoundaryPrefixBroken => "P011",
+            Code::ChunkOutsideReady => "P012",
+            Code::ForeignSend => "P020",
+            Code::DoubleDelivery => "P021",
+            Code::IndexOutOfBounds => "P022",
+            Code::UnsortedTransfer => "P023",
+            Code::EmptyTransfer => "P024",
+            Code::UncoveredColumn => "P025",
+            Code::OrphanSend => "S001",
+            Code::StarvedReceive => "S002",
+            Code::DuplicateSendTag => "S003",
+            Code::DuplicateRecvTag => "S004",
+            Code::SelfMessage => "S005",
+            Code::ChunkScheduleBroken => "S006",
+            Code::ViewMismatch => "S007",
+            Code::WireBytesMismatch => "A001",
+            Code::ReplayChargeMismatch => "A002",
+            Code::CodecContractBroken => "A003",
+            Code::StateCodecMismatch => "A004",
+            Code::UnknownSpanName => "T001",
+            Code::UnknownSpanCat => "T002",
+            Code::UndocumentedTaxonomy => "T003",
+        }
+    }
+
+    /// One-line human description of the violation class.
+    pub fn describe(self) -> &'static str {
+        match self {
+            Code::ShapeMismatch => "structure/partition/plan shape mismatch",
+            Code::RowCountMismatch => "layer row-count mismatch",
+            Code::RankOutOfRange => "rank id out of range",
+            Code::InputMismatch => "input assignment length mismatch",
+            Code::RegroupNotInverse => "regroup perm/inv not mutual inverses",
+            Code::BoundaryPrefixBroken => "boundary prefix inconsistent",
+            Code::ChunkOutsideReady => "chunk rows outside ready prefix",
+            Code::ForeignSend => "transfer sends an unowned activation",
+            Code::DoubleDelivery => "activation reaches a rank twice",
+            Code::IndexOutOfBounds => "transfer index out of bounds",
+            Code::UnsortedTransfer => "transfer indices not strictly ascending",
+            Code::EmptyTransfer => "empty transfer",
+            Code::UncoveredColumn => "needed column neither owned nor received",
+            Code::OrphanSend => "send with no matching receive",
+            Code::StarvedReceive => "receive with no matching send (deadlock)",
+            Code::DuplicateSendTag => "duplicate send tag",
+            Code::DuplicateRecvTag => "duplicate receive tag",
+            Code::SelfMessage => "rank messages itself",
+            Code::ChunkScheduleBroken => "chunk schedule integrity violation",
+            Code::ViewMismatch => "send/recv view inconsistent with transfers",
+            Code::WireBytesMismatch => "static wire bytes disagree with wire format",
+            Code::ReplayChargeMismatch => "replay charge basis disagrees with plan",
+            Code::CodecContractBroken => "codec encode/size contract broken",
+            Code::StateCodecMismatch => "rank-state codecs disagree with plan",
+            Code::UnknownSpanName => "span name outside documented taxonomy",
+            Code::UnknownSpanCat => "span category outside documented taxonomy",
+            Code::UndocumentedTaxonomy => "taxonomy entry missing from docs",
+        }
+    }
+}
+
+/// One concrete violation: a diagnostic [`Code`] plus where (layer/rank)
+/// and a human-readable detail line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub code: Code,
+    pub layer: Option<usize>,
+    pub rank: Option<u32>,
+    pub detail: String,
+}
+
+impl Violation {
+    /// A violation with no layer/rank attribution yet.
+    pub fn new(code: Code, detail: impl Into<String>) -> Self {
+        Violation {
+            code,
+            layer: None,
+            rank: None,
+            detail: detail.into(),
+        }
+    }
+
+    /// Attribute the violation to a layer.
+    pub fn at(mut self, layer: usize) -> Self {
+        self.layer = Some(layer);
+        self
+    }
+
+    /// Attribute the violation to a rank.
+    pub fn on(mut self, rank: u32) -> Self {
+        self.rank = Some(rank);
+        self
+    }
+}
+
+/// Result of one [`check_plan`] run: schedule statistics plus every
+/// violation found. An empty violation list is the safety proof.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    /// Free-form label of the checked configuration (mode, codecs, net).
+    pub config: String,
+    pub layers: usize,
+    pub nparts: usize,
+    pub batch: usize,
+    /// Whole transfers in the forward plan.
+    pub transfers: u64,
+    /// Messages under the mode's chunk schedule, forward + backward.
+    pub messages: u64,
+    /// Forward bytes-on-wire under the mode's chunk schedule.
+    pub wire_bytes: u64,
+    pub violations: Vec<Violation>,
+}
+
+impl CheckReport {
+    /// True when the plan passed every check.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable report: one status line plus one line per violation.
+    pub fn render(&self) -> String {
+        let status = if self.ok() { "ok  " } else { "FAIL" };
+        let mut s = format!(
+            "[{status}] {} — {} layers, {} ranks, batch {}, {} transfers, \
+             {} msgs, {} wire bytes\n",
+            self.config,
+            self.layers,
+            self.nparts,
+            self.batch,
+            self.transfers,
+            self.messages,
+            self.wire_bytes
+        );
+        for v in &self.violations {
+            s.push_str("       ");
+            s.push_str(v.code.as_str());
+            if let Some(k) = v.layer {
+                s.push_str(&format!(" L{k}"));
+            }
+            if let Some(r) = v.rank {
+                s.push_str(&format!(" r{r}"));
+            }
+            s.push_str(": ");
+            s.push_str(&v.detail);
+            s.push('\n');
+        }
+        s
+    }
+
+    /// The report as one JSON object (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut s = format!(
+            "{{\"config\":\"{}\",\"ok\":{},\"layers\":{},\"nparts\":{},\
+             \"batch\":{},\"transfers\":{},\"messages\":{},\"wire_bytes\":{},\
+             \"violations\":[",
+            json_escape(&self.config),
+            self.ok(),
+            self.layers,
+            self.nparts,
+            self.batch,
+            self.transfers,
+            self.messages,
+            self.wire_bytes
+        );
+        for (i, v) in self.violations.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"code\":\"{}\",\"layer\":{},\"rank\":{},\"detail\":\"{}\"}}",
+                v.code.as_str(),
+                v.layer.map_or("null".to_string(), |k| k.to_string()),
+                v.rank.map_or("null".to_string(), |r| r.to_string()),
+                json_escape(&v.detail)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Display label of a mode including the pipelined chunk size (the plain
+/// [`ExecMode::label`] drops it).
+pub fn mode_label(mode: ExecMode) -> String {
+    match mode {
+        ExecMode::Pipelined { chunk_acts } => format!("pipelined(chunk={chunk_acts})"),
+        m => m.label().to_string(),
+    }
+}
+
+/// Statically verify one (structure, partition, plan) triple for one
+/// engine mode and batch width. Runs every partition, schedule, and
+/// accounting check; shape violations (`P001`–`P004`) short-circuit the
+/// rest because the deeper checks index by the declared shapes.
+pub fn check_plan(
+    structure: &[Csr],
+    part: &DnnPartition,
+    plan: &CommPlan,
+    mode: ExecMode,
+    batch: usize,
+) -> CheckReport {
+    let mut violations = Vec::new();
+    if partition::check_shapes(structure, part, plan, &mut violations) {
+        partition::check_ranks(part, &mut violations);
+        partition::check_transfers(structure, part, plan, &mut violations);
+        partition::check_coverage(structure, part, plan, &mut violations);
+        if let ExecMode::Pipelined { chunk_acts } = mode {
+            partition::check_regroup(part, plan, chunk_acts, &mut violations);
+        }
+        schedule::check_views(plan, &mut violations);
+        schedule::check_chunk_schedules(plan, mode, &mut violations);
+        let sends = schedule::sends_of(plan, mode, true);
+        let recvs = schedule::recvs_of(plan, mode, true);
+        schedule::match_schedule(&sends, &recvs, &mut violations);
+        accounting::check_wire_accounting(plan, mode, batch, &mut violations);
+        accounting::check_codec_contract(plan, mode, batch, &mut violations);
+    }
+    let chunk_acts = match mode {
+        ExecMode::Pipelined { chunk_acts } => chunk_acts,
+        _ => 0,
+    };
+    CheckReport {
+        config: format!("{} P={} b={batch}", mode_label(mode), part.nparts),
+        layers: structure.len(),
+        nparts: part.nparts,
+        batch,
+        transfers: plan.fwd_messages(),
+        messages: plan
+            .layers
+            .iter()
+            .map(|l| l.message_count_chunked(chunk_acts))
+            .sum::<u64>()
+            * 2,
+        wire_bytes: plan.fwd_wire_bytes(batch, chunk_acts),
+        violations,
+    }
+}
+
+/// [`check_plan`] over a [`ServingPlan`] bundle (partition + plan as one
+/// unit, the form the serving pool consumes).
+pub fn check_serving_plan(
+    structure: &[Csr],
+    sp: &ServingPlan,
+    mode: ExecMode,
+    batch: usize,
+) -> CheckReport {
+    check_plan(structure, &sp.part, &sp.plan, mode, batch)
+}
+
+/// Run [`check_plan`] over the built-in configuration matrix: two
+/// RadixNet/Graph Challenge nets × {random, contiguous} partitions at
+/// 1–8 ranks plus a zero-row-rank and a hypergraph partition × all three
+/// engines (pipelined additionally at tiny and unchunked sizes) × all
+/// three codecs (one pair mixed). This is the matrix `spdnn check` and
+/// CI run; every report must come back [`CheckReport::ok`].
+pub fn check_builtin_matrix(seed: u64) -> Vec<CheckReport> {
+    use crate::comm::Codec;
+    use crate::partition::phases::{hypergraph_partition, PhaseConfig};
+    use crate::partition::random::random_partition;
+    use crate::radixnet::{generate_structure, RadixNetConfig};
+
+    let modes = [
+        ExecMode::Blocking,
+        ExecMode::Overlap,
+        ExecMode::pipelined(),
+        ExecMode::Pipelined { chunk_acts: 3 },
+        ExecMode::Pipelined { chunk_acts: 0 },
+    ];
+    let codecs = [
+        (Codec::F32, Codec::F32),
+        (Codec::F16, Codec::F16),
+        (Codec::int8(), Codec::F16),
+    ];
+    let mut reports = Vec::new();
+    for (net_name, neurons, depth, with_hypergraph) in
+        [("gc64x4", 64usize, 4usize, true), ("gc256x5", 256, 5, false)]
+    {
+        let cfg = RadixNetConfig::graph_challenge(neurons, depth).expect("built-in GC size");
+        let structure = generate_structure(&cfg);
+        let mut parts: Vec<(String, DnnPartition)> = Vec::new();
+        for p in [1usize, 2, 3, 8] {
+            let rand = random_partition(&structure, p, seed + p as u64);
+            parts.push((format!("random P={p}"), rand));
+            let contig = crate::partition::contiguous_partition(&structure, p);
+            parts.push((format!("contig P={p}"), contig));
+        }
+        // Zero-row rank: every row of rank 3 handed to rank 0. Rank 3
+        // stays in the rank set but owns nothing in any layer — the
+        // degenerate case the schedule matcher must still close over.
+        let mut zero = random_partition(&structure, 4, seed ^ 0x5EED);
+        for assign in zero
+            .layer_parts
+            .iter_mut()
+            .chain(std::iter::once(&mut zero.input_parts))
+        {
+            for p in assign.iter_mut() {
+                if *p == 3 {
+                    *p = 0;
+                }
+            }
+        }
+        parts.push(("zero-row P=4".to_string(), zero));
+        if with_hypergraph {
+            let hyper = hypergraph_partition(&structure, &PhaseConfig::new(4));
+            parts.push(("hypergraph P=4".to_string(), hyper));
+        }
+        for (pname, part) in &parts {
+            let base = CommPlan::build(&structure, part);
+            for &(cf, cb) in &codecs {
+                let mut plan = base.clone();
+                plan.set_codec(cf, cb);
+                for &mode in &modes {
+                    let mut report = check_plan(&structure, part, &plan, mode, 4);
+                    report.config = format!(
+                        "{net_name} {pname} {} {}/{}",
+                        mode_label(mode),
+                        cf.label(),
+                        cb.label()
+                    );
+                    reports.push(report);
+                }
+            }
+        }
+    }
+    reports
+}

@@ -1,0 +1,411 @@
+//! Partition-soundness checks (`P...` diagnostics): ownership, transfer
+//! well-formedness, coverage, and the pipelined row regroup.
+//!
+//! The engine contract these checks prove statically is the one
+//! [`crate::sparse::SplitCsr::build`] and the full-width scatter path
+//! enforce dynamically per rank: every activation a row block reads is
+//! either owned by the rank or delivered by exactly one inbound
+//! transfer, and everything a rank sends it actually computed.
+
+use super::{Code, Violation};
+use crate::partition::{CommPlan, DnnPartition};
+use crate::sparse::{regroup_rows, Csr};
+
+/// Shape consistency between structure, partition, and plan
+/// (`P001`/`P002`/`P004`). Returns false when the shapes are too broken
+/// for the deeper checks to index safely.
+pub fn check_shapes(
+    structure: &[Csr],
+    part: &DnnPartition,
+    plan: &CommPlan,
+    out: &mut Vec<Violation>,
+) -> bool {
+    let before = out.len();
+    if structure.is_empty() {
+        out.push(Violation::new(
+            Code::ShapeMismatch,
+            "structure has no layers",
+        ));
+        return false;
+    }
+    if part.layer_parts.len() != structure.len() {
+        out.push(Violation::new(
+            Code::ShapeMismatch,
+            format!(
+                "partition assigns {} layers, structure has {}",
+                part.layer_parts.len(),
+                structure.len()
+            ),
+        ));
+    }
+    if plan.layers.len() != structure.len() {
+        out.push(Violation::new(
+            Code::ShapeMismatch,
+            format!(
+                "plan covers {} layers, structure has {}",
+                plan.layers.len(),
+                structure.len()
+            ),
+        ));
+    }
+    if plan.nparts != part.nparts {
+        out.push(Violation::new(
+            Code::ShapeMismatch,
+            format!(
+                "plan built for {} ranks, partition declares {}",
+                plan.nparts, part.nparts
+            ),
+        ));
+    }
+    if part.input_parts.len() != structure[0].ncols {
+        out.push(Violation::new(
+            Code::InputMismatch,
+            format!(
+                "input assignment covers {} entries, layer 0 reads {}",
+                part.input_parts.len(),
+                structure[0].ncols
+            ),
+        ));
+    }
+    for k in 1..structure.len() {
+        if structure[k].ncols != structure[k - 1].nrows {
+            out.push(
+                Violation::new(
+                    Code::ShapeMismatch,
+                    format!(
+                        "layer {k} reads {} columns but layer {} outputs {} rows",
+                        structure[k].ncols,
+                        k - 1,
+                        structure[k - 1].nrows
+                    ),
+                )
+                .at(k),
+            );
+        }
+    }
+    for (k, (parts, w)) in part.layer_parts.iter().zip(structure.iter()).enumerate() {
+        if parts.len() != w.nrows {
+            out.push(
+                Violation::new(
+                    Code::RowCountMismatch,
+                    format!("layer {k} assigns {} rows, matrix has {}", parts.len(), w.nrows),
+                )
+                .at(k),
+            );
+        }
+    }
+    for (k, lp) in plan.layers.iter().enumerate() {
+        if lp.send_of.len() != part.nparts || lp.recv_of.len() != part.nparts {
+            out.push(
+                Violation::new(
+                    Code::ShapeMismatch,
+                    format!(
+                        "layer {k} plan views sized {}/{} for {} ranks",
+                        lp.send_of.len(),
+                        lp.recv_of.len(),
+                        part.nparts
+                    ),
+                )
+                .at(k),
+            );
+        }
+    }
+    out.len() == before
+}
+
+/// Every rank id the partition hands out is in range (`P003`). Reports
+/// at most one violation per assignment vector to avoid flooding.
+pub fn check_ranks(part: &DnnPartition, out: &mut Vec<Violation>) {
+    if let Some((j, &p)) = part
+        .input_parts
+        .iter()
+        .enumerate()
+        .find(|&(_, &p)| p as usize >= part.nparts)
+    {
+        out.push(Violation::new(
+            Code::RankOutOfRange,
+            format!("input entry {j} assigned to rank {p} of {}", part.nparts),
+        ));
+    }
+    for (k, parts) in part.layer_parts.iter().enumerate() {
+        if let Some((r, &p)) = parts
+            .iter()
+            .enumerate()
+            .find(|&(_, &p)| p as usize >= part.nparts)
+        {
+            out.push(
+                Violation::new(
+                    Code::RankOutOfRange,
+                    format!("layer {k} row {r} assigned to rank {p} of {}", part.nparts),
+                )
+                .at(k),
+            );
+        }
+    }
+}
+
+/// Transfer well-formedness per layer (`P020`/`P022`/`P023`/`P024` and
+/// endpoint `P003`): indices strictly ascending, in-bounds, non-empty,
+/// and **owned by the sending rank** — the "every row owned exactly
+/// once" half that catches a duplicated row owner, because the plan's
+/// sender no longer matches `owner_of_activation` after the flip.
+pub fn check_transfers(
+    structure: &[Csr],
+    part: &DnnPartition,
+    plan: &CommPlan,
+    out: &mut Vec<Violation>,
+) {
+    for (k, (lp, w)) in plan.layers.iter().zip(structure.iter()).enumerate() {
+        for (tid, t) in lp.transfers.iter().enumerate() {
+            if t.from as usize >= part.nparts || t.to as usize >= part.nparts {
+                out.push(
+                    Violation::new(
+                        Code::RankOutOfRange,
+                        format!(
+                            "transfer {tid} endpoints {}→{} outside {} ranks",
+                            t.from, t.to, part.nparts
+                        ),
+                    )
+                    .at(k),
+                );
+                continue;
+            }
+            if t.indices.is_empty() {
+                out.push(
+                    Violation::new(
+                        Code::EmptyTransfer,
+                        format!("transfer {tid} ({}→{}) carries no indices", t.from, t.to),
+                    )
+                    .at(k)
+                    .on(t.from),
+                );
+                continue;
+            }
+            if t.indices.windows(2).any(|p| p[0] >= p[1]) {
+                out.push(
+                    Violation::new(
+                        Code::UnsortedTransfer,
+                        format!(
+                            "transfer {tid} ({}→{}) indices not strictly ascending",
+                            t.from, t.to
+                        ),
+                    )
+                    .at(k)
+                    .on(t.from),
+                );
+            }
+            if let Some(&j) = t.indices.iter().find(|&&j| j as usize >= w.ncols) {
+                out.push(
+                    Violation::new(
+                        Code::IndexOutOfBounds,
+                        format!(
+                            "transfer {tid} ({}→{}) index {j} outside {} columns",
+                            t.from, t.to, w.ncols
+                        ),
+                    )
+                    .at(k)
+                    .on(t.from),
+                );
+            }
+            if let Some(&j) = t.indices.iter().find(|&&j| {
+                (j as usize) < w.ncols && part.owner_of_activation(k, j as usize) != t.from
+            }) {
+                let owner = part.owner_of_activation(k, j as usize);
+                out.push(
+                    Violation::new(
+                        Code::ForeignSend,
+                        format!(
+                            "transfer {tid} ({}→{}) carries activation {j} owned by rank {owner}",
+                            t.from, t.to
+                        ),
+                    )
+                    .at(k)
+                    .on(t.from),
+                );
+            }
+        }
+    }
+}
+
+/// Coverage per (layer, rank) (`P021`/`P025`): walking every nonzero of
+/// the rank's row block, each referenced column must be owned-or-
+/// delivered exactly once. One violation per (layer, rank, class) with a
+/// count, so a systematically broken plan stays readable.
+pub fn check_coverage(
+    structure: &[Csr],
+    part: &DnnPartition,
+    plan: &CommPlan,
+    out: &mut Vec<Violation>,
+) {
+    for (k, (lp, w)) in plan.layers.iter().zip(structure.iter()).enumerate() {
+        for m in 0..part.nparts {
+            // cover[j]: times x^{k-1}(j) is available to rank m
+            let mut cover = vec![0u8; w.ncols];
+            for (j, c) in cover.iter_mut().enumerate() {
+                if part.owner_of_activation(k, j) as usize == m {
+                    *c = 1;
+                }
+            }
+            let mut dups = 0usize;
+            let mut first_dup = None;
+            for &tid in &lp.recv_of[m] {
+                let Some(t) = lp.transfers.get(tid as usize) else {
+                    continue; // S007 reported by the schedule checks
+                };
+                for &j in &t.indices {
+                    let j = j as usize;
+                    if j >= w.ncols {
+                        continue; // P022 reported by check_transfers
+                    }
+                    if cover[j] >= 1 {
+                        dups += 1;
+                        if first_dup.is_none() {
+                            first_dup = Some((j, tid));
+                        }
+                    }
+                    cover[j] = cover[j].saturating_add(1);
+                }
+            }
+            if let Some((j, tid)) = first_dup {
+                out.push(
+                    Violation::new(
+                        Code::DoubleDelivery,
+                        format!(
+                            "column {j} reaches rank {m} twice (via transfer {tid}); \
+                             {dups} duplicated deliveries in this layer"
+                        ),
+                    )
+                    .at(k)
+                    .on(m as u32),
+                );
+            }
+            let mut missing = 0usize;
+            let mut first_miss = None;
+            for (r, &p) in part.layer_parts[k].iter().enumerate() {
+                if p as usize != m {
+                    continue;
+                }
+                for &c in w.row(r).0 {
+                    if (c as usize) < w.ncols && cover[c as usize] == 0 {
+                        missing += 1;
+                        if first_miss.is_none() {
+                            first_miss = Some((r, c));
+                        }
+                    }
+                }
+            }
+            if let Some((r, c)) = first_miss {
+                out.push(
+                    Violation::new(
+                        Code::UncoveredColumn,
+                        format!(
+                            "row {r} needs column {c}, neither owned nor received by \
+                             rank {m}; {missing} uncovered reads in this layer"
+                        ),
+                    )
+                    .at(k)
+                    .on(m as u32),
+                );
+            }
+        }
+    }
+}
+
+/// Pipelined row-regroup soundness (`P010`/`P011`/`P012`): re-derive the
+/// per-rank boundary-first permutation exactly the way
+/// [`crate::coordinator::RankState::build`] does and verify perm/inv are
+/// mutual inverses, the boundary prefix covers every chunk group, and
+/// each outbound chunk's source rows sit inside its ready prefix.
+pub fn check_regroup(
+    part: &DnnPartition,
+    plan: &CommPlan,
+    chunk_acts: usize,
+    out: &mut Vec<Violation>,
+) {
+    let depth = plan.layers.len();
+    for m in 0..part.nparts {
+        for k in 0..depth {
+            let owned = part.rows_of(k, m as u32);
+            // Re-derive `outbound_chunks_of(m)` of the NEXT layer in view
+            // order, exactly as the engine does — but through
+            // `transfers.get` so a corrupt view (S007, reported by the
+            // schedule checks) cannot panic here, and with foreign
+            // indices (P020, reported elsewhere) dropped.
+            let mut groups: Vec<Vec<u32>> = Vec::new();
+            if k + 1 < depth {
+                let lp = &plan.layers[k + 1];
+                for &tid in &lp.send_of[m] {
+                    let Some(t) = lp.transfers.get(tid as usize) else {
+                        continue;
+                    };
+                    for (_, idx) in t.chunks(chunk_acts) {
+                        groups.push(
+                            idx.iter()
+                                .filter_map(|&j| owned.binary_search(&j).ok().map(|p| p as u32))
+                                .collect(),
+                        );
+                    }
+                }
+            }
+            let rg = regroup_rows(owned.len(), &groups);
+            let n = owned.len();
+            let mut perm_ok = rg.perm.len() == n && rg.inv.len() == n;
+            if perm_ok {
+                for (i, &p) in rg.perm.iter().enumerate() {
+                    if p as usize >= n || rg.inv[p as usize] as usize != i {
+                        perm_ok = false;
+                        break;
+                    }
+                }
+            }
+            if !perm_ok {
+                out.push(
+                    Violation::new(
+                        Code::RegroupNotInverse,
+                        format!("rank {m} regroup over {n} rows: perm/inv are not inverse"),
+                    )
+                    .at(k)
+                    .on(m as u32),
+                );
+                continue;
+            }
+            let prefix_ok = rg.boundary_end <= n
+                && rg.ready.len() == groups.len()
+                && rg.ready.iter().all(|&e| e <= rg.boundary_end);
+            if !prefix_ok {
+                out.push(
+                    Violation::new(
+                        Code::BoundaryPrefixBroken,
+                        format!(
+                            "rank {m}: boundary_end {} of {n} rows, ready {:?} \
+                             ({} groups)",
+                            rg.boundary_end,
+                            rg.ready,
+                            groups.len()
+                        ),
+                    )
+                    .at(k)
+                    .on(m as u32),
+                );
+                continue;
+            }
+            for (i, g) in groups.iter().enumerate() {
+                if let Some(&p) = g.iter().find(|&&p| rg.inv[p as usize] as usize >= rg.ready[i]) {
+                    out.push(
+                        Violation::new(
+                            Code::ChunkOutsideReady,
+                            format!(
+                                "rank {m} chunk group {i}: local row {p} sits at permuted \
+                                 position {} beyond ready prefix {}",
+                                rg.inv[p as usize],
+                                rg.ready[i]
+                            ),
+                        )
+                        .at(k)
+                        .on(m as u32),
+                    );
+                }
+            }
+        }
+    }
+}

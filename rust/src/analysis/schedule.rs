@@ -1,0 +1,397 @@
+//! Schedule matching (`S...` diagnostics): symbolic enumeration of the
+//! send/recv tag multiset of each engine mode, proved to be a perfect
+//! bipartite matching.
+//!
+//! The simulated fabric ([`crate::comm::fabric`]) buffers sends and
+//! matches receives purely on the tag
+//! `(layer, phase, peer, transfer, chunk)` — timing never changes which
+//! message satisfies which wait. So if every tag is sent exactly once
+//! and awaited exactly once, no rank can block forever: the schedule is
+//! deadlock-free **by construction**, independent of the interleaving.
+//! This also covers the pipelined post-before-interior ordering — layer
+//! `k`'s step posts layer-`k+1`-tagged chunks early, but tag-wise those
+//! belong to layer `k+1`'s schedule, which is exactly how they are
+//! enumerated here.
+
+use super::{Code, Violation};
+use crate::comm::Phase;
+use crate::coordinator::ExecMode;
+use crate::partition::CommPlan;
+use std::collections::BTreeMap;
+
+/// One symbolic message of the schedule: everything the fabric matches
+/// on, plus the receiving side, so orphans and starvation are decidable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tag {
+    pub layer: u32,
+    pub phase: Phase,
+    pub from: u32,
+    pub to: u32,
+    pub tid: u32,
+    pub chunk: u32,
+}
+
+/// Total order key (Phase itself is not `Ord`).
+type Key = (u32, u8, u32, u32, u32, u32);
+
+fn key(t: &Tag) -> Key {
+    let ph = match t.phase {
+        Phase::Forward => 0u8,
+        Phase::Backward => 1,
+    };
+    (t.layer, ph, t.from, t.to, t.tid, t.chunk)
+}
+
+fn tag_str(k: &Key) -> String {
+    let ph = if k.1 == 0 { "fwd" } else { "bwd" };
+    format!("L{} {ph} {}→{} transfer {} chunk {}", k.0, k.2, k.3, k.4, k.5)
+}
+
+/// The chunk granularity a mode posts transfers at (0 = whole).
+fn chunking(mode: ExecMode) -> usize {
+    match mode {
+        ExecMode::Pipelined { chunk_acts } => chunk_acts,
+        _ => 0,
+    }
+}
+
+/// Every send each rank posts under `mode`, derived from the per-rank
+/// `send_of` views (forward) and `recv_of` views (backward mirror: the
+/// forward receiver of a transfer sends its partial gradient back), so a
+/// corrupted view changes the enumerated schedule exactly as it would
+/// change the engine's behavior.
+pub fn sends_of(plan: &CommPlan, mode: ExecMode, train: bool) -> Vec<Tag> {
+    let ca = chunking(mode);
+    let mut tags = Vec::new();
+    for (k, lp) in plan.layers.iter().enumerate() {
+        for (r, list) in lp.send_of.iter().enumerate() {
+            for &tid in list {
+                let Some(t) = lp.transfers.get(tid as usize) else {
+                    continue; // S007, reported by check_views
+                };
+                for (c, _) in t.chunks(ca) {
+                    tags.push(Tag {
+                        layer: k as u32,
+                        phase: Phase::Forward,
+                        from: r as u32,
+                        to: t.to,
+                        tid,
+                        chunk: c,
+                    });
+                }
+            }
+        }
+        if !train {
+            continue;
+        }
+        for (r, list) in lp.recv_of.iter().enumerate() {
+            for &tid in list {
+                let Some(t) = lp.transfers.get(tid as usize) else {
+                    continue;
+                };
+                for (c, _) in t.chunks(ca) {
+                    tags.push(Tag {
+                        layer: k as u32,
+                        phase: Phase::Backward,
+                        from: r as u32,
+                        to: t.from,
+                        tid,
+                        chunk: c,
+                    });
+                }
+            }
+        }
+    }
+    tags
+}
+
+/// Every receive each rank waits for under `mode`: the mirror of
+/// [`sends_of`], derived from the `recv_of` views forward and the
+/// `send_of` views backward (a rank that sent activations waits for the
+/// matching partial gradients).
+pub fn recvs_of(plan: &CommPlan, mode: ExecMode, train: bool) -> Vec<Tag> {
+    let ca = chunking(mode);
+    let mut tags = Vec::new();
+    for (k, lp) in plan.layers.iter().enumerate() {
+        for (r, list) in lp.recv_of.iter().enumerate() {
+            for &tid in list {
+                let Some(t) = lp.transfers.get(tid as usize) else {
+                    continue;
+                };
+                for (c, _) in t.chunks(ca) {
+                    tags.push(Tag {
+                        layer: k as u32,
+                        phase: Phase::Forward,
+                        from: t.from,
+                        to: r as u32,
+                        tid,
+                        chunk: c,
+                    });
+                }
+            }
+        }
+        if !train {
+            continue;
+        }
+        for (r, list) in lp.send_of.iter().enumerate() {
+            for &tid in list {
+                let Some(t) = lp.transfers.get(tid as usize) else {
+                    continue;
+                };
+                for (c, _) in t.chunks(ca) {
+                    tags.push(Tag {
+                        layer: k as u32,
+                        phase: Phase::Backward,
+                        from: t.to,
+                        to: r as u32,
+                        tid,
+                        chunk: c,
+                    });
+                }
+            }
+        }
+    }
+    tags
+}
+
+/// Prove `sends` and `recvs` form a perfect bipartite matching:
+/// `S001` orphan send, `S002` starved receive (a wait nothing satisfies
+/// — deadlock), `S003`/`S004` duplicate tags (the cross-generation
+/// collision class: two in-flight messages the fabric cannot tell
+/// apart).
+pub fn match_schedule(sends: &[Tag], recvs: &[Tag], out: &mut Vec<Violation>) {
+    let mut counts: BTreeMap<Key, (u32, u32)> = BTreeMap::new();
+    for t in sends {
+        counts.entry(key(t)).or_insert((0, 0)).0 += 1;
+    }
+    for t in recvs {
+        counts.entry(key(t)).or_insert((0, 0)).1 += 1;
+    }
+    for (k, &(s, r)) in &counts {
+        let layer = k.0 as usize;
+        if s > 1 {
+            out.push(
+                Violation::new(
+                    Code::DuplicateSendTag,
+                    format!("{} posted {s} times", tag_str(k)),
+                )
+                .at(layer)
+                .on(k.2),
+            );
+        }
+        if r > 1 {
+            out.push(
+                Violation::new(
+                    Code::DuplicateRecvTag,
+                    format!("{} awaited {r} times", tag_str(k)),
+                )
+                .at(layer)
+                .on(k.3),
+            );
+        }
+        if s > 0 && r == 0 {
+            out.push(
+                Violation::new(
+                    Code::OrphanSend,
+                    format!("{} has no matching receive", tag_str(k)),
+                )
+                .at(layer)
+                .on(k.2),
+            );
+        }
+        if r > 0 && s == 0 {
+            out.push(
+                Violation::new(
+                    Code::StarvedReceive,
+                    format!("{} is never sent — rank {} would block forever", tag_str(k), k.3),
+                )
+                .at(layer)
+                .on(k.3),
+            );
+        }
+    }
+}
+
+/// View/transfer consistency per layer (`S007`, plus `S005`
+/// self-messages): every transfer id appears in exactly one rank's send
+/// view and exactly one rank's recv view, and those ranks are the
+/// transfer's own endpoints.
+pub fn check_views(plan: &CommPlan, out: &mut Vec<Violation>) {
+    for (k, lp) in plan.layers.iter().enumerate() {
+        let nt = lp.transfers.len();
+        for (tid, t) in lp.transfers.iter().enumerate() {
+            if t.from == t.to {
+                out.push(
+                    Violation::new(
+                        Code::SelfMessage,
+                        format!("transfer {tid} sends rank {} to itself", t.from),
+                    )
+                    .at(k)
+                    .on(t.from),
+                );
+            }
+        }
+        let mut sseen = vec![0u32; nt];
+        let mut rseen = vec![0u32; nt];
+        for (r, list) in lp.send_of.iter().enumerate() {
+            for &tid in list {
+                let Some(t) = lp.transfers.get(tid as usize) else {
+                    out.push(
+                        Violation::new(
+                            Code::ViewMismatch,
+                            format!("send view of rank {r} references unknown transfer {tid}"),
+                        )
+                        .at(k)
+                        .on(r as u32),
+                    );
+                    continue;
+                };
+                sseen[tid as usize] += 1;
+                if t.from as usize != r {
+                    out.push(
+                        Violation::new(
+                            Code::ViewMismatch,
+                            format!(
+                                "transfer {tid} ({}→{}) listed in the send view of rank {r}",
+                                t.from, t.to
+                            ),
+                        )
+                        .at(k)
+                        .on(r as u32),
+                    );
+                }
+            }
+        }
+        for (r, list) in lp.recv_of.iter().enumerate() {
+            for &tid in list {
+                let Some(t) = lp.transfers.get(tid as usize) else {
+                    out.push(
+                        Violation::new(
+                            Code::ViewMismatch,
+                            format!("recv view of rank {r} references unknown transfer {tid}"),
+                        )
+                        .at(k)
+                        .on(r as u32),
+                    );
+                    continue;
+                };
+                rseen[tid as usize] += 1;
+                if t.to as usize != r {
+                    out.push(
+                        Violation::new(
+                            Code::ViewMismatch,
+                            format!(
+                                "transfer {tid} ({}→{}) listed in the recv view of rank {r}",
+                                t.from, t.to
+                            ),
+                        )
+                        .at(k)
+                        .on(r as u32),
+                    );
+                }
+            }
+        }
+        for tid in 0..nt {
+            if sseen[tid] != 1 {
+                out.push(
+                    Violation::new(
+                        Code::ViewMismatch,
+                        format!(
+                            "transfer {tid} appears {} times across send views (want 1)",
+                            sseen[tid]
+                        ),
+                    )
+                    .at(k),
+                );
+            }
+            if rseen[tid] != 1 {
+                out.push(
+                    Violation::new(
+                        Code::ViewMismatch,
+                        format!(
+                            "transfer {tid} appears {} times across recv views (want 1)",
+                            rseen[tid]
+                        ),
+                    )
+                    .at(k),
+                );
+            }
+        }
+    }
+}
+
+/// Chunk-schedule integrity (`S006`): under the mode's granularity,
+/// every transfer's chunk ids are dense from 0, each chunk is non-empty
+/// and within the size bound, and the chunks reassemble to exactly the
+/// transfer's index list — the contract both endpoints derive their
+/// sub-transfer schedules from.
+pub fn check_chunk_schedules(plan: &CommPlan, mode: ExecMode, out: &mut Vec<Violation>) {
+    let ca = chunking(mode);
+    for (k, lp) in plan.layers.iter().enumerate() {
+        for (tid, t) in lp.transfers.iter().enumerate() {
+            let mut next = 0u32;
+            let mut glued: Vec<u32> = Vec::with_capacity(t.indices.len());
+            let mut broken = false;
+            for (c, idx) in t.chunks(ca) {
+                if c != next {
+                    out.push(
+                        Violation::new(
+                            Code::ChunkScheduleBroken,
+                            format!("transfer {tid}: chunk ids jump {next} → {c}"),
+                        )
+                        .at(k)
+                        .on(t.from),
+                    );
+                    broken = true;
+                    break;
+                }
+                next = c + 1;
+                if idx.is_empty() || (ca > 0 && idx.len() > ca) {
+                    out.push(
+                        Violation::new(
+                            Code::ChunkScheduleBroken,
+                            format!(
+                                "transfer {tid} chunk {c} carries {} indices (bound {ca})",
+                                idx.len()
+                            ),
+                        )
+                        .at(k)
+                        .on(t.from),
+                    );
+                    broken = true;
+                }
+                glued.extend_from_slice(idx);
+            }
+            if broken {
+                continue;
+            }
+            let want = if t.indices.is_empty() {
+                0
+            } else if ca == 0 {
+                1
+            } else {
+                t.indices.len().div_ceil(ca)
+            };
+            if next as usize != want {
+                out.push(
+                    Violation::new(
+                        Code::ChunkScheduleBroken,
+                        format!("transfer {tid}: {next} chunks, schedule requires {want}"),
+                    )
+                    .at(k)
+                    .on(t.from),
+                );
+            }
+            if glued != t.indices {
+                out.push(
+                    Violation::new(
+                        Code::ChunkScheduleBroken,
+                        format!("transfer {tid}: chunks do not reassemble the index list"),
+                    )
+                    .at(k)
+                    .on(t.from),
+                );
+            }
+        }
+    }
+}

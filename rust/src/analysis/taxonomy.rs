@@ -1,0 +1,132 @@
+//! Trace-span taxonomy conformance (`T...` diagnostics): the span names
+//! and categories engines emit must match the documented set in
+//! `docs/OBSERVABILITY.md`, which is embedded at compile time so the doc
+//! and the checker can never drift apart.
+
+use super::{Code, Violation};
+use crate::obs::Span;
+use std::collections::BTreeSet;
+
+/// Every span name an engine, the serving pool, or the trace driver may
+/// emit — the canonical taxonomy (kept sorted; mirrors the table in
+/// `docs/OBSERVABILITY.md`).
+pub const SPAN_NAMES: &[&str] = &[
+    "coalesce",
+    "dispatch",
+    "epilogue",
+    "epilogue.boundary",
+    "epilogue.interior",
+    "pass",
+    "post",
+    "queue.wait",
+    "respawn",
+    "send",
+    "spmv",
+    "spmv.boundary",
+    "spmv.interior",
+    "spmv.local",
+    "spmv.seg",
+    "spmvt",
+    "spmvt.seg",
+    "updt",
+    "wait",
+];
+
+/// Every span category: forward, backward, serving pool, capture driver.
+pub const SPAN_CATS: &[&str] = &["bwd", "drv", "fwd", "pool"];
+
+/// The documented taxonomy, embedded so checker and doc version together.
+const OBSERVABILITY_DOC: &str = include_str!("../../../docs/OBSERVABILITY.md");
+
+/// `T003`: every taxonomy entry must appear (backticked) in
+/// `docs/OBSERVABILITY.md` — an engine span added to the code without a
+/// doc row fails here.
+pub fn check_doc(out: &mut Vec<Violation>) {
+    for name in SPAN_NAMES {
+        if !OBSERVABILITY_DOC.contains(&format!("`{name}`")) {
+            out.push(Violation::new(
+                Code::UndocumentedTaxonomy,
+                format!("span name `{name}` has no row in docs/OBSERVABILITY.md"),
+            ));
+        }
+    }
+    for cat in SPAN_CATS {
+        if !OBSERVABILITY_DOC.contains(&format!("`{cat}`")) {
+            out.push(Violation::new(
+                Code::UndocumentedTaxonomy,
+                format!("span category `{cat}` missing from docs/OBSERVABILITY.md"),
+            ));
+        }
+    }
+}
+
+/// `T001`/`T002`: every emitted span must use a documented name and
+/// category. Each offending name/category is reported once.
+pub fn check_spans(spans: &[Span], out: &mut Vec<Violation>) {
+    let mut bad_names: BTreeSet<&'static str> = BTreeSet::new();
+    let mut bad_cats: BTreeSet<&'static str> = BTreeSet::new();
+    for s in spans {
+        if !SPAN_NAMES.contains(&s.name) && bad_names.insert(s.name) {
+            out.push(Violation::new(
+                Code::UnknownSpanName,
+                format!("emitted span name \"{}\" is outside the taxonomy", s.name),
+            ));
+        }
+        if !SPAN_CATS.contains(&s.cat) && bad_cats.insert(s.cat) {
+            out.push(Violation::new(
+                Code::UnknownSpanCat,
+                format!("emitted span category \"{}\" is outside the taxonomy", s.cat),
+            ));
+        }
+    }
+}
+
+/// Harvest live spans from traced micro-runs of every engine mode (one
+/// training epoch + one batched inference on a tiny 2-rank RadixNet) and
+/// run [`check_spans`] over everything the engines emitted. This is the
+/// CI gate "an engine emits a span name missing from the documented
+/// taxonomy": a new span site fails here until the doc table grows its
+/// row. Spawns rank threads, so it is CLI/test-only — never called from
+/// the static [`super::check_plan`] path.
+pub fn check_live_spans(out: &mut Vec<Violation>) {
+    use crate::coordinator::{infer_with_plan_mode_traced, run_with_plan_mode_traced, ExecMode};
+    use crate::obs::TraceMode;
+    use crate::partition::{random::random_partition, CommPlan};
+    use crate::radixnet::{generate, RadixNetConfig};
+
+    let cfg = RadixNetConfig::graph_challenge(64, 3).expect("built-in GC size");
+    let net = generate(&cfg);
+    let part = random_partition(&net.layers, 2, 9);
+    let plan = CommPlan::build(&net.layers, &part);
+    let n0 = net.input_dim();
+    let inputs: Vec<Vec<f32>> = (0..2)
+        .map(|s| {
+            (0..n0)
+                .map(|i| if (i + s) % 3 == 0 { 1.0 } else { 0.25 })
+                .collect()
+        })
+        .collect();
+    let nl = net.layers.last().expect("net has layers").nrows;
+    let targets: Vec<Vec<f32>> = (0..2).map(|_| vec![0.5f32; nl]).collect();
+    let b = 2usize;
+    let x0: Vec<f32> = (0..n0 * b).map(|i| (i % 5) as f32 * 0.2).collect();
+
+    for mode in [
+        ExecMode::Blocking,
+        ExecMode::Overlap,
+        ExecMode::Pipelined { chunk_acts: 8 },
+    ] {
+        let trace = TraceMode::with_capacity(8192);
+        let (_run, tracers) =
+            run_with_plan_mode_traced(&net, &part, &plan, &inputs, &targets, 0.05, 1, mode, trace);
+        for t in &tracers {
+            check_spans(&t.spans(), out);
+        }
+        let trace = TraceMode::with_capacity(8192);
+        let (_y, _stats, tracers) =
+            infer_with_plan_mode_traced(&net, &part, &plan, &x0, b, mode, trace);
+        for t in &tracers {
+            check_spans(&t.spans(), out);
+        }
+    }
+}

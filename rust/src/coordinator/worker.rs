@@ -275,6 +275,18 @@ impl RankState {
         mode: ExecMode,
         trace: TraceMode,
     ) -> Self {
+        // Debug builds refuse to execute a plan the static verifier
+        // rejects — the same gate `spdnn check` applies offline. Rank 0
+        // only: the plan is shared, so one verification per build wave
+        // suffices, and `check_plan` spawns nothing.
+        if cfg!(debug_assertions) && rank == 0 {
+            let report = crate::analysis::check_plan(&net.layers, part, plan, mode, 1);
+            assert!(
+                report.ok(),
+                "plan verifier rejected the schedule:\n{}",
+                report.render()
+            );
+        }
         let mut rows = Vec::with_capacity(net.depth());
         let mut blocks = Vec::with_capacity(net.depth());
         let mut biases = Vec::with_capacity(net.depth());

@@ -23,7 +23,12 @@
 // iterator chains there.
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::manual_div_ceil)]
+// `unsafe` is confined to the validated CSR kernels (`sparse::csr`, which
+// carries the one scoped `allow`); everything else — fabric, engines,
+// serving, analysis — must stay safe code.
+#![deny(unsafe_code)]
 
+pub mod analysis;
 pub mod comm;
 pub mod coordinator;
 pub mod data;

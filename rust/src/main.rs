@@ -18,6 +18,7 @@
 //!                  [--mode pipelined] [--codec f32] [--capacity 65536] [--out TRACE_<mode>.json]
 //! spdnn chaos      [--seed 42] [--requests 200] [--ranks 4] [--neurons 64] [--layers 3]
 //!                  [--budget 12] [--retries 3] [--mode pipelined] [--out BENCH_chaos.json]
+//! spdnn check      [--seed 7] [--no-live] [--out BENCH_check.json]
 //! spdnn calibrate
 //! ```
 //!
@@ -28,6 +29,10 @@
 //! `chrome://tracing`) with span coverage and a replay-drift report under
 //! the `"spdnn"` key. See the README's CLI reference section for the
 //! shared flags, and `docs/OBSERVABILITY.md` for `SPDNN_TRACE`/`SPDNN_LOG`.
+
+// The CLI is a separate crate root from the library: repeat the library's
+// policy that `unsafe` lives only in `sparse::csr`.
+#![deny(unsafe_code)]
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::comm::Codec;
@@ -66,6 +71,7 @@ fn main() {
         "graphchallenge" => cmd_graphchallenge(&args),
         "trace" => cmd_trace(&args),
         "chaos" => cmd_chaos(&args),
+        "check" => cmd_check(&args),
         "calibrate" => cmd_calibrate(),
         _ => help(),
     }
@@ -74,7 +80,10 @@ fn main() {
 fn help() {
     println!("spdnn — Partitioning Sparse DNNs (ICS'21) reproduction");
     println!("experiments: table1 | scaling | breakdown | throughput | ptimes | ablate | codec");
-    println!("workloads:   train | infer | partition | graphchallenge | trace | chaos | calibrate");
+    println!(
+        "workloads:   train | infer | partition | graphchallenge | trace | chaos | check | \
+         calibrate"
+    );
     println!("see `rust/src/main.rs` header or README.md for flags");
 }
 
@@ -456,6 +465,55 @@ fn cmd_partition(args: &Args) {
             m.avg_msgs() / 1e3,
             m.comp_imbalance()
         );
+    }
+}
+
+/// `spdnn check` — the static plan verifier (see `docs/ANALYSIS.md`).
+/// Runs [`spdnn::analysis::check_builtin_matrix`] over every built-in
+/// configuration (nets × partitions × engine modes × codecs), plus the
+/// trace-span taxonomy conformance checks, writes the JSON report array
+/// to `--out`, and exits nonzero if any violation was found. `--no-live`
+/// skips the traced micro-runs (they spawn rank threads).
+fn cmd_check(args: &Args) {
+    use spdnn::analysis::{self, taxonomy, CheckReport};
+
+    let seed = args.get_u64("seed", 7);
+    let mut reports = analysis::check_builtin_matrix(seed);
+    let mut tax = Vec::new();
+    taxonomy::check_doc(&mut tax);
+    if !args.has("no-live") {
+        taxonomy::check_live_spans(&mut tax);
+    }
+    reports.push(CheckReport {
+        config: "taxonomy (doc table + live engine spans)".to_string(),
+        layers: 0,
+        nparts: 0,
+        batch: 0,
+        transfers: 0,
+        messages: 0,
+        wire_bytes: 0,
+        violations: tax,
+    });
+
+    let mut failed = 0usize;
+    for r in &reports {
+        if r.ok() {
+            println!("[ok  ] {}", r.config);
+        } else {
+            failed += 1;
+            print!("{}", r.render());
+        }
+    }
+    let json: Vec<String> = reports.iter().map(|r| r.to_json()).collect();
+    let json = format!("[{}]", json.join(","));
+    let out = args.get_str("out", "BENCH_check.json");
+    std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!(
+        "checked {} configurations, {failed} failed; wrote {out}",
+        reports.len()
+    );
+    if failed > 0 {
+        std::process::exit(1);
     }
 }
 

@@ -99,7 +99,12 @@ impl Csr {
             let hi = self.indptr[r + 1] as usize;
             let mut acc = 0f32;
             for i in lo..hi {
-                acc += self.vals[i] * unsafe { *x.get_unchecked(self.indices[i] as usize) };
+                let c = self.indices[i] as usize;
+                debug_assert!(c < x.len(), "row {r}: column {c} out of bounds");
+                // SAFETY: `Csr::validate` guarantees every stored column
+                // index is < `ncols`, and `x.len() == ncols` (asserted
+                // above), so `c` is in-bounds for `x`.
+                acc += self.vals[i] * unsafe { *x.get_unchecked(c) };
             }
             y[r] = acc;
         }
@@ -107,12 +112,19 @@ impl Csr {
 
     /// y += A x  — used for accumulating remote contributions (Alg. 2 line 9).
     pub fn spmv_add(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
         for r in 0..self.nrows {
             let lo = self.indptr[r] as usize;
             let hi = self.indptr[r + 1] as usize;
             let mut acc = 0f32;
             for i in lo..hi {
-                acc += self.vals[i] * unsafe { *x.get_unchecked(self.indices[i] as usize) };
+                let c = self.indices[i] as usize;
+                debug_assert!(c < x.len(), "row {r}: column {c} out of bounds");
+                // SAFETY: `Csr::validate` guarantees every stored column
+                // index is < `ncols`, and `x.len() == ncols` (asserted
+                // above), so `c` is in-bounds for `x`.
+                acc += self.vals[i] * unsafe { *x.get_unchecked(c) };
             }
             y[r] += acc;
         }
@@ -132,6 +144,10 @@ impl Csr {
             let hi = self.indptr[r + 1] as usize;
             for i in lo..hi {
                 let c = self.indices[i] as usize;
+                debug_assert!(c < y.len(), "row {r}: column {c} out of bounds");
+                // SAFETY: `Csr::validate` guarantees every stored column
+                // index is < `ncols`, and `y.len() == ncols` (asserted
+                // above), so `c` is in-bounds for `y`.
                 unsafe {
                     *y.get_unchecked_mut(c) += self.vals[i] * xv;
                 }
@@ -349,6 +365,10 @@ impl Csr {
             let hi = self.indptr[r + 1] as usize;
             for i in lo..hi {
                 let c = self.indices[i] as usize;
+                debug_assert!(c < x.len(), "row {r}: column {c} out of bounds");
+                // SAFETY: `Csr::validate` guarantees every stored column
+                // index is < `ncols`, and `x.len() == ncols` (asserted
+                // above), so `c` is in-bounds for `x`.
                 self.vals[i] -= d * unsafe { *x.get_unchecked(c) };
             }
         }

@@ -1,0 +1,218 @@
+//! Integration tests for the static plan verifier (`spdnn::analysis`).
+//!
+//! Positive direction: the full built-in configuration matrix (the one
+//! `spdnn check` and CI run) must come back clean, and the live engines
+//! must only emit documented trace spans. Negative direction: seeded
+//! mutations of a valid plan — one per violation class in
+//! `docs/ANALYSIS.md` — must each surface their diagnostic code.
+
+use spdnn::analysis::{self, check_state_codecs, schedule, taxonomy, CheckReport, Code};
+use spdnn::comm::Codec;
+use spdnn::coordinator::{ExecMode, RankState};
+use spdnn::partition::random::random_partition;
+use spdnn::partition::{CommPlan, DnnPartition};
+use spdnn::radixnet::{generate, generate_structure, RadixNetConfig};
+use spdnn::sparse::Csr;
+
+/// A small Graph Challenge net on 3 ranks with real cross-rank traffic.
+fn fixture() -> (Vec<Csr>, DnnPartition, CommPlan) {
+    let cfg = RadixNetConfig::graph_challenge(64, 3).expect("built-in GC size");
+    let structure = generate_structure(&cfg);
+    let part = random_partition(&structure, 3, 11);
+    let plan = CommPlan::build(&structure, &part);
+    (structure, part, plan)
+}
+
+fn codes(report: &CheckReport) -> Vec<&'static str> {
+    report.violations.iter().map(|v| v.code.as_str()).collect()
+}
+
+/// First (layer >= 1, transfer) pair with a non-empty index list — layer
+/// >= 1 so `owner_of_activation` resolves through `layer_parts`.
+fn pick_transfer(plan: &CommPlan) -> (usize, usize) {
+    for (k, lp) in plan.layers.iter().enumerate().skip(1) {
+        for (tid, t) in lp.transfers.iter().enumerate() {
+            if !t.indices.is_empty() {
+                return (k, tid);
+            }
+        }
+    }
+    panic!("fixture has no usable transfer in layers >= 1");
+}
+
+#[test]
+fn builtin_matrix_is_clean() {
+    let reports = analysis::check_builtin_matrix(7);
+    assert!(
+        reports.len() > 200,
+        "matrix unexpectedly small: {} configs",
+        reports.len()
+    );
+    for r in &reports {
+        assert!(r.ok(), "unexpected violations:\n{}", r.render());
+    }
+}
+
+#[test]
+fn taxonomy_matches_observability_doc() {
+    let mut out = Vec::new();
+    taxonomy::check_doc(&mut out);
+    assert!(out.is_empty(), "doc drift: {out:?}");
+}
+
+#[test]
+fn live_engine_spans_stay_inside_taxonomy() {
+    let mut out = Vec::new();
+    taxonomy::check_live_spans(&mut out);
+    assert!(out.is_empty(), "undocumented live spans: {out:?}");
+}
+
+#[test]
+fn fixture_plan_is_clean_in_every_mode() {
+    let (structure, part, plan) = fixture();
+    for mode in [
+        ExecMode::Blocking,
+        ExecMode::Overlap,
+        ExecMode::Pipelined { chunk_acts: 3 },
+        ExecMode::Pipelined { chunk_acts: 0 },
+    ] {
+        let r = analysis::check_plan(&structure, &part, &plan, mode, 2);
+        assert!(r.ok(), "{}", r.render());
+    }
+}
+
+// ---- negative direction: one seeded mutation per violation class ----
+
+#[test]
+fn dropped_recv_view_entry_starves_and_orphans() {
+    let (structure, part, mut plan) = fixture();
+    let (k, tid) = pick_transfer(&plan);
+    let to = plan.layers[k].transfers[tid].to as usize;
+    plan.layers[k].recv_of[to].retain(|&t| t as usize != tid);
+    let r = analysis::check_plan(&structure, &part, &plan, ExecMode::Overlap, 1);
+    let c = codes(&r);
+    assert!(c.contains(&"S001"), "want orphan send:\n{}", r.render());
+    assert!(c.contains(&"S002"), "want starved receive:\n{}", r.render());
+    assert!(c.contains(&"S007"), "want view mismatch:\n{}", r.render());
+    assert!(c.contains(&"P025"), "want coverage hole:\n{}", r.render());
+}
+
+#[test]
+fn dangling_views_after_dropped_transfer_are_flagged() {
+    let (structure, part, mut plan) = fixture();
+    let (k, _) = pick_transfer(&plan);
+    // Drop the last transfer object; the send/recv views still name it.
+    plan.layers[k].transfers.pop();
+    let r = analysis::check_plan(&structure, &part, &plan, ExecMode::Overlap, 1);
+    let c = codes(&r);
+    assert!(c.contains(&"S007"), "want dangling view:\n{}", r.render());
+    assert!(c.contains(&"P025"), "want coverage hole:\n{}", r.render());
+}
+
+#[test]
+fn duplicated_row_owner_is_foreign_send_and_double_delivery() {
+    let (structure, part, plan) = fixture();
+    let (k, tid) = pick_transfer(&plan);
+    let t = &plan.layers[k].transfers[tid];
+    let (to, j) = (t.to, t.indices[0] as usize);
+    // Hand row j of layer k-1 to the transfer's receiver: the sender now
+    // ships an activation it does not own, and the receiver gets it twice
+    // (owned and delivered).
+    let mut part2 = part.clone();
+    part2.layer_parts[k - 1][j] = to;
+    let r = analysis::check_plan(&structure, &part2, &plan, ExecMode::Blocking, 1);
+    let c = codes(&r);
+    assert!(c.contains(&"P020"), "want foreign send:\n{}", r.render());
+    assert!(c.contains(&"P021"), "want double delivery:\n{}", r.render());
+}
+
+#[test]
+fn skewed_chunk_schedule_deadlocks_symbolically() {
+    let (_structure, _part, plan) = fixture();
+    let mode = ExecMode::Pipelined { chunk_acts: 3 };
+    let sends = schedule::sends_of(&plan, mode, true);
+    let mut recvs = schedule::recvs_of(&plan, mode, true);
+    assert!(!sends.is_empty() && !recvs.is_empty());
+    // One receiver waits on a chunk id nobody posts: its wait starves and
+    // the matching posted chunk goes unclaimed.
+    recvs[0].chunk += 999;
+    let mut out = Vec::new();
+    schedule::match_schedule(&sends, &recvs, &mut out);
+    let c: Vec<_> = out.iter().map(|v| v.code.as_str()).collect();
+    assert!(c.contains(&"S001"), "want orphan send: {out:?}");
+    assert!(c.contains(&"S002"), "want starved receive: {out:?}");
+}
+
+#[test]
+fn self_send_is_flagged() {
+    let (structure, part, mut plan) = fixture();
+    let (k, tid) = pick_transfer(&plan);
+    plan.layers[k].transfers[tid].to = plan.layers[k].transfers[tid].from;
+    let r = analysis::check_plan(&structure, &part, &plan, ExecMode::Overlap, 1);
+    assert!(codes(&r).contains(&"S005"), "{}", r.render());
+}
+
+#[test]
+fn duplicated_send_view_entry_is_a_tag_collision() {
+    let (structure, part, mut plan) = fixture();
+    let (k, tid) = pick_transfer(&plan);
+    let from = plan.layers[k].transfers[tid].from as usize;
+    plan.layers[k].send_of[from].push(tid as u32);
+    let r = analysis::check_plan(&structure, &part, &plan, ExecMode::Overlap, 1);
+    let c = codes(&r);
+    assert!(c.contains(&"S003"), "want duplicate send tag:\n{}", r.render());
+    assert!(c.contains(&"S007"), "want view mismatch:\n{}", r.render());
+}
+
+#[test]
+fn unsorted_and_empty_transfers_are_flagged() {
+    let (structure, part, plan) = fixture();
+    let (k, tid) = pick_transfer(&plan);
+
+    let mut unsorted = plan.clone();
+    unsorted.layers[k].transfers[tid].indices = vec![1, 0];
+    let r = analysis::check_plan(&structure, &part, &unsorted, ExecMode::Overlap, 1);
+    assert!(codes(&r).contains(&"P023"), "{}", r.render());
+
+    let mut empty = plan.clone();
+    empty.layers[k].transfers[tid].indices.clear();
+    let r = analysis::check_plan(&structure, &part, &empty, ExecMode::Overlap, 1);
+    let c = codes(&r);
+    assert!(c.contains(&"P024"), "want empty transfer:\n{}", r.render());
+    assert!(c.contains(&"P025"), "want coverage hole:\n{}", r.render());
+}
+
+#[test]
+fn rank_state_codec_mismatch_is_detected() {
+    let cfg = RadixNetConfig::graph_challenge(64, 3).expect("built-in GC size");
+    let net = generate(&cfg);
+    let part = random_partition(&net.layers, 2, 5);
+    let plan = CommPlan::build(&net.layers, &part);
+    let state = RankState::build(&net, &part, &plan, 0, ExecMode::Overlap);
+    assert!(check_state_codecs(&state, &plan).is_empty());
+
+    let mut skewed = plan.clone();
+    skewed.set_codec(Codec::F16, Codec::F16);
+    let v = check_state_codecs(&state, &skewed);
+    assert!(!v.is_empty(), "codec skew went undetected");
+    assert!(v.iter().all(|v| v.code == Code::StateCodecMismatch), "{v:?}");
+}
+
+#[test]
+fn report_renders_and_serializes() {
+    let (structure, part, plan) = fixture();
+    let r = analysis::check_plan(&structure, &part, &plan, ExecMode::pipelined(), 4);
+    assert!(r.ok());
+    assert!(r.render().starts_with("[ok  ]"), "{}", r.render());
+    let json = r.to_json();
+    assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
+    assert!(json.contains("\"ok\":true"), "{json}");
+
+    let mut bad = plan.clone();
+    let (k, tid) = pick_transfer(&bad);
+    bad.layers[k].transfers[tid].indices.clear();
+    let r = analysis::check_plan(&structure, &part, &bad, ExecMode::Overlap, 1);
+    assert!(!r.ok());
+    assert!(r.render().contains("P024"), "{}", r.render());
+    assert!(r.to_json().contains("\"code\":\"P024\""), "{}", r.to_json());
+}
