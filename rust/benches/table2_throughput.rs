@@ -10,16 +10,20 @@
 //! `SPDNN_SECTION=pipeline` only the pipelined-vs-overlap section,
 //! `SPDNN_SECTION=codec` only the wire-codec section,
 //! `SPDNN_SECTION=graphchallenge` only the ≥1M-edge Graph Challenge
-//! edges/sec sweep, and `SPDNN_SECTION=obs` only the tracing-overhead
-//! section (the CI bench-smoke paths); `SPDNN_ENFORCE=1` fails
+//! edges/sec sweep, `SPDNN_SECTION=obs` only the tracing-overhead
+//! section, and `SPDNN_SECTION=replica` only the replica-group training
+//! scaling sweep (the CI bench-smoke paths); `SPDNN_ENFORCE=1` fails
 //! the run if the overlapped engine does not beat the blocking engine by
 //! ≥ 1.15× at 4 ranks, the pipelined engine loses to the overlap
 //! baseline, the f16 wire codec loses throughput / fails to ~halve
 //! bytes-on-wire / shifts digits SGD loss by more than 1%, a Graph
-//! Challenge engine reports no throughput, or flight-recorder tracing
+//! Challenge engine reports no throughput, flight-recorder tracing
 //! costs more than 3% of throughput (off-mode vs the plain build path,
-//! and on-mode vs off-mode). Schemas of the emitted `BENCH_*.json` files
-//! are documented in `docs/BENCHMARKS.md`.
+//! and on-mode vs off-mode), or the replica-group bars break (R=2
+//! training ≥ 1.5× one group when the cores exist, int8+EF gradient
+//! exchange ≤ 0.35× the f32 bytes with tail loss within 1%). Schemas of
+//! the emitted `BENCH_*.json` files are documented in
+//! `docs/BENCHMARKS.md`.
 
 use spdnn::comm::netmodel::ComputeModel;
 use spdnn::comm::Codec;
@@ -27,7 +31,7 @@ use spdnn::coordinator::sgd::infer_with_plan;
 use spdnn::coordinator::{ExecMode, RankScratch, RankState};
 use spdnn::data::synthetic_mnist;
 use spdnn::dnn::inference::infer_batch_parallel;
-use spdnn::experiments::{ablation, graphchallenge, table2};
+use spdnn::experiments::{ablation, graphchallenge, replica as replica_bench, table2};
 use spdnn::obs::{TraceMode, DEFAULT_TRACE_CAPACITY};
 use spdnn::partition::{contiguous_partition, CommPlan};
 use spdnn::radixnet::{generate, RadixNetConfig};
@@ -409,6 +413,31 @@ fn graphchallenge_section(full: bool, enforce: bool) {
     }
 }
 
+/// Replica-group training section: the `experiments::replica` scaling
+/// sweep (digits SGD at R ∈ {1, 2, 4} replica groups × engines ×
+/// gradient codecs). Writes `BENCH_replica.json`; under
+/// `SPDNN_ENFORCE=1` the scaling / compression / EF-loss bars are hard
+/// failures (`replica::enforce`, which itself skips the speedup bar on
+/// hosts without `2 × ranks` hardware threads).
+fn replica_section(full: bool, enforce: bool) {
+    let cfg = replica_bench::ReplicaBenchConfig {
+        epochs: if full { 6 } else { 3 },
+        ..replica_bench::ReplicaBenchConfig::default()
+    };
+    println!(
+        "# Replica-group training (hybrid data x model parallelism, {} ranks/group)",
+        cfg.ranks
+    );
+    let rep = replica_bench::run(&cfg);
+    println!("{}", replica_bench::render(&rep));
+    let json = replica_bench::to_json(&rep);
+    std::fs::write("BENCH_replica.json", &json).expect("write BENCH_replica.json");
+    println!("wrote BENCH_replica.json: {json}");
+    if enforce {
+        replica_bench::enforce(&rep);
+    }
+}
+
 /// Live threaded engine: edges/s of the batched fused-SpMM inference path
 /// at `ranks`, with partition + plan built once (the serving setup cost is
 /// off the clock, as in a real request loop).
@@ -459,6 +488,11 @@ fn main() {
         Ok("obs") => {
             // CI bench-smoke path: flight-recorder overhead bars
             obs_section(full, enforce);
+            return;
+        }
+        Ok("replica") => {
+            // CI bench-smoke path: replica-group scaling/compression bars
+            replica_section(full, enforce);
             return;
         }
         _ => {}
@@ -579,4 +613,6 @@ fn main() {
     graphchallenge_section(full, enforce);
     println!();
     obs_section(full, enforce);
+    println!();
+    replica_section(full, enforce);
 }

@@ -27,20 +27,29 @@
 //!    codecs honor their `encode_into`/`wire_words` contract, and every
 //!    trace-span name an engine emits is in the documented taxonomy of
 //!    `docs/OBSERVABILITY.md`.
+//! 4. **Replica ring schedule** ([`replica`]): the cross-group gradient
+//!    all-reduce of [`crate::replica`] is re-executed hop-by-hop,
+//!    single-threaded, from the same topology functions the live engine
+//!    runs — perfect send/recv tag matching at every hop, segment
+//!    partition coverage, full delivery with hold-before-forward,
+//!    encode-once allgather, EF-residual conservation, and wire-word
+//!    accounting against [`crate::replica::predicted_wire_words`].
 //!
 //! Violations carry stable diagnostic codes (`P...` partition, `S...`
-//! schedule, `A...` accounting, `T...` taxonomy — see [`Code`] and
-//! `docs/ANALYSIS.md`). The CLI entry point is `spdnn check`; debug
-//! builds additionally run [`check_plan`] inside
+//! schedule, `A...` accounting, `T...` taxonomy, `R...` replica ring —
+//! see [`Code`] and `docs/ANALYSIS.md`). The CLI entry point is `spdnn
+//! check`; debug builds additionally run [`check_plan`] inside
 //! [`crate::coordinator::RankState::build`] so every test that builds a
 //! rank state verifies its plan for free.
 
 pub mod accounting;
 pub mod partition;
+pub mod replica;
 pub mod schedule;
 pub mod taxonomy;
 
 pub use accounting::check_state_codecs;
+pub use replica::{check_replica, check_replica_matrix};
 
 use crate::coordinator::ExecMode;
 use crate::partition::{CommPlan, DnnPartition, ServingPlan};
@@ -107,6 +116,19 @@ pub enum Code {
     UnknownSpanCat,
     /// T003 — a taxonomy entry is missing from `docs/OBSERVABILITY.md`.
     UndocumentedTaxonomy,
+    /// R001 — a replica-ring hop's send/recv tags fail to match.
+    RingTagMismatch,
+    /// R002 — the gradient segments do not partition `[0, m)`.
+    SegPartitionBroken,
+    /// R003 — the ring all-reduce fails to deliver or absorb a segment.
+    RingDeliveryIncomplete,
+    /// R004 — live and predicted ring wire accounting disagree.
+    RingWireMismatch,
+    /// R005 — the EF residual contract is broken (nonzero residual under
+    /// a lossless codec, replica divergence, or unconserved error).
+    ResidualContractBroken,
+    /// R006 — an allgather segment is encoded more or fewer than once.
+    GatherEncodeMiscount,
 }
 
 impl Code {
@@ -140,6 +162,12 @@ impl Code {
             Code::UnknownSpanName => "T001",
             Code::UnknownSpanCat => "T002",
             Code::UndocumentedTaxonomy => "T003",
+            Code::RingTagMismatch => "R001",
+            Code::SegPartitionBroken => "R002",
+            Code::RingDeliveryIncomplete => "R003",
+            Code::RingWireMismatch => "R004",
+            Code::ResidualContractBroken => "R005",
+            Code::GatherEncodeMiscount => "R006",
         }
     }
 
@@ -173,6 +201,12 @@ impl Code {
             Code::UnknownSpanName => "span name outside documented taxonomy",
             Code::UnknownSpanCat => "span category outside documented taxonomy",
             Code::UndocumentedTaxonomy => "taxonomy entry missing from docs",
+            Code::RingTagMismatch => "ring hop send/recv tags do not match",
+            Code::SegPartitionBroken => "segments do not partition the gradient",
+            Code::RingDeliveryIncomplete => "ring all-reduce delivery incomplete",
+            Code::RingWireMismatch => "ring wire accounting disagrees with prediction",
+            Code::ResidualContractBroken => "EF residual contract broken",
+            Code::GatherEncodeMiscount => "allgather segment not encoded exactly once",
         }
     }
 }

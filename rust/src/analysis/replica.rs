@@ -1,0 +1,471 @@
+//! Replica-ring schedule verification (`R...` diagnostics): proves the
+//! cross-group gradient all-reduce of [`crate::replica`] deadlock-free
+//! and its accounting honest **without spawning a thread**.
+//!
+//! The live engine ([`crate::replica::GradAllReduce`]) derives every
+//! send/recv tag from the pure functions in
+//! [`crate::replica::topology`]; this module re-executes the same
+//! schedule hop-by-hop, single-threaded, against those same functions
+//! and checks the properties the engine's correctness rests on:
+//!
+//! - **R001** — at every hop of both phases, what group `g` sends to
+//!   `g+1` is exactly what `g+1` waits for (a perfect matching; because
+//!   the fabric matches purely on tags, this is deadlock-freedom by
+//!   construction), and no tag repeats across hops.
+//! - **R002** — the `R` segments are contiguous, disjoint, and cover the
+//!   flat gradient `[0, m)` exactly.
+//! - **R003** — the reduce-scatter leaves each owner with (a bounded
+//!   approximation of) the full group sum, and the allgather delivers
+//!   every segment everywhere, never forwarding bytes a group does not
+//!   hold.
+//! - **R004** — wire words counted during the simulation equal
+//!   [`predicted_wire_words`], the same prediction the live fabric
+//!   counters are checked against.
+//! - **R005** — the EF residual contract: a lossless codec leaves the
+//!   residual identically zero; all replicas end bit-identical; and for
+//!   lossy codecs the adopted result plus every group's residual
+//!   reconstructs the exact sum (no quantization error is silently
+//!   dropped).
+//! - **R006** — in the allgather each segment is encoded exactly once
+//!   (by its owner); forwards travel verbatim.
+
+use super::{Code, CheckReport, Violation};
+use crate::comm::Codec;
+use crate::replica::allreduce::predicted_wire_words;
+use crate::replica::topology::{
+    gather_recv_seg, gather_send_seg, owned_seg, scatter_recv_seg, scatter_send_seg, seg_bounds,
+};
+use std::collections::BTreeSet;
+
+/// `R002` over an arbitrary bounds function (the real check passes
+/// [`seg_bounds`]; tests pass broken closures to prove detection).
+fn check_partition_with<F: Fn(usize) -> (usize, usize)>(
+    m: usize,
+    groups: usize,
+    bounds: F,
+    out: &mut Vec<Violation>,
+) {
+    let mut covered = 0usize;
+    for s in 0..groups {
+        let (lo, hi) = bounds(s);
+        if lo != covered || hi < lo || hi > m {
+            out.push(Violation::new(
+                Code::SegPartitionBroken,
+                format!("R={groups} m={m}: segment {s} spans [{lo}, {hi}) after [0, {covered})"),
+            ));
+            return;
+        }
+        covered = hi;
+    }
+    if covered != m {
+        out.push(Violation::new(
+            Code::SegPartitionBroken,
+            format!("R={groups} m={m}: segments cover only [0, {covered})"),
+        ));
+    }
+}
+
+/// `R001` over arbitrary send/recv segment functions `(me, hop) -> seg`:
+/// every hop must be a perfect matching and no (from, hop, seg) send tag
+/// may repeat within the phase.
+fn check_matching_with<S, R>(
+    groups: usize,
+    phase: &str,
+    send: S,
+    recv: R,
+    out: &mut Vec<Violation>,
+) where
+    S: Fn(usize, usize) -> usize,
+    R: Fn(usize, usize) -> usize,
+{
+    let mut tags: BTreeSet<(usize, usize, usize)> = BTreeSet::new();
+    for hop in 0..groups.saturating_sub(1) {
+        for me in 0..groups {
+            let next = (me + 1) % groups;
+            let s = send(me, hop);
+            let want = recv(next, hop);
+            if s != want {
+                out.push(Violation::new(
+                    Code::RingTagMismatch,
+                    format!(
+                        "R={groups} {phase} hop {hop}: {me} sends segment {s}, \
+                         {next} waits for {want}"
+                    ),
+                ));
+            }
+            if s >= groups {
+                out.push(Violation::new(
+                    Code::RingTagMismatch,
+                    format!("R={groups} {phase} hop {hop}: segment id {s} out of range"),
+                ));
+            } else if !tags.insert((me, hop, s)) {
+                out.push(Violation::new(
+                    Code::RingTagMismatch,
+                    format!("R={groups} {phase}: duplicate send tag ({me}, hop {hop}, seg {s})"),
+                ));
+            }
+        }
+    }
+}
+
+/// Verify the full ring all-reduce of one length-`m` gradient across
+/// `groups` replicas under `codec` (optionally in the checked chaos
+/// envelope), appending any violation found. Returns the wire words the
+/// simulation moved (0 for `groups == 1` — the degenerate fold-only
+/// case, like the live engine).
+pub fn check_replica(
+    groups: usize,
+    m: usize,
+    codec: Codec,
+    checked: bool,
+    out: &mut Vec<Violation>,
+) -> u64 {
+    assert!(groups >= 1);
+    check_partition_with(m, groups, |s| seg_bounds(m, groups, s), out);
+    check_matching_with(
+        groups,
+        "scatter",
+        |me, hop| scatter_send_seg(me, groups, hop),
+        |me, hop| scatter_recv_seg(me, groups, hop),
+        out,
+    );
+    check_matching_with(
+        groups,
+        "gather",
+        |me, hop| gather_send_seg(me, groups, hop),
+        |me, hop| gather_recv_seg(me, groups, hop),
+        out,
+    );
+
+    // Numeric replay of the live engine's exact dataflow. Integer-valued
+    // inputs in [-11, 11]: partial sums stay ≤ 11·R, exactly
+    // representable in both f32 and f16, so only int8 quantizes lossily.
+    let lossless = codec == Codec::F32;
+    let enc = |src: &[f32]| -> Vec<f32> {
+        let mut w = Vec::new();
+        if checked {
+            codec.encode_into_checked(src, &mut w);
+        } else {
+            codec.encode_into(src, &mut w);
+        }
+        w
+    };
+    let dec = |wire: &[f32]| -> Vec<f32> {
+        let mut d = Vec::new();
+        if checked {
+            codec.decode_checked_into(wire, &mut d);
+        } else {
+            codec.decode_into(wire, &mut d);
+        }
+        d
+    };
+    let mut grads: Vec<Vec<f32>> = (0..groups)
+        .map(|g| (0..m).map(|i| ((g * 31 + i * 7) % 23) as f32 - 11.0).collect())
+        .collect();
+    let expect: Vec<f32> = (0..m)
+        .map(|i| (0..groups).map(|g| grads[g][i]).sum::<f32>())
+        .collect();
+    let mut resid = vec![vec![0f32; m]; groups];
+    let mut words = vec![0u64; groups];
+
+    if groups > 1 {
+        // Phase 1 — reduce-scatter: every hop, all payloads are encoded
+        // from the pre-receive state (the live send-then-recv order).
+        for hop in 0..groups - 1 {
+            let payloads: Vec<Vec<f32>> = (0..groups)
+                .map(|me| {
+                    let s = scatter_send_seg(me, groups, hop);
+                    let (lo, hi) = seg_bounds(m, groups, s);
+                    let wire = enc(&grads[me][lo..hi]);
+                    if !lossless {
+                        let d = dec(&wire);
+                        for (i, dv) in d.iter().enumerate() {
+                            resid[me][lo + i] += grads[me][lo + i] - dv;
+                        }
+                    }
+                    words[me] += wire.len() as u64;
+                    wire
+                })
+                .collect();
+            for me in 0..groups {
+                let prev = (me + groups - 1) % groups;
+                let s = scatter_recv_seg(me, groups, hop);
+                if s != scatter_send_seg(prev, groups, hop) {
+                    continue; // already an R001 above
+                }
+                let (lo, hi) = seg_bounds(m, groups, s);
+                let d = dec(&payloads[prev]);
+                if d.len() != hi - lo {
+                    out.push(Violation::new(
+                        Code::RingTagMismatch,
+                        format!(
+                            "R={groups} scatter hop {hop}: segment {s} payload decodes to \
+                             {} elements, bounds say {}",
+                            d.len(),
+                            hi - lo
+                        ),
+                    ));
+                    continue;
+                }
+                for (i, dv) in d.iter().enumerate() {
+                    grads[me][lo + i] += dv;
+                }
+            }
+        }
+
+        // Phase 2 — allgather: each owner encodes its reduced segment
+        // once (adopting the decoded values itself), then bytes travel
+        // the ring verbatim.
+        let mut held: Vec<Vec<Option<Vec<f32>>>> =
+            (0..groups).map(|_| (0..groups).map(|_| None).collect()).collect();
+        let mut encodes = vec![0u32; groups];
+        for me in 0..groups {
+            let s = owned_seg(me, groups);
+            let (lo, hi) = seg_bounds(m, groups, s);
+            let wire = enc(&grads[me][lo..hi]);
+            encodes[s] += 1;
+            if !lossless {
+                let d = dec(&wire);
+                for (i, dv) in d.iter().enumerate() {
+                    resid[me][lo + i] += grads[me][lo + i] - dv;
+                }
+                grads[me][lo..hi].copy_from_slice(&d);
+            }
+            held[me][s] = Some(wire);
+        }
+        for hop in 0..groups - 1 {
+            let outgoing: Vec<Option<Vec<f32>>> = (0..groups)
+                .map(|me| {
+                    let s = gather_send_seg(me, groups, hop);
+                    match &held[me][s] {
+                        Some(w) => {
+                            words[me] += w.len() as u64;
+                            Some(w.clone())
+                        }
+                        None => {
+                            out.push(Violation::new(
+                                Code::RingDeliveryIncomplete,
+                                format!(
+                                    "R={groups} gather hop {hop}: group {me} forwards \
+                                     segment {s} it does not hold"
+                                ),
+                            ));
+                            None
+                        }
+                    }
+                })
+                .collect();
+            for me in 0..groups {
+                let prev = (me + groups - 1) % groups;
+                let s = gather_recv_seg(me, groups, hop);
+                if s != gather_send_seg(prev, groups, hop) {
+                    continue; // already an R001
+                }
+                if let Some(w) = &outgoing[prev] {
+                    let (lo, hi) = seg_bounds(m, groups, s);
+                    let d = dec(w);
+                    if d.len() == hi - lo {
+                        grads[me][lo..hi].copy_from_slice(&d);
+                        held[me][s] = Some(w.clone());
+                    } else {
+                        out.push(Violation::new(
+                            Code::RingTagMismatch,
+                            format!(
+                                "R={groups} gather hop {hop}: segment {s} payload decodes \
+                                 to {} elements, bounds say {}",
+                                d.len(),
+                                hi - lo
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        for (s, &n) in encodes.iter().enumerate() {
+            if n != 1 {
+                out.push(Violation::new(
+                    Code::GatherEncodeMiscount,
+                    format!("R={groups}: segment {s} encoded {n} times in the allgather"),
+                ));
+            }
+        }
+        for (me, h) in held.iter().enumerate() {
+            if let Some(s) = h.iter().position(|x| x.is_none()) {
+                out.push(Violation::new(
+                    Code::RingDeliveryIncomplete,
+                    format!("R={groups}: group {me} never received segment {s}"),
+                ));
+            }
+        }
+    }
+
+    // Final-value contracts. Integer inputs make f32/f16 exact; int8's
+    // error is bounded by one half quantization step per encode on the
+    // chain (absmax ≤ 11·R, so step/2 ≤ 11·R/254 per hop).
+    let tol = match codec {
+        Codec::F32 | Codec::F16 => 1e-6,
+        Codec::Int8 { .. } => 0.5 * groups as f32 + 0.1,
+    };
+    for me in 0..groups {
+        for i in 0..m {
+            if grads[me][i].to_bits() != grads[0][i].to_bits() {
+                out.push(Violation::new(
+                    Code::ResidualContractBroken,
+                    format!("R={groups} m={m}: groups 0 and {me} diverged at element {i}"),
+                ));
+                break;
+            }
+        }
+    }
+    for i in 0..m {
+        if (grads[0][i] - expect[i]).abs() > tol {
+            out.push(Violation::new(
+                Code::RingDeliveryIncomplete,
+                format!(
+                    "R={groups} m={m}: element {i} reduced to {} (expected {} ± {tol})",
+                    grads[0][i], expect[i]
+                ),
+            ));
+            break;
+        }
+        // EF conservation: the adopted value plus every group's residual
+        // at this element reconstructs the exact sum.
+        let recon: f32 = grads[0][i] + resid.iter().map(|r| r[i]).sum::<f32>();
+        if (recon - expect[i]).abs() > 0.02 {
+            out.push(Violation::new(
+                Code::ResidualContractBroken,
+                format!(
+                    "R={groups} m={m}: element {i} adopted+residual {} fails to \
+                     reconstruct {}",
+                    recon, expect[i]
+                ),
+            ));
+            break;
+        }
+    }
+    if lossless {
+        for (me, r) in resid.iter().enumerate() {
+            if r.iter().any(|&x| x != 0.0) {
+                out.push(Violation::new(
+                    Code::ResidualContractBroken,
+                    format!("R={groups}: lossless codec left group {me} a nonzero residual"),
+                ));
+            }
+        }
+    }
+    for (me, &w) in words.iter().enumerate() {
+        let want = predicted_wire_words(me, groups, m, codec, checked);
+        if w != want {
+            out.push(Violation::new(
+                Code::RingWireMismatch,
+                format!("R={groups} m={m}: group {me} moved {w} wire words, predicted {want}"),
+            ));
+        }
+    }
+    words.iter().sum()
+}
+
+/// Run [`check_replica`] over the built-in replica matrix: R ∈
+/// {1, 2, 3, 4, 8} rings × all codecs (plus a small int8 scale group) ×
+/// plain and checked envelopes, each over gradient lengths spanning
+/// empty, sub-ring, and multi-group-span sizes. One report per
+/// (R, codec, envelope); `spdnn check` and CI require every one
+/// [`CheckReport::ok`].
+pub fn check_replica_matrix() -> Vec<CheckReport> {
+    let ms = [0usize, 1, 5, 64, 257];
+    let codecs = [Codec::F32, Codec::F16, Codec::int8(), Codec::Int8 { group: 16 }];
+    let mut reports = Vec::new();
+    for groups in [1usize, 2, 3, 4, 8] {
+        for &codec in &codecs {
+            for checked in [false, true] {
+                let mut violations = Vec::new();
+                let mut wire_words = 0u64;
+                for &m in &ms {
+                    wire_words += check_replica(groups, m, codec, checked, &mut violations);
+                }
+                let label = if codec == (Codec::Int8 { group: 16 }) {
+                    "int8/g16".to_string()
+                } else {
+                    codec.label().to_string()
+                };
+                let env = if checked { " checked" } else { "" };
+                let msgs = (ms.len() * groups * 2 * groups.saturating_sub(1)) as u64;
+                reports.push(CheckReport {
+                    config: format!("replica ring R={groups} {label}{env}"),
+                    layers: ms.len(),
+                    nparts: groups,
+                    batch: 0,
+                    transfers: msgs,
+                    messages: msgs,
+                    wire_bytes: 4 * wire_words,
+                    violations,
+                });
+            }
+        }
+    }
+    reports
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_replica_matrix_is_clean() {
+        let reports = check_replica_matrix();
+        assert!(!reports.is_empty());
+        for r in &reports {
+            assert!(r.ok(), "replica matrix violation:\n{}", r.render());
+        }
+        // R = 1 configurations move nothing; R > 1 f32 ones move plenty
+        assert!(reports.iter().any(|r| r.nparts == 1 && r.wire_bytes == 0));
+        assert!(reports.iter().any(|r| r.nparts > 1 && r.wire_bytes > 0));
+    }
+
+    #[test]
+    fn wire_accounting_matches_the_prediction_sum() {
+        let mut v = Vec::new();
+        let words = check_replica(4, 101, Codec::int8(), false, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+        let want: u64 = (0..4)
+            .map(|g| predicted_wire_words(g, 4, 101, Codec::int8(), false))
+            .sum();
+        assert_eq!(words, want);
+    }
+
+    #[test]
+    fn broken_partition_is_detected() {
+        let mut v = Vec::new();
+        // overlapping segments: [0, 2), [1, 3), ...
+        check_partition_with(4, 2, |s| (s, s + 2), &mut v);
+        assert!(
+            v.iter().any(|x| x.code == Code::SegPartitionBroken),
+            "overlapping bounds must raise R002"
+        );
+        let mut v = Vec::new();
+        // short coverage: [0, 1), [1, 2) over m = 4
+        check_partition_with(4, 2, |s| (s, s + 1), &mut v);
+        assert!(v.iter().any(|x| x.code == Code::SegPartitionBroken));
+    }
+
+    #[test]
+    fn mismatched_schedule_is_detected() {
+        let mut v = Vec::new();
+        // a receiver waiting for the wrong segment deadlocks the ring
+        check_matching_with(3, "bogus", |me, hop| (me + hop) % 3, |me, _| me, &mut v);
+        assert!(
+            v.iter().any(|x| x.code == Code::RingTagMismatch),
+            "mismatched send/recv must raise R001"
+        );
+    }
+
+    #[test]
+    fn checked_envelope_accounting_holds() {
+        // the chaos envelope adds header + checksum framing; R004 must
+        // still balance exactly
+        let mut v = Vec::new();
+        check_replica(3, 64, Codec::F32, true, &mut v);
+        check_replica(3, 64, Codec::F16, true, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+}

@@ -11,6 +11,9 @@ use std::collections::BTreeSet;
 /// emit — the canonical taxonomy (kept sorted; mirrors the table in
 /// `docs/OBSERVABILITY.md`).
 pub const SPAN_NAMES: &[&str] = &[
+    "allreduce.fold",
+    "allreduce.gather",
+    "allreduce.scatter",
     "coalesce",
     "dispatch",
     "epilogue",
@@ -32,8 +35,9 @@ pub const SPAN_NAMES: &[&str] = &[
     "wait",
 ];
 
-/// Every span category: forward, backward, serving pool, capture driver.
-pub const SPAN_CATS: &[&str] = &["bwd", "drv", "fwd", "pool"];
+/// Every span category: replica all-reduce, forward, backward, serving
+/// pool, capture driver.
+pub const SPAN_CATS: &[&str] = &["alr", "bwd", "drv", "fwd", "pool"];
 
 /// The documented taxonomy, embedded so checker and doc version together.
 const OBSERVABILITY_DOC: &str = include_str!("../../../docs/OBSERVABILITY.md");
@@ -82,7 +86,8 @@ pub fn check_spans(spans: &[Span], out: &mut Vec<Violation>) {
 }
 
 /// Harvest live spans from traced micro-runs of every engine mode (one
-/// training epoch + one batched inference on a tiny 2-rank RadixNet) and
+/// training epoch + one batched inference on a tiny 2-rank RadixNet,
+/// plus a 2-group replica training step for the `allreduce.*` spans) and
 /// run [`check_spans`] over everything the engines emitted. This is the
 /// CI gate "an engine emits a span name missing from the documented
 /// taxonomy": a new span site fails here until the doc table grows its
@@ -126,6 +131,26 @@ pub fn check_live_spans(out: &mut Vec<Violation>) {
         let (_y, _stats, tracers) =
             infer_with_plan_mode_traced(&net, &part, &plan, &x0, b, mode, trace);
         for t in &tracers {
+            check_spans(&t.spans(), out);
+        }
+    }
+
+    // replica training: the lossy ring all-reduce emits the alr-category
+    // fold/scatter/gather spans on top of the engine's own
+    let rcfg = crate::replica::ReplicaConfig {
+        groups: 2,
+        batch: 1,
+        eta: 0.05,
+        epochs: 1,
+        mode: ExecMode::Overlap,
+        codec: crate::comm::Codec::int8(),
+        scope: crate::runtime::parallel::FaultScope::Off,
+    };
+    let trace = TraceMode::with_capacity(8192);
+    let (_run, tracers) =
+        crate::replica::train_replicas_traced(&net, &part, &plan, &inputs, &targets, &rcfg, trace);
+    for grp in &tracers {
+        for t in grp {
             check_spans(&t.spans(), out);
         }
     }

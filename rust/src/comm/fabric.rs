@@ -268,6 +268,80 @@ impl Endpoint {
         out
     }
 
+    /// Encode `raw` into a wire payload **without sending it**, honoring
+    /// the fabric's checked-envelope setting. The replica ring all-reduce
+    /// uses this in its allgather phase: the owner of a fully-reduced
+    /// gradient segment encodes it exactly once, keeps the buffer, and
+    /// forwards the identical bytes around the ring
+    /// ([`Endpoint::send_wire_payload`]) — so under a lossy codec every
+    /// group decodes the *same* post-quantization values and replicas
+    /// stay deterministically in sync.
+    pub fn encode_wire(&mut self, codec: Codec, raw: &[f32]) -> Vec<f32> {
+        let mut wire = self.take_buf();
+        if self.wire_checked {
+            codec.encode_into_checked(raw, &mut wire);
+        } else {
+            codec.encode_into(raw, &mut wire);
+        }
+        wire
+    }
+
+    /// Decode a wire payload **without consuming it** — the counterpart
+    /// of [`Endpoint::encode_wire`] for ring stations that must both
+    /// absorb a payload's values and forward its bytes verbatim. Checksum
+    /// semantics match [`Endpoint::decode_payload`]: on a chaos fabric a
+    /// corrupted payload poisons the generation with a typed `Corrupt`
+    /// cause before any decode.
+    pub fn decode_wire(&mut self, codec: Codec, wire: &[f32]) -> Vec<f32> {
+        let mut out = self.take_buf();
+        if !self.wire_checked {
+            codec.decode_into(wire, &mut out);
+            return out;
+        }
+        if !Codec::verify_checksum(wire) {
+            let cause = FaultCause::Corrupt {
+                rank: self.rank,
+                codec: codec.label().into(),
+                words: wire.len(),
+            };
+            self.poison();
+            panic!("{cause}");
+        }
+        codec.decode_checked_into(wire, &mut out);
+        out
+    }
+
+    /// Send an already-encoded wire payload **verbatim**. `raw_len` is
+    /// the pre-encoding element count, so the raw-vs-wire byte counters
+    /// (the live compression factor) stay truthful for forwarded
+    /// payloads. The bit-flip failpoint still applies per hop on a chaos
+    /// fabric — a forwarded payload can be corrupted in flight like any
+    /// other, and the checked envelope catches it at the next decode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_wire_payload(
+        &mut self,
+        to: u32,
+        layer: u32,
+        phase: Phase,
+        transfer: u32,
+        chunk: u32,
+        mut wire: Vec<f32>,
+        raw_len: usize,
+    ) {
+        if self.wire_checked {
+            self.flip_failpoint(&mut wire);
+        }
+        let raw_bytes = 4 * raw_len as u64;
+        self.send_wire(to, layer, phase, transfer, chunk, wire, raw_bytes);
+    }
+
+    /// True when payloads travel the checked (checksummed) codec
+    /// envelope — wire-word accounting must then use
+    /// [`Codec::checked_wire_words`] instead of [`Codec::wire_words`].
+    pub fn wire_checked(&self) -> bool {
+        self.wire_checked
+    }
+
     /// The payload bit-flip failpoint: on a budgeted hit, XOR one random
     /// bit of one random non-header wire word, so the corruption is
     /// always detectable (the checked flag in word 0 survives).
@@ -1049,6 +1123,36 @@ mod tests {
         }
         e0.recycle(p);
         assert!(e0.drained());
+    }
+
+    #[test]
+    fn wire_helpers_forward_identical_bytes() {
+        use crate::runtime::fault::{FaultPlan, FaultSpec};
+        // the replica allgather contract: encode once, decode without
+        // consuming, forward the identical bytes — the receiver decodes
+        // the exact same values the owner kept. Plain and chaos fabrics.
+        let vals: Vec<f32> = (0..70).map(|i| (i as f32 - 35.0) * 0.11).collect();
+        for plan in [None, Some(FaultPlan::new(FaultSpec::default()))] {
+            for codec in [Codec::F32, Codec::F16, Codec::int8()] {
+                let mut eps = fabric_with(2, plan.clone(), None);
+                let mut e1 = eps.pop().unwrap();
+                let mut e0 = eps.pop().unwrap();
+                let wire = e0.encode_wire(codec, &vals);
+                let kept = e0.decode_wire(codec, &wire);
+                let wire_bits: Vec<u32> = wire.iter().map(|w| w.to_bits()).collect();
+                e0.send_wire_payload(1, 3, Phase::Backward, 2, 0, wire, vals.len());
+                assert_eq!(e0.sent_raw_bytes, 4 * vals.len() as u64);
+                let arrived = e1.recv(0, 3, Phase::Backward, 2);
+                let got_bits: Vec<u32> = arrived.iter().map(|w| w.to_bits()).collect();
+                assert_eq!(got_bits, wire_bits, "{codec:?}: forward must be verbatim");
+                let decoded = e1.decode_wire(codec, &arrived);
+                for (a, b) in decoded.iter().zip(kept.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{codec:?}: groups must agree");
+                }
+                e1.recycle(arrived);
+                assert!(e1.drained());
+            }
+        }
     }
 
     #[test]

@@ -66,6 +66,22 @@ impl NetModel {
             + self.overhead * (msgs.max(rmsgs) as f64)
             + self.beta / 4.0 * ((bytes + rbytes) as f64)
     }
+
+    /// Predicted seconds of one ring all-reduce of a length-`m` flat
+    /// gradient across `groups` replicas under `codec`
+    /// ([`crate::replica`]'s schedule): `2(R−1)` dependent hops, each
+    /// carrying one segment of at most `⌈m/R⌉` elements — every segment
+    /// is in flight at every hop, so the hop's critical path is the
+    /// largest segment's wire footprint. `R = 1` exchanges nothing.
+    pub fn ring_allreduce_cost(&self, groups: usize, m: usize, codec: crate::comm::Codec) -> f64 {
+        if groups <= 1 {
+            return 0.0;
+        }
+        let per_hop = self.alpha
+            + self.overhead
+            + self.beta / 4.0 * codec.wire_bytes(m.div_ceil(groups)) as f64;
+        (2 * (groups - 1)) as f64 * per_hop
+    }
 }
 
 /// Calibrated per-element compute rates of this host (seconds).
@@ -225,6 +241,21 @@ mod tests {
         let w32 = net.layer_cost_bytes(2, wb32, 2, wb32);
         let w16 = net.layer_cost_bytes(2, wb16, 2, wb16);
         assert!(w16 < w32);
+    }
+
+    #[test]
+    fn ring_cost_scales_with_groups_and_compression() {
+        use crate::comm::Codec;
+        let net = NetModel::infiniband();
+        assert_eq!(net.ring_allreduce_cost(1, 1 << 20, Codec::F32), 0.0);
+        let r2 = net.ring_allreduce_cost(2, 1 << 20, Codec::F32);
+        let r4 = net.ring_allreduce_cost(4, 1 << 20, Codec::F32);
+        assert!(r2 > 0.0);
+        // more groups: more hops but smaller segments — bandwidth-bound
+        // at this size, the totals stay within ~2(R−1)/R of each other
+        assert!(r4 < r2 * 1.6, "r4 {r4} vs r2 {r2}");
+        let q = net.ring_allreduce_cost(2, 1 << 20, Codec::int8());
+        assert!(q < 0.35 * r2, "int8 ring {q} not under 0.35× of f32 {r2}");
     }
 
     #[test]

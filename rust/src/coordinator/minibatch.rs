@@ -165,11 +165,21 @@ impl RankState {
                     ep.send_encoded(t.from, k as u32, Phase::Backward, tid, 0, cb, payload);
                 }
             });
-            self.timer.time("updt", || {
-                blocks[k].sgd_update(&delta, &means[k], eta);
-            });
-            for (i, d) in delta.iter().enumerate() {
-                self.biases[k][i] -= eta * d;
+            if let Some(gr) = self.collect.as_mut() {
+                // collect mode: record the gradient instead of updating —
+                // the replica driver exchanges and applies it after the step
+                self.timer.time("updt", || {
+                    gr[k].clear();
+                    blocks[k].outer_grad(&delta, &means[k], &mut gr[k]);
+                    gr[k].extend_from_slice(&delta);
+                });
+            } else {
+                self.timer.time("updt", || {
+                    blocks[k].sgd_update(&delta, &means[k], eta);
+                });
+                for (i, d) in delta.iter().enumerate() {
+                    self.biases[k][i] -= eta * d;
+                }
             }
             self.timer.time("wait", || {
                 for &tid in &lp.send_of[me] {

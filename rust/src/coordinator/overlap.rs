@@ -360,9 +360,19 @@ impl RankState {
             let mx_local = row_means(&acts[k], b);
             let mx_segs: Vec<Vec<f32>> = payloads[k].iter().map(|p| row_means(p, b)).collect();
             let sp = self.tracer.start();
-            self.timer.time("updt", || sl.mat.sgd_update(&delta, &mx_local, &mx_segs, eta));
-            for (i, d) in delta.iter().enumerate() {
-                self.biases[k][i] -= eta * d;
+            if let Some(gr) = self.collect.as_mut() {
+                // collect mode: record the gradient instead of updating —
+                // the replica driver exchanges and applies it after the step
+                self.timer.time("updt", || {
+                    gr[k].clear();
+                    sl.mat.outer_grad(&delta, &mx_local, &mx_segs, &mut gr[k]);
+                    gr[k].extend_from_slice(&delta);
+                });
+            } else {
+                self.timer.time("updt", || sl.mat.sgd_update(&delta, &mx_local, &mx_segs, eta));
+                for (i, d) in delta.iter().enumerate() {
+                    self.biases[k][i] -= eta * d;
+                }
             }
             self.tracer.end(sp, "updt", "bwd", k as u32, NO_CHUNK, 0);
             // 4. mirrored receives in arrival order (behind the update)

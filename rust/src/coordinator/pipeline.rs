@@ -15,10 +15,13 @@
 //!    the moment it lands (non-blocking first, then in arrival order),
 //!    with **interior local tiles computed between polls** so the rank is
 //!    never idle while payloads are in flight;
-//! 3. the instant every boundary-feeding payload is in: epilogue on the
-//!    boundary block and **post every outbound payload of the next layer
-//!    as chunked sub-transfers** — before any remaining interior row
-//!    computes, so peers' receives overlap this rank's interior work;
+//! 3. **each outbound chunk of the next layer posts the moment its own
+//!    `ready` prefix is final** (the prefix lengths `regroup_rows`
+//!    computes): rows below every pending segment's first nonzero have
+//!    all contributions in, so the epilogue advances to the chunk's ready
+//!    point and its payload goes out — earliest-finished chunks leave
+//!    while later boundary rows (and all interior rows) are still
+//!    uncomputed, so peers' receives overlap this rank's remaining work;
 //! 4. finish the interior local rows, apply every payload's interior
 //!    contribution, interior epilogue.
 //!
@@ -119,15 +122,24 @@ impl RankState {
             }
             scratch.held.clear();
             scratch.held.resize_with(sl.mat.remote.len(), || None);
-            let mut boundary_pending = pipe.seg_feeds_boundary.iter().filter(|&&f| f).count();
             let mut interior_done = nb;
-            let mut posted = false;
+            let mut epi_done = 0usize;
+            let mut next_post = 0usize;
             loop {
-                // 3. the moment the boundary block is final, apply its
-                // epilogue and post every outbound chunk of the next layer
-                // — interior rows are still uncomputed at this point.
-                if !posted && boundary_pending == 0 {
-                    {
+                // 3. each outbound chunk posts the moment *its* `ready`
+                // prefix is final: every row below the smallest pending
+                // segment's first nonzero has all contributions in, so the
+                // epilogue extends up to the chunk's ready point and the
+                // payload gathers activated values — interior rows (and
+                // later chunks' rows) are still uncomputed at this point.
+                let safe = scratch
+                    .want_seg
+                    .iter()
+                    .map(|&si| pipe.seg_first_row[si])
+                    .fold(nb, usize::min);
+                while next_post < pipe.out_sends.len() && pipe.ready[next_post] <= safe {
+                    let upto = pipe.ready[next_post];
+                    if epi_done < upto {
                         let z = &mut scratch.pong[..nloc * b];
                         let bias = &self.biases[k];
                         let act = self.activation;
@@ -135,38 +147,38 @@ impl RankState {
                         let sp = self.tracer.start();
                         self.timer.time("spmv", || {
                             let mut epi = act.fused_bias_epilogue(bias);
-                            for r in 0..nb {
+                            for r in epi_done..upto {
                                 epi(perm[r] as usize, &mut z[r * b..(r + 1) * b]);
                             }
                         });
                         self.tracer
                             .end(sp, "epilogue.boundary", "fwd", k as u32, NO_CHUNK, 0);
+                        epi_done = upto;
                     }
+                    let s = &pipe.out_sends[next_post];
                     let z = &scratch.pong[..nloc * b];
                     let sp = self.tracer.start();
                     let mut moved = 0u64;
                     self.timer.time("comm", || {
-                        for s in &pipe.out_sends {
-                            let mut payload = ep.take_buf();
-                            payload.reserve(s.pos.len() * b);
-                            for &p in &s.pos {
-                                let p = p as usize;
-                                payload.extend_from_slice(&z[p * b..(p + 1) * b]);
-                            }
-                            moved += 4 * payload.len() as u64;
-                            ep.send_encoded(
-                                s.to,
-                                (k + 1) as u32,
-                                Phase::Forward,
-                                s.tid,
-                                s.chunk,
-                                cf_next,
-                                payload,
-                            );
+                        let mut payload = ep.take_buf();
+                        payload.reserve(s.pos.len() * b);
+                        for &p in &s.pos {
+                            let p = p as usize;
+                            payload.extend_from_slice(&z[p * b..(p + 1) * b]);
                         }
+                        moved = 4 * payload.len() as u64;
+                        ep.send_encoded(
+                            s.to,
+                            (k + 1) as u32,
+                            Phase::Forward,
+                            s.tid,
+                            s.chunk,
+                            cf_next,
+                            payload,
+                        );
                     });
-                    self.tracer.end(sp, "post", "fwd", k as u32, NO_CHUNK, moved);
-                    posted = true;
+                    self.tracer.end(sp, "post", "fwd", k as u32, s.chunk, moved);
+                    next_post += 1;
                 }
                 if scratch.wants.is_empty() {
                     break;
@@ -190,9 +202,6 @@ impl RankState {
                             .time("spmv", || seg.spmm_add_range_rowmajor(&payload, z, b, 0, nb));
                         self.tracer
                             .end(sp, "spmv.seg", "fwd", k as u32, chunk, 4 * payload.len() as u64);
-                        if pipe.seg_feeds_boundary[si] {
-                            boundary_pending -= 1;
-                        }
                         scratch.held[si] = Some(payload);
                         progressed = true;
                     } else {
@@ -239,10 +248,24 @@ impl RankState {
                     .time("spmv", || seg.spmm_add_range_rowmajor(&payload, z, b, 0, nb));
                 self.tracer
                     .end(sp, "spmv.seg", "fwd", k as u32, chunk, 4 * payload.len() as u64);
-                if pipe.seg_feeds_boundary[si] {
-                    boundary_pending -= 1;
-                }
                 scratch.held[si] = Some(payload);
+            }
+            // finish the boundary epilogue over rows no outbound chunk
+            // gathered (every want has drained, so the whole block is final)
+            if epi_done < nb {
+                let z = &mut scratch.pong[..nloc * b];
+                let bias = &self.biases[k];
+                let act = self.activation;
+                let perm = &pipe.perm;
+                let sp = self.tracer.start();
+                self.timer.time("spmv", || {
+                    let mut epi = act.fused_bias_epilogue(bias);
+                    for r in epi_done..nb {
+                        epi(perm[r] as usize, &mut z[r * b..(r + 1) * b]);
+                    }
+                });
+                self.tracer
+                    .end(sp, "epilogue.boundary", "fwd", k as u32, NO_CHUNK, 0);
             }
             // 4. finish interior local rows, add every payload's interior
             // contribution, interior epilogue
@@ -362,13 +385,19 @@ impl RankState {
                 let mut lay_payloads: Vec<Vec<f32>> = vec![Vec::new(); nsegs];
                 let mut wants: Vec<Want> = sl.recv_wants.clone();
                 let mut want_seg: Vec<usize> = (0..nsegs).collect();
-                let mut boundary_pending =
-                    pipe.seg_feeds_boundary.iter().filter(|&&f| f).count();
                 let mut interior_done = nb;
-                let mut posted = false;
+                let mut epi_done = 0usize;
+                let mut next_post = 0usize;
                 loop {
-                    if !posted && boundary_pending == 0 {
-                        {
+                    // each outbound chunk posts the moment its `ready`
+                    // prefix is final — see `infer_pipelined_compact`
+                    let safe = want_seg
+                        .iter()
+                        .map(|&si| pipe.seg_first_row[si])
+                        .fold(nb, usize::min);
+                    while next_post < pipe.out_sends.len() && pipe.ready[next_post] <= safe {
+                        let upto = pipe.ready[next_post];
+                        if epi_done < upto {
                             let bias = &self.biases[k];
                             let act = self.activation;
                             let perm = &pipe.perm;
@@ -376,38 +405,38 @@ impl RankState {
                             let sp = self.tracer.start();
                             self.timer.time("spmv", || {
                                 let mut epi = act.fused_bias_epilogue(bias);
-                                for r in 0..nb {
+                                for r in epi_done..upto {
                                     epi(perm[r] as usize, &mut zb[r * b..(r + 1) * b]);
                                 }
                             });
                             self.tracer
                                 .end(sp, "epilogue.boundary", "fwd", k as u32, NO_CHUNK, 0);
+                            epi_done = upto;
                         }
+                        let s = &pipe.out_sends[next_post];
                         let zr = &z;
                         let sp = self.tracer.start();
                         let mut moved = 0u64;
                         self.timer.time("comm", || {
-                            for s in &pipe.out_sends {
-                                let mut payload = ep.take_buf();
-                                payload.reserve(s.pos.len() * b);
-                                for &p in &s.pos {
-                                    let p = p as usize;
-                                    payload.extend_from_slice(&zr[p * b..(p + 1) * b]);
-                                }
-                                moved += 4 * payload.len() as u64;
-                                ep.send_encoded(
-                                    s.to,
-                                    (k + 1) as u32,
-                                    Phase::Forward,
-                                    s.tid,
-                                    s.chunk,
-                                    cf_next,
-                                    payload,
-                                );
+                            let mut payload = ep.take_buf();
+                            payload.reserve(s.pos.len() * b);
+                            for &p in &s.pos {
+                                let p = p as usize;
+                                payload.extend_from_slice(&zr[p * b..(p + 1) * b]);
                             }
+                            moved = 4 * payload.len() as u64;
+                            ep.send_encoded(
+                                s.to,
+                                (k + 1) as u32,
+                                Phase::Forward,
+                                s.tid,
+                                s.chunk,
+                                cf_next,
+                                payload,
+                            );
                         });
-                        self.tracer.end(sp, "post", "fwd", k as u32, NO_CHUNK, moved);
-                        posted = true;
+                        self.tracer.end(sp, "post", "fwd", k as u32, s.chunk, moved);
+                        next_post += 1;
                     }
                     if wants.is_empty() {
                         break;
@@ -436,9 +465,6 @@ impl RankState {
                                 chunk,
                                 4 * payload.len() as u64,
                             );
-                            if pipe.seg_feeds_boundary[si] {
-                                boundary_pending -= 1;
-                            }
                             lay_payloads[si] = payload;
                             progressed = true;
                         } else {
@@ -484,10 +510,24 @@ impl RankState {
                         .time("spmv", || seg.spmm_add_range_rowmajor(&payload, &mut z, b, 0, nb));
                     self.tracer
                         .end(sp, "spmv.seg", "fwd", k as u32, chunk, 4 * payload.len() as u64);
-                    if pipe.seg_feeds_boundary[si] {
-                        boundary_pending -= 1;
-                    }
                     lay_payloads[si] = payload;
+                }
+                // finish the boundary epilogue over rows no outbound chunk
+                // gathered
+                if epi_done < nb {
+                    let bias = &self.biases[k];
+                    let act = self.activation;
+                    let perm = &pipe.perm;
+                    let zb = &mut z;
+                    let sp = self.tracer.start();
+                    self.timer.time("spmv", || {
+                        let mut epi = act.fused_bias_epilogue(bias);
+                        for r in epi_done..nb {
+                            epi(perm[r] as usize, &mut zb[r * b..(r + 1) * b]);
+                        }
+                    });
+                    self.tracer
+                        .end(sp, "epilogue.boundary", "fwd", k as u32, NO_CHUNK, 0);
                 }
                 if interior_done < nloc {
                     let cur = &acts[k];
@@ -601,10 +641,22 @@ impl RankState {
                 let mx_local = row_means(&acts[k], b);
                 let mx_segs: Vec<Vec<f32>> = payloads[k].iter().map(|p| row_means(p, b)).collect();
                 let sp = self.tracer.start();
-                self.timer
-                    .time("updt", || mat.sgd_update(&delta, &mx_local, &mx_segs, eta));
-                for (r, d) in delta.iter().enumerate() {
-                    self.biases[k][pipe.perm[r] as usize] -= eta * d;
+                if let Some(gr) = self.collect.as_mut() {
+                    // collect mode: record the gradient (weights in split
+                    // storage order, biases in the permuted delta layout)
+                    // instead of updating — the replica driver exchanges
+                    // and applies it after the step.
+                    self.timer.time("updt", || {
+                        gr[k].clear();
+                        mat.outer_grad(&delta, &mx_local, &mx_segs, &mut gr[k]);
+                        gr[k].extend_from_slice(&delta);
+                    });
+                } else {
+                    self.timer
+                        .time("updt", || mat.sgd_update(&delta, &mx_local, &mx_segs, eta));
+                    for (r, d) in delta.iter().enumerate() {
+                        self.biases[k][pipe.perm[r] as usize] -= eta * d;
+                    }
                 }
                 self.tracer.end(sp, "updt", "bwd", k as u32, NO_CHUNK, 0);
                 (inw, mx_local, s_local)

@@ -152,6 +152,39 @@ pub fn replay(
     res
 }
 
+/// Predicted seconds of the cross-group gradient all-reduce appended to
+/// each replica training step ([`crate::replica`]): per layer, every
+/// rank rings its own flat gradient (weights + biases, the
+/// `RankState::grad_len` layout) with its same-rank peers concurrently,
+/// so the layer charge is the max over ranks of
+/// [`NetModel::ring_allreduce_cost`]; layers serialize. `groups == 1`
+/// costs nothing, matching the live engine's zero-message degenerate
+/// case.
+pub fn replica_allreduce_time(
+    structure: &[Csr],
+    part: &DnnPartition,
+    cfg: &ReplayConfig,
+    groups: usize,
+    codec: crate::comm::Codec,
+) -> f64 {
+    if groups <= 1 {
+        return 0.0;
+    }
+    let loads = layer_loads(structure, &part.layer_parts, part.nparts);
+    loads
+        .iter()
+        .map(|layer| {
+            layer
+                .iter()
+                .map(|l| {
+                    cfg.net
+                        .ring_allreduce_cost(groups, (l.nnz + l.rows) as usize, codec)
+                })
+                .fold(0.0, f64::max)
+        })
+        .sum()
+}
+
 /// Strong-scaling sweep (Fig. 4): simulated seconds/input at each P for a
 /// given partitioning function.
 pub fn scaling_sweep(
@@ -279,6 +312,19 @@ mod tests {
         mixed.set_codec(Codec::F16, Codec::F32);
         let rm = replay(&s, &p, &mixed, &c);
         assert!(r16.comm < rm.comm && rm.comm < r32.comm);
+    }
+
+    #[test]
+    fn replica_allreduce_charge_behaves() {
+        use crate::comm::Codec;
+        let s = structure();
+        let p = random_partition(&s, 4, 1);
+        let c = cfg();
+        assert_eq!(replica_allreduce_time(&s, &p, &c, 1, Codec::F32), 0.0);
+        let t2 = replica_allreduce_time(&s, &p, &c, 2, Codec::F32);
+        assert!(t2 > 0.0);
+        let t2q = replica_allreduce_time(&s, &p, &c, 2, Codec::int8());
+        assert!(t2q < t2, "int8 ring {t2q} not cheaper than f32 {t2}");
     }
 
     #[test]

@@ -23,8 +23,9 @@
 //!   feed a remote destination in the next layer — are packed first,
 //!   grouped per outbound chunk ([`crate::sparse::regroup_rows`]). The
 //!   layer step computes the boundary block, applies the inbound payloads
-//!   it needs, and posts every outbound payload as chunked sub-transfers
-//!   **before** the interior (local-only) rows compute — so peers start
+//!   it needs, and posts each outbound payload as chunked sub-transfers
+//!   the moment **its own** ready prefix is final — before later boundary
+//!   chunks or any interior (local-only) row computes — so peers start
 //!   receiving while this rank is still working, instead of after the
 //!   whole layer finishes.
 
@@ -128,13 +129,20 @@ pub(crate) struct PipeSchedule {
     /// chunk; rows `[boundary_end, nrows)` are interior (local-only).
     pub(crate) boundary_end: usize,
     /// Next-layer outbound chunks (tagged layer k+1), ordered by the
-    /// prefix length that completes them — posted together the moment the
-    /// boundary block is final, before any interior row computes.
+    /// prefix length that completes them — each posted the moment *its*
+    /// prefix is final, before any interior row computes.
     pub(crate) out_sends: Vec<ChunkSend>,
-    /// Per remote segment of this layer: whether it has nonzeros in the
-    /// boundary rows (and must therefore be applied before the outbound
-    /// chunks can post). Interior-only segments never gate the sends.
-    pub(crate) seg_feeds_boundary: Vec<bool>,
+    /// Aligned with `out_sends`: the permuted-row prefix length that must
+    /// be final (all segment contributions in, epilogue applicable) before
+    /// that chunk's payload is complete. Ascending by construction.
+    pub(crate) ready: Vec<usize>,
+    /// Per remote segment of this layer: the first permuted row with a
+    /// nonzero (`nrows` if the segment is empty). A pending segment blocks
+    /// exactly the rows at or past its first row, so the final prefix is
+    /// `min(boundary_end, min over pending segments of seg_first_row)`.
+    /// Interior-only segments (first row ≥ `boundary_end`) never gate the
+    /// outbound posts.
+    pub(crate) seg_first_row: Vec<usize>,
 }
 
 /// One weight layer compiled for the overlapped/pipelined engines.
@@ -180,6 +188,17 @@ pub struct RankState {
     /// Per-layer `(forward, backward)` wire codecs, copied out of the plan
     /// at build time so the precompiled engines never re-consult it.
     pub(crate) codecs: Vec<(Codec, Codec)>,
+    /// Deferred-update gradient collection (replica training): when armed
+    /// via [`RankState::begin_collect`], every engine's update window
+    /// appends the layer's gradient here — weight grads in repr storage
+    /// order, then bias grads in the engine's delta layout — instead of
+    /// applying it. §5.1 computes every `s = Wᵀδ` *before* its layer's
+    /// update and layer k−1's transpose precedes its own update, so
+    /// deferring all updates within a step leaves the step's gradients
+    /// bit-identical; the replica driver all-reduces the collected vectors
+    /// across groups and applies them via
+    /// [`RankState::apply_layer_grad`].
+    pub(crate) collect: Option<Vec<Vec<f32>>>,
     /// Local bias entries per layer (aligned with `rows`).
     pub biases: Vec<Vec<f32>>,
     pub activation: Activation,
@@ -416,15 +435,21 @@ impl RankState {
                             });
                         let recv_wants =
                             inbound.iter().map(|&(src, tid, c, _)| (src, tid, c)).collect();
-                        let seg_feeds_boundary = mat
+                        let nloc = pblock.nrows;
+                        let seg_first_row = mat
                             .remote
                             .iter()
-                            .map(|s| s.csr.indptr[rg.boundary_end] > 0)
+                            .map(|s| {
+                                (0..nloc)
+                                    .find(|&r| s.csr.indptr[r + 1] > s.csr.indptr[r])
+                                    .unwrap_or(nloc)
+                            })
                             .collect();
                         // outbound chunks ordered by completion prefix, so
                         // the earliest-finished row range posts first
                         let mut order: Vec<usize> = (0..out_chunks[k].len()).collect();
                         order.sort_by_key(|&i| rg.ready[i]);
+                        let ready: Vec<usize> = order.iter().map(|&i| rg.ready[i]).collect();
                         let out_sends = order
                             .into_iter()
                             .map(|i| {
@@ -454,7 +479,8 @@ impl RankState {
                                 inv: rg.inv.clone(),
                                 boundary_end: rg.boundary_end,
                                 out_sends,
-                                seg_feeds_boundary,
+                                ready,
+                                seg_first_row,
                             }),
                         }
                     })
@@ -501,6 +527,7 @@ impl RankState {
             repr,
             input_sends,
             codecs,
+            collect: None,
             biases,
             activation: net.activation,
             loss: net.loss,
@@ -519,6 +546,80 @@ impl RankState {
     /// Depth in weight layers.
     pub fn depth(&self) -> usize {
         self.rows.len()
+    }
+
+    /// Flat gradient length of layer `k` in collect mode: one entry per
+    /// stored weight nonzero (repr storage order) plus one per owned bias.
+    /// Identical across replica groups built from the same partition/plan/
+    /// mode — the invariant the cross-group all-reduce relies on.
+    pub fn grad_len(&self, k: usize) -> usize {
+        let nnz = match &self.repr {
+            Repr::Full { blocks } => blocks[k].nnz(),
+            Repr::Split { layers } => layers[k].mat.nnz(),
+        };
+        nnz + self.rows[k].len()
+    }
+
+    /// Arm deferred-update gradient collection: subsequent train steps
+    /// fill per-layer gradient buffers instead of updating weights. The
+    /// buffers persist across steps (cleared and refilled each step), so
+    /// steady-state training allocates nothing.
+    pub fn begin_collect(&mut self) {
+        let depth = self.depth();
+        let mut bufs = Vec::with_capacity(depth);
+        for k in 0..depth {
+            bufs.push(Vec::with_capacity(self.grad_len(k)));
+        }
+        self.collect = Some(bufs);
+    }
+
+    /// Take this step's collected per-layer gradients (collect mode only).
+    /// Hand the buffers back with [`RankState::restore_grad_bufs`] after
+    /// the exchange so the next step reuses their allocations.
+    pub fn take_step_grads(&mut self) -> Vec<Vec<f32>> {
+        self.collect.take().expect("collect mode not armed")
+    }
+
+    /// Return gradient buffers taken by [`RankState::take_step_grads`],
+    /// re-arming collect mode for the next step.
+    pub fn restore_grad_bufs(&mut self, bufs: Vec<Vec<f32>>) {
+        self.collect = Some(bufs);
+    }
+
+    /// Apply a flat layer gradient in collect-mode layout: weight entries
+    /// in repr storage order, then bias entries in the engine's delta
+    /// layout (direct owned-row order, or the pipelined permuted order
+    /// when the layer carries a pipeline schedule).
+    pub fn apply_layer_grad(&mut self, k: usize, g: &[f32], eta: f32) {
+        let nb = self.rows[k].len();
+        match &mut self.repr {
+            Repr::Full { blocks } => {
+                let nnz = blocks[k].nnz();
+                debug_assert_eq!(g.len(), nnz + nb);
+                blocks[k].apply_grad(&g[..nnz], eta);
+                for (i, &d) in g[nnz..].iter().enumerate() {
+                    self.biases[k][i] -= eta * d;
+                }
+            }
+            Repr::Split { layers } => {
+                let sl = &mut layers[k];
+                let nnz = sl.mat.nnz();
+                debug_assert_eq!(g.len(), nnz + nb);
+                sl.mat.apply_grad(&g[..nnz], eta);
+                match &sl.pipe {
+                    Some(pipe) => {
+                        for (r, &d) in g[nnz..].iter().enumerate() {
+                            self.biases[k][pipe.perm[r] as usize] -= eta * d;
+                        }
+                    }
+                    None => {
+                        for (i, &d) in g[nnz..].iter().enumerate() {
+                            self.biases[k][i] -= eta * d;
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Forward pass (Alg. 2) for one input on the **blocking** engine.
@@ -670,15 +771,25 @@ impl RankState {
             });
             self.tracer.end(sp, "send", "bwd", k as u32, NO_CHUNK, moved);
             // overlap window: weight + bias update (lines 8–9) uses x^{k-1}
-            // including entries received during the forward phase.
+            // including entries received during the forward phase. Collect
+            // mode records the gradient instead — the replica driver
+            // exchanges and applies it after the step.
             let sp = self.tracer.start();
-            self.timer.time("updt", || {
-                blocks[k].sgd_update(&delta, &xbuf[k], eta);
-            });
-            self.tracer.end(sp, "updt", "bwd", k as u32, NO_CHUNK, 0);
-            for (i, d) in delta.iter().enumerate() {
-                self.biases[k][i] -= eta * d;
+            if let Some(gr) = self.collect.as_mut() {
+                self.timer.time("updt", || {
+                    gr[k].clear();
+                    blocks[k].outer_grad(&delta, &xbuf[k], &mut gr[k]);
+                    gr[k].extend_from_slice(&delta);
+                });
+            } else {
+                self.timer.time("updt", || {
+                    blocks[k].sgd_update(&delta, &xbuf[k], eta);
+                });
+                for (i, d) in delta.iter().enumerate() {
+                    self.biases[k][i] -= eta * d;
+                }
             }
+            self.tracer.end(sp, "updt", "bwd", k as u32, NO_CHUNK, 0);
             // receive partial gradients (lines 10–12): mirror of fwd sends.
             let sp = self.tracer.start();
             let mut moved = 0u64;

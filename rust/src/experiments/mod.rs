@@ -7,6 +7,7 @@ pub mod chaos;
 pub mod fig4_scaling;
 pub mod fig5_breakdown;
 pub mod graphchallenge;
+pub mod replica;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -1,0 +1,406 @@
+//! `spdnn replica` — scaling harness for the replica-group training
+//! subsystem ([`crate::replica`]): the bundled digits SGD workload pushed
+//! through `R ∈ groups` data-parallel replica groups of `ranks`
+//! model-parallel ranks each, per engine and per cross-group gradient
+//! codec. The dataset is fixed, so the sweep is a strong-scaling run at
+//! constant per-group batch (the weak per-group load): `R` groups consume
+//! `R` batches per step, ideally dividing wall time by `R`.
+//!
+//! Per (R, engine, codec) row: wall seconds, samples/s, tail loss, and
+//! the intra-/inter-group wire bytes actually shipped. The CI bench-smoke
+//! job runs this with `SPDNN_SECTION=replica SPDNN_ENFORCE=1`, turning
+//! the acceptance bars into hard failures ([`enforce`]):
+//!
+//! - every row reports nonzero throughput, and `R = 1` rows ship zero
+//!   inter-group bytes (the degenerate ring is message-free);
+//! - the int8+EF gradient exchange ships ≤ [`REPLICA_BYTE_BAR`] of the
+//!   f32 exchange's inter-group bytes at equal R;
+//! - the int8+EF digits SGD tail loss stays within [`REPLICA_LOSS_BAR`]
+//!   of the f32 run's (error feedback makes compression ~free);
+//! - `R = 2` sustains ≥ [`REPLICA_SPEEDUP_BAR`]× the one-group
+//!   samples/s — enforced only when the host exposes at least
+//!   `2 × ranks` hardware threads, since the bar is meaningless when the
+//!   extra group has no core to run on.
+//!
+//! The report is written as `BENCH_replica.json` (schema in
+//! `docs/BENCHMARKS.md`; topology and residual contract in
+//! `docs/TRAINING.md`).
+
+use super::Table;
+use crate::comm::Codec;
+use crate::coordinator::ExecMode;
+use crate::partition::{contiguous_partition, CommPlan};
+use crate::radixnet::{generate, RadixNetConfig};
+use crate::replica::{train_replicas_with_plan, ReplicaConfig};
+use crate::runtime::parallel::FaultScope;
+use crate::util::Stopwatch;
+
+/// `R = 2` must sustain at least this multiple of the one-group
+/// samples/s (enforced only with ≥ `2 × ranks` hardware threads).
+pub const REPLICA_SPEEDUP_BAR: f64 = 1.5;
+/// int8+EF inter-group bytes ≤ this fraction of the f32 exchange.
+pub const REPLICA_BYTE_BAR: f64 = 0.35;
+/// |int8 tail loss − f32 tail loss| / f32 tail loss ≤ this.
+pub const REPLICA_LOSS_BAR: f64 = 0.01;
+
+/// Workload shape and sweep axes of one `spdnn replica` run.
+#[derive(Debug, Clone)]
+pub struct ReplicaBenchConfig {
+    pub neurons: usize,
+    pub layers: usize,
+    /// Model-parallel ranks per group.
+    pub ranks: usize,
+    /// Minibatch size per group per step.
+    pub batch: usize,
+    pub epochs: usize,
+    /// Dataset size (digit samples; `samples / batch` batches per epoch).
+    pub samples: usize,
+    pub eta: f32,
+    pub seed: u64,
+    /// Replica-group counts to sweep. The first entry is the scaling
+    /// baseline; include 1 and 2 or the speedup bar reports 0.
+    pub groups: Vec<usize>,
+    /// Intra-group engines to sweep; the first is the bar reference.
+    pub modes: Vec<ExecMode>,
+    /// Cross-group gradient codecs; the first must be `Codec::F32` (the
+    /// byte/loss bars compare the others against it).
+    pub codecs: Vec<Codec>,
+}
+
+impl Default for ReplicaBenchConfig {
+    fn default() -> Self {
+        Self {
+            neurons: 256,
+            layers: 8,
+            ranks: 2,
+            batch: 4,
+            epochs: 3,
+            samples: 64,
+            eta: 0.2,
+            seed: 42,
+            groups: vec![1, 2, 4],
+            modes: vec![ExecMode::Overlap, ExecMode::pipelined()],
+            codecs: vec![Codec::F32, Codec::int8()],
+        }
+    }
+}
+
+/// One (R, engine, codec) measurement.
+#[derive(Debug, Clone)]
+pub struct ReplicaRow {
+    pub groups: usize,
+    pub mode: &'static str,
+    pub codec: Codec,
+    /// Effective optimizer steps taken (each consumes `groups × batch`
+    /// samples).
+    pub steps: usize,
+    pub secs: f64,
+    pub samples_per_sec: f64,
+    /// Mean loss over the final 10% of steps.
+    pub final_loss: f64,
+    /// Post-codec bytes shipped on the inter-group (all-reduce) fabrics,
+    /// summed over every thread.
+    pub inter_wire_bytes: u64,
+    /// Same for the intra-group (model-parallel) fabrics.
+    pub intra_wire_bytes: u64,
+}
+
+/// Full sweep result plus the derived bar quantities.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub neurons: usize,
+    pub layers: usize,
+    pub ranks: usize,
+    pub batch: usize,
+    pub epochs: usize,
+    /// Hardware threads the host exposes (gates the speedup bar).
+    pub threads: usize,
+    pub rows: Vec<ReplicaRow>,
+    /// samples/s of R=2 over R=1 (first mode, first codec); 0 when the
+    /// sweep lacks either point.
+    pub speedup2: f64,
+    /// int8 / f32 inter-group bytes at R=2 (first mode); 0 when absent.
+    pub int8_byte_ratio: f64,
+    /// Relative int8-vs-f32 tail-loss delta at R=2 (first mode).
+    pub int8_loss_delta: f64,
+}
+
+/// Run the sweep: one replica training run per (R, engine, codec).
+pub fn run(cfg: &ReplicaBenchConfig) -> ReplicaReport {
+    let side = (cfg.neurons as f64).sqrt() as usize;
+    assert_eq!(side * side, cfg.neurons, "digits input needs a square neuron count");
+    let net = generate(
+        &RadixNetConfig::graph_challenge(cfg.neurons, cfg.layers)
+            .unwrap_or_else(|| panic!("unsupported neuron count {}", cfg.neurons)),
+    );
+    let part = contiguous_partition(&net.layers, cfg.ranks);
+    let plan = CommPlan::build(&net.layers, &part);
+    let data = crate::data::synthetic_mnist(side, cfg.samples, cfg.seed);
+    let inputs: Vec<Vec<f32>> = data.samples.iter().map(|s| s.pixels.clone()).collect();
+    let targets: Vec<Vec<f32>> = (0..cfg.samples).map(|i| data.target(i, cfg.neurons)).collect();
+
+    let mut rows = Vec::new();
+    for &groups in &cfg.groups {
+        for &mode in &cfg.modes {
+            for &codec in &cfg.codecs {
+                let rcfg = ReplicaConfig {
+                    groups,
+                    batch: cfg.batch,
+                    eta: cfg.eta,
+                    epochs: cfg.epochs,
+                    mode,
+                    codec,
+                    scope: FaultScope::Off,
+                };
+                let sw = Stopwatch::start();
+                let run = train_replicas_with_plan(&net, &part, &plan, &inputs, &targets, &rcfg);
+                let secs = sw.elapsed_secs();
+                let steps = run.losses.len();
+                let tail = (steps / 10).max(1);
+                let final_loss = run.losses[steps - tail..]
+                    .iter()
+                    .map(|&l| l as f64)
+                    .sum::<f64>()
+                    / tail as f64;
+                let sum_wire = |fabrics: &Vec<Vec<crate::comm::FabricStats>>| -> u64 {
+                    fabrics
+                        .iter()
+                        .flatten()
+                        .map(|st| st.sent_wire_bytes)
+                        .sum()
+                };
+                rows.push(ReplicaRow {
+                    groups,
+                    mode: mode.label(),
+                    codec,
+                    steps,
+                    secs,
+                    samples_per_sec: (steps * groups * cfg.batch) as f64 / secs.max(1e-12),
+                    final_loss,
+                    inter_wire_bytes: sum_wire(&run.inter),
+                    intra_wire_bytes: sum_wire(&run.intra),
+                });
+            }
+        }
+    }
+
+    let mode0 = cfg.modes.first().map(|m| m.label()).unwrap_or("overlap");
+    let codec0 = cfg.codecs.first().copied().unwrap_or(Codec::F32);
+    let find = |g: usize, c: Codec| -> Option<&ReplicaRow> {
+        rows.iter().find(|r| r.groups == g && r.mode == mode0 && r.codec == c)
+    };
+    let speedup2 = match (find(1, codec0), find(2, codec0)) {
+        (Some(r1), Some(r2)) => r2.samples_per_sec / r1.samples_per_sec,
+        _ => 0.0,
+    };
+    let (int8_byte_ratio, int8_loss_delta) = match (find(2, Codec::F32), find(2, Codec::int8())) {
+        (Some(f), Some(q)) => (
+            q.inter_wire_bytes as f64 / f.inter_wire_bytes.max(1) as f64,
+            if f.final_loss > 0.0 {
+                (q.final_loss - f.final_loss) / f.final_loss
+            } else {
+                0.0
+            },
+        ),
+        _ => (0.0, 0.0),
+    };
+    ReplicaReport {
+        neurons: cfg.neurons,
+        layers: cfg.layers,
+        ranks: cfg.ranks,
+        batch: cfg.batch,
+        epochs: cfg.epochs,
+        threads: std::thread::available_parallelism().map_or(1, |n| n.get()),
+        rows,
+        speedup2,
+        int8_byte_ratio,
+        int8_loss_delta,
+    }
+}
+
+/// The enforced CI bars (`SPDNN_ENFORCE=1`). The speedup bar is skipped
+/// (with a log line) when the host cannot physically run two groups in
+/// parallel; the byte and loss bars are machine-independent and always
+/// enforced when their rows exist.
+pub fn enforce(rep: &ReplicaReport) {
+    for r in &rep.rows {
+        assert!(
+            r.secs > 0.0 && r.samples_per_sec > 0.0,
+            "replica bar: R={} {} {} reported no throughput",
+            r.groups,
+            r.mode,
+            r.codec.label()
+        );
+        if r.groups == 1 {
+            assert_eq!(
+                r.inter_wire_bytes, 0,
+                "replica bar: R=1 {} {} shipped inter-group bytes",
+                r.mode,
+                r.codec.label()
+            );
+        } else {
+            assert!(
+                r.inter_wire_bytes > 0,
+                "replica bar: R={} {} {} shipped no gradients",
+                r.groups,
+                r.mode,
+                r.codec.label()
+            );
+        }
+    }
+    if rep.int8_byte_ratio > 0.0 {
+        assert!(
+            rep.int8_byte_ratio <= REPLICA_BYTE_BAR,
+            "replica bar: int8 shipped {:.3} of the f32 inter-group bytes, above {REPLICA_BYTE_BAR}",
+            rep.int8_byte_ratio
+        );
+        assert!(
+            rep.int8_loss_delta.abs() <= REPLICA_LOSS_BAR,
+            "replica bar: int8+EF tail-loss delta {:+.4} outside ±{REPLICA_LOSS_BAR}",
+            rep.int8_loss_delta
+        );
+    }
+    if rep.speedup2 > 0.0 {
+        if rep.threads >= 2 * rep.ranks {
+            assert!(
+                rep.speedup2 >= REPLICA_SPEEDUP_BAR,
+                "replica bar: R=2 speedup {:.3}x below {REPLICA_SPEEDUP_BAR}x \
+                 ({} threads available)",
+                rep.speedup2,
+                rep.threads
+            );
+        } else {
+            crate::log!(
+                Warn,
+                "replica speedup bar skipped: {} hardware threads < {} needed for R=2",
+                rep.threads,
+                2 * rep.ranks
+            );
+        }
+    }
+}
+
+/// Human summary for the CLI.
+pub fn render(rep: &ReplicaReport) -> String {
+    let mut t = Table::new(&[
+        "R", "engine", "codec", "steps", "secs", "samp/s", "tail loss", "inter(KB)", "intra(KB)",
+    ]);
+    for r in &rep.rows {
+        t.row(vec![
+            r.groups.to_string(),
+            r.mode.to_string(),
+            r.codec.label().to_string(),
+            r.steps.to_string(),
+            format!("{:.3}", r.secs),
+            format!("{:.1}", r.samples_per_sec),
+            format!("{:.5}", r.final_loss),
+            format!("{:.1}", r.inter_wire_bytes as f64 / 1e3),
+            format!("{:.1}", r.intra_wire_bytes as f64 / 1e3),
+        ]);
+    }
+    format!(
+        "{}\nR=2 speedup {:.2}x (bar {REPLICA_SPEEDUP_BAR}x, {} threads) | \
+         int8/f32 inter-group bytes {:.3} (bar {REPLICA_BYTE_BAR}) | \
+         int8 tail-loss Δ {:+.3}% (bar ±{:.0}%)",
+        t.render(),
+        rep.speedup2,
+        rep.threads,
+        rep.int8_byte_ratio,
+        rep.int8_loss_delta * 100.0,
+        REPLICA_LOSS_BAR * 100.0
+    )
+}
+
+/// Machine-readable JSON (the CI smoke job writes `BENCH_replica.json`).
+pub fn to_json(rep: &ReplicaReport) -> String {
+    let rows: Vec<String> = rep
+        .rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"groups\":{},\"mode\":\"{}\",\"codec\":\"{}\",\"steps\":{},\
+                 \"secs\":{:.4},\"samples_per_sec\":{:.2},\"final_loss\":{:.6},\
+                 \"inter_wire_bytes\":{},\"intra_wire_bytes\":{}}}",
+                r.groups,
+                r.mode,
+                r.codec.label(),
+                r.steps,
+                r.secs,
+                r.samples_per_sec,
+                r.final_loss,
+                r.inter_wire_bytes,
+                r.intra_wire_bytes
+            )
+        })
+        .collect();
+    format!(
+        "{{\"neurons\":{},\"layers\":{},\"ranks\":{},\"batch\":{},\"epochs\":{},\
+         \"threads\":{},\"rows\":[{}],\"speedup2\":{:.4},\"int8_byte_ratio\":{:.4},\
+         \"int8_loss_delta\":{:.6},\"speedup_bar\":{REPLICA_SPEEDUP_BAR},\
+         \"byte_bar\":{REPLICA_BYTE_BAR},\"loss_bar\":{REPLICA_LOSS_BAR}}}",
+        rep.neurons,
+        rep.layers,
+        rep.ranks,
+        rep.batch,
+        rep.epochs,
+        rep.threads,
+        rows.join(","),
+        rep.speedup2,
+        rep.int8_byte_ratio,
+        rep.int8_loss_delta
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_produces_consistent_rows() {
+        let cfg = ReplicaBenchConfig {
+            neurons: 64,
+            layers: 3,
+            ranks: 2,
+            batch: 2,
+            epochs: 1,
+            samples: 16,
+            eta: 0.1,
+            seed: 5,
+            groups: vec![1, 2],
+            modes: vec![ExecMode::Overlap],
+            codecs: vec![Codec::F32, Codec::int8()],
+        };
+        let rep = run(&cfg);
+        assert_eq!(rep.rows.len(), 4);
+        for r in &rep.rows {
+            assert!(r.secs > 0.0 && r.samples_per_sec > 0.0);
+            assert!(r.final_loss.is_finite() && r.final_loss > 0.0);
+            if r.groups == 1 {
+                assert_eq!(r.inter_wire_bytes, 0, "{} {}", r.mode, r.codec.label());
+            } else {
+                assert!(r.inter_wire_bytes > 0);
+            }
+            assert!(r.intra_wire_bytes > 0);
+        }
+        // R=1 takes 8 steps over the 8 batches, R=2 takes 4
+        assert_eq!(rep.rows[0].steps, 8);
+        assert_eq!(rep.rows[2].steps, 4);
+        // compression is real on the gradient exchange even at this toy
+        // size, where the per-payload headers weigh most; the CI bench
+        // enforces the tight REPLICA_BYTE_BAR on the full-size workload
+        assert!(
+            rep.int8_byte_ratio > 0.0 && rep.int8_byte_ratio < 0.5,
+            "int8 byte ratio {}",
+            rep.int8_byte_ratio
+        );
+        assert!(rep.int8_loss_delta.abs() < 0.05, "Δ {}", rep.int8_loss_delta);
+        assert!(rep.speedup2 > 0.0);
+
+        let json = to_json(&rep);
+        assert!(json.contains("\"rows\":[{"), "{json}");
+        assert!(json.contains("\"speedup2\":"), "{json}");
+        assert!(json.contains("\"codec\":\"int8\""), "{json}");
+        let text = render(&rep);
+        assert!(text.contains("inter(KB)") && text.contains("int8"), "{text}");
+    }
+}

@@ -38,6 +38,7 @@ pub mod dnn;
 pub mod experiments;
 pub mod obs;
 pub mod radixnet;
+pub mod replica;
 pub mod runtime;
 pub mod serving;
 pub mod sparse;

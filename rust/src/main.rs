@@ -7,7 +7,9 @@
 //! spdnn throughput [--neurons 1024,4096] [--layers 24] [--ranks 128] [--batch 64] [--full]
 //! spdnn ptimes     [--neurons 1024] [--parts 32,64,128] [--layers 24] [--full]
 //! spdnn ablate     [--neurons 1024] [--parts 8,32] [--layers 24]
-//! spdnn train      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 100] [--eta 0.01] [--batch 1] [--codec f32|f16|int8]
+//! spdnn train      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 100] [--eta 0.01] [--batch 1] [--codec f32|f16|int8] [--replicas R]
+//! spdnn replica    [--neurons 256] [--layers 8] [--ranks 2] [--batch 4] [--epochs 3] [--samples 64]
+//!                  [--groups 1,2,4] [--modes overlap,pipelined] [--codecs f32,int8] [--out BENCH_replica.json]
 //! spdnn infer      [--neurons 1024] [--layers 12] [--ranks 4] [--batch 64] [--method h|r] [--mode overlap] [--codec f32|f16|int8]
 //! spdnn codec      [--neurons 1024] [--layers 12] [--ranks 4] [--steps 200] [--eta 0.1]
 //! spdnn partition  [--neurons 1024] [--layers 12] [--ranks 8]
@@ -24,7 +26,11 @@
 //!
 //! `--full` switches to the paper's full grid (slow on one core; for
 //! `graphchallenge` it streams the challenge's 60 000 inputs). The wire
-//! codec also reads the `SPDNN_CODEC` env var when `--codec` is absent.
+//! codec also reads the `SPDNN_CODEC` env var when `--codec` is absent;
+//! `train` reads `SPDNN_REPLICAS` when `--replicas` is absent and routes
+//! through the replica-group drivers when R > 1 (`docs/TRAINING.md`).
+//! `replica` sweeps the replica-group scaling harness and writes
+//! `BENCH_replica.json` (enforced bars under `SPDNN_ENFORCE=1`).
 //! `trace` writes Chrome trace-event JSON (open in Perfetto or
 //! `chrome://tracing`) with span coverage and a replay-drift report under
 //! the `"spdnn"` key. See the README's CLI reference section for the
@@ -66,6 +72,7 @@ fn main() {
         "ablate" => cmd_ablate(&args),
         "codec" => cmd_codec(&args),
         "train" => cmd_train(&args),
+        "replica" => cmd_replica(&args),
         "infer" => cmd_infer(&args),
         "partition" => cmd_partition(&args),
         "graphchallenge" => cmd_graphchallenge(&args),
@@ -81,8 +88,8 @@ fn help() {
     println!("spdnn — Partitioning Sparse DNNs (ICS'21) reproduction");
     println!("experiments: table1 | scaling | breakdown | throughput | ptimes | ablate | codec");
     println!(
-        "workloads:   train | infer | partition | graphchallenge | trace | chaos | check | \
-         calibrate"
+        "workloads:   train | replica | infer | partition | graphchallenge | trace | chaos | \
+         check | calibrate"
     );
     println!("see `rust/src/main.rs` header or README.md for flags");
 }
@@ -271,6 +278,39 @@ fn cmd_train(args: &Args) {
     let batch = args.get_usize("batch", 1);
     let codec = codec_of(args);
     let plan = CommPlan::build_with_codec(&structure, &part, codec, codec);
+    let groups = args.get_usize("replicas", spdnn::replica::replicas_from_env());
+    if groups > 1 {
+        // hybrid data×model parallelism: R replica groups of `ranks` each,
+        // cross-group gradients ring-all-reduced under `codec` (+EF when
+        // lossy) — see docs/TRAINING.md
+        let rcfg = spdnn::replica::ReplicaConfig {
+            groups,
+            batch: batch.max(1),
+            eta,
+            epochs: 1,
+            mode: ExecMode::Overlap,
+            codec,
+            scope: spdnn::runtime::parallel::FaultScope::Env,
+        };
+        let run =
+            spdnn::replica::train_replicas_with_plan(&net, &part, &plan, &inputs, &targets, &rcfg);
+        for (i, l) in run.losses.iter().enumerate() {
+            if i % 10 == 0 || i + 1 == run.losses.len() {
+                println!("step {i:>5}  loss {l:.6}  (effective batch {})", groups * batch.max(1));
+            }
+        }
+        let wire = |fabrics: &[Vec<spdnn::comm::FabricStats>]| -> u64 {
+            fabrics.iter().flatten().map(|st| st.sent_wire_bytes).sum()
+        };
+        println!(
+            "R={groups} groups x {ranks} ranks, codec {}: {:.1} KB intra-group, \
+             {:.1} KB inter-group (all-reduce) on the wire",
+            codec.label(),
+            wire(&run.intra) as f64 / 1e3,
+            wire(&run.inter) as f64 / 1e3
+        );
+        return;
+    }
     let run = if batch > 1 {
         // §5.1 minibatch SpMM variant
         train_minibatch_with_plan(&net, &part, &plan, &inputs, &targets, batch, eta, 1)
@@ -288,6 +328,56 @@ fn cmd_train(args: &Args) {
         codec.label(),
         run.sent.iter().map(|&(w, _)| w).sum::<u64>() as f64 * 4.0 / 1e3
     );
+}
+
+/// `spdnn replica` — the replica-group weak/strong-scaling harness
+/// (`experiments::replica`): digits SGD at R ∈ `--groups` replica groups
+/// per engine per gradient codec, written to `BENCH_replica.json`;
+/// `SPDNN_ENFORCE=1` turns the scaling/compression/loss bars into hard
+/// failures (the CI bench-smoke path uses `SPDNN_SECTION=replica`).
+fn cmd_replica(args: &Args) {
+    let mut cfg = experiments::replica::ReplicaBenchConfig {
+        neurons: args.get_usize("neurons", 256),
+        layers: args.get_usize("layers", 8),
+        ranks: args.get_usize("ranks", 2),
+        batch: args.get_usize("batch", 4),
+        epochs: args.get_usize("epochs", 3),
+        samples: args.get_usize("samples", 64),
+        eta: args.get_f32("eta", 0.2),
+        seed: args.get_u64("seed", 42),
+        groups: args.get_usize_list("groups", &[1, 2, 4]),
+        ..Default::default()
+    };
+    if let Some(spec) = args.get("modes") {
+        cfg.modes = spec
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                ExecMode::from_name(s).unwrap_or_else(|| panic!("unknown mode '{s}' in --modes"))
+            })
+            .collect();
+    }
+    if let Some(spec) = args.get("codecs") {
+        cfg.codecs = spec
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| Codec::parse(s).unwrap_or_else(|| panic!("unknown codec '{s}' in --codecs")))
+            .collect();
+    }
+    println!(
+        "# Replica-group scaling — N={} L={} at {} ranks/group, b={} x {} epochs, R in {:?}",
+        cfg.neurons, cfg.layers, cfg.ranks, cfg.batch, cfg.epochs, cfg.groups
+    );
+    let rep = experiments::replica::run(&cfg);
+    println!("{}", experiments::replica::render(&rep));
+    let json = experiments::replica::to_json(&rep);
+    let out = args.get_str("out", "BENCH_replica.json");
+    std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!("wrote {out}: {json}");
+    if std::env::var("SPDNN_ENFORCE").is_ok() {
+        experiments::replica::enforce(&rep);
+        println!("enforced bars passed: scaling, gradient compression, EF loss parity");
+    }
 }
 
 fn cmd_infer(args: &Args) {
@@ -470,15 +560,18 @@ fn cmd_partition(args: &Args) {
 
 /// `spdnn check` — the static plan verifier (see `docs/ANALYSIS.md`).
 /// Runs [`spdnn::analysis::check_builtin_matrix`] over every built-in
-/// configuration (nets × partitions × engine modes × codecs), plus the
-/// trace-span taxonomy conformance checks, writes the JSON report array
-/// to `--out`, and exits nonzero if any violation was found. `--no-live`
-/// skips the traced micro-runs (they spawn rank threads).
+/// configuration (nets × partitions × engine modes × codecs), the
+/// replica-ring all-reduce matrix ([`spdnn::analysis::check_replica_matrix`],
+/// `R...` codes), plus the trace-span taxonomy conformance checks, writes
+/// the JSON report array to `--out`, and exits nonzero if any violation
+/// was found. `--no-live` skips the traced micro-runs (they spawn rank
+/// threads).
 fn cmd_check(args: &Args) {
     use spdnn::analysis::{self, taxonomy, CheckReport};
 
     let seed = args.get_u64("seed", 7);
     let mut reports = analysis::check_builtin_matrix(seed);
+    reports.extend(analysis::check_replica_matrix());
     let mut tax = Vec::new();
     taxonomy::check_doc(&mut tax);
     if !args.has("no-live") {

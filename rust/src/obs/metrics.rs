@@ -156,6 +156,56 @@ impl MetricsRegistry {
         }
     }
 
+    /// Record one replica-group training thread's fabric counters,
+    /// labelled by group, rank, and which of its two fabrics they came
+    /// from (`intra` = the model-parallel engine traffic inside the
+    /// group, `inter` = the cross-group gradient all-reduce ring). The
+    /// replica drivers feed every `[group][rank]` cell of both counter
+    /// grids through here, so the intra/inter split — the whole point of
+    /// compressing the gradient exchange — is scrapeable directly.
+    pub fn record_replica_fabric(
+        &mut self,
+        group: usize,
+        rank: u32,
+        fabric: &'static str,
+        st: &FabricStats,
+    ) {
+        let l = [
+            ("group", group.to_string()),
+            ("rank", rank.to_string()),
+            ("fabric", fabric.to_string()),
+        ];
+        self.counter(
+            "spdnn_replica_sent_words_total",
+            "Wire words sent per replica-group thread, split by intra/inter fabric.",
+            &l,
+            st.sent_words as f64,
+        );
+        for (dir, msgs, bytes) in [
+            ("send", st.sent_msgs, st.sent_wire_bytes),
+            ("recv", st.recv_msgs, st.recv_wire_bytes),
+        ] {
+            let ld = [
+                ("group", group.to_string()),
+                ("rank", rank.to_string()),
+                ("fabric", fabric.to_string()),
+                ("dir", dir.to_string()),
+            ];
+            self.counter(
+                "spdnn_replica_msgs_total",
+                "Messages per replica-group thread, fabric, and direction.",
+                &ld,
+                msgs as f64,
+            );
+            self.counter(
+                "spdnn_replica_wire_bytes_total",
+                "Post-codec wire bytes per replica-group thread, fabric, and direction.",
+                &ld,
+                bytes as f64,
+            );
+        }
+    }
+
     /// Record a serving-pool snapshot: request/batch/shed/rebuild
     /// counters, byte totals, the recovery counters (retries, respawns,
     /// watchdog trips, checksum failures, breaker state), and the latency
@@ -319,6 +369,28 @@ mod tests {
         assert_eq!(text.matches("# TYPE spdnn_phase_seconds_total counter").count(), 1);
         assert!(text.contains("spdnn_phase_seconds_total{rank=\"0\",phase=\"spmv\"} 0.25"));
         assert!(text.contains("spdnn_phase_seconds_total{rank=\"1\",phase=\"wait\"} 0.75"));
+    }
+
+    #[test]
+    fn replica_fabric_rows_carry_group_and_fabric_labels() {
+        let st = FabricStats {
+            sent_words: 64,
+            sent_msgs: 3,
+            sent_raw_bytes: 512,
+            sent_wire_bytes: 256,
+            recv_msgs: 3,
+            recv_wire_bytes: 256,
+            peers: Vec::new(),
+        };
+        let mut reg = MetricsRegistry::new();
+        reg.record_replica_fabric(1, 0, "inter", &st);
+        let text = reg.render();
+        assert!(text.contains(
+            "spdnn_replica_sent_words_total{group=\"1\",rank=\"0\",fabric=\"inter\"} 64"
+        ));
+        assert!(text.contains(
+            "spdnn_replica_wire_bytes_total{group=\"1\",rank=\"0\",fabric=\"inter\",dir=\"send\"} 256"
+        ));
     }
 
     #[test]

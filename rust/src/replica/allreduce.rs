@@ -1,0 +1,371 @@
+//! Ring all-reduce of flat layer gradients across replica groups, with
+//! error-feedback (EF-SGD) residual compression.
+//!
+//! Runs over one **inter-group** endpoint per rank thread (see
+//! [`crate::runtime::parallel::run_groups`]): the `R` same-rank threads
+//! of the `R` replica groups form one ring, and each rank's ring reduces
+//! that rank's own gradient slice — per-row partitioning already aligns
+//! gradient ownership with rank ownership, so no cross-rank traffic is
+//! ever needed here.
+//!
+//! **Determinism contract.** Replicas must apply *bit-identical* updates
+//! or their weights drift apart silently. Two mechanisms guarantee it:
+//!
+//! 1. in the allgather phase the segment owner encodes its fully-reduced
+//!    segment exactly **once** and the encoded bytes travel the ring
+//!    verbatim ([`Endpoint::send_wire_payload`]) — every group, the owner
+//!    included, uses the *decoded* values, so a lossy codec can never
+//!    diverge the replicas;
+//! 2. in the reduce-scatter phase each segment's partial sum accumulates
+//!    along a fixed ring chain, so the summation order is a function of
+//!    the segment id alone.
+//!
+//! **Error feedback.** Every lossy encode leaves its quantization error
+//! `raw − decode(encode(raw))` in the *encoding group's* per-layer
+//! residual. At the next step [`GradAllReduce::all_reduce_layer`] folds
+//! the carried residual into the fresh gradient before exchanging it —
+//! the EF-SGD recipe that keeps compressed SGD converging at SGD rates.
+//! Under [`Codec::F32`] every encode is lossless, the residual stays
+//! zero, and the all-reduce is exact.
+//!
+//! [`Endpoint::send_wire_payload`]: crate::comm::fabric::Endpoint::send_wire_payload
+
+use super::topology::{
+    gather_recv_seg, gather_send_seg, owned_seg, scatter_recv_seg, scatter_send_seg, seg_bounds,
+};
+use crate::comm::{Codec, Endpoint, Phase};
+use crate::obs::{Tracer, NO_CHUNK};
+
+/// Per-thread state of the cross-group gradient exchange: the ring
+/// geometry plus one EF residual vector per layer, living as long as the
+/// training loop so residuals carry across steps.
+pub struct GradAllReduce {
+    /// Replica-group count R (ring length).
+    pub groups: usize,
+    /// This thread's group id — its rank on the inter-group fabric.
+    pub group: usize,
+    /// Wire codec of the gradient exchange (independent of the
+    /// activation/delta codecs of the intra-group plan).
+    pub codec: Codec,
+    /// EF residual per layer, sized lazily to the layer's flat gradient
+    /// length on first use; all zeros under a lossless codec.
+    residual: Vec<Vec<f32>>,
+}
+
+impl GradAllReduce {
+    /// A fresh exchange state for a `depth`-layer model.
+    pub fn new(groups: usize, group: usize, codec: Codec, depth: usize) -> Self {
+        assert!(group < groups, "group id out of range");
+        Self {
+            groups,
+            group,
+            codec,
+            residual: (0..depth).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Read access to a layer's EF residual (testing / diagnostics).
+    pub fn residual(&self, k: usize) -> &[f32] {
+        &self.residual[k]
+    }
+
+    /// Fold the carried residual into `g`, then ring-all-reduce `g` in
+    /// place across the replica groups. On return every group holds the
+    /// **identical** summed gradient (the unaveraged Σ over groups —
+    /// apply with `eta / R`), and this group's residual holds the
+    /// quantization errors of every encode it performed this step.
+    ///
+    /// `R = 1` degenerates to the residual fold alone (a no-op under a
+    /// lossless codec): zero messages, zero encodes.
+    pub fn all_reduce_layer(
+        &mut self,
+        ep: &mut Endpoint,
+        tracer: &mut Tracer,
+        k: usize,
+        g: &mut [f32],
+    ) {
+        let r = self.groups;
+        let m = g.len();
+        let e = &mut self.residual[k];
+        if e.len() != m {
+            assert!(e.is_empty(), "layer {k} gradient length changed mid-run");
+            e.resize(m, 0.0);
+        }
+        let sp = tracer.start();
+        for (gi, ei) in g.iter_mut().zip(e.iter_mut()) {
+            *gi += *ei;
+            *ei = 0.0;
+        }
+        tracer.end(sp, "allreduce.fold", "alr", k as u32, NO_CHUNK, 0);
+        if r == 1 {
+            return;
+        }
+        let me = self.group;
+        let next = ((me + 1) % r) as u32;
+        let prev = ((me + r - 1) % r) as u32;
+        let kk = k as u32;
+        // Checked-F32 still decodes bit-exactly, so EF bookkeeping is
+        // skipped for F32 regardless of the envelope.
+        let lossless = self.codec == Codec::F32;
+
+        // Phase 1 — reduce-scatter: R−1 hops, each accumulating one more
+        // partial sum; afterwards this group owns segment (me+1) mod R.
+        let sp = tracer.start();
+        let mut moved = 0u64;
+        for t in 0..r - 1 {
+            let s_send = scatter_send_seg(me, r, t);
+            let (lo, hi) = seg_bounds(m, r, s_send);
+            let wire = ep.encode_wire(self.codec, &g[lo..hi]);
+            if !lossless {
+                let dec = ep.decode_wire(self.codec, &wire);
+                for (i, d) in dec.iter().enumerate() {
+                    e[lo + i] += g[lo + i] - d;
+                }
+                ep.recycle(dec);
+            }
+            moved += 4 * wire.len() as u64;
+            ep.send_wire_payload(next, kk, Phase::Forward, t as u32, s_send as u32, wire, hi - lo);
+
+            let s_recv = scatter_recv_seg(me, r, t);
+            let (lo, hi) = seg_bounds(m, r, s_recv);
+            let (_, payload) =
+                ep.recv_any(kk, Phase::Forward, &[(prev, t as u32, s_recv as u32)]);
+            let dec = ep.decode_payload(self.codec, payload);
+            debug_assert_eq!(dec.len(), hi - lo);
+            for (i, d) in dec.iter().enumerate() {
+                g[lo + i] += d;
+            }
+            ep.recycle(dec);
+        }
+        tracer.end(sp, "allreduce.scatter", "alr", kk, NO_CHUNK, moved);
+
+        // Phase 2 — allgather: encode the owned segment ONCE, then every
+        // hop forwards received bytes verbatim, so all groups decode
+        // identical values.
+        let sp = tracer.start();
+        let mut moved = 0u64;
+        {
+            let s_own = owned_seg(me, r);
+            debug_assert_eq!(gather_send_seg(me, r, 0), s_own);
+            let (lo, hi) = seg_bounds(m, r, s_own);
+            let wire = ep.encode_wire(self.codec, &g[lo..hi]);
+            if !lossless {
+                let dec = ep.decode_wire(self.codec, &wire);
+                for (i, d) in dec.iter().enumerate() {
+                    e[lo + i] += g[lo + i] - d;
+                }
+                // the owner applies the decoded values too — replicas
+                // must end the step with bit-identical gradients
+                g[lo..hi].copy_from_slice(&dec);
+                ep.recycle(dec);
+            }
+            moved += 4 * wire.len() as u64;
+            ep.send_wire_payload(next, kk, Phase::Backward, 0, s_own as u32, wire, hi - lo);
+        }
+        for t in 0..r - 1 {
+            let s_recv = gather_recv_seg(me, r, t);
+            let (lo, hi) = seg_bounds(m, r, s_recv);
+            let (_, payload) =
+                ep.recv_any(kk, Phase::Backward, &[(prev, t as u32, s_recv as u32)]);
+            let dec = ep.decode_wire(self.codec, &payload);
+            debug_assert_eq!(dec.len(), hi - lo);
+            g[lo..hi].copy_from_slice(&dec);
+            ep.recycle(dec);
+            if t + 1 < r - 1 {
+                debug_assert_eq!(gather_send_seg(me, r, t + 1), s_recv);
+                moved += 4 * payload.len() as u64;
+                ep.send_wire_payload(
+                    next,
+                    kk,
+                    Phase::Backward,
+                    (t + 1) as u32,
+                    s_recv as u32,
+                    payload,
+                    hi - lo,
+                );
+            } else {
+                ep.recycle(payload);
+            }
+        }
+        tracer.end(sp, "allreduce.gather", "alr", kk, NO_CHUNK, moved);
+    }
+}
+
+/// Exact wire words group `me` sends per step for one all-reduce of a
+/// length-`m` gradient: the reduce-scatter encodes plus the allgather
+/// sends (own segment + verbatim forwards). The live inter-fabric
+/// counters must match this prediction times the step count — the R004
+/// cross-check of [`crate::analysis::check_replica`].
+pub fn predicted_wire_words(me: usize, groups: usize, m: usize, codec: Codec, checked: bool) -> u64 {
+    if groups == 1 {
+        return 0;
+    }
+    let ww = |len: usize| -> u64 {
+        if checked {
+            codec.checked_wire_words(len) as u64
+        } else {
+            codec.wire_words(len) as u64
+        }
+    };
+    let mut words = 0u64;
+    for t in 0..groups - 1 {
+        let (lo, hi) = seg_bounds(m, groups, scatter_send_seg(me, groups, t));
+        words += ww(hi - lo);
+        let (lo, hi) = seg_bounds(m, groups, gather_send_seg(me, groups, t));
+        words += ww(hi - lo);
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceMode;
+    use crate::runtime::parallel::run_ranks;
+
+    /// All-reduce one vector per "group" over a plain fabric; returns the
+    /// per-group results plus each group's residual.
+    fn ring(groups: usize, codec: Codec, inputs: Vec<Vec<f32>>) -> Vec<(Vec<f32>, Vec<f32>)> {
+        let run = run_ranks(groups, |g, ep| {
+            let mut tracer = Tracer::new(TraceMode::Off, g as u32);
+            let mut ar = GradAllReduce::new(groups, g, codec, 1);
+            let mut grad = inputs[g].clone();
+            ar.all_reduce_layer(ep, &mut tracer, 0, &mut grad);
+            (grad, ar.residual(0).to_vec())
+        })
+        .expect("ring must not deadlock");
+        run.outputs
+    }
+
+    #[test]
+    fn f32_ring_is_exact_and_identical_across_groups() {
+        // integer-valued entries: every summation order is exact, so the
+        // result must equal the plain sum bit-for-bit
+        for groups in [1usize, 2, 3, 4, 5] {
+            for m in [0usize, 1, 2, 5, 37, 256] {
+                let inputs: Vec<Vec<f32>> = (0..groups)
+                    .map(|g| (0..m).map(|i| ((g * 31 + i * 7) % 23) as f32 - 11.0).collect())
+                    .collect();
+                let expect: Vec<f32> = (0..m)
+                    .map(|i| inputs.iter().map(|v| v[i]).sum::<f32>())
+                    .collect();
+                let outs = ring(groups, Codec::F32, inputs);
+                for (g, (grad, resid)) in outs.iter().enumerate() {
+                    assert_eq!(grad, &expect, "R={groups} m={m} group {g}");
+                    assert!(resid.iter().all(|&x| x == 0.0), "F32 residual must stay 0");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_ring_keeps_groups_bit_identical_and_accounts_errors() {
+        let groups = 4;
+        let m = 100;
+        let inputs: Vec<Vec<f32>> = (0..groups)
+            .map(|g| {
+                let mut rng = crate::util::Rng::new(11 + g as u64);
+                (0..m).map(|_| rng.gen_f32_range(-2.0, 2.0)).collect()
+            })
+            .collect();
+        let expect: Vec<f32> = (0..m)
+            .map(|i| inputs.iter().map(|v| v[i]).sum::<f32>())
+            .collect();
+        for codec in [Codec::F16, Codec::int8(), Codec::Int8 { group: 16 }] {
+            let outs = ring(groups, codec, inputs.clone());
+            let first = &outs[0].0;
+            for (g, (grad, _)) in outs.iter().enumerate() {
+                for (a, b) in grad.iter().zip(first.iter()) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{codec:?} group {g}: replicas diverged"
+                    );
+                }
+                // lossy, but bounded: int8/f16 on O(1) sums of 4 terms
+                for (a, b) in grad.iter().zip(expect.iter()) {
+                    assert!((a - b).abs() < 0.5, "{codec:?}: {a} vs {b}");
+                }
+            }
+            // EF bookkeeping: every group encoded something, so some
+            // residual mass must exist (random floats never quantize
+            // exactly), and folding it next step must recover the loss:
+            // residual ≈ pre-encode − decoded contribution.
+            let any_residual = outs
+                .iter()
+                .any(|(_, r)| r.iter().any(|&x| x != 0.0));
+            assert!(any_residual, "{codec:?}: lossy encode left no residual");
+        }
+    }
+
+    #[test]
+    fn residual_folds_into_next_step() {
+        // two steps with the same gradient: step 2's fold must add step
+        // 1's residual before exchanging.
+        let groups = 2;
+        let m = 40;
+        let run = run_ranks(groups, |g, ep| {
+            let mut tracer = Tracer::new(TraceMode::Off, g as u32);
+            let mut ar = GradAllReduce::new(groups, g, Codec::int8(), 1);
+            let mut rng = crate::util::Rng::new(5 + g as u64);
+            let base: Vec<f32> = (0..m).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let mut g1 = base.clone();
+            ar.all_reduce_layer(ep, &mut tracer, 0, &mut g1);
+            let resid_after_1 = ar.residual(0).to_vec();
+            let mut g2 = base.clone();
+            ar.all_reduce_layer(ep, &mut tracer, 0, &mut g2);
+            (base, g1, resid_after_1, g2)
+        })
+        .expect("ring must not deadlock");
+        let (_, g1, resid, g2) = &run.outputs[0];
+        assert!(resid.iter().any(|&x| x != 0.0));
+        // the second step exchanged base + residual, so its result must
+        // differ from a plain repeat wherever the residual had mass
+        assert!(
+            g1.iter().zip(g2.iter()).any(|(a, b)| a != b),
+            "residual fold had no effect"
+        );
+    }
+
+    #[test]
+    fn predicted_wire_words_match_live_counters() {
+        for groups in [2usize, 3, 4] {
+            for m in [5usize, 64, 101] {
+                for codec in [Codec::F32, Codec::F16, Codec::int8()] {
+                    let inputs: Vec<Vec<f32>> =
+                        (0..groups).map(|g| vec![g as f32 * 0.5; m]).collect();
+                    let run = run_ranks(groups, |g, ep| {
+                        let mut tracer = Tracer::new(TraceMode::Off, g as u32);
+                        let mut ar = GradAllReduce::new(groups, g, codec, 1);
+                        let mut grad = inputs[g].clone();
+                        ar.all_reduce_layer(ep, &mut tracer, 0, &mut grad);
+                        ep.sent_words
+                    })
+                    .expect("ring must not deadlock");
+                    for (g, &words) in run.outputs.iter().enumerate() {
+                        assert_eq!(
+                            words,
+                            predicted_wire_words(g, groups, m, codec, false),
+                            "R={groups} m={m} {codec:?} group {g}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_ring_shrinks_wire_bytes_vs_f32() {
+        let (groups, m) = (2usize, 4096usize);
+        let f32_words: u64 = (0..groups)
+            .map(|g| predicted_wire_words(g, groups, m, Codec::F32, false))
+            .sum();
+        let int8_words: u64 = (0..groups)
+            .map(|g| predicted_wire_words(g, groups, m, Codec::int8(), false))
+            .sum();
+        assert!(
+            (int8_words as f64) < 0.35 * f32_words as f64,
+            "int8 ring must stay under the 0.35× wire bar: {int8_words} vs {f32_words}"
+        );
+    }
+}

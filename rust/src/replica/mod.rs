@@ -1,0 +1,37 @@
+//! Replica-group training subsystem: hybrid data×model parallelism.
+//!
+//! The paper's engines partition the **model** across ranks; this module
+//! adds the orthogonal **data** axis. `R` replica groups each hold a full
+//! copy of the row-partitioned model and run one of the existing engines
+//! (blocking / overlap / pipelined) on their own minibatch shard over a
+//! private intra-group fabric; at each step's update window the groups
+//! ring-all-reduce their per-layer flat gradients over `k` inter-group
+//! fabrics (one per rank index — gradient ownership is row-aligned, so
+//! rank `j` only ever exchanges with the other groups' rank `j`) and
+//! apply the group-averaged update. Compressed exchanges (f16 / int8 via
+//! [`crate::comm::Codec`]) carry an EF-SGD error-feedback residual per
+//! (group, layer), folded into the next step's payload.
+//!
+//! - [`topology`]: segment ranges + the two-phase hop schedule, shared by
+//!   the live engine and the static `R0xx` verifier;
+//! - [`allreduce`]: the [`GradAllReduce`] engine and its wire-accounting
+//!   prediction;
+//! - [`train`]: the replica-aware training drivers and the single-thread
+//!   reference semantics.
+//!
+//! See `docs/TRAINING.md` for the topology diagrams and the EF-SGD
+//! residual contract.
+
+pub mod allreduce;
+pub mod topology;
+pub mod train;
+
+pub use allreduce::{predicted_wire_words, GradAllReduce};
+pub use topology::{
+    gather_recv_seg, gather_send_seg, owned_seg, owner_of_seg, replicas_from_env, scatter_recv_seg,
+    scatter_send_seg, seg_bounds, REPLICAS_ENV,
+};
+pub use train::{
+    replica_serial_reference, train_replicas, train_replicas_traced, train_replicas_with_plan,
+    ReplicaConfig, ReplicaTrainRun,
+};

@@ -1,0 +1,212 @@
+//! Replica-group ring topology: segment ranges and the hop schedule of
+//! the gradient all-reduce.
+//!
+//! A length-`m` flat gradient is split into `R` contiguous segments
+//! ([`seg_bounds`]); the ring all-reduce moves them in two phases of
+//! `R − 1` hops each, every hop sending one segment to the next group and
+//! receiving one from the previous group:
+//!
+//! - **reduce-scatter** (tagged [`Phase::Forward`]): at hop `t` group `g`
+//!   sends segment `(g − t) mod R` and accumulates the received segment
+//!   `(g − t − 1) mod R` into its running partial sum. After `R − 1` hops
+//!   group `g` holds the complete sum of segment [`owned_seg`]`(g) =
+//!   (g + 1) mod R`.
+//! - **allgather** (tagged [`Phase::Backward`]): the owner encodes its
+//!   fully-reduced segment once and the bytes travel the ring verbatim —
+//!   at hop `t` group `g` sends segment `(g + 1 − t) mod R` and receives
+//!   `(g − t) mod R`.
+//!
+//! Every hop each group posts exactly one send and one matching receive
+//! with deterministic `(layer, phase, transfer = hop, chunk = segment)`
+//! tags: a **perfect matching**, so the schedule is deadlock-free by
+//! construction. The static verifier
+//! ([`crate::analysis::check_replica`]) re-derives this property
+//! combinatorially from the same functions the live engine executes.
+//!
+//! [`Phase::Forward`]: crate::comm::Phase::Forward
+//! [`Phase::Backward`]: crate::comm::Phase::Backward
+
+/// Environment variable selecting the replica-group count for CLI
+/// drivers (`SPDNN_REPLICAS`, default 1 = plain model parallelism).
+pub const REPLICAS_ENV: &str = "SPDNN_REPLICAS";
+
+/// Replica-group count from the `SPDNN_REPLICAS` environment contract:
+/// a positive integer, anything unset/unparsable falls back to 1.
+pub fn replicas_from_env() -> usize {
+    std::env::var(REPLICAS_ENV)
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&r| r >= 1)
+        .unwrap_or(1)
+}
+
+/// Half-open range `[lo, hi)` of segment `seg` of a length-`m` gradient
+/// split into `groups` contiguous segments. Segments are balanced to
+/// within one element, disjoint, and cover `[0, m)` exactly; segments may
+/// be empty when `m < groups`.
+pub fn seg_bounds(m: usize, groups: usize, seg: usize) -> (usize, usize) {
+    debug_assert!(seg < groups);
+    (seg * m / groups, (seg + 1) * m / groups)
+}
+
+/// The segment group `me` owns (holds fully reduced) after the
+/// reduce-scatter phase.
+pub fn owned_seg(me: usize, groups: usize) -> usize {
+    (me + 1) % groups
+}
+
+/// The group that owns `seg` after the reduce-scatter phase — inverse of
+/// [`owned_seg`].
+pub fn owner_of_seg(seg: usize, groups: usize) -> usize {
+    (seg + groups - 1) % groups
+}
+
+/// Segment group `me` sends at reduce-scatter hop `hop ∈ [0, R−1)`.
+pub fn scatter_send_seg(me: usize, groups: usize, hop: usize) -> usize {
+    (me + groups - hop % groups) % groups
+}
+
+/// Segment group `me` receives (and accumulates) at reduce-scatter hop
+/// `hop` — what its ring predecessor sends at the same hop.
+pub fn scatter_recv_seg(me: usize, groups: usize, hop: usize) -> usize {
+    scatter_send_seg((me + groups - 1) % groups, groups, hop)
+}
+
+/// Segment group `me` sends at allgather hop `hop ∈ [0, R−1)`: its own
+/// segment at hop 0, then each received segment forwarded verbatim.
+pub fn gather_send_seg(me: usize, groups: usize, hop: usize) -> usize {
+    (me + 1 + groups - hop % groups) % groups
+}
+
+/// Segment group `me` receives at allgather hop `hop` — what its ring
+/// predecessor sends at the same hop.
+pub fn gather_recv_seg(me: usize, groups: usize, hop: usize) -> usize {
+    gather_send_seg((me + groups - 1) % groups, groups, hop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_partition_the_gradient() {
+        for groups in 1..=6 {
+            for m in [0usize, 1, 2, 3, 5, 7, 64, 1000] {
+                let mut covered = 0usize;
+                for s in 0..groups {
+                    let (lo, hi) = seg_bounds(m, groups, s);
+                    assert_eq!(lo, covered, "R={groups} m={m} seg {s} not contiguous");
+                    assert!(hi >= lo);
+                    // balanced to within one element
+                    assert!(hi - lo <= m / groups + 1);
+                    covered = hi;
+                }
+                assert_eq!(covered, m, "R={groups} m={m} segments must cover [0, m)");
+            }
+        }
+    }
+
+    #[test]
+    fn every_hop_is_a_perfect_matching() {
+        // At each hop of each phase, what group g sends to g+1 is exactly
+        // what g+1 expects from g — the tag-level deadlock-freedom
+        // argument the live engine relies on.
+        for groups in 2..=6 {
+            for hop in 0..groups - 1 {
+                for me in 0..groups {
+                    let next = (me + 1) % groups;
+                    assert_eq!(
+                        scatter_send_seg(me, groups, hop),
+                        scatter_recv_seg(next, groups, hop),
+                        "R={groups} hop {hop} scatter mismatch at {me}->{next}"
+                    );
+                    assert_eq!(
+                        gather_send_seg(me, groups, hop),
+                        gather_recv_seg(next, groups, hop),
+                        "R={groups} hop {hop} gather mismatch at {me}->{next}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_accumulates_each_segment_fully() {
+        // Track which groups' contributions each segment has absorbed;
+        // after R−1 hops the owner must hold all R contributions.
+        for groups in 1..=6 {
+            // holder[s] = set of groups whose contribution the current
+            // holder of segment s has absorbed (bitmask)
+            let mut absorbed: Vec<u64> = (0..groups).map(|s| 1 << owner_init(s, groups, 0)).collect();
+            // at hop t, segment s moves from scatter_send to the next
+            // group, which adds its own contribution
+            for hop in 0..groups.saturating_sub(1) {
+                for me in 0..groups {
+                    let s = scatter_send_seg(me, groups, hop);
+                    let recv = (me + 1) % groups;
+                    // only the current holder of s sends it at this hop
+                    if owner_init(s, groups, hop) == me {
+                        absorbed[s] |= 1 << recv;
+                    }
+                }
+            }
+            for s in 0..groups {
+                assert_eq!(
+                    absorbed[s].count_ones() as usize,
+                    groups,
+                    "R={groups} segment {s} missing contributions"
+                );
+                assert_eq!(owner_init(s, groups, groups - 1), owner_of_seg(s, groups));
+            }
+        }
+    }
+
+    /// The group holding (the running partial sum of) segment `s` at the
+    /// START of reduce-scatter hop `hop`: the sender chain starts at
+    /// group `s` and advances one group per hop.
+    fn owner_init(s: usize, groups: usize, hop: usize) -> usize {
+        (s + hop) % groups
+    }
+
+    #[test]
+    fn allgather_delivers_every_segment_everywhere() {
+        for groups in 2..=6 {
+            // have[g] = bitmask of segments group g holds post-scatter
+            let mut have: Vec<u64> = (0..groups).map(|g| 1 << owned_seg(g, groups)).collect();
+            for hop in 0..groups - 1 {
+                // snapshot: all sends of a hop happen "simultaneously"
+                let sends: Vec<usize> =
+                    (0..groups).map(|me| gather_send_seg(me, groups, hop)).collect();
+                for me in 0..groups {
+                    let next = (me + 1) % groups;
+                    assert!(
+                        have[me] & (1 << sends[me]) != 0,
+                        "R={groups} hop {hop}: group {me} forwards segment {} it does not hold",
+                        sends[me]
+                    );
+                    have[next] |= 1 << sends[me];
+                }
+            }
+            for (g, &mask) in have.iter().enumerate() {
+                assert_eq!(
+                    mask.count_ones() as usize,
+                    groups,
+                    "R={groups} group {g} missing segments after allgather"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn env_contract_defaults_to_one() {
+        std::env::remove_var(REPLICAS_ENV);
+        assert_eq!(replicas_from_env(), 1);
+        std::env::set_var(REPLICAS_ENV, "4");
+        assert_eq!(replicas_from_env(), 4);
+        std::env::set_var(REPLICAS_ENV, "0");
+        assert_eq!(replicas_from_env(), 1, "zero groups is not a thing");
+        std::env::set_var(REPLICAS_ENV, "bogus");
+        assert_eq!(replicas_from_env(), 1);
+        std::env::remove_var(REPLICAS_ENV);
+    }
+}

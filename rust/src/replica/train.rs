@@ -1,0 +1,450 @@
+//! Replica-group training drivers: hybrid data×model parallelism.
+//!
+//! `R` replica groups each run the existing model-parallel minibatch SGD
+//! engine (blocking ≡ overlap ≡ pipelined) on their **own** minibatch
+//! shard over a private intra-group fabric; at the update window every
+//! rank defers its weight update ([`RankState::begin_collect`]), ring
+//! all-reduces the per-layer flat gradients with its same-rank peers in
+//! the other groups ([`GradAllReduce`]) over the inter-group fabric, and
+//! applies the group-averaged result (`eta / R`). Per-row partitioning
+//! keeps gradient ownership aligned with rank ownership, so the exchange
+//! is purely rank-local — no gradient ever crosses ranks.
+//!
+//! Every group starts from the same weights and applies bit-identical
+//! all-reduced updates (see [`crate::replica::allreduce`]'s determinism
+//! contract), so the groups' models never diverge; the driver merges
+//! group 0's row blocks and that IS the global model.
+//!
+//! One step consumes `R` consecutive minibatches (batch `b` each) —
+//! semantically one effective batch of `R·b` samples whose gradient is
+//! the mean of the `R` shard gradients. [`replica_serial_reference`]
+//! reproduces exactly that semantics on one thread for the equivalence
+//! tests.
+
+use super::allreduce::GradAllReduce;
+use crate::comm::{fabric_with, Codec, Endpoint, FabricStats};
+use crate::coordinator::{ExecMode, RankState};
+use crate::dnn::SparseNet;
+use crate::obs::{TraceMode, Tracer};
+use crate::partition::{CommPlan, DnnPartition};
+use crate::runtime::parallel::{run_groups, FaultScope};
+use crate::util::PhaseTimer;
+
+/// Configuration of a replica-group training run.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaConfig {
+    /// Data-parallel replica groups R (1 = plain model parallelism).
+    pub groups: usize,
+    /// Minibatch size per group per step.
+    pub batch: usize,
+    /// Learning rate (applied as `eta / R` to the summed gradient).
+    pub eta: f32,
+    pub epochs: usize,
+    /// Intra-group execution engine.
+    pub mode: ExecMode,
+    /// Wire codec of the cross-group gradient all-reduce (lossy codecs
+    /// get EF-SGD error feedback automatically).
+    pub codec: Codec,
+    /// Which fabrics the `SPDNN_FAULT` chaos plan arms.
+    pub scope: FaultScope,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        Self {
+            groups: 1,
+            batch: 1,
+            eta: 0.1,
+            epochs: 1,
+            mode: ExecMode::Overlap,
+            codec: Codec::F32,
+            scope: FaultScope::Env,
+        }
+    }
+}
+
+/// Result of a replica-group training run.
+pub struct ReplicaTrainRun {
+    /// The trained model (bit-identical across groups; group 0 merged).
+    pub net: SparseNet,
+    /// Per-step losses, averaged over the replica groups.
+    pub losses: Vec<f32>,
+    /// Per-phase timers summed over every thread of every group.
+    pub timer: PhaseTimer,
+    /// Intra-group fabric counters, indexed `[group][rank]`.
+    pub intra: Vec<Vec<FabricStats>>,
+    /// Inter-group fabric counters, indexed `[group][rank]` — all-reduce
+    /// traffic and nothing else.
+    pub inter: Vec<Vec<FabricStats>>,
+}
+
+/// Train with `cfg.groups` replica groups of `part.nparts` ranks each.
+/// Panics if the partition is invalid for the model or the dataset has
+/// fewer than `groups` batches per epoch.
+pub fn train_replicas(
+    net: &SparseNet,
+    part: &DnnPartition,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    cfg: &ReplicaConfig,
+) -> ReplicaTrainRun {
+    part.validate(&net.layers).expect("invalid partition");
+    let plan = CommPlan::build(&net.layers, part);
+    train_replicas_with_plan(net, part, &plan, inputs, targets, cfg)
+}
+
+/// [`train_replicas`] over a caller-provided plan (codec-aware drivers
+/// configure the intra-group wire codecs on it first).
+pub fn train_replicas_with_plan(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    cfg: &ReplicaConfig,
+) -> ReplicaTrainRun {
+    train_replicas_traced(net, part, plan, inputs, targets, cfg, TraceMode::from_env()).0
+}
+
+/// [`train_replicas_with_plan`] with an explicit [`TraceMode`], returning
+/// the flight recorders (indexed `[group][rank]`) alongside the run — the
+/// allreduce span taxonomy (`allreduce.fold`/`scatter`/`gather`, category
+/// `alr`) lands in these.
+pub fn train_replicas_traced(
+    net: &SparseNet,
+    part: &DnnPartition,
+    plan: &CommPlan,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    cfg: &ReplicaConfig,
+    trace: TraceMode,
+) -> (ReplicaTrainRun, Vec<Vec<Tracer>>) {
+    assert_eq!(inputs.len(), targets.len());
+    let (groups, b) = (cfg.groups, cfg.batch);
+    assert!(groups >= 1, "need at least one replica group");
+    let nparts = part.nparts;
+    let nbatches = inputs.len() / b;
+    assert!(
+        nbatches >= groups,
+        "dataset has {nbatches} batches of {b}, need one per replica group ({groups})"
+    );
+    // each step consumes `groups` consecutive batches, one per group; a
+    // trailing remainder of fewer than `groups` batches is skipped
+    let steps_per_epoch = nbatches / groups;
+    let steps = steps_per_epoch * cfg.epochs;
+    let n0 = net.input_dim();
+    let nl = net.output_dim();
+
+    let pack = |vecs: &[Vec<f32>], dim: usize, lo: usize| -> Vec<f32> {
+        let mut out = vec![0f32; dim * b];
+        for (j, v) in vecs[lo..lo + b].iter().enumerate() {
+            for i in 0..dim {
+                out[i * b + j] = v[i];
+            }
+        }
+        out
+    };
+    let xbatches: Vec<Vec<f32>> = (0..nbatches).map(|i| pack(inputs, n0, i * b)).collect();
+    let ybatches: Vec<Vec<f32>> = (0..nbatches).map(|i| pack(targets, nl, i * b)).collect();
+
+    let run = run_groups(groups, nparts, cfg.scope, |g, j, intra, inter| {
+        let mut state = RankState::build_traced(net, part, plan, j as u32, cfg.mode, trace);
+        state.begin_collect();
+        let depth = state.depth();
+        let mut ar = GradAllReduce::new(groups, g, cfg.codec, depth);
+        let scale = cfg.eta / groups as f32;
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..cfg.epochs {
+            for step in 0..steps_per_epoch {
+                let idx = step * groups + g;
+                let loss = state.train_step_minibatch(
+                    intra,
+                    plan,
+                    &xbatches[idx],
+                    &ybatches[idx],
+                    b,
+                    cfg.eta,
+                );
+                let mut grads = state.take_step_grads();
+                for (k, gk) in grads.iter_mut().enumerate() {
+                    ar.all_reduce_layer(inter, &mut state.tracer, k, gk);
+                }
+                for (k, gk) in grads.iter().enumerate() {
+                    state.apply_layer_grad(k, gk, scale);
+                }
+                state.restore_grad_bufs(grads);
+                losses.push(loss);
+            }
+        }
+        (state, losses)
+    })
+    .unwrap_or_else(|f| panic!("replica training failed: {f}"));
+
+    let timer = run.merged_timer(|(state, _)| &state.timer);
+    let mut out = net.clone();
+    let mut losses = vec![0f32; steps];
+    let mut tracers: Vec<Vec<Tracer>> = Vec::with_capacity(groups);
+    for (g, grp) in run.outputs.into_iter().enumerate() {
+        let mut grp_tracers = Vec::with_capacity(nparts);
+        for (mut state, local) in grp {
+            grp_tracers.push(std::mem::take(&mut state.tracer));
+            // all groups hold bit-identical weights; merge group 0's
+            if g == 0 {
+                state.merge_into(&mut out);
+            }
+            for (i, l) in local.into_iter().enumerate() {
+                losses[i] += l;
+            }
+        }
+        tracers.push(grp_tracers);
+    }
+    // per-rank partial losses summed to per-group losses above; average
+    // the groups into the one effective-batch loss per step
+    for l in &mut losses {
+        *l /= groups as f32;
+    }
+    (
+        ReplicaTrainRun {
+            net: out,
+            losses,
+            timer,
+            intra: run.intra,
+            inter: run.inter,
+        },
+        tracers,
+    )
+}
+
+/// Single-threaded reference of the replica semantics: one effective step
+/// = the mean of `groups` consecutive shard gradients (batch `b` each,
+/// group order), applied once with `eta / groups`. Runs the blocking
+/// engine on one rank in collect mode — the replica drivers must match
+/// this to float-reassociation tolerance for any R × k × engine × F32.
+pub fn replica_serial_reference(
+    net: &SparseNet,
+    inputs: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    b: usize,
+    eta: f32,
+    epochs: usize,
+    groups: usize,
+) -> (SparseNet, Vec<f32>) {
+    use crate::partition::random::random_partition;
+    let part = random_partition(&net.layers, 1, 0);
+    let plan = CommPlan::build(&net.layers, &part);
+    let mut eps = fabric_with(1, None, None);
+    let mut ep: Endpoint = eps.pop().expect("one endpoint");
+    let mut state = RankState::build_traced(net, &part, &plan, 0, ExecMode::Blocking, TraceMode::Off);
+    state.begin_collect();
+    let depth = state.depth();
+
+    let n0 = net.input_dim();
+    let nl = net.output_dim();
+    let nbatches = inputs.len() / b;
+    assert!(nbatches >= groups);
+    let steps_per_epoch = nbatches / groups;
+    let pack = |vecs: &[Vec<f32>], dim: usize, lo: usize| -> Vec<f32> {
+        let mut out = vec![0f32; dim * b];
+        for (j, v) in vecs[lo..lo + b].iter().enumerate() {
+            for i in 0..dim {
+                out[i * b + j] = v[i];
+            }
+        }
+        out
+    };
+    let xbatches: Vec<Vec<f32>> = (0..nbatches).map(|i| pack(inputs, n0, i * b)).collect();
+    let ybatches: Vec<Vec<f32>> = (0..nbatches).map(|i| pack(targets, nl, i * b)).collect();
+
+    let mut losses = Vec::with_capacity(steps_per_epoch * epochs);
+    let mut sum: Vec<Vec<f32>> = (0..depth).map(|k| vec![0f32; state.grad_len(k)]).collect();
+    for _ in 0..epochs {
+        for step in 0..steps_per_epoch {
+            for s in sum.iter_mut() {
+                s.iter_mut().for_each(|v| *v = 0.0);
+            }
+            let mut loss = 0f32;
+            for g in 0..groups {
+                let idx = step * groups + g;
+                loss +=
+                    state.train_step_minibatch(&mut ep, &plan, &xbatches[idx], &ybatches[idx], b, eta);
+                let grads = state.take_step_grads();
+                for (k, gk) in grads.iter().enumerate() {
+                    for (s, v) in sum[k].iter_mut().zip(gk.iter()) {
+                        *s += v;
+                    }
+                }
+                state.restore_grad_bufs(grads);
+            }
+            let scale = eta / groups as f32;
+            for (k, s) in sum.iter().enumerate() {
+                state.apply_layer_grad(k, s, scale);
+            }
+            losses.push(loss / groups as f32);
+        }
+    }
+    let mut out = net.clone();
+    state.merge_into(&mut out);
+    (out, losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::minibatch::train_minibatch_with_plan;
+    use crate::partition::random::random_partition;
+    use crate::radixnet::{generate, RadixNetConfig};
+    use crate::replica::allreduce::predicted_wire_words;
+    use crate::util::Rng;
+
+    fn small_net() -> SparseNet {
+        let cfg = RadixNetConfig {
+            radices: vec![4, 4],
+            layers: 4,
+            seed: 17,
+            ..RadixNetConfig::default()
+        };
+        generate(&cfg)
+    }
+
+    fn dataset(n: usize, dim: usize, out: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(5);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let targets: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let mut y = vec![0f32; out];
+                y[i % out] = 1.0;
+                y
+            })
+            .collect();
+        (inputs, targets)
+    }
+
+    #[test]
+    fn one_group_matches_the_minibatch_driver() {
+        // R = 1 is plain model parallelism: same batches, same order; the
+        // only difference is deferred-update apply (≤ 1-ulp reassociation
+        // per weight per step) and an all-reduce that degenerates to the
+        // residual fold.
+        let net = small_net();
+        let (inputs, targets) = dataset(8, 16, 16);
+        let part = random_partition(&net.layers, 2, 7);
+        let plan = CommPlan::build(&net.layers, &part);
+        let cfg = ReplicaConfig {
+            groups: 1,
+            batch: 2,
+            eta: 0.3,
+            epochs: 2,
+            mode: ExecMode::Overlap,
+            codec: Codec::F32,
+            scope: FaultScope::Off,
+        };
+        let a = train_replicas_with_plan(&net, &part, &plan, &inputs, &targets, &cfg);
+        let b = train_minibatch_with_plan(&net, &part, &plan, &inputs, &targets, 2, 0.3, 2);
+        assert_eq!(a.losses.len(), b.losses.len());
+        for (x, y) in a.losses.iter().zip(b.losses.iter()) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+        for k in 0..net.depth() {
+            for (u, v) in a.net.layers[k].vals.iter().zip(b.net.layers[k].vals.iter()) {
+                assert!((u - v).abs() < 1e-5);
+            }
+            for (u, v) in a.net.biases[k].iter().zip(b.net.biases[k].iter()) {
+                assert!((u - v).abs() < 1e-5);
+            }
+        }
+        // R = 1: no inter-group traffic at all
+        assert!(a.inter[0].iter().all(|st| st.sent_msgs == 0));
+    }
+
+    #[test]
+    fn two_groups_match_the_serial_reference_on_every_engine() {
+        let net = small_net();
+        let (inputs, targets) = dataset(8, 16, 16);
+        let (expect_net, expect_losses) =
+            replica_serial_reference(&net, &inputs, &targets, 2, 0.4, 2, 2);
+        for mode in [ExecMode::Blocking, ExecMode::Overlap, ExecMode::pipelined()] {
+            let part = random_partition(&net.layers, 2, 11);
+            let cfg = ReplicaConfig {
+                groups: 2,
+                batch: 2,
+                eta: 0.4,
+                epochs: 2,
+                mode,
+                codec: Codec::F32,
+                scope: FaultScope::Off,
+            };
+            let run = train_replicas(&net, &part, &inputs, &targets, &cfg);
+            assert_eq!(run.losses.len(), expect_losses.len());
+            for (a, e) in run.losses.iter().zip(expect_losses.iter()) {
+                assert!((a - e).abs() < 1e-4, "{mode:?}: loss {a} vs {e}");
+            }
+            for k in 0..net.depth() {
+                for (a, e) in run.net.layers[k].vals.iter().zip(expect_net.layers[k].vals.iter()) {
+                    assert!((a - e).abs() < 1e-4, "{mode:?} layer {k}: {a} vs {e}");
+                }
+                for (a, e) in run.net.biases[k].iter().zip(expect_net.biases[k].iter()) {
+                    assert!((a - e).abs() < 1e-4, "{mode:?} layer {k} bias");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inter_group_wire_words_match_the_prediction() {
+        // the live R004 cross-check: every thread's inter-fabric counter
+        // equals steps × Σ_layers predicted_wire_words of its gradient
+        let net = small_net();
+        let (inputs, targets) = dataset(8, 16, 16);
+        let part = random_partition(&net.layers, 2, 3);
+        let plan = CommPlan::build(&net.layers, &part);
+        for codec in [Codec::F32, Codec::int8()] {
+            let cfg = ReplicaConfig {
+                groups: 2,
+                batch: 2,
+                eta: 0.2,
+                epochs: 3,
+                mode: ExecMode::Overlap,
+                codec,
+                scope: FaultScope::Off,
+            };
+            let run = train_replicas_with_plan(&net, &part, &plan, &inputs, &targets, &cfg);
+            let steps = (8 / 2 / 2) * 3; // nbatches / groups × epochs
+            for j in 0..2usize {
+                let state =
+                    RankState::build_traced(&net, &part, &plan, j as u32, cfg.mode, TraceMode::Off);
+                for g in 0..2usize {
+                    let expect: u64 = (0..state.depth())
+                        .map(|k| predicted_wire_words(g, 2, state.grad_len(k), codec, false))
+                        .sum::<u64>()
+                        * steps as u64;
+                    assert_eq!(
+                        run.inter[g][j].sent_words, expect,
+                        "{codec:?} group {g} rank {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_ef_training_reduces_loss() {
+        let net = small_net();
+        let (inputs, targets) = dataset(8, 16, 16);
+        let part = random_partition(&net.layers, 2, 9);
+        let cfg = ReplicaConfig {
+            groups: 2,
+            batch: 2,
+            eta: 0.5,
+            epochs: 20,
+            mode: ExecMode::Overlap,
+            codec: Codec::int8(),
+            scope: FaultScope::Off,
+        };
+        let run = train_replicas(&net, &part, &inputs, &targets, &cfg);
+        let first = run.losses[0];
+        let last = *run.losses.last().unwrap();
+        assert!(last < first * 0.8, "int8+EF loss {first} -> {last}");
+    }
+}

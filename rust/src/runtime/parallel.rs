@@ -13,7 +13,8 @@
 //! - collects per-rank fabric counters and aggregates per-rank
 //!   [`PhaseTimer`]s for live breakdown reporting.
 
-use crate::comm::{fabric, Endpoint, FabricStats};
+use crate::comm::{fabric, fabric_with, Endpoint, FabricStats};
+use crate::runtime::fault;
 use crate::util::PhaseTimer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
@@ -133,6 +134,208 @@ where
             outputs,
             sent,
             fabric: stats,
+        }),
+    }
+}
+
+/// Which fabrics of a replica-group run the process-wide `SPDNN_FAULT`
+/// chaos plan arms (see [`run_groups`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultScope {
+    /// The env plan arms every fabric — intra-group and inter-group alike
+    /// (the default, matching [`run_ranks`]'s behavior for one group).
+    Env,
+    /// The env plan arms only this group's intra-group fabric. The other
+    /// groups and the inter-group rings stay injector-free but keep the
+    /// plan's stall watchdog, so a fault in the scoped group surfaces as
+    /// a typed failure instead of hanging its all-reduce partners.
+    Group(usize),
+    /// No fault plan anywhere, regardless of the environment.
+    Off,
+}
+
+/// A rank of a replica-group run failed.
+#[derive(Debug, Clone)]
+pub struct GroupFailure {
+    pub group: usize,
+    pub rank: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for GroupFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "group {} rank {} failed: {}",
+            self.group, self.rank, self.message
+        )
+    }
+}
+
+/// Result of a successful [`run_groups`] run: worker outputs and fabric
+/// counters indexed `[group][rank]`, for both fabric levels.
+pub struct GroupRun<T> {
+    pub outputs: Vec<Vec<T>>,
+    /// Per-thread counters of the intra-group (model-parallel) fabrics.
+    pub intra: Vec<Vec<FabricStats>>,
+    /// Per-thread counters of the inter-group (data-parallel ring)
+    /// fabrics — the gradient all-reduce traffic, and nothing else.
+    pub inter: Vec<Vec<FabricStats>>,
+}
+
+impl<T> GroupRun<T> {
+    /// Sum every thread's phase timer into one live breakdown.
+    pub fn merged_timer<'a, F>(&'a self, timer_of: F) -> PhaseTimer
+    where
+        F: Fn(&'a T) -> &'a PhaseTimer,
+    {
+        let mut merged = PhaseTimer::new();
+        for grp in &self.outputs {
+            for out in grp {
+                merged.merge(timer_of(out));
+            }
+        }
+        merged
+    }
+}
+
+/// Run `worker(group, rank, intra, inter)` on `groups × nranks` concurrent
+/// OS threads over a **two-level fabric**: each group owns a private
+/// fully-connected intra-group fabric of `nranks` endpoints (the existing
+/// model-parallel engines run here unchanged), and each rank index `j`
+/// owns a fully-connected inter-group fabric of `groups` endpoints linking
+/// thread `(g, j)` to its same-rank peers in every other group — the
+/// replica gradient all-reduce runs there, with `inter.rank == g`.
+///
+/// Failure semantics extend [`run_ranks`]: a panicking thread poisons
+/// **both** of its fabrics, so model-parallel peers in its own group and
+/// all-reduce partners in other groups unwind instead of deadlocking; the
+/// most informative (non-secondary) failure wins the triage. `scope`
+/// controls which fabrics the chaos plan arms, so a fault campaign can be
+/// confined to one replica group while the rest of the job stays clean.
+pub fn run_groups<T, F>(
+    groups: usize,
+    nranks: usize,
+    scope: FaultScope,
+    worker: F,
+) -> Result<GroupRun<T>, GroupFailure>
+where
+    T: Send,
+    F: Fn(usize, usize, &mut Endpoint, &mut Endpoint) -> T + Sync,
+{
+    assert!(groups > 0, "need at least one replica group");
+    assert!(nranks > 0, "need at least one rank per group");
+    let plan = match scope {
+        FaultScope::Off => None,
+        _ => fault::from_env(),
+    };
+    let watchdog = plan.as_ref().and_then(|p| p.spec().watchdog());
+
+    let intra_fabrics: Vec<Vec<Endpoint>> = (0..groups)
+        .map(|g| {
+            let armed = match scope {
+                FaultScope::Env => plan.clone(),
+                FaultScope::Group(t) if t == g => plan.clone(),
+                _ => None,
+            };
+            fabric_with(nranks, armed, watchdog)
+        })
+        .collect();
+    let inter_fabrics: Vec<Vec<Endpoint>> = (0..nranks)
+        .map(|_| {
+            let armed = match scope {
+                FaultScope::Env => plan.clone(),
+                _ => None,
+            };
+            fabric_with(groups, armed, watchdog)
+        })
+        .collect();
+
+    // Pair each thread's endpoints: intra rank `j` of group `g`'s fabric,
+    // inter rank `g` of ring `j`'s fabric.
+    let mut inter_slots: Vec<Vec<Option<Endpoint>>> = inter_fabrics
+        .into_iter()
+        .map(|f| f.into_iter().map(Some).collect())
+        .collect();
+    let mut work = Vec::with_capacity(groups * nranks);
+    for (g, geps) in intra_fabrics.into_iter().enumerate() {
+        for (j, iep) in geps.into_iter().enumerate() {
+            let xep = inter_slots[j][g].take().expect("endpoint paired once");
+            work.push((g, j, iep, xep));
+        }
+    }
+
+    type ThreadResult<T> = Result<(T, FabricStats, FabricStats), String>;
+    let results: Vec<(usize, usize, ThreadResult<T>)> = std::thread::scope(|sc| {
+        let worker = &worker;
+        let handles: Vec<_> = work
+            .into_iter()
+            .map(|(g, j, mut iep, mut xep)| {
+                let h = sc.spawn(move || {
+                    let out = catch_unwind(AssertUnwindSafe(|| worker(g, j, &mut iep, &mut xep)));
+                    match out {
+                        Ok(value) => {
+                            if iep.drained() && xep.drained() {
+                                Ok((value, iep.stats(), xep.stats()))
+                            } else {
+                                iep.poison();
+                                xep.poison();
+                                Err("unconsumed messages left in stash".to_string())
+                            }
+                        }
+                        Err(payload) => {
+                            iep.poison();
+                            xep.poison();
+                            Err(panic_message(&payload))
+                        }
+                    }
+                });
+                (g, j, h)
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|(g, j, h)| (g, j, h.join().unwrap_or_else(|p| Err(panic_message(&p)))))
+            .collect()
+    });
+
+    let mut outputs: Vec<Vec<T>> = (0..groups).map(|_| Vec::with_capacity(nranks)).collect();
+    let mut intra: Vec<Vec<FabricStats>> =
+        (0..groups).map(|_| Vec::with_capacity(nranks)).collect();
+    let mut inter: Vec<Vec<FabricStats>> =
+        (0..groups).map(|_| Vec::with_capacity(nranks)).collect();
+    let mut failure: Option<GroupFailure> = None;
+    for (g, j, result) in results {
+        match result {
+            Ok((value, ist, xst)) => {
+                // results arrive in (g, j) spawn order, so pushes keep
+                // rank order within each group
+                outputs[g].push(value);
+                intra[g].push(ist);
+                inter[g].push(xst);
+            }
+            Err(message) => {
+                let candidate = GroupFailure {
+                    group: g,
+                    rank: j,
+                    message,
+                };
+                let better = match &failure {
+                    None => true,
+                    Some(cur) => is_secondary(&cur.message) && !is_secondary(&candidate.message),
+                };
+                if better {
+                    failure = Some(candidate);
+                }
+            }
+        }
+    }
+    match failure {
+        Some(f) => Err(f),
+        None => Ok(GroupRun {
+            outputs,
+            intra,
+            inter,
         }),
     }
 }
@@ -280,5 +483,108 @@ mod tests {
     fn outputs_are_in_rank_order() {
         let run = run_ranks(5, |rank, _ep| rank * 10).expect("run succeeds");
         assert_eq!(run.outputs, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn groups_run_two_level_traffic() {
+        // Each thread (g, j): intra all-to-all within its group, then an
+        // inter exchange with the same rank of every other group. The two
+        // fabrics are disjoint — same tags on both must not collide.
+        let (groups, nranks) = (3usize, 2usize);
+        let run = run_groups(groups, nranks, FaultScope::Off, |g, j, intra, inter| {
+            assert_eq!(intra.rank as usize, j);
+            assert_eq!(inter.rank as usize, g);
+            for to in 0..nranks as u32 {
+                if to != j as u32 {
+                    intra.send(to, 0, Phase::Forward, j as u32, vec![(g * 10 + j) as f32]);
+                }
+            }
+            let mut intra_sum = 0.0f32;
+            for from in 0..nranks as u32 {
+                if from != j as u32 {
+                    intra_sum += intra.recv(from, 0, Phase::Forward, from)[0];
+                }
+            }
+            for to in 0..groups as u32 {
+                if to != g as u32 {
+                    inter.send(to, 0, Phase::Forward, g as u32, vec![(g * 10 + j) as f32]);
+                }
+            }
+            let mut inter_sum = 0.0f32;
+            for from in 0..groups as u32 {
+                if from != g as u32 {
+                    inter_sum += inter.recv(from, 0, Phase::Forward, from)[0];
+                }
+            }
+            (intra_sum, inter_sum)
+        })
+        .expect("run succeeds");
+        for g in 0..groups {
+            for j in 0..nranks {
+                let (intra_sum, inter_sum) = run.outputs[g][j];
+                // peers within the group share g, differ in j
+                let expect_intra: f32 = (0..nranks)
+                    .filter(|&x| x != j)
+                    .map(|x| (g * 10 + x) as f32)
+                    .sum();
+                // same-rank peers across groups share j, differ in g
+                let expect_inter: f32 = (0..groups)
+                    .filter(|&x| x != g)
+                    .map(|x| (x * 10 + j) as f32)
+                    .sum();
+                assert_eq!(intra_sum, expect_intra, "group {g} rank {j}");
+                assert_eq!(inter_sum, expect_inter, "group {g} rank {j}");
+                assert_eq!(run.intra[g][j].sent_msgs, (nranks - 1) as u64);
+                assert_eq!(run.inter[g][j].sent_msgs, (groups - 1) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn group_panic_unblocks_all_reduce_partners() {
+        // Thread (0, 0) dies; its group peers block on intra receives and
+        // its same-rank partners in other groups block on inter receives.
+        // All of them must unwind via poisoning, and triage must surface
+        // the root cause with its group and rank.
+        let err = run_groups(3, 2, FaultScope::Off, |g, j, intra, inter| {
+            if g == 0 && j == 0 {
+                panic!("injected failure in group 0");
+            }
+            if g == 0 {
+                intra.recv(0, 0, Phase::Forward, 0);
+            } else if j == 0 {
+                inter.recv(0, 0, Phase::Forward, 0);
+            }
+        })
+        .expect_err("run must fail");
+        assert_eq!((err.group, err.rank), (0, 0));
+        assert!(err.message.contains("injected failure"), "{}", err.message);
+    }
+
+    #[test]
+    fn group_run_with_one_group_matches_run_ranks_shape() {
+        let run = run_groups(1, 3, FaultScope::Off, |g, j, _intra, _inter| {
+            assert_eq!(g, 0);
+            j * 7
+        })
+        .expect("run succeeds");
+        assert_eq!(run.outputs, vec![vec![0, 7, 14]]);
+        assert_eq!(run.inter[0].len(), 3);
+    }
+
+    #[test]
+    fn group_leak_on_either_fabric_is_an_error() {
+        // an unconsumed inter-fabric message must be flagged just like an
+        // intra-fabric one
+        let barrier = std::sync::Barrier::new(4);
+        let err = run_groups(2, 2, FaultScope::Off, |g, j, _intra, inter| {
+            if g == 0 && j == 1 {
+                inter.send(1, 0, Phase::Forward, 0, vec![1.0]);
+            }
+            barrier.wait();
+        })
+        .expect_err("leak must fail");
+        assert_eq!((err.group, err.rank), (1, 1));
+        assert!(err.message.contains("unconsumed"), "{}", err.message);
     }
 }

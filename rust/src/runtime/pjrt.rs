@@ -1,6 +1,15 @@
 //! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
 //! compile once, execute many times (pattern from /opt/xla-example).
+//!
+//! By default the feature builds against the vendored API stand-in
+//! ([`super::xla_stub`]), which keeps `cargo build --all-features`
+//! compiling everywhere: the CPU client comes up, but `load` fails with a
+//! `pjrt stub` error instead of compiling HLO. To run against a real
+//! PJRT, vendor the `xla` crate in `Cargo.toml` and repoint the alias
+//! below; [`PjrtRuntime::vendored_stub`] tells callers (and the
+//! integration tests) which backend they got.
 
+use super::xla_stub as xla;
 use crate::format_err;
 use crate::util::error::{Context, Result};
 use std::collections::HashMap;
@@ -24,6 +33,13 @@ impl PjrtRuntime {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// `true` when the build is backed by the vendored no-op stub rather
+    /// than a real `xla` crate — compile/execute paths will fail with
+    /// `pjrt stub` errors and execution tests should skip themselves.
+    pub fn vendored_stub() -> bool {
+        xla::IS_STUB
     }
 
     /// Load + compile an HLO text artifact under `key`. No-op if already

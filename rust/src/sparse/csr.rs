@@ -374,6 +374,44 @@ impl Csr {
         }
     }
 
+    /// Append the gradient of every stored nonzero to `out`, in `vals`
+    /// storage order: `g(r, c) = delta(r) * x(c)` for each stored (r, c).
+    /// [`Csr::sgd_update`]'s per-entry step detached from the update, so
+    /// `apply_grad(g, eta)` after `outer_grad` reproduces
+    /// `sgd_update(delta, x, eta)` up to one f32 multiply reassociation
+    /// (`eta*(d*x)` vs `(eta*d)*x`, a ≤ 1-ulp difference). Pushes one
+    /// entry per stored nonzero (zero rows included) — the replica
+    /// gradient exchange relies on the length equalling [`Csr::nnz`].
+    pub fn outer_grad(&self, delta: &[f32], x: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(delta.len(), self.nrows);
+        debug_assert_eq!(x.len(), self.ncols);
+        out.reserve(self.nnz());
+        for r in 0..self.nrows {
+            let d = delta[r];
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            for i in lo..hi {
+                let c = self.indices[i] as usize;
+                debug_assert!(c < x.len(), "row {r}: column {c} out of bounds");
+                // SAFETY: `Csr::validate` guarantees every stored column
+                // index is < `ncols`, and `x.len() == ncols` (asserted
+                // above), so `c` is in-bounds for `x`.
+                out.push(d * unsafe { *x.get_unchecked(c) });
+            }
+        }
+    }
+
+    /// `vals[i] -= eta * g[i]` over the stored nonzeros — the apply half
+    /// of [`Csr::outer_grad`], used after the replica all-reduce has
+    /// averaged gradients across groups. `g.len()` must equal
+    /// [`Csr::nnz`].
+    pub fn apply_grad(&mut self, g: &[f32], eta: f32) {
+        debug_assert_eq!(g.len(), self.nnz());
+        for (v, gi) in self.vals.iter_mut().zip(g.iter()) {
+            *v -= eta * gi;
+        }
+    }
+
     /// Transpose into a new CSR (i.e., the CSC view of self).
     pub fn transpose(&self) -> Csr {
         let mut counts = vec![0u32; self.ncols + 1];
@@ -784,6 +822,26 @@ mod tests {
         // W(0,0) = 1 - 0.5*1*1 = 0.5 ; W(0,2) = 2 - 0.5 = 1.5 ; W(1,1) = 2.5
         assert_eq!(a.row(0).1, &[0.5, 1.5]);
         assert_eq!(a.row(1).1, &[2.5]);
+    }
+
+    #[test]
+    fn outer_grad_then_apply_matches_sgd_update() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(20), 1 + rng.gen_range(20));
+            let a = random_csr(rng, nr, nc, 0.3);
+            let delta: Vec<f32> = (0..nr).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let x: Vec<f32> = (0..nc).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let mut g = Vec::new();
+            a.outer_grad(&delta, &x, &mut g);
+            assert_eq!(g.len(), a.nnz(), "one gradient entry per stored nonzero");
+            let mut via_grad = a.clone();
+            via_grad.apply_grad(&g, 0.3);
+            let mut direct = a.clone();
+            direct.sgd_update(&delta, &x, 0.3);
+            for (u, v) in via_grad.vals.iter().zip(direct.vals.iter()) {
+                assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+            }
+        });
     }
 
     #[test]

@@ -163,6 +163,41 @@ impl SplitCsr {
         }
     }
 
+    /// Append the gradient of every stored nonzero to `out`, in **storage
+    /// order**: the local segment's entries first ([`Csr::outer_grad`]
+    /// order), then each remote segment's in [`SplitCsr::remote`] order —
+    /// exactly the order [`SplitCsr::sgd_update`] walks, and identical
+    /// across replica groups built from the same plan, which is what makes
+    /// the flat gradient vector all-reduce-safe. `apply_grad` consumes the
+    /// same layout.
+    pub fn outer_grad(
+        &self,
+        delta: &[f32],
+        x_local: &[f32],
+        x_segs: &[Vec<f32>],
+        out: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(x_segs.len(), self.remote.len());
+        self.local.outer_grad(delta, x_local, out);
+        for (seg, x) in self.remote.iter().zip(x_segs.iter()) {
+            seg.csr.outer_grad(delta, x, out);
+        }
+    }
+
+    /// Apply a flat gradient in [`SplitCsr::outer_grad`] storage order:
+    /// `vals[i] -= eta * g[i]` across the local then remote segments.
+    /// `g.len()` must equal [`SplitCsr::nnz`].
+    pub fn apply_grad(&mut self, g: &[f32], eta: f32) {
+        debug_assert_eq!(g.len(), self.nnz());
+        let (gl, mut rest) = g.split_at(self.local.nnz());
+        self.local.apply_grad(gl, eta);
+        for seg in self.remote.iter_mut() {
+            let (gs, tail) = rest.split_at(seg.csr.nnz());
+            seg.csr.apply_grad(gs, eta);
+            rest = tail;
+        }
+    }
+
     /// One row's `(global column, value)` pairs, sorted by global column —
     /// exactly the original block's row layout, for merging trained values
     /// back into the global model.
@@ -421,6 +456,35 @@ mod tests {
             let mut full = block.clone();
             full.sgd_update(&delta, &x, 0.3);
             assert_eq!(split.unsplit(), full);
+        });
+    }
+
+    #[test]
+    fn split_outer_grad_then_apply_matches_split_update() {
+        prop::check(|rng| {
+            let (nr, nc) = (1 + rng.gen_range(10), 1 + rng.gen_range(10));
+            let (block, owned, segs) = random_split(rng, nr, nc);
+            let split = build_from(&block, &owned, &segs).expect("valid cover");
+            let x: Vec<f32> = (0..nc).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let delta: Vec<f32> = (0..nr).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let x_local: Vec<f32> = split.local_gcols.iter().map(|&j| x[j as usize]).collect();
+            let x_segs: Vec<Vec<f32>> = split
+                .remote
+                .iter()
+                .map(|s| s.gcols.iter().map(|&j| x[j as usize]).collect())
+                .collect();
+            let mut g = Vec::new();
+            split.outer_grad(&delta, &x_local, &x_segs, &mut g);
+            assert_eq!(g.len(), split.nnz());
+            let mut via_grad = split.clone();
+            via_grad.apply_grad(&g, 0.4);
+            let mut direct = split.clone();
+            direct.sgd_update(&delta, &x_local, &x_segs, 0.4);
+            let a = via_grad.unsplit();
+            let b = direct.unsplit();
+            for (u, v) in a.vals.iter().zip(b.vals.iter()) {
+                assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+            }
         });
     }
 

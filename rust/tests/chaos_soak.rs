@@ -7,13 +7,18 @@
 //! injected-fault budget, and once the stream is disarmed the pool must
 //! serve cleanly again.
 
+use spdnn::comm::{Codec, Phase};
 use spdnn::coordinator::ExecMode;
 use spdnn::dnn::inference::infer_batch;
 use spdnn::dnn::SparseNet;
+use spdnn::partition::random::random_partition;
 use spdnn::radixnet::{generate, RadixNetConfig};
-use spdnn::runtime::{FaultPlan, FaultSpec};
+use spdnn::replica::{replica_serial_reference, train_replicas, ReplicaConfig};
+use spdnn::runtime::{fault, run_groups, FaultPlan, FaultScope, FaultSpec};
 use spdnn::serving::{PoolConfig, RankPool, RecoveryConfig, ServeError, Ticket};
 use spdnn::util::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -157,4 +162,135 @@ fn chaos_soak_four_ranks() {
 #[test]
 fn chaos_soak_eight_ranks() {
     soak(8, 70, 3003);
+}
+
+/// Replica-group chaos: the `SPDNN_FAULT` plan armed with a deterministic
+/// message-drop schedule, scoped to replica group 0 only via
+/// [`FaultScope::Group`]. Three phases share the process-wide plan (the
+/// `SPDNN_FAULT` OnceLock makes this one test — the env var must be set
+/// before the first `fault::from_env` call, and the soak tests above
+/// never make one):
+///
+/// 1. group-independent workloads — the healthy groups' threads must all
+///    finish while the armed group fails with the typed drop cause;
+/// 2. a live replica training run — group 0's fault must propagate
+///    through poisoning (no deadlock on the inter-group all-reduce ring)
+///    and still triage to group 0 as the root cause;
+/// 3. the stream disarms — the same topology trains cleanly under
+///    [`FaultScope::Env`] and matches the single-thread replica
+///    reference.
+#[test]
+fn replica_chaos_confines_faults_to_the_scoped_group() {
+    std::env::set_var("SPDNN_FAULT", "seed=12,drop=1.0,budget=64,watchdog_ms=3000");
+    let plan = fault::from_env().expect("SPDNN_FAULT parses");
+    assert!(plan.armed());
+
+    // Phase 1: no inter-group traffic at all — a fault campaign against
+    // group 0 must leave every other group finishing cleanly.
+    let (groups, nranks) = (3usize, 2usize);
+    let done = AtomicU32::new(0);
+    let err = run_groups(groups, nranks, FaultScope::Group(0), |g, j, intra, _inter| {
+        for to in 0..nranks as u32 {
+            if to != j as u32 {
+                intra.send(to, 0, Phase::Forward, j as u32, vec![g as f32]);
+            }
+        }
+        for from in 0..nranks as u32 {
+            if from != j as u32 {
+                intra.recv(from, 0, Phase::Forward, from);
+            }
+        }
+        done.fetch_or(1 << (g * nranks + j), Ordering::Relaxed);
+    })
+    .expect_err("the armed group must fail");
+    assert_eq!(err.group, 0, "fault escaped its scope: {err}");
+    assert!(
+        err.message.contains("dropped send"),
+        "root cause must be the injected drop: {}",
+        err.message
+    );
+    let finished = done.load(Ordering::Relaxed);
+    for g in 1..groups {
+        for j in 0..nranks {
+            assert!(
+                finished & (1 << (g * nranks + j)) != 0,
+                "healthy group {g} rank {j} did not finish"
+            );
+        }
+    }
+
+    // Phase 2: a live replica training run with the same scope. Group 0's
+    // first armed intra-group send drops; its thread poisons both of its
+    // fabrics, so model-parallel peers and all-reduce partners unwind
+    // instead of hanging, and the driver's failure panic names group 0.
+    let net: SparseNet = generate(&RadixNetConfig {
+        radices: vec![4, 4],
+        layers: 4,
+        seed: 17,
+        ..RadixNetConfig::default()
+    });
+    let mut rng = Rng::new(5);
+    let inputs: Vec<Vec<f32>> = (0..8)
+        .map(|_| {
+            (0..16)
+                .map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let targets: Vec<Vec<f32>> = (0..8)
+        .map(|i| {
+            let mut y = vec![0f32; 16];
+            y[i % 16] = 1.0;
+            y
+        })
+        .collect();
+    let part = random_partition(&net.layers, 2, 7);
+    let cfg = ReplicaConfig {
+        groups: 2,
+        batch: 2,
+        eta: 0.3,
+        epochs: 1,
+        mode: ExecMode::Overlap,
+        codec: Codec::F32,
+        scope: FaultScope::Group(0),
+    };
+    let payload = catch_unwind(AssertUnwindSafe(|| {
+        train_replicas(&net, &part, &inputs, &targets, &cfg)
+    }))
+    .err()
+    .expect("training with an armed group must fail");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "<non-string panic>".to_string());
+    assert!(msg.contains("group 0"), "failure must name group 0: {msg}");
+    assert!(
+        msg.contains("dropped send"),
+        "failure must carry the injected cause: {msg}"
+    );
+    let injected_during_chaos = plan.injected();
+    assert!(
+        injected_during_chaos >= 2,
+        "both phases consumed budget: {injected_during_chaos}"
+    );
+
+    // Phase 3: faults stop. The identical topology trains cleanly under
+    // the env scope (the installed plan is disarmed) and matches the
+    // serial replica semantics.
+    plan.disarm();
+    let clean = ReplicaConfig {
+        scope: FaultScope::Env,
+        ..cfg
+    };
+    let run = train_replicas(&net, &part, &inputs, &targets, &clean);
+    let (_, expect_losses) = replica_serial_reference(&net, &inputs, &targets, 2, 0.3, 1, 2);
+    assert_eq!(run.losses.len(), expect_losses.len());
+    for (a, e) in run.losses.iter().zip(expect_losses.iter()) {
+        assert!((a - e).abs() < 1e-4, "clean run after disarm: {a} vs {e}");
+    }
+    assert_eq!(
+        plan.injected(),
+        injected_during_chaos,
+        "a disarmed plan must not spend budget"
+    );
 }

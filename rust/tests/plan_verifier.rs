@@ -54,6 +54,18 @@ fn builtin_matrix_is_clean() {
 }
 
 #[test]
+fn replica_ring_matrix_is_clean() {
+    // the R0xx gate: every (R, codec, envelope) combination of the
+    // cross-group gradient all-reduce must verify deadlock-free with
+    // exact wire accounting
+    let reports = analysis::check_replica_matrix();
+    assert!(reports.len() >= 40, "{} configs", reports.len());
+    for r in &reports {
+        assert!(r.ok(), "replica ring violations:\n{}", r.render());
+    }
+}
+
+#[test]
 fn taxonomy_matches_observability_doc() {
     let mut out = Vec::new();
     taxonomy::check_doc(&mut out);

@@ -1,0 +1,205 @@
+//! Integration: numerical equivalence of the replica-group training
+//! drivers. With the lossless codec the hybrid data×model run must match
+//! the single-thread replica semantics ([`replica_serial_reference`])
+//! across the full R × k × chunk_acts grid; at R = 1 it must degenerate
+//! to the plain minibatch driver on every engine; and on the bundled
+//! digits workload the int8+EF gradient exchange must stay within 1%
+//! tail loss of the f32 exchange (the enforced `REPLICA_LOSS_BAR`).
+
+use spdnn::comm::{Codec, FabricStats};
+use spdnn::coordinator::minibatch::train_minibatch_with_plan;
+use spdnn::coordinator::{ExecMode, DEFAULT_CHUNK_ACTS};
+use spdnn::dnn::SparseNet;
+use spdnn::partition::random::random_partition;
+use spdnn::partition::CommPlan;
+use spdnn::radixnet::{generate, RadixNetConfig};
+use spdnn::replica::{replica_serial_reference, train_replicas_with_plan, ReplicaConfig};
+use spdnn::runtime::FaultScope;
+use spdnn::util::Rng;
+
+fn small_net() -> SparseNet {
+    let cfg = RadixNetConfig {
+        radices: vec![4, 4],
+        layers: 4,
+        seed: 17,
+        ..RadixNetConfig::default()
+    };
+    generate(&cfg)
+}
+
+fn dataset(n: usize, dim: usize, out: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(5);
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            (0..dim)
+                .map(|_| if rng.gen_bool(0.3) { 1.0 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let targets: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut y = vec![0f32; out];
+            y[i % out] = 1.0;
+            y
+        })
+        .collect();
+    (inputs, targets)
+}
+
+/// The tentpole equivalence grid: every replica-group count × rank count
+/// × pipelined chunk size, lossless codec, against the single-thread
+/// replica reference. `chunk_acts = 0` is the unchunked sender, `1` the
+/// pathological one-entry-per-message extreme, and the default the tuned
+/// middle — the all-reduce must be oblivious to all of them.
+#[test]
+fn f32_grid_matches_the_serial_reference() {
+    let net = small_net();
+    let (inputs, targets) = dataset(8, 16, 16);
+    let (b, eta, epochs) = (2usize, 0.3f32, 1usize);
+    for groups in [1usize, 2, 4] {
+        let (expect_net, expect_losses) =
+            replica_serial_reference(&net, &inputs, &targets, b, eta, epochs, groups);
+        for ranks in [1usize, 2, 4] {
+            let part = random_partition(&net.layers, ranks, 7 + ranks as u64);
+            let plan = CommPlan::build(&net.layers, &part);
+            for chunk_acts in [0usize, 1, DEFAULT_CHUNK_ACTS] {
+                let cfg = ReplicaConfig {
+                    groups,
+                    batch: b,
+                    eta,
+                    epochs,
+                    mode: ExecMode::Pipelined { chunk_acts },
+                    codec: Codec::F32,
+                    scope: FaultScope::Off,
+                };
+                let run = train_replicas_with_plan(&net, &part, &plan, &inputs, &targets, &cfg);
+                let ctx = format!("R={groups} k={ranks} chunk={chunk_acts}");
+                assert_eq!(run.losses.len(), expect_losses.len(), "{ctx}: steps");
+                for (a, e) in run.losses.iter().zip(expect_losses.iter()) {
+                    assert!((a - e).abs() < 1e-5, "{ctx}: loss {a} vs {e}");
+                }
+                for k in 0..net.depth() {
+                    for (a, e) in run.net.layers[k]
+                        .vals
+                        .iter()
+                        .zip(expect_net.layers[k].vals.iter())
+                    {
+                        assert!((a - e).abs() < 1e-5, "{ctx} layer {k}: {a} vs {e}");
+                    }
+                    for (a, e) in run.net.biases[k].iter().zip(expect_net.biases[k].iter()) {
+                        assert!((a - e).abs() < 1e-5, "{ctx} layer {k} bias: {a} vs {e}");
+                    }
+                }
+                if groups == 1 {
+                    // the degenerate ring is message-free
+                    assert!(
+                        run.inter.iter().flatten().all(|st| st.sent_msgs == 0),
+                        "{ctx}: R=1 shipped inter-group messages"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// R = 1 is plain model parallelism: same batches, same order, on every
+/// engine — the replica driver must reproduce the minibatch driver bit
+/// for bit up to the deferred-update reassociation.
+#[test]
+fn one_group_degenerates_to_the_minibatch_driver() {
+    let net = small_net();
+    let (inputs, targets) = dataset(8, 16, 16);
+    let part = random_partition(&net.layers, 2, 13);
+    let plan = CommPlan::build(&net.layers, &part);
+    let reference = train_minibatch_with_plan(&net, &part, &plan, &inputs, &targets, 2, 0.25, 2);
+    for mode in [
+        ExecMode::Blocking,
+        ExecMode::Overlap,
+        ExecMode::Pipelined { chunk_acts: 0 },
+        ExecMode::Pipelined { chunk_acts: 1 },
+        ExecMode::pipelined(),
+    ] {
+        let cfg = ReplicaConfig {
+            groups: 1,
+            batch: 2,
+            eta: 0.25,
+            epochs: 2,
+            mode,
+            codec: Codec::F32,
+            scope: FaultScope::Off,
+        };
+        let run = train_replicas_with_plan(&net, &part, &plan, &inputs, &targets, &cfg);
+        assert_eq!(run.losses.len(), reference.losses.len(), "{mode:?}");
+        for (a, e) in run.losses.iter().zip(reference.losses.iter()) {
+            assert!((a - e).abs() < 1e-5, "{mode:?}: loss {a} vs {e}");
+        }
+        for k in 0..net.depth() {
+            for (a, e) in run.net.layers[k]
+                .vals
+                .iter()
+                .zip(reference.net.layers[k].vals.iter())
+            {
+                assert!((a - e).abs() < 1e-5, "{mode:?} layer {k}: {a} vs {e}");
+            }
+            for (a, e) in run.net.biases[k].iter().zip(reference.net.biases[k].iter()) {
+                assert!((a - e).abs() < 1e-5, "{mode:?} layer {k} bias");
+            }
+        }
+    }
+}
+
+/// The enforced compression bar at test scale: on the digits workload
+/// (the `spdnn replica` default shape) the int8+EF run's tail loss stays
+/// within 1% of the f32 run's, while actually shipping fewer wire bytes.
+#[test]
+fn int8_ef_digits_loss_stays_within_one_percent_of_f32() {
+    let (neurons, layers, side, samples) = (256usize, 8usize, 16usize, 48usize);
+    let net = generate(&RadixNetConfig::graph_challenge(neurons, layers).expect("cfg"));
+    let part = random_partition(&net.layers, 2, 21);
+    let plan = CommPlan::build(&net.layers, &part);
+    let data = spdnn::data::synthetic_mnist(side, samples, 11);
+    let inputs: Vec<Vec<f32>> = data.samples.iter().map(|s| s.pixels.clone()).collect();
+    let targets: Vec<Vec<f32>> = (0..samples).map(|i| data.target(i, neurons)).collect();
+
+    let run_with = |codec: Codec| {
+        let cfg = ReplicaConfig {
+            groups: 2,
+            batch: 4,
+            eta: 0.2,
+            epochs: 3,
+            mode: ExecMode::Overlap,
+            codec,
+            scope: FaultScope::Off,
+        };
+        train_replicas_with_plan(&net, &part, &plan, &inputs, &targets, &cfg)
+    };
+    let f = run_with(Codec::F32);
+    let q = run_with(Codec::int8());
+
+    let tail = |losses: &[f32]| -> f64 {
+        let t = (losses.len() / 10).max(1);
+        losses[losses.len() - t..]
+            .iter()
+            .map(|&l| l as f64)
+            .sum::<f64>()
+            / t as f64
+    };
+    let (lf, lq) = (tail(&f.losses), tail(&q.losses));
+    assert!(lf > 0.0 && lq > 0.0, "degenerate losses: f32 {lf}, int8 {lq}");
+    let delta = ((lq - lf) / lf).abs();
+    assert!(
+        delta < 0.01,
+        "int8+EF tail loss {lq:.6} vs f32 {lf:.6} — Δ {:.3}% breaches the 1% bar",
+        delta * 100.0
+    );
+
+    let wire = |fabrics: &Vec<Vec<FabricStats>>| -> u64 {
+        fabrics.iter().flatten().map(|st| st.sent_wire_bytes).sum()
+    };
+    assert!(
+        wire(&q.inter) < wire(&f.inter),
+        "int8 must compress the gradient exchange: {} vs {}",
+        wire(&q.inter),
+        wire(&f.inter)
+    );
+}
